@@ -1,0 +1,71 @@
+//! Figure 10: memory throughput of BLCO MTTKRP on the out-of-memory
+//! tensors (Amazon, Patents, Reddit) per mode on the A100 profile — overall
+//! (with host↔device transfers) vs in-memory (compute only). The paper
+//! finds perfect overlap but link-bound overall throughput (57–75% of the
+//! device bandwidth is unreachable; the interconnect dominates).
+//!
+//!     cargo bench --bench fig10_oom_throughput
+//!
+//! Env: BLCO_BENCH_OOM_SCALE=N divides preset nnz by N (default 4 — keeps
+//! the bench minutes-fast; set 1 for the full presets).
+
+use blco::bench::{banner, Table};
+use blco::coordinator::streamer::stream_mttkrp;
+use blco::device::model::throughput_tbps;
+use blco::device::{Counters, Profile};
+use blco::format::blco::BlcoTensor;
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::random_factors;
+use blco::tensor::datasets;
+use blco::util::pool::default_threads;
+
+fn main() {
+    banner("Figure 10", "OOM streaming throughput, overall vs in-memory (a100)");
+    let profile = Profile::a100();
+    let threads = default_threads();
+    let rank = 32;
+    let scale: usize = std::env::var("BLCO_BENCH_OOM_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+
+    let tbl = Table::new(&[10, 6, 8, 14, 14, 12, 12]);
+    tbl.header(&[
+        "dataset", "mode", "batches", "overall TB/s", "in-mem TB/s", "link busy", "wall(s)",
+    ]);
+
+    for mut preset in datasets::out_of_memory() {
+        preset.nnz /= scale;
+        println!("building {} ({} nnz) ...", preset.name, preset.nnz);
+        let t = preset.build();
+        // scale the device memory with the tensor so the OOM classification
+        // and batch counts survive BLCO_BENCH_OOM_SCALE
+        let mut prof = profile.clone();
+        prof.dev_mem_bytes /= scale;
+        let eng = BlcoEngine::new(
+            BlcoTensor::from_coo_with(&t, preset.blco_config()),
+            prof,
+        );
+        for mode in 0..t.order() {
+            let counters = Counters::new();
+            let mut out = Matrix::zeros(t.dims[mode] as usize, rank);
+            let factors = random_factors(&t.dims, rank, 1);
+            let rep = stream_mttkrp(&eng, mode, &factors, &mut out, threads, &counters);
+            let vol = counters.snapshot().volume_bytes();
+            tbl.row(&[
+                preset.name.to_string(),
+                (mode + 1).to_string(),
+                rep.batches.len().to_string(),
+                format!("{:.3}", throughput_tbps(vol, rep.overall_s)),
+                format!("{:.3}", throughput_tbps(vol, rep.compute_s.max(1e-12))),
+                format!("{:.0}%", rep.overlap_efficiency() * 100.0),
+                format!("{:.2}", rep.wall_s),
+            ]);
+        }
+    }
+    println!(
+        "\n(paper: in-memory throughput on par with Table 3; overall limited \
+         by the interconnect to well below device bandwidth)"
+    );
+}

@@ -1,0 +1,41 @@
+//! Figure 12: breakdown of the BLCO construction pipeline per stage —
+//! linearize, sort, re-encode, block, batch. The paper's claim: the
+//! GPU-specific stages (re-encode + block + batch, which ALTO does not
+//! need) cost less than 25% of the total.
+//!
+//!     cargo bench --bench fig12_construction_breakdown
+
+use blco::bench::{banner, Table};
+use blco::format::blco::BlcoTensor;
+use blco::tensor::datasets;
+
+fn main() {
+    banner("Figure 12", "BLCO construction cost breakdown (% of total)");
+    let tbl = Table::new(&[10, 10, 11, 10, 10, 10, 10, 12]);
+    tbl.header(&[
+        "dataset", "total(s)", "linearize", "sort", "reencode", "block", "batch", "gpu-extra",
+    ]);
+
+    for preset in datasets::in_memory() {
+        let t = preset.build();
+        let b = BlcoTensor::from_coo_with(&t, preset.blco_config());
+        let total = b.stages.total().as_secs_f64();
+        let pct = |name: &str| -> f64 {
+            b.stages.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0) / total * 100.0
+        };
+        // the stages ALTO also needs are linearize+sort; the rest is the
+        // GPU-specific extra the paper bounds at <25%
+        let gpu_extra = pct("reencode") + pct("block") + pct("batch");
+        tbl.row(&[
+            preset.name.to_string(),
+            format!("{total:.3}"),
+            format!("{:.1}%", pct("linearize")),
+            format!("{:.1}%", pct("sort")),
+            format!("{:.1}%", pct("reencode")),
+            format!("{:.1}%", pct("block")),
+            format!("{:.1}%", pct("batch")),
+            format!("{gpu_extra:.1}%"),
+        ]);
+    }
+    println!("\n(paper: re-encode+block+batch typically < 25% of construction)");
+}

@@ -1,0 +1,57 @@
+//! Figure 1: per-mode MTTKRP execution time of MM-CSF, normalized by the
+//! fastest mode, rank 32. The paper shows order-of-magnitude variation on
+//! skewed tensors (Uber, Enron, DARPA) because MM-CSF's compression favours
+//! some orientations — the motivating figure.
+//!
+//! Normalization uses the *measured wall time* of the real parallel
+//! execution: the per-mode variance comes from traversal imbalance and
+//! contention, which the byte-level device model deliberately averages out
+//! (it has no warp-imbalance term) — see EXPERIMENTS.md.
+//!
+//!     cargo bench --bench fig1_mode_variation
+
+use blco::bench::{banner, bench_reps, measure, Table};
+use blco::device::Profile;
+use blco::mttkrp::csf::MmCsfEngine;
+use blco::mttkrp::oracle::random_factors;
+use blco::tensor::datasets;
+use blco::util::pool::default_threads;
+
+fn main() {
+    banner("Figure 1", "MM-CSF per-mode time, normalized to fastest mode");
+    let profile = Profile::a100();
+    let threads = default_threads();
+    let reps = bench_reps();
+    let rank = 32;
+
+    let tbl = Table::new(&[10, 6, 14, 14, 12]);
+    tbl.header(&["dataset", "mode", "model(ms)", "wall(ms)", "normalized"]);
+
+    for name in ["nell2", "uber", "enron", "darpa"] {
+        let preset = datasets::by_name(name).unwrap();
+        let t = preset.build();
+        let factors = random_factors(&t.dims, rank, 1);
+        let eng = MmCsfEngine::new(&t);
+        let ms: Vec<_> = (0..t.order())
+            .map(|m| {
+                measure(&eng, m, &factors, t.dims[m] as usize, threads, reps, &profile)
+            })
+            .collect();
+        let fastest = ms
+            .iter()
+            .map(|m| m.wall.as_secs_f64())
+            .fold(f64::INFINITY, f64::min);
+        for (mode, m) in ms.iter().enumerate() {
+            tbl.row(&[
+                name.to_string(),
+                (mode + 1).to_string(),
+                format!("{:.3}", m.model_s * 1e3),
+                format!("{:.3}", m.wall.as_secs_f64() * 1e3),
+                format!("{:.2}x", m.wall.as_secs_f64() / fastest),
+            ]);
+        }
+        let worst =
+            ms.iter().map(|m| m.wall.as_secs_f64()).fold(0.0, f64::max) / fastest;
+        println!("  -> {name}: worst/best = {worst:.2}x  (paper: 2-12x depending on dataset)\n");
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure 8: all-mode MTTKRP speedup over MM-CSF for BLCO, GenTen (COO +
+//! atomics engine, its closest analogue here — see DESIGN.md §3) and F-COO,
+//! on each simulated device, rank 32, with the geometric mean. The paper
+//! reports BLCO at 2.12–2.6× geomean over MM-CSF.
+//!
+//!     cargo bench --bench fig8_framework_speedup
+//!
+//! Env: BLCO_BENCH_PRESETS=uber,nell2 to restrict, BLCO_BENCH_REPS=N.
+
+use blco::bench::{banner, bench_reps, geomean, measure, total_seconds, Table};
+use blco::device::Profile;
+use blco::format::blco::BlcoTensor;
+use blco::format::fcoo::FCoo;
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::coo::CooAtomicEngine;
+use blco::mttkrp::csf::MmCsfEngine;
+use blco::mttkrp::fcoo::FCooEngine;
+use blco::mttkrp::oracle::random_factors;
+use blco::mttkrp::Mttkrp;
+use blco::tensor::datasets;
+use blco::util::pool::default_threads;
+
+fn preset_filter() -> Option<Vec<String>> {
+    std::env::var("BLCO_BENCH_PRESETS")
+        .ok()
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+}
+
+fn main() {
+    banner("Figure 8", "all-mode MTTKRP speedup vs MM-CSF (higher is better)");
+    let threads = default_threads();
+    let reps = bench_reps();
+    let rank = 32;
+    let filter = preset_filter();
+
+    for profile in Profile::all() {
+        println!("\n--- device: {} ---", profile.name);
+        let tbl = Table::new(&[10, 10, 10, 10, 12]);
+        tbl.header(&["dataset", "BLCO", "GenTen", "F-COO", "MM-CSF(ms)"]);
+        let (mut g_blco, mut g_gen, mut g_fcoo) = (vec![], vec![], vec![]);
+
+        for preset in datasets::in_memory() {
+            if let Some(f) = &filter {
+                if !f.iter().any(|x| x == preset.name) {
+                    continue;
+                }
+            }
+            let t = preset.build();
+            let factors = random_factors(&t.dims, rank, 1);
+
+            let all_modes = |eng: &dyn Mttkrp| -> f64 {
+                let ms: Vec<_> = (0..t.order())
+                    .map(|m| {
+                        measure(eng, m, &factors, t.dims[m] as usize, threads, reps, &profile)
+                    })
+                    .collect();
+                total_seconds(&ms).1 // modelled device seconds
+            };
+
+            let mm = all_modes(&MmCsfEngine::new(&t));
+            let blco = all_modes(
+                &BlcoEngine::new(
+                    BlcoTensor::from_coo_with(&t, preset.blco_config()),
+                    profile.clone(),
+                ),
+            );
+            let gen = all_modes(&CooAtomicEngine::new(t.clone()));
+            let fcoo = all_modes(&FCooEngine::new(FCoo::from_coo(&t, 256)));
+
+            g_blco.push(mm / blco);
+            g_gen.push(mm / gen);
+            g_fcoo.push(mm / fcoo);
+            tbl.row(&[
+                preset.name.to_string(),
+                format!("{:.2}x", mm / blco),
+                format!("{:.2}x", mm / gen),
+                format!("{:.2}x", mm / fcoo),
+                format!("{:.2}", mm * 1e3),
+            ]);
+        }
+        tbl.row(&[
+            "geomean".into(),
+            format!("{:.2}x", geomean(&g_blco)),
+            format!("{:.2}x", geomean(&g_gen)),
+            format!("{:.2}x", geomean(&g_fcoo)),
+            "-".into(),
+        ]);
+        println!("  (paper geomean for BLCO: 2.12-2.6x across devices)");
+    }
+    println!("\n(GenTen = its GPU kernel, i.e. COO + global atomics; the CPU-style\n permutation variant is the separate `genten` engine, see the ablation bench.)");
+}

@@ -1,0 +1,66 @@
+//! Figure 9: per-mode speedup of BLCO over MM-CSF for every in-memory
+//! tensor mode, per device. The paper shows BLCO better-or-comparable on
+//! every mode (up to 33×) except on the small cache-resident tensors (Uber,
+//! NIPS) where MM-CSF's compression wins some modes.
+//!
+//!     cargo bench --bench fig9_permode_speedup
+//!
+//! Env: BLCO_BENCH_PRESETS / BLCO_BENCH_REPS / BLCO_BENCH_DEVICE.
+
+use blco::bench::{banner, bench_reps, measure, Table};
+use blco::device::Profile;
+use blco::format::blco::BlcoTensor;
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::csf::MmCsfEngine;
+use blco::mttkrp::oracle::random_factors;
+use blco::tensor::datasets;
+use blco::util::pool::default_threads;
+
+fn main() {
+    let device = std::env::var("BLCO_BENCH_DEVICE").unwrap_or_else(|_| "a100".into());
+    let profile = Profile::by_name(&device).expect("unknown device");
+    banner("Figure 9", &format!("per-mode BLCO speedup vs MM-CSF ({device})"));
+    let threads = default_threads();
+    let reps = bench_reps();
+    let rank = 32;
+    let filter: Option<Vec<String>> = std::env::var("BLCO_BENCH_PRESETS")
+        .ok()
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+
+    let tbl = Table::new(&[10, 6, 14, 14, 10]);
+    tbl.header(&["dataset", "mode", "MM-CSF(ms)", "BLCO(ms)", "speedup"]);
+    let mut worst: f64 = f64::INFINITY;
+    let mut best: f64 = 0.0;
+
+    for preset in datasets::in_memory() {
+        if let Some(f) = &filter {
+            if !f.iter().any(|x| x == preset.name) {
+                continue;
+            }
+        }
+        let t = preset.build();
+        let factors = random_factors(&t.dims, rank, 1);
+        let mm = MmCsfEngine::new(&t);
+        let bl = BlcoEngine::new(
+            BlcoTensor::from_coo_with(&t, preset.blco_config()),
+            profile.clone(),
+        );
+        for mode in 0..t.order() {
+            let m_mm =
+                measure(&mm, mode, &factors, t.dims[mode] as usize, threads, reps, &profile);
+            let m_bl =
+                measure(&bl, mode, &factors, t.dims[mode] as usize, threads, reps, &profile);
+            let sp = m_mm.model_s / m_bl.model_s;
+            worst = worst.min(sp);
+            best = best.max(sp);
+            tbl.row(&[
+                preset.name.to_string(),
+                (mode + 1).to_string(),
+                format!("{:.3}", m_mm.model_s * 1e3),
+                format!("{:.3}", m_bl.model_s * 1e3),
+                format!("{sp:.2}x"),
+            ]);
+        }
+    }
+    println!("\nrange: {worst:.2}x – {best:.2}x  (paper: ~0.6x on Uber/NIPS up to 33.35x)");
+}

@@ -1,0 +1,127 @@
+//! Domain example — network-flow anomaly detection with tensor
+//! decomposition (the paper's cybersecurity motivation, cf. DARPA in
+//! Table 2): build a (source × destination × time) flow tensor with
+//! normal low-rank traffic structure plus planted *point anomalies*
+//! (scattered one-off heavy flows — deliberately NOT low-rank, so the
+//! CP model cannot absorb them), decompose with CP-ALS on the BLCO
+//! engine, and flag anomalies by reconstruction residual. Also demos TTV:
+//! collapsing the time mode to a traffic heat map.
+//!
+//!     cargo run --release --example anomaly_detection
+
+use blco::coordinator::engine::MttkrpEngine;
+use blco::cpals::CpAlsOptions;
+use blco::device::Profile;
+use blco::ops::ttv::ttv;
+use blco::tensor::coo::CooTensor;
+use blco::util::prng::Rng;
+
+const SRC: u64 = 500;
+const DST: u64 = 500;
+const TIME: u64 = 96; // "15-minute bins over a day"
+
+/// Normal traffic: a few service clusters (many sources → few servers) with
+/// a daily activity profile; plus a planted burst: one source hammering one
+/// unusual destination in a short window.
+fn build_traffic(seed: u64) -> (CooTensor, Vec<(u32, u32, u32)>) {
+    let mut rng = Rng::new(seed);
+    let mut t = CooTensor::new(&[SRC, DST, TIME]);
+    // 8 service clusters
+    for _ in 0..60_000 {
+        let service = rng.below(8) as u32;
+        let dst = service * 3 + rng.below(3) as u32; // 24 hot servers
+        let src = rng.zipf(SRC, 0.8) as u32;
+        // diurnal profile: busy mid-day bins
+        let time = (40.0 + 20.0 * rng.normal()).clamp(0.0, TIME as f64 - 1.0) as u32;
+        t.push(&[src, dst, time], 1.0 + rng.f64());
+    }
+    // point anomalies: scattered one-off heavy flows (no shared structure)
+    let mut planted = Vec::new();
+    for _ in 0..60 {
+        let c = (
+            rng.below(SRC) as u32,
+            (100 + rng.below(DST - 100)) as u32, // away from the hot servers
+            rng.below(TIME) as u32,
+        );
+        t.push(&[c.0, c.1, c.2], 25.0 + rng.f64());
+        planted.push(c);
+    }
+    t.sum_duplicates();
+    (t, planted)
+}
+
+fn main() {
+    let (t, planted) = build_traffic(2024);
+    println!(
+        "flow tensor {}x{}x{}: {} nnz ({} planted burst cells)",
+        SRC, DST, TIME, t.nnz(),
+        planted.len()
+    );
+
+    // decompose the structured traffic
+    let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+    let rep = engine.cp_als(CpAlsOptions {
+        rank: 8,
+        max_iters: 25,
+        tol: 1e-6,
+        ..Default::default()
+    });
+    println!(
+        "CP-ALS rank 8: fit {:.4} in {} iters ({:.2}s)",
+        rep.fits.last().unwrap(),
+        rep.iterations,
+        rep.total_seconds
+    );
+
+    // anomaly score = |x - x̂| for every observed cell
+    let recon = |c: &[u32]| -> f64 {
+        let mut v = 0.0;
+        for k in 0..8 {
+            v += rep.lambda[k]
+                * rep.factors[0].row(c[0] as usize)[k]
+                * rep.factors[1].row(c[1] as usize)[k]
+                * rep.factors[2].row(c[2] as usize)[k];
+        }
+        v
+    };
+    let mut scores: Vec<(f64, Vec<u32>)> = (0..t.nnz())
+        .map(|e| {
+            let c = t.coord(e);
+            ((t.vals[e] - recon(&c)).abs(), c)
+        })
+        .collect();
+    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // precision@K against the planted set
+    let k = planted.len();
+    let hits = scores[..k]
+        .iter()
+        .filter(|(_, c)| planted.contains(&(c[0], c[1], c[2])))
+        .count();
+    let precision = hits as f64 / k as f64;
+    println!(
+        "top-{k} anomaly scores: {hits} are planted anomalies \
+         (precision@{k} = {precision:.2})"
+    );
+    println!("top 5:");
+    for (s, c) in &scores[..5] {
+        println!("  src {:>3} -> dst {:>3} @ bin {:>2}   score {s:.2}", c[0], c[1], c[2]);
+    }
+    assert!(precision > 0.8, "detector missed the planted anomalies");
+
+    // TTV bonus: collapse the time mode around the strongest anomaly to
+    // get that window's (src, dst) heat map straight from the BLCO copy
+    let anom = &scores[0].1;
+    let mut window = vec![0.0f64; TIME as usize];
+    window[anom[2] as usize] = 1.0;
+    let heat = ttv(&engine.eng.t, 2, &window, 4);
+    let mut top: Vec<(f64, Vec<u32>)> =
+        (0..heat.nnz()).map(|e| (heat.vals[e], heat.coord(e))).collect();
+    top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!(
+        "\nTTV heat map of bin {}: hottest pair src {} -> dst {} ({:.0} units)",
+        anom[2], top[0].1[0], top[0].1[1], top[0].0
+    );
+    assert_eq!(top[0].1[0], anom[0], "heat map agrees with the residual detector");
+    println!("the planted anomaly stands out ✓");
+}

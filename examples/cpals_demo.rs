@@ -1,0 +1,111 @@
+//! CP-ALS demo: decompose a synthetic tensor with *planted* low-rank
+//! structure and watch the fit recover it (Algorithm 1 end to end, with
+//! the BLCO unified MTTKRP doing the heavy lifting).
+//!
+//! Note the construction: each rank-1 component's factor vectors are
+//! supported on a small random subset of each mode, so the component is a
+//! dense block and the full tensor (zeros included) is *exactly* rank ≤ R —
+//! sampling random entries of a dense low-rank model would NOT give a
+//! low-rank sparse tensor (the implicit zeros break the structure).
+//!
+//!     cargo run --release --example cpals_demo
+
+use blco::coordinator::engine::MttkrpEngine;
+use blco::cpals::CpAlsOptions;
+use blco::device::Profile;
+use blco::tensor::coo::CooTensor;
+use blco::util::prng::Rng;
+
+/// A tensor that is exactly the sum of `rank` block-supported rank-1
+/// components (plus small noise on the support).
+fn planted_block_low_rank(
+    dims: &[u64],
+    rank: usize,
+    support: usize,
+    noise: f64,
+    seed: u64,
+) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    let order = dims.len();
+    // per component and mode: a sparse factor vector (support rows)
+    let mut supports: Vec<Vec<Vec<(u32, f64)>>> = Vec::new(); // [k][n] -> rows
+    for _k in 0..rank {
+        let mut per_mode = Vec::new();
+        for &d in dims {
+            let mut rows: Vec<u32> = (0..support)
+                .map(|_| rng.below(d) as u32)
+                .collect();
+            rows.sort_unstable();
+            rows.dedup();
+            per_mode.push(
+                rows.into_iter()
+                    .map(|r| (r, 0.5 + rng.f64()))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        supports.push(per_mode);
+    }
+    let mut t = CooTensor::new(dims);
+    // enumerate each component's block
+    for k in 0..rank {
+        let mut idx = vec![0usize; order];
+        'outer: loop {
+            let mut coord = vec![0u32; order];
+            let mut v = 1.0;
+            for n in 0..order {
+                let (r, val) = supports[k][n][idx[n]];
+                coord[n] = r;
+                v *= val;
+            }
+            t.push(&coord, v + noise * rng.normal());
+            // odometer over the support sets
+            let mut n = order;
+            loop {
+                if n == 0 {
+                    break 'outer;
+                }
+                n -= 1;
+                idx[n] += 1;
+                if idx[n] < supports[k][n].len() {
+                    break;
+                }
+                idx[n] = 0;
+            }
+        }
+    }
+    t.sum_duplicates();
+    t
+}
+
+fn main() {
+    let dims = [400u64, 300, 200];
+    let true_rank = 4;
+    println!("planting a rank-{true_rank} block-structured tensor {dims:?} ...");
+    let t = planted_block_low_rank(&dims, true_rank, 28, 1e-3, 99);
+    println!("nnz = {}, ‖X‖ = {:.3}\n", t.nnz(), t.norm());
+
+    let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+    let mut fits = Vec::new();
+    for rank in [1usize, 2, 4, 8] {
+        let rep = engine.cp_als(CpAlsOptions {
+            rank,
+            max_iters: 60,
+            tol: 1e-7,
+            threads: blco::util::pool::default_threads(),
+            seed: 7,
+        });
+        let fit = *rep.fits.last().unwrap();
+        fits.push((rank, fit));
+        println!(
+            "rank {rank:>2}: fit {fit:.4} after {:>2} iters \
+             ({:.2}s total, {:.2}s in MTTKRP)",
+            rep.iterations, rep.total_seconds, rep.mttkrp_seconds,
+        );
+    }
+    // the planted rank explains (nearly) all energy; lower ranks cannot
+    let fit_at_true = fits.iter().find(|(r, _)| *r == true_rank).unwrap().1;
+    let fit_at_one = fits[0].1;
+    assert!(fit_at_true > 0.95, "rank-{true_rank} fit {fit_at_true}");
+    assert!(fit_at_one < fit_at_true, "rank sweep should improve the fit");
+    println!("\nfit saturates at the planted rank ✓ (R={true_rank}: {fit_at_true:.4})");
+}

@@ -1,0 +1,119 @@
+//! Format explorer: build every sparse format the paper discusses on the
+//! same tensor and compare footprints, construction cost and MTTKRP
+//! traffic — a hands-on version of Sections 3–4.
+//!
+//!     cargo run --release --example format_explorer [preset]
+
+use blco::bench::Table;
+use blco::device::{Counters, Profile};
+use blco::format::blco::BlcoTensor;
+use blco::format::csf::Csf;
+use blco::format::fcoo::FCoo;
+use blco::format::mmcsf::MmCsf;
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::coo::CooAtomicEngine;
+use blco::mttkrp::csf::{mode_order_with_root, MmCsfEngine};
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::fcoo::FCooEngine;
+use blco::mttkrp::oracle::random_factors;
+use blco::mttkrp::Mttkrp;
+use blco::tensor::{datasets, stats};
+use blco::util::timer::fmt_duration;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "nell2".into());
+    let preset = datasets::by_name(&name).expect("unknown preset");
+    println!("building {name} ...");
+    let t = preset.build();
+    println!("dims {:?}, nnz {}, density {:.2e}\n", t.dims, t.nnz(), t.density());
+
+    for m in 0..t.order() {
+        let fs = stats::fiber_stats(&t, m);
+        println!(
+            "mode-{m} fibers: {} (avg {:.2} nnz, max {}), slice imbalance {:.1}",
+            fs.fibers,
+            fs.avg_len,
+            fs.max_len,
+            stats::imbalance(&stats::slice_histogram(&t, m)),
+        );
+    }
+    println!();
+
+    // ---- construction cost + footprint
+    let tbl = Table::new(&[10, 14, 14, 24]);
+    tbl.header(&["format", "build", "bytes/nnz", "note"]);
+
+    let w0 = std::time::Instant::now();
+    let blco = BlcoTensor::from_coo_with(&t, preset.blco_config());
+    let blco_build = w0.elapsed();
+    tbl.row(&[
+        "BLCO".into(),
+        fmt_duration(blco_build),
+        format!("{:.1}", blco.footprint_bytes() as f64 / t.nnz() as f64),
+        format!("{} blocks", blco.blocks.len()),
+    ]);
+
+    let w0 = std::time::Instant::now();
+    let fcoo = FCoo::from_coo(&t, 256);
+    tbl.row(&[
+        "F-COO".into(),
+        fmt_duration(w0.elapsed()),
+        format!("{:.1}", fcoo.footprint_bytes() as f64 / t.nnz() as f64),
+        format!("{} mode copies", t.order()),
+    ]);
+
+    let w0 = std::time::Instant::now();
+    let csf: Vec<Csf> = (0..t.order())
+        .map(|m| Csf::from_coo(&t, &mode_order_with_root(t.order(), m)))
+        .collect();
+    tbl.row(&[
+        "CSF-N".into(),
+        fmt_duration(w0.elapsed()),
+        format!(
+            "{:.1}",
+            csf.iter().map(|c| c.footprint_bytes()).sum::<usize>() as f64
+                / t.nnz() as f64
+        ),
+        format!("{} trees", t.order()),
+    ]);
+
+    let w0 = std::time::Instant::now();
+    let mm = MmCsf::from_coo(&t);
+    tbl.row(&[
+        "MM-CSF".into(),
+        fmt_duration(w0.elapsed()),
+        format!("{:.1}", mm.footprint_bytes() as f64 / t.nnz() as f64),
+        format!("{} orientation groups", mm.groups.len()),
+    ]);
+    tbl.row(&[
+        "COO".into(),
+        "-".into(),
+        format!("{:.1}", t.footprint_bytes() as f64 / t.nnz() as f64),
+        "raw".into(),
+    ]);
+
+    // ---- traffic comparison on mode 0
+    println!("\nmode-0 MTTKRP traffic (rank 32):");
+    let factors = random_factors(&t.dims, 32, 3);
+    let engines: Vec<Box<dyn Mttkrp>> = vec![
+        Box::new(BlcoEngine::new(blco, Profile::a100())),
+        Box::new(MmCsfEngine { mm }),
+        Box::new(FCooEngine::new(fcoo)),
+        Box::new(CooAtomicEngine::new(t.clone())),
+    ];
+    let tbl = Table::new(&[12, 12, 12, 12, 12]);
+    tbl.header(&["engine", "volume(GB)", "coalesced", "atomics", "segments"]);
+    for eng in engines {
+        let c = Counters::new();
+        let mut out = Matrix::zeros(t.dims[0] as usize, 32);
+        eng.mttkrp(0, &factors, &mut out, 8, &c);
+        let s = c.snapshot();
+        tbl.row(&[
+            eng.name(),
+            format!("{:.3}", s.volume_bytes() as f64 / 1e9),
+            format!("{:.2}", s.coalesced_frac()),
+            s.atomics.to_string(),
+            s.segments.to_string(),
+        ]);
+    }
+}

@@ -1,0 +1,80 @@
+"""AOT driver: lower every model variant to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly.
+
+Run once via ``make artifacts``; Python never executes on the request path.
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--only NAME_SUBSTR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .config import default_variants  # noqa: E402
+
+MANIFEST = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, only: str | None = None) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    lines = []
+    n_emitted = 0
+    for v in default_variants():
+        if only and only not in v.name:
+            continue
+        t0 = time.time()
+        text = to_hlo_text(model.lower(v))
+        fname = f"{v.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lines.append(v.manifest_line(fname))
+        n_emitted += 1
+        print(
+            f"  [{v.name}] {len(text) / 1024:.0f} KiB "
+            f"({time.time() - t0:.1f}s)",
+            file=sys.stderr,
+        )
+    with open(os.path.join(out_dir, MANIFEST), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return n_emitted
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: file inside out dir")
+    ap.add_argument("--only", default=None, help="emit matching variants only")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # Makefile passes a representative file path
+        out_dir = os.path.dirname(args.out) or "."
+    n = emit(out_dir, args.only)
+    print(f"emitted {n} variants to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Variant configuration shared by the L1 kernel, L2 model, AOT driver and tests.
+
+A *variant* pins every shape the AOT path needs to be static: tensor order,
+per-mode padded dimensions, decomposition rank, block capacity (max non-zeros
+per BLCO block) and the target mode of the MTTKRP. The in-block linear index
+layout (contiguous per-mode bit fields, mode 1 in the uppermost bits — the
+BLCO re-encoding of Section 4.1 of the paper) is derived here and must match
+``rust/src/linear/encode.rs`` bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+import jax
+
+# The AOT interchange uses 64-bit linear indices (the paper's target integer
+# size). We keep in-block indices at <= 63 bits so they are representable in a
+# non-negative i64 on both sides of the PJRT boundary.
+MAX_INBLOCK_BITS = 63
+
+
+def mode_bits(dim: int) -> int:
+    """Bits needed to encode coordinates in ``[0, dim)`` (>= 1)."""
+    if dim <= 1:
+        return 1
+    return max(1, math.ceil(math.log2(dim)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled block-MTTKRP computation.
+
+    Attributes:
+        name: manifest key, also the artifact file stem.
+        dims: *padded* mode lengths; factor matrix ``n`` has shape
+            ``(dims[n], rank)``.
+        rank: decomposition rank R.
+        capacity: max non-zeros per block (entries are zero-padded up to it).
+        target: target mode of the MTTKRP (0-based).
+        kind: ``"partials"`` (per-nnz rank-wise rows + decoded target ids —
+            the L3 coordinator performs the conflict resolution) or
+            ``"fused"`` (in-graph segment-sum; returns the dense M matrix).
+        dtype: value element type name ("float32" or "float64").
+    """
+
+    name: str
+    dims: tuple
+    rank: int
+    capacity: int
+    target: int
+    kind: str = "partials"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.kind in ("partials", "fused"), self.kind
+        assert 0 <= self.target < len(self.dims)
+        assert self.capacity > 0 and self.rank > 0
+        assert self.inblock_bits <= MAX_INBLOCK_BITS, (
+            f"variant {self.name}: {self.inblock_bits} in-block bits > "
+            f"{MAX_INBLOCK_BITS}; strip more bits into the block key"
+        )
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def bits(self) -> List[int]:
+        """Per-mode field widths of the re-encoded in-block index."""
+        return [mode_bits(d) for d in self.dims]
+
+    @property
+    def offsets(self) -> List[int]:
+        """Per-mode shift amounts. Mode 0 occupies the uppermost bits,
+        mode N-1 the lowermost (Figure 6b layout)."""
+        bits = self.bits
+        offs = []
+        acc = sum(bits)
+        for b in bits:
+            acc -= b
+            offs.append(acc)
+        return offs
+
+    @property
+    def masks(self) -> List[int]:
+        return [(1 << b) - 1 for b in self.bits]
+
+    @property
+    def inblock_bits(self) -> int:
+        return sum(self.bits)
+
+    def encode(self, coords: Sequence[int]) -> int:
+        """Reference (python) encoder: coords -> in-block linear index."""
+        assert len(coords) == self.order
+        l = 0
+        for c, off, m in zip(coords, self.offsets, self.masks):
+            assert 0 <= c <= m, (coords, self.dims)
+            l |= (int(c) & m) << off
+        return l
+
+    def decode(self, l: int) -> List[int]:
+        """Reference (python) decoder: in-block linear index -> coords."""
+        return [(int(l) >> off) & m for off, m in zip(self.offsets, self.masks)]
+
+    @property
+    def jdtype(self):
+        import jax.numpy as jnp
+
+        return {"float32": jnp.float32, "float64": jnp.float64}[self.dtype]
+
+    def input_specs(self):
+        """ShapeDtypeStructs of the AOT entry point, in argument order:
+        (lidx, vals, bases, factor_0, ..., factor_{N-1})."""
+        import jax.numpy as jnp
+
+        specs = [
+            jax.ShapeDtypeStruct((self.capacity,), jnp.int64),
+            jax.ShapeDtypeStruct((self.capacity,), self.jdtype),
+            jax.ShapeDtypeStruct((self.order,), jnp.int32),
+        ]
+        for d in self.dims:
+            specs.append(jax.ShapeDtypeStruct((d, self.rank), self.jdtype))
+        return specs
+
+    def manifest_line(self, filename: str) -> str:
+        dims = ",".join(str(d) for d in self.dims)
+        return (
+            f"name={self.name} file={filename} order={self.order} "
+            f"rank={self.rank} capacity={self.capacity} target={self.target} "
+            f"kind={self.kind} dtype={self.dtype} dims={dims}"
+        )
+
+
+def default_variants() -> List[Variant]:
+    """The variant set built by ``make artifacts``.
+
+    One (partials, fused) pair per target mode for the 3-order demo shape and
+    a partials-only set for the 4-order shape. The demo shapes match the
+    synthetic presets used by the runtime examples/tests (tensors are padded
+    up to these dims on the Rust side).
+    """
+    out: List[Variant] = []
+    dims3 = (1024, 1024, 1024)
+    for t in range(3):
+        out.append(
+            Variant(f"m3r32_t{t}_partials", dims3, 32, 4096, t, "partials")
+        )
+        out.append(Variant(f"m3r32_t{t}_fused", dims3, 32, 4096, t, "fused"))
+    dims4 = (256, 256, 256, 64)
+    for t in range(4):
+        out.append(
+            Variant(f"m4r32_t{t}_partials", dims4, 32, 4096, t, "partials")
+        )
+    return out

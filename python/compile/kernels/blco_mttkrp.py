@@ -1,0 +1,133 @@
+"""L1 — the BLCO block-MTTKRP Pallas kernel.
+
+This is the compute hot-spot of the paper (Section 5, the "computing phase"):
+for every non-zero element in a BLCO block, de-linearize its re-encoded index
+with shift/mask (Section 4.1), gather the N-1 non-target factor rows, form
+their rank-wise Hadamard product and scale by the non-zero value.
+
+Hardware adaptation (GPU -> TPU, see DESIGN.md §Hardware-Adaptation): the
+paper's warp-level segmented scan and global atomics do not exist on TPUs, so
+the kernel produces *dense, coalesced* per-nnz partial rows plus the decoded
+target coordinates; the conflict resolution (merge) happens either in-graph
+via ``segment_sum`` (the fused L2 variant) or in the Rust coordinator. The
+nnz stream is tiled by ``BlockSpec`` — the HBM->VMEM block copies play the
+role of the paper's coalesced global loads, and the rank dimension is the
+vector lane dimension instead of a thread mapping.
+
+The kernel must be lowered with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Variant
+
+# nnz tile processed per grid step. 256 elements x rank 32 keeps the live
+# VMEM working set (lidx + vals + partials + gathered rows) around
+# 256*32*4*3 + small ≈ 100 KiB — far below the ~16 MiB VMEM of a TPU core,
+# leaving room for double-buffered factor tiles.
+TILE = 256
+
+
+def _delinearize(l, v: Variant, bases_ref):
+    """Decode every mode coordinate of the (TILE,) int64 vector ``l``.
+
+    Each coordinate only needs a shift and a mask (the whole point of the
+    BLCO re-encoding) and is independent of the others, exposing ILP. The
+    per-block base offsets (the adaptive-blocking key of Section 4.2,
+    de-composed into per-mode row bases by the coordinator) are added so the
+    gathers below address the *global* factor rows.
+    """
+    coords = []
+    for n in range(v.order):
+        c = (l >> v.offsets[n]) & v.masks[n]
+        coords.append(c.astype(jnp.int32) + bases_ref[n])
+    return coords
+
+
+def _partials_kernel(v: Variant, lidx_ref, vals_ref, bases_ref, *refs):
+    factor_refs = refs[: v.order]
+    partials_ref, tgt_ref = refs[v.order], refs[v.order + 1]
+
+    l = lidx_ref[...]  # (TILE,) int64, coalesced load
+    coords = _delinearize(l, v, bases_ref)
+
+    # Rank-wise product, vectorized over the lane (rank) dimension.
+    acc = vals_ref[...][:, None].astype(v.jdtype)  # (TILE, 1)
+    acc = jnp.broadcast_to(acc, (l.shape[0], v.rank))
+    for n in range(v.order):
+        if n == v.target:
+            continue
+        rows = jnp.take(factor_refs[n][...], coords[n], axis=0)  # (TILE, R)
+        acc = acc * rows
+    partials_ref[...] = acc
+    tgt_ref[...] = coords[v.target]
+
+
+def block_partials(v: Variant):
+    """Build the per-block partials function for variant ``v``.
+
+    Signature: ``(lidx i64[C], vals dt[C], bases i32[N], *factors dt[D_n,R])
+    -> (partials dt[C,R], tgt i32[C])``. Padding entries must carry
+    ``vals == 0`` so their partial rows are exactly zero.
+    """
+    assert v.capacity % TILE == 0, (v.capacity, TILE)
+    grid = (v.capacity // TILE,)
+
+    in_specs = [
+        pl.BlockSpec((TILE,), lambda i: (i,)),  # lidx: streamed tile
+        pl.BlockSpec((TILE,), lambda i: (i,)),  # vals: streamed tile
+        pl.BlockSpec((v.order,), lambda i: (0,)),  # bases: replicated
+    ]
+    for d in v.dims:
+        # Factor matrices are gathered from in full. On a real TPU these
+        # would be tiled/streamed too; under interpret=True the whole-array
+        # block keeps the oracle comparison exact.
+        in_specs.append(pl.BlockSpec((d, v.rank), lambda i: (0, 0)))
+
+    out_specs = [
+        pl.BlockSpec((TILE, v.rank), lambda i: (i, 0)),
+        pl.BlockSpec((TILE,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((v.capacity, v.rank), v.jdtype),
+        jax.ShapeDtypeStruct((v.capacity,), jnp.int32),
+    ]
+
+    kernel = functools.partial(_partials_kernel, v)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )
+
+    def run(lidx, vals, bases, *factors):
+        assert len(factors) == v.order
+        return fn(lidx, vals, bases, *factors)
+
+    return run
+
+
+def vmem_estimate_bytes(v: Variant) -> int:
+    """Static VMEM footprint estimate of one grid step (for DESIGN.md §Perf).
+
+    Counts the streamed tiles plus the gathered rows and the output tile;
+    whole-factor residency is excluded because on real hardware factors are
+    HBM-resident and rows are gathered on demand.
+    """
+    esize = 4 if v.dtype == "float32" else 8
+    lidx = TILE * 8
+    vals = TILE * esize
+    gathered = (v.order - 1) * TILE * v.rank * esize
+    out = TILE * v.rank * esize + TILE * 4
+    return lidx + vals + gathered + out

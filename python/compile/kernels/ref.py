@@ -1,0 +1,91 @@
+"""Pure-numpy/jnp oracle for the BLCO block-MTTKRP kernel and sparse MTTKRP.
+
+Everything here is written in the most obvious way possible; correctness of
+the Pallas kernel (kernels/blco_mttkrp.py), the L2 model (model.py) and — via
+golden files — the Rust engines is established against these functions.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..config import Variant
+
+
+def delinearize_ref(lidx, v: Variant, bases):
+    """Decode global coordinates from in-block indices, numpy semantics."""
+    lidx = np.asarray(lidx, dtype=np.int64)
+    coords = []
+    for n in range(v.order):
+        c = (lidx >> np.int64(v.offsets[n])) & np.int64(v.masks[n])
+        coords.append(c.astype(np.int32) + np.int32(bases[n]))
+    return coords
+
+
+def partials_ref(lidx, vals, bases, factors: Sequence, v: Variant):
+    """Oracle for the partials kernel: (C,R) rank-wise rows + target ids."""
+    coords = delinearize_ref(lidx, v, bases)
+    acc = np.asarray(vals)[:, None].astype(v.dtype) * np.ones(
+        (len(lidx), v.rank), dtype=v.dtype
+    )
+    for n in range(v.order):
+        if n == v.target:
+            continue
+        acc = acc * np.asarray(factors[n])[coords[n], :]
+    return acc, coords[v.target]
+
+
+def fused_ref(lidx, vals, bases, factors: Sequence, v: Variant):
+    """Oracle for the fused variant: dense M (dims[target], rank)."""
+    partials, tgt = partials_ref(lidx, vals, bases, factors, v)
+    out = np.zeros((v.dims[v.target], v.rank), dtype=v.dtype)
+    np.add.at(out, tgt, partials)
+    return out
+
+
+def mttkrp_coo_ref(coords, vals, factors: Sequence, target: int, out_rows: int):
+    """Textbook sparse MTTKRP straight from COO (Figure 3 of the paper).
+
+    ``coords``: (nnz, N) integer array; ``vals``: (nnz,); ``factors[n]``:
+    (I_n, R). Returns M with shape (out_rows, R).
+    """
+    coords = np.asarray(coords)
+    vals = np.asarray(vals)
+    nnz, order = coords.shape
+    rank = np.asarray(factors[0]).shape[1]
+    dtype = np.asarray(factors[0]).dtype
+    out = np.zeros((out_rows, rank), dtype=dtype)
+    for e in range(nnz):
+        row = np.full((rank,), vals[e], dtype=dtype)
+        for n in range(order):
+            if n == target:
+                continue
+            row = row * np.asarray(factors[n])[coords[e, n], :]
+        out[coords[e, target], :] += row
+    return out
+
+
+def mttkrp_dense_ref(dense, factors: Sequence, target: int):
+    """Fully dense MTTKRP via explicit matricization + Khatri-Rao product.
+
+    Exponentially expensive; only used on tiny tensors to validate
+    ``mttkrp_coo_ref`` itself (the oracle's oracle).
+    """
+    dense = np.asarray(dense)
+    order = dense.ndim
+    # Khatri-Rao product of the non-target factors. Ascending mode order with
+    # each new factor as the fast row index matches the C-order (row-major)
+    # matricization below, where the highest remaining mode varies fastest.
+    # The MTTKRP result is invariant to this pairing as long as the
+    # matricization and the KRP use the same column ordering.
+    others = [n for n in range(order) if n != target]
+    kr = None
+    for n in others:
+        f = np.asarray(factors[n])
+        kr = f if kr is None else (kr[:, None, :] * f[None, :, :]).reshape(
+            -1, f.shape[1]
+        )
+    mat = np.moveaxis(dense, target, 0).reshape(dense.shape[target], -1)
+    return mat @ kr

@@ -1,0 +1,63 @@
+"""L2 — the JAX block-MTTKRP compute graph around the L1 Pallas kernel.
+
+Two graph shapes per variant (see config.Variant.kind):
+
+* ``partials`` — run the Pallas kernel and return ``(partials, tgt)``; the
+  Rust coordinator performs the conflict resolution (the paper's Section 5
+  contribution lives at L3 in this architecture).
+* ``fused`` — additionally merge the partial rows in-graph with an unsorted
+  ``segment_sum`` over the decoded target coordinates, returning the dense
+  MTTKRP result M. This is the single-launch path used when the target
+  factor matrix fits on-device.
+
+Python/JAX runs only at build time: ``aot.py`` lowers these functions to HLO
+text once; the Rust runtime compiles and executes them via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .config import Variant  # noqa: E402
+from .kernels import blco_mttkrp  # noqa: E402
+
+
+def block_partials_fn(v: Variant):
+    """(lidx, vals, bases, *factors) -> (partials (C,R), tgt (C,) i32)."""
+    kernel = blco_mttkrp.block_partials(v)
+
+    def fn(lidx, vals, bases, *factors):
+        partials, tgt = kernel(lidx, vals, bases, *factors)
+        return partials, tgt
+
+    return fn
+
+
+def block_fused_fn(v: Variant):
+    """(lidx, vals, bases, *factors) -> M (dims[target], R).
+
+    Padding entries carry ``vals == 0`` so their (zero) partial rows land
+    harmlessly on whatever row their decoded index points at.
+    """
+    kernel = blco_mttkrp.block_partials(v)
+    num_rows = v.dims[v.target]
+
+    def fn(lidx, vals, bases, *factors):
+        partials, tgt = kernel(lidx, vals, bases, *factors)
+        return jax.ops.segment_sum(partials, tgt, num_segments=num_rows)
+
+    return fn
+
+
+def build_fn(v: Variant):
+    return block_fused_fn(v) if v.kind == "fused" else block_partials_fn(v)
+
+
+def lower(v: Variant):
+    """AOT-lower variant ``v`` with its static input specs."""
+    fn = build_fn(v)
+    return jax.jit(fn).lower(*v.input_specs())

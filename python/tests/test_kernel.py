@@ -1,0 +1,179 @@
+"""L1 correctness: the Pallas block-MTTKRP kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps tensor order, mode widths, rank, block fill level, base
+offsets (the adaptive-blocking key path) and dtype; every case asserts
+allclose against kernels/ref.py.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.config import Variant, mode_bits  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.blco_mttkrp import TILE, vmem_estimate_bytes  # noqa: E402
+
+
+def make_case(v: Variant, nnz: int, seed: int, bases=None):
+    """Random padded block + factors for variant ``v``."""
+    rng = np.random.default_rng(seed)
+    bases = np.zeros(v.order, np.int32) if bases is None else np.asarray(bases, np.int32)
+    # in-block coordinate range must stay within the factor matrix after the
+    # base offset is applied
+    coords = np.stack(
+        [rng.integers(0, max(1, d - b), size=nnz) for d, b in zip(v.dims, bases)],
+        axis=1,
+    )
+    lidx = np.array([v.encode(c) for c in coords], dtype=np.int64)
+    lidx = np.pad(lidx, (0, v.capacity - nnz))
+    dt = np.float32 if v.dtype == "float32" else np.float64
+    vals = np.pad(rng.standard_normal(nnz).astype(dt), (0, v.capacity - nnz))
+    factors = [rng.standard_normal((d, v.rank)).astype(dt) for d in v.dims]
+    return lidx, vals, bases, factors
+
+
+def tol(v: Variant):
+    return dict(atol=1e-5, rtol=1e-5) if v.dtype == "float32" else dict(atol=1e-11, rtol=1e-11)
+
+
+# ---------------------------------------------------------------- hypothesis
+
+variant_strategy = st.builds(
+    lambda dims, rank, target_frac, dtype: Variant(
+        "h",
+        tuple(dims),
+        rank,
+        TILE,  # one tile per grid step keeps hypothesis cases fast
+        min(int(target_frac * len(dims)), len(dims) - 1),
+        "partials",
+        dtype,
+    ),
+    dims=st.lists(st.integers(2, 64), min_size=3, max_size=4),
+    rank=st.sampled_from([4, 8, 32]),
+    target_frac=st.floats(0.0, 0.999),
+    dtype=st.sampled_from(["float32", "float64"]),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=variant_strategy, nnz_frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+def test_partials_matches_ref(v, nnz_frac, seed):
+    nnz = max(1, int(nnz_frac * v.capacity))
+    lidx, vals, bases, factors = make_case(v, nnz, seed)
+    partials, tgt = model.build_fn(v)(lidx, vals, bases, *factors)
+    p_ref, t_ref = ref.partials_ref(lidx, vals, bases, factors, v)
+    np.testing.assert_allclose(np.asarray(partials), p_ref, **tol(v))
+    np.testing.assert_array_equal(np.asarray(tgt), t_ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), target=st.integers(0, 2))
+def test_fused_matches_ref(seed, target):
+    v = Variant("hf", (40, 24, 12), 8, TILE, target, "fused")
+    lidx, vals, bases, factors = make_case(v, 200, seed)
+    m = model.build_fn(v)(lidx, vals, bases, *factors)
+    m_ref = ref.fused_ref(lidx, vals, bases, factors, v)
+    np.testing.assert_allclose(np.asarray(m), m_ref, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_block_bases_shift_rows(seed):
+    """The adaptive-blocking path: non-zero per-mode bases address the right
+    global factor rows (block key decomposed into row offsets)."""
+    v = Variant("hb", (64, 32, 16), 8, TILE, 0, "partials")
+    bases = np.array([32, 16, 8], np.int32)
+    lidx, vals, _, factors = make_case(v, 100, seed, bases=bases)
+    partials, tgt = model.build_fn(v)(lidx, vals, bases, *factors)
+    p_ref, t_ref = ref.partials_ref(lidx, vals, bases, factors, v)
+    np.testing.assert_allclose(np.asarray(partials), p_ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tgt), t_ref)
+    assert t_ref.min() >= 32  # bases actually applied
+
+
+# ------------------------------------------------------------------- pinned
+
+
+@pytest.mark.parametrize("target", [0, 1, 2])
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_three_mode_all_targets(target, dtype):
+    v = Variant("p3", (50, 30, 20), 16, 2 * TILE, target, "partials", dtype)
+    lidx, vals, bases, factors = make_case(v, 400, seed=7)
+    partials, tgt = model.build_fn(v)(lidx, vals, bases, *factors)
+    p_ref, t_ref = ref.partials_ref(lidx, vals, bases, factors, v)
+    np.testing.assert_allclose(np.asarray(partials), p_ref, **tol(v))
+    np.testing.assert_array_equal(np.asarray(tgt), t_ref)
+
+
+@pytest.mark.parametrize("target", [0, 1, 2, 3])
+def test_four_mode_all_targets(target):
+    v = Variant("p4", (20, 16, 12, 8), 8, TILE, target, "partials")
+    lidx, vals, bases, factors = make_case(v, 150, seed=11)
+    partials, tgt = model.build_fn(v)(lidx, vals, bases, *factors)
+    p_ref, t_ref = ref.partials_ref(lidx, vals, bases, factors, v)
+    np.testing.assert_allclose(np.asarray(partials), p_ref, **tol(v))
+    np.testing.assert_array_equal(np.asarray(tgt), t_ref)
+
+
+def test_padding_contributes_zero():
+    """Zero-valued padding entries must not perturb the fused result."""
+    v = Variant("pad", (16, 16, 16), 4, TILE, 0, "fused")
+    lidx, vals, bases, factors = make_case(v, 3, seed=3)
+    m = model.build_fn(v)(lidx, vals, bases, *factors)
+    assert np.count_nonzero(np.abs(np.asarray(m)).sum(axis=1)) <= 3
+
+
+def test_empty_block_is_zero():
+    v = Variant("empty", (16, 8, 8), 4, TILE, 1, "fused")
+    lidx = np.zeros(v.capacity, np.int64)
+    vals = np.zeros(v.capacity, np.float32)
+    bases = np.zeros(3, np.int32)
+    factors = [np.ones((d, v.rank), np.float32) for d in v.dims]
+    m = model.build_fn(v)(lidx, vals, bases, *factors)
+    assert np.all(np.asarray(m) == 0.0)
+
+
+def test_duplicate_coordinates_accumulate():
+    """Conflicting updates (same target row) must sum, not overwrite."""
+    v = Variant("dup", (8, 8, 8), 4, TILE, 0, "fused")
+    c = [2, 3, 4]
+    lidx = np.zeros(v.capacity, np.int64)
+    lidx[:5] = v.encode(c)
+    vals = np.zeros(v.capacity, np.float32)
+    vals[:5] = 1.0
+    bases = np.zeros(3, np.int32)
+    factors = [np.ones((d, v.rank), np.float32) for d in v.dims]
+    m = np.asarray(model.build_fn(v)(lidx, vals, bases, *factors))
+    np.testing.assert_allclose(m[2], 5.0)
+
+
+def test_vmem_estimate_reasonable():
+    """The static VMEM estimate must stay under a TPU core's ~16 MiB."""
+    v = Variant("vm", (1024, 1024, 1024), 32, 4096, 0, "partials")
+    assert vmem_estimate_bytes(v) < 16 * 1024 * 1024
+
+
+def test_encode_decode_roundtrip():
+    v = Variant("rt", (100, 7, 33, 2), 4, TILE, 0, "partials")
+    rng = np.random.default_rng(5)
+    for _ in range(200):
+        c = [int(rng.integers(0, d)) for d in v.dims]
+        assert v.decode(v.encode(c)) == c
+
+
+def test_mode_bits():
+    assert mode_bits(1) == 1
+    assert mode_bits(2) == 1
+    assert mode_bits(3) == 2
+    assert mode_bits(1024) == 10
+    assert mode_bits(1025) == 11

@@ -1,0 +1,141 @@
+//! Bench harness shared by `benches/*` (criterion is unavailable offline):
+//! warmup + median-of-k timing, geometric means, and fixed-width table
+//! printing in the layout of the paper's figures/tables.
+
+use std::time::Duration;
+
+use crate::device::counters::{Counters, Snapshot};
+use crate::device::model::{device_time, throughput_tbps};
+use crate::device::profile::Profile;
+use crate::mttkrp::dense::Matrix;
+use crate::mttkrp::Mttkrp;
+use crate::util::timer::time_median;
+
+/// One measured MTTKRP: wall time, modelled device time, exact traffic.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub wall: Duration,
+    pub model_s: f64,
+    pub snap: Snapshot,
+}
+
+impl Measurement {
+    pub fn volume_gb(&self) -> f64 {
+        self.snap.volume_bytes() as f64 / 1e9
+    }
+
+    /// Modelled device throughput (Table 3 "TP"), TB/s.
+    pub fn model_tp_tbps(&self) -> f64 {
+        throughput_tbps(self.snap.volume_bytes(), self.model_s)
+    }
+}
+
+/// Time `engine.mttkrp(target, ...)` with `reps` repetitions (median) and
+/// collect one clean counter snapshot.
+pub fn measure(
+    engine: &dyn Mttkrp,
+    target: usize,
+    factors: &[Matrix],
+    rows: usize,
+    threads: usize,
+    reps: usize,
+    profile: &Profile,
+) -> Measurement {
+    let rank = factors[0].cols;
+    let mut out = Matrix::zeros(rows, rank);
+    let wall = time_median(reps, || {
+        let scratch = Counters::new();
+        engine.mttkrp(target, factors, &mut out, threads, &scratch);
+    });
+    let counters = Counters::new();
+    engine.mttkrp(target, factors, &mut out, threads, &counters);
+    let snap = counters.snapshot();
+    let model_s = device_time(&snap, profile).total();
+    Measurement { wall, model_s, snap }
+}
+
+/// Sum of per-mode measurements (the "all-mode MTTKRP" the paper reports).
+pub fn total_seconds(ms: &[Measurement]) -> (f64, f64) {
+    (
+        ms.iter().map(|m| m.wall.as_secs_f64()).sum(),
+        ms.iter().map(|m| m.model_s).sum(),
+    )
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Self {
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{c:>w$} "));
+        }
+        println!("{}", line.trim_end());
+    }
+
+    pub fn header(&self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let total: usize = self.widths.iter().sum::<usize>() + self.widths.len();
+        println!("{}", "-".repeat(total));
+    }
+}
+
+/// `reps` default for benches, overridable via BLCO_BENCH_REPS.
+pub fn bench_reps() -> usize {
+    std::env::var("BLCO_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Banner printed by every bench binary.
+pub fn banner(figure: &str, what: &str) {
+    println!("\n=== {figure}: {what} ===");
+    println!(
+        "(synthetic scaled presets; modelled device times from exact \
+         counters — see DESIGN.md §3-§4)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn measure_runs_engine() {
+        use crate::mttkrp::coo::CooAtomicEngine;
+        use crate::mttkrp::oracle::random_factors;
+        use crate::tensor::synth;
+        let t = synth::uniform(&[20, 20, 20], 500, 1);
+        let f = random_factors(&t.dims, 4, 2);
+        let eng = CooAtomicEngine::new(t);
+        let m = measure(&eng, 0, &f, 20, 2, 2, &Profile::a100());
+        assert!(m.snap.volume_bytes() > 0);
+        assert!(m.model_s > 0.0);
+        assert!(m.model_tp_tbps() > 0.0);
+    }
+}

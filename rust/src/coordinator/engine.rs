@@ -1,0 +1,198 @@
+//! The public facade: one object that owns a BLCO tensor + device profile
+//! and routes every MTTKRP to the right path — in-memory unified kernel
+//! when the working set fits the (simulated) device, out-of-memory
+//! streaming otherwise — exactly the paper's "single tensor copy, unified
+//! implementation" story. Also drives CP-ALS end to end.
+
+use crate::coordinator::streamer::{stream_mttkrp, StreamReport};
+use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
+use crate::device::counters::Counters;
+use crate::device::profile::Profile;
+use crate::format::blco::{BlcoConfig, BlcoTensor};
+use crate::mttkrp::blco::{BlcoEngine, Resolution};
+use crate::mttkrp::dense::Matrix;
+use crate::mttkrp::Mttkrp;
+use crate::tensor::coo::CooTensor;
+use crate::util::pool::default_threads;
+
+/// Which path a given MTTKRP took.
+#[derive(Clone, Debug)]
+pub enum ExecPath {
+    InMemory(Resolution),
+    Streamed(StreamReport),
+}
+
+/// High-level BLCO MTTKRP engine (the library's main entry point).
+///
+/// ```
+/// use blco::{CooTensor, MttkrpEngine};
+/// use blco::device::Profile;
+/// use blco::tensor::synth;
+///
+/// let t = synth::uniform(&[100, 80, 60], 10_000, 42);
+/// let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+/// let factors = blco::mttkrp::oracle::random_factors(&t.dims, 16, 1);
+/// let (m, path) = engine.mttkrp(0, &factors);
+/// assert_eq!(m.rows, 100);
+/// # let _ = path;
+/// ```
+pub struct MttkrpEngine {
+    pub eng: BlcoEngine,
+    pub dims: Vec<u64>,
+    pub norm_x: f64,
+    pub threads: usize,
+    pub counters: Counters,
+}
+
+impl MttkrpEngine {
+    pub fn from_coo(t: &CooTensor, profile: Profile) -> Self {
+        Self::from_coo_with(t, profile, BlcoConfig::default())
+    }
+
+    pub fn from_coo_with(t: &CooTensor, profile: Profile, cfg: BlcoConfig) -> Self {
+        let blco = BlcoTensor::from_coo_with(t, cfg);
+        MttkrpEngine {
+            eng: BlcoEngine::new(blco, profile),
+            dims: t.dims.clone(),
+            norm_x: t.norm(),
+            threads: default_threads(),
+            counters: Counters::new(),
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_resolution(mut self, r: Resolution) -> Self {
+        self.eng = BlcoEngine {
+            t: self.eng.t.clone(),
+            profile: self.eng.profile.clone(),
+            resolution: r,
+        };
+        self
+    }
+
+    /// Working-set bytes for a rank-`rank` MTTKRP: tensor blocks + all
+    /// factor matrices + the output.
+    pub fn working_set_bytes(&self, rank: usize) -> usize {
+        let factors: usize =
+            self.dims.iter().map(|&d| d as usize * rank * 8).sum();
+        let out = *self.dims.iter().max().unwrap_or(&0) as usize * rank * 8;
+        self.eng.footprint_bytes() + factors + out
+    }
+
+    /// Does this tensor require the out-of-memory path at `rank`?
+    pub fn is_oom(&self, rank: usize) -> bool {
+        !self.eng.profile.fits(self.working_set_bytes(rank))
+    }
+
+    /// Mode-`target` MTTKRP. Chooses in-memory vs streamed automatically.
+    pub fn mttkrp(&self, target: usize, factors: &[Matrix]) -> (Matrix, ExecPath) {
+        let rank = factors[0].cols;
+        let mut out = Matrix::zeros(self.dims[target] as usize, rank);
+        if self.is_oom(rank) {
+            let rep = stream_mttkrp(
+                &self.eng,
+                target,
+                factors,
+                &mut out,
+                self.threads,
+                &self.counters,
+            );
+            (out, ExecPath::Streamed(rep))
+        } else {
+            self.eng
+                .mttkrp(target, factors, &mut out, self.threads, &self.counters);
+            (out, ExecPath::InMemory(self.eng.effective_resolution(target)))
+        }
+    }
+
+    /// Full CP-ALS decomposition using this engine's routing.
+    pub fn cp_als(&self, opts: CpAlsOptions) -> CpAlsReport {
+        cp_als(self, &self.dims, self.norm_x, opts, &self.counters)
+    }
+}
+
+impl Mttkrp for MttkrpEngine {
+    fn name(&self) -> String {
+        format!("engine({})", self.eng.profile.name)
+    }
+
+    fn mttkrp(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let rank = factors[0].cols;
+        if self.is_oom(rank) {
+            stream_mttkrp(&self.eng, target, factors, out, threads, counters);
+        } else {
+            self.eng.mttkrp(target, factors, out, threads, counters);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    #[test]
+    fn in_memory_path_on_big_device() {
+        let t = synth::uniform(&[50, 40, 30], 4_000, 1);
+        let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+        assert!(!engine.is_oom(8));
+        let factors = random_factors(&t.dims, 8, 3);
+        let (m, path) = engine.mttkrp(1, &factors);
+        assert!(matches!(path, ExecPath::InMemory(_)));
+        let expect = mttkrp_oracle(&t, 1, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn streamed_path_on_tiny_device() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg);
+        assert!(engine.is_oom(8));
+        let factors = random_factors(&t.dims, 8, 5);
+        let (m, path) = engine.mttkrp(2, &factors);
+        match path {
+            ExecPath::Streamed(rep) => {
+                assert!(rep.batches.len() > 1);
+                assert!(rep.transfer_s > 0.0);
+            }
+            _ => panic!("expected streamed path"),
+        }
+        let expect = mttkrp_oracle(&t, 2, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn cpals_runs_through_facade() {
+        let t = synth::fiber_clustered(&[30, 25, 20], 3_000, 2, 0.8, 7);
+        let engine = MttkrpEngine::from_coo(&t, Profile::v100()).with_threads(4);
+        let opts = CpAlsOptions { rank: 4, max_iters: 5, tol: 0.0, threads: 4, seed: 1 };
+        let rep = engine.cp_als(opts);
+        assert_eq!(rep.fits.len(), 5);
+        assert!(rep.fits.iter().all(|&f| f <= 1.0 + 1e-9));
+        assert!(engine.counters.snapshot().volume_bytes() > 0);
+    }
+
+    #[test]
+    fn working_set_accounting() {
+        let t = synth::uniform(&[100, 100, 100], 1_000, 9);
+        let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+        let ws8 = engine.working_set_bytes(8);
+        let ws32 = engine.working_set_bytes(32);
+        assert!(ws32 > ws8);
+        assert!(ws8 >= engine.eng.footprint_bytes());
+    }
+}

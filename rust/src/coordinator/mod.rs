@@ -1,0 +1,8 @@
+//! The L3 coordination layer: out-of-memory streaming of BLCO batches
+//! through simulated device queues ([`streamer`]) and the high-level
+//! [`engine::MttkrpEngine`] facade that picks the in-memory or streaming
+//! path per tensor × device, exposes CP-ALS, and (optionally) routes
+//! per-block compute through the AOT-compiled PJRT executable.
+
+pub mod engine;
+pub mod streamer;

@@ -1,0 +1,225 @@
+//! Small dense linear algebra for CP-ALS: symmetric R×R solves via Cholesky
+//! with adaptive ridge, matrix multiply against the pseudo-inverse, and the
+//! Khatri-Rao gram combinations (Line 3 of Algorithm 1).
+
+use crate::mttkrp::dense::Matrix;
+
+/// Hadamard product of all gram matrices except `skip`:
+/// `V = ⊛_{n != skip} (AᵀA)_n` (Line 3 of Algorithm 1).
+pub fn gram_hadamard(grams: &[Matrix], skip: usize) -> Matrix {
+    let r = grams[0].rows;
+    let mut v = Matrix::zeros(r, r);
+    v.fill(1.0);
+    for (n, g) in grams.iter().enumerate() {
+        if n == skip {
+            continue;
+        }
+        v.hadamard_assign(g);
+    }
+    v
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix,
+/// in place lower-triangular. Returns `Err` if not positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, ()> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.row(i)[j];
+            for k in 0..j {
+                sum -= l.row(i)[k] * l.row(j)[k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(());
+                }
+                l.row_mut(i)[j] = sum.sqrt();
+            } else {
+                l.row_mut(i)[j] = sum / l.row(j)[j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `V x = b` for many right-hand sides given `L` (Cholesky of V):
+/// forward + back substitution. `b` and the result are row vectors of a
+/// row-major matrix (so this solves `X Vᵀ = B` row-wise; V symmetric).
+fn chol_solve_row(l: &Matrix, b: &[f64], x: &mut [f64]) {
+    let n = l.rows;
+    // forward: L y = b
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.row(i)[k] * x[k];
+        }
+        x[i] = s / l.row(i)[i];
+    }
+    // backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in i + 1..n {
+            s -= l.row(k)[i] * x[k];
+        }
+        x[i] = s / l.row(i)[i];
+    }
+}
+
+/// `A ← M V⁺` for symmetric PSD `V`, i.e. solve `A V = M` row-wise.
+/// Adds an adaptive ridge (scaled by trace) until Cholesky succeeds —
+/// the pseudo-inverse regularization standard in CP-ALS implementations.
+pub fn solve_pseudo(m: &Matrix, v: &Matrix) -> Matrix {
+    let r = v.rows;
+    assert_eq!(m.cols, r);
+    let trace: f64 = (0..r).map(|i| v.row(i)[i]).sum();
+    let mut ridge = 0.0f64;
+    let l = loop {
+        let mut vr = v.clone();
+        if ridge > 0.0 {
+            for i in 0..r {
+                vr.row_mut(i)[i] += ridge;
+            }
+        }
+        match cholesky(&vr) {
+            Ok(l) => break l,
+            Err(()) => {
+                ridge = if ridge == 0.0 {
+                    1e-12 * trace.max(1e-300)
+                } else {
+                    ridge * 10.0
+                };
+                assert!(
+                    ridge.is_finite() && ridge < trace.max(1.0) * 1e6,
+                    "V is catastrophically singular"
+                );
+            }
+        }
+    };
+    let mut out = Matrix::zeros(m.rows, r);
+    for i in 0..m.rows {
+        chol_solve_row(&l, m.row(i), out.row_mut(i));
+    }
+    out
+}
+
+/// Column 2-norms of a matrix (the λ normalization of CP-ALS).
+pub fn column_norms(a: &Matrix) -> Vec<f64> {
+    let mut norms = vec![0.0f64; a.cols];
+    for i in 0..a.rows {
+        for (k, &x) in a.row(i).iter().enumerate() {
+            norms[k] += x * x;
+        }
+    }
+    norms.iter_mut().for_each(|x| *x = x.sqrt());
+    norms
+}
+
+/// Divide each column by its norm (skip zero columns). Returns the norms.
+pub fn normalize_columns(a: &mut Matrix) -> Vec<f64> {
+    let norms = column_norms(a);
+    for i in 0..a.rows {
+        let row = a.row_mut(i);
+        for (k, &nm) in norms.iter().enumerate() {
+            if nm > 0.0 {
+                row[k] /= nm;
+            }
+        }
+    }
+    norms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Matrix {
+        // A = BᵀB + I is SPD
+        let b = Matrix::from_rows(vec![
+            vec![1.0, 2.0, 0.5],
+            vec![0.0, 1.0, 1.0],
+            vec![2.0, 0.0, 1.0],
+        ]);
+        let mut g = b.gram();
+        for i in 0..3 {
+            g.row_mut(i)[i] += 1.0;
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        // L Lᵀ == A
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.row(i)[k] * l.row(j)[k];
+                }
+                assert!((s - a.row(i)[j]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let v = spd3();
+        // pick X, compute M = X V, then solve back
+        let x = Matrix::from_rows(vec![
+            vec![1.0, -2.0, 3.0],
+            vec![0.5, 0.0, -1.0],
+        ]);
+        let mut m = Matrix::zeros(2, 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += x.row(i)[k] * v.row(k)[j];
+                }
+                m.row_mut(i)[j] = s;
+            }
+        }
+        let got = solve_pseudo(&m, &v);
+        assert!(got.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn solve_singular_with_ridge() {
+        // rank-1 V: pseudo-solve must still return finite values
+        let v = Matrix::from_rows(vec![
+            vec![1.0, 1.0],
+            vec![1.0, 1.0],
+        ]);
+        let m = Matrix::from_rows(vec![vec![2.0, 2.0]]);
+        let got = solve_pseudo(&m, &v);
+        assert!(got.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn gram_hadamard_skips_target() {
+        let a = Matrix::from_rows(vec![vec![2.0]]);
+        let b = Matrix::from_rows(vec![vec![3.0]]);
+        let c = Matrix::from_rows(vec![vec![5.0]]);
+        let v = gram_hadamard(&[a, b, c], 1);
+        assert_eq!(v.data, vec![10.0]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut a = Matrix::from_rows(vec![vec![3.0, 0.0], vec![4.0, 0.0]]);
+        let norms = normalize_columns(&mut a);
+        assert!((norms[0] - 5.0).abs() < 1e-12);
+        assert_eq!(norms[1], 0.0);
+        assert!((a.row(0)[0] - 0.6).abs() < 1e-12);
+        assert!((a.row(1)[0] - 0.8).abs() < 1e-12);
+    }
+}

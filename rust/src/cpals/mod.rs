@@ -1,0 +1,8 @@
+//! CP-ALS (Algorithm 1 of the paper) on top of any [`Mttkrp`] engine, with
+//! a self-contained dense R×R linear-algebra kernel set (Cholesky-based
+//! pseudo-inverse) — no external linalg crates.
+
+pub mod als;
+pub mod linalg;
+
+pub use als::{cp_als, CpAlsOptions, CpAlsReport};

@@ -1,0 +1,218 @@
+//! Hardware-counter surrogate: every MTTKRP engine counts exactly what it
+//! does — bytes moved by class (coalesced streams vs strided/gather
+//! accesses), atomic updates, segments discovered, stash hits, kernel
+//! launches. This replaces Nsight Compute in the paper's Table 3 / Figure
+//! 10 methodology (DESIGN.md §3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe counter block. Engines accumulate per-thread deltas
+/// locally and flush once per chunk, so counting does not perturb the hot
+/// loop.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// bytes read in coalesced/streamed form (index lists, values)
+    pub bytes_streamed: AtomicU64,
+    /// bytes read by data-dependent but *independent* gathers (factor
+    /// rows addressed per non-zero — the GPU hides their latency)
+    pub bytes_gathered: AtomicU64,
+    /// bytes read by *fine-grained* scatters (word-granular indirect access,
+    /// e.g. payload reads through a permutation): a full memory transaction
+    /// per word
+    pub bytes_scattered: AtomicU64,
+    /// bytes on dependency chains (tree pointer-chasing, recursive subtree
+    /// accumulation) whose latency cannot be hidden — the CSF-family
+    /// pathology the paper's Table 3 throughput gap comes from
+    pub bytes_serial: AtomicU64,
+    /// bytes moved through local/shared memory (segmented-scan passes,
+    /// stash flushes) — fast but not free
+    pub bytes_local: AtomicU64,
+    /// bytes written (outputs, flushes)
+    pub bytes_written: AtomicU64,
+    /// scalar atomic update operations issued
+    pub atomics: AtomicU64,
+    /// segments (distinct target-index runs) discovered
+    pub segments: AtomicU64,
+    /// updates absorbed by a local stash / register instead of memory
+    pub stash_hits: AtomicU64,
+    /// kernel launches (batches on the streaming path)
+    pub launches: AtomicU64,
+    /// number of independent atomic destinations (rows × copies) — a *max*,
+    /// not a sum: the model divides atomic serialization by it (capped at
+    /// the device's slice/SM parallelism). Register-based conflict
+    /// resolution on a short mode has a tiny fanout (the paper's contention
+    /// pathology); hierarchical resolution multiplies it by the number of
+    /// factor-matrix copies.
+    pub atomic_fanout: AtomicU64,
+}
+
+/// Plain-value snapshot of [`Counters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub bytes_streamed: u64,
+    pub bytes_gathered: u64,
+    pub bytes_scattered: u64,
+    pub bytes_serial: u64,
+    pub bytes_local: u64,
+    pub bytes_written: u64,
+    pub atomics: u64,
+    pub segments: u64,
+    pub stash_hits: u64,
+    pub launches: u64,
+    pub atomic_fanout: u64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, d: &Snapshot) {
+        // one flush per chunk — Relaxed is fine, totals are read after join
+        self.bytes_streamed.fetch_add(d.bytes_streamed, Ordering::Relaxed);
+        self.bytes_gathered.fetch_add(d.bytes_gathered, Ordering::Relaxed);
+        self.bytes_scattered.fetch_add(d.bytes_scattered, Ordering::Relaxed);
+        self.bytes_serial.fetch_add(d.bytes_serial, Ordering::Relaxed);
+        self.bytes_local.fetch_add(d.bytes_local, Ordering::Relaxed);
+        self.bytes_written.fetch_add(d.bytes_written, Ordering::Relaxed);
+        self.atomics.fetch_add(d.atomics, Ordering::Relaxed);
+        self.segments.fetch_add(d.segments, Ordering::Relaxed);
+        self.stash_hits.fetch_add(d.stash_hits, Ordering::Relaxed);
+        self.launches.fetch_add(d.launches, Ordering::Relaxed);
+        self.atomic_fanout.fetch_max(d.atomic_fanout, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            bytes_streamed: self.bytes_streamed.load(Ordering::Relaxed),
+            bytes_gathered: self.bytes_gathered.load(Ordering::Relaxed),
+            bytes_scattered: self.bytes_scattered.load(Ordering::Relaxed),
+            bytes_serial: self.bytes_serial.load(Ordering::Relaxed),
+            bytes_local: self.bytes_local.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            atomics: self.atomics.load(Ordering::Relaxed),
+            segments: self.segments.load(Ordering::Relaxed),
+            stash_hits: self.stash_hits.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+            atomic_fanout: self.atomic_fanout.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.bytes_streamed.store(0, Ordering::Relaxed);
+        self.bytes_gathered.store(0, Ordering::Relaxed);
+        self.bytes_scattered.store(0, Ordering::Relaxed);
+        self.bytes_serial.store(0, Ordering::Relaxed);
+        self.bytes_local.store(0, Ordering::Relaxed);
+        self.bytes_written.store(0, Ordering::Relaxed);
+        self.atomics.store(0, Ordering::Relaxed);
+        self.segments.store(0, Ordering::Relaxed);
+        self.stash_hits.store(0, Ordering::Relaxed);
+        self.launches.store(0, Ordering::Relaxed);
+        self.atomic_fanout.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Snapshot {
+    /// Total *global*-memory volume (the paper's Table 3 "Vol" column).
+    /// Local/shared-memory traffic is excluded, matching Nsight's
+    /// l1tex-to-device accounting.
+    pub fn volume_bytes(&self) -> u64 {
+        self.bytes_streamed
+            + self.bytes_gathered
+            + self.bytes_scattered
+            + self.bytes_serial
+            + self.bytes_written
+    }
+
+    /// Fraction of traffic that is coalesced/streamed — the memory-system
+    /// efficiency driver the paper attributes BLCO's throughput edge to.
+    pub fn coalesced_frac(&self) -> f64 {
+        let total = self.volume_bytes();
+        if total == 0 {
+            return 1.0;
+        }
+        (self.bytes_streamed + self.bytes_written) as f64 / total as f64
+    }
+}
+
+impl std::ops::Add for Snapshot {
+    type Output = Snapshot;
+    fn add(self, o: Snapshot) -> Snapshot {
+        Snapshot {
+            bytes_streamed: self.bytes_streamed + o.bytes_streamed,
+            bytes_gathered: self.bytes_gathered + o.bytes_gathered,
+            bytes_scattered: self.bytes_scattered + o.bytes_scattered,
+            bytes_serial: self.bytes_serial + o.bytes_serial,
+            bytes_local: self.bytes_local + o.bytes_local,
+            bytes_written: self.bytes_written + o.bytes_written,
+            atomics: self.atomics + o.atomics,
+            segments: self.segments + o.segments,
+            stash_hits: self.stash_hits + o.stash_hits,
+            launches: self.launches + o.launches,
+            atomic_fanout: self.atomic_fanout.max(o.atomic_fanout),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_snapshot() {
+        let c = Counters::new();
+        c.add(&Snapshot { bytes_streamed: 100, atomics: 5, ..Default::default() });
+        c.add(&Snapshot { bytes_gathered: 50, atomics: 3, ..Default::default() });
+        let s = c.snapshot();
+        assert_eq!(s.bytes_streamed, 100);
+        assert_eq!(s.bytes_gathered, 50);
+        assert_eq!(s.atomics, 8);
+        assert_eq!(s.volume_bytes(), 150);
+    }
+
+    #[test]
+    fn concurrent_accumulation() {
+        let c = Counters::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.add(&Snapshot { atomics: 1, ..Default::default() });
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot().atomics, 8000);
+    }
+
+    #[test]
+    fn coalesced_frac() {
+        let s = Snapshot {
+            bytes_streamed: 60,
+            bytes_gathered: 30,
+            bytes_written: 10,
+            ..Default::default()
+        };
+        assert!((s.coalesced_frac() - 0.7).abs() < 1e-12);
+        assert_eq!(Snapshot::default().coalesced_frac(), 1.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let c = Counters::new();
+        c.add(&Snapshot { launches: 7, ..Default::default() });
+        c.reset();
+        assert_eq!(c.snapshot(), Snapshot::default());
+    }
+
+    #[test]
+    fn snapshot_add() {
+        let a = Snapshot { segments: 2, ..Default::default() };
+        let b = Snapshot { segments: 3, stash_hits: 1, ..Default::default() };
+        let s = a + b;
+        assert_eq!(s.segments, 5);
+        assert_eq!(s.stash_hits, 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! The simulated accelerator (DESIGN.md §4).
+//!
+//! The paper's algorithms execute for real on CPU threads; what this module
+//! supplies is (i) the device *constraints* the algorithms adapt to —
+//! number of subslices/SMs for the §5.3 heuristic, device-memory budget for
+//! the in-/out-of-memory classification, queue reservations for streaming —
+//! and (ii) *hardware counters* (bytes, atomics, segments, launches) that
+//! every engine reports, from which a first-order roofline model derives
+//! device-scale times for the paper's figures. Counters are counted in
+//! code, never sampled.
+
+pub mod counters;
+pub mod model;
+pub mod profile;
+
+pub use counters::Counters;
+pub use profile::Profile;

@@ -1,0 +1,196 @@
+//! First-order device-time model: combines the exactly-counted traffic of a
+//! [`Snapshot`](super::counters::Snapshot) with a [`Profile`]'s rates.
+//!
+//! The model is a memory roofline over four access classes whose relative
+//! costs encode the paper's performance analysis (§3, §6.4):
+//!
+//! * **streamed** (×1) — coalesced, independent loads/stores (index lists,
+//!   values, outputs): move at full bandwidth;
+//! * **gathered** (×[`GATHER_PENALTY`]) — data-dependent but *independent*
+//!   row fetches (factor rows per non-zero): the GPU overlaps their
+//!   latency, but row-granular randomness wastes part of each transaction;
+//! * **serial** (×[`SERIAL_PENALTY`]) — accesses on dependency chains
+//!   (CSF tree pointer-chasing and recursive subtree accumulation): their
+//!   latency is exposed, so effective bandwidth collapses. This term is why
+//!   MM-CSF can move *less* data yet deliver *lower* throughput (Table 3);
+//! * **local** (×[`LOCAL_DISCOUNT`]) — shared/local-memory passes
+//!   (segmented-scan sweeps, stash flushes): much faster than HBM but not
+//!   free.
+//!
+//! Atomic updates cost twice: (i) *bandwidth* — an atomic add is an
+//! uncoalescible read-modify-write through L2, charged as scattered-class
+//! read traffic on top of the written bytes; (ii) *contention* — updates to
+//! the same destination serialize, so the critical path is
+//! `atomics / fanout × atomic_ns`, where `atomic_fanout` (reported by the
+//! engines) is the number of independent destinations: target rows ×
+//! output copies. A short target mode therefore bottlenecks register-based
+//! resolution — the §5.3 pathology — while hierarchical resolution's
+//! factor-matrix copies multiply the fanout. Kernel launches add a fixed
+//! `launch_us` each (the hypersparse batching motivation).
+
+use super::counters::Snapshot;
+use super::profile::Profile;
+
+/// Row-granular random gathers: partial-transaction waste + cache misses.
+pub const GATHER_PENALTY: f64 = 1.5;
+
+/// Fine-grained (word-granular) indirect accesses: one 32-byte transaction
+/// per 8-byte word.
+pub const SCATTER_PENALTY: f64 = 4.0;
+
+/// Dependency-chain accesses: latency exposed, effective bandwidth drops
+/// (calibrated to the paper's Table 3 BLCO/MM-CSF throughput ratios).
+pub const SERIAL_PENALTY: f64 = 6.0;
+
+/// Local/shared memory runs several times faster than HBM.
+pub const LOCAL_DISCOUNT: f64 = 0.25;
+
+/// Modelled execution-time decomposition, seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelTime {
+    pub memory_s: f64,
+    pub atomic_s: f64,
+    pub launch_s: f64,
+}
+
+impl ModelTime {
+    pub fn total(&self) -> f64 {
+        // an atomic is a memory round-trip; memory and atomic terms overlap
+        // poorly in practice, so they add; launches add on top
+        self.memory_s + self.atomic_s + self.launch_s
+    }
+}
+
+/// Modelled device time for one kernel/operation.
+pub fn device_time(s: &Snapshot, p: &Profile) -> ModelTime {
+    let gb = 1e9;
+    let effective = (s.bytes_streamed + s.bytes_written) as f64
+        + s.bytes_gathered as f64 * GATHER_PENALTY
+        + (s.bytes_scattered + s.atomics * 8) as f64 * SCATTER_PENALTY
+        + s.bytes_serial as f64 * SERIAL_PENALTY
+        + s.bytes_local as f64 * LOCAL_DISCOUNT;
+    let memory_s = effective / (p.hbm_gbps * gb);
+    // contention: serialized depth on the hottest destinations
+    let fanout = s.atomic_fanout.max(1) as f64;
+    let atomic_s = (s.atomics as f64 / fanout) * p.atomic_ns * 1e-9;
+    let launch_s = s.launches as f64 * p.launch_us * 1e-6;
+    ModelTime { memory_s, atomic_s, launch_s }
+}
+
+/// Modelled host→device transfer time for `bytes` over the interconnect.
+pub fn transfer_time(bytes: usize, p: &Profile) -> f64 {
+    bytes as f64 / (p.link_gbps * 1e9)
+}
+
+/// Effective memory throughput (the paper's Table 3 "TP" column), TB/s,
+/// for a measured-or-modelled execution time.
+pub fn throughput_tbps(volume_bytes: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    volume_bytes as f64 / seconds / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(streamed: u64, gathered: u64, written: u64, atomics: u64) -> Snapshot {
+        Snapshot {
+            bytes_streamed: streamed,
+            bytes_gathered: gathered,
+            bytes_written: written,
+            atomics,
+            atomic_fanout: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fanout_parallelizes_atomics() {
+        let p = Profile::a100();
+        let narrow = device_time(&snap(0, 0, 0, 1_000_000), &p);
+        let mut s = snap(0, 0, 0, 1_000_000);
+        s.atomic_fanout = 64;
+        let wide = device_time(&s, &p);
+        assert!((narrow.atomic_s / wide.atomic_s - 64.0).abs() < 1e-9);
+        // the RMW bandwidth term is fanout-independent
+        assert!((narrow.memory_s - wide.memory_s).abs() < 1e-12);
+        assert!(narrow.memory_s > 0.0);
+    }
+
+    #[test]
+    fn pure_streaming_hits_roofline() {
+        let p = Profile::a100();
+        let s = snap(1_555_000_000_000, 0, 0, 0); // 1555 GB
+        let t = device_time(&s, &p);
+        assert!((t.memory_s - 1.0).abs() < 1e-9);
+        assert_eq!(t.atomic_s, 0.0);
+    }
+
+    #[test]
+    fn access_class_ordering() {
+        // same byte count: streamed < local-inclusive < gathered < serial
+        let p = Profile::a100();
+        let n = 1u64 << 30;
+        let st = device_time(&snap(n, 0, 0, 0), &p).memory_s;
+        let ga = device_time(&snap(0, n, 0, 0), &p).memory_s;
+        let se = device_time(
+            &Snapshot { bytes_serial: n, ..Default::default() },
+            &p,
+        )
+        .memory_s;
+        let lo = device_time(
+            &Snapshot { bytes_local: n, ..Default::default() },
+            &p,
+        )
+        .memory_s;
+        assert!(lo < st && st < ga && ga < se);
+        assert!((ga / st - GATHER_PENALTY).abs() < 1e-9);
+        assert!((se / st - SERIAL_PENALTY).abs() < 1e-9);
+        assert!((lo / st - LOCAL_DISCOUNT).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_excluded_from_nothing_volume_includes_it() {
+        let s = Snapshot {
+            bytes_streamed: 10,
+            bytes_serial: 5,
+            bytes_local: 100,
+            ..Default::default()
+        };
+        // volume counts global traffic only (local excluded, like Nsight)
+        assert_eq!(s.volume_bytes(), 15);
+    }
+
+    #[test]
+    fn atomics_dominate_on_contended_kernels() {
+        let p = Profile::v100();
+        let light = device_time(&snap(1 << 20, 0, 0, 1_000), &p);
+        let heavy = device_time(&snap(1 << 20, 0, 0, 100_000_000), &p);
+        assert!(heavy.total() > light.total() * 100.0);
+    }
+
+    #[test]
+    fn transfer_slower_than_hbm() {
+        let p = Profile::a100();
+        let bytes = 1usize << 30;
+        let link = transfer_time(bytes, &p);
+        let hbm = device_time(&snap(bytes as u64, 0, 0, 0), &p).memory_s;
+        assert!(link > hbm * 10.0, "link {link} vs hbm {hbm}");
+    }
+
+    #[test]
+    fn throughput_calc() {
+        assert!((throughput_tbps(2_000_000_000_000, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(throughput_tbps(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn launches_add_fixed_cost() {
+        let p = Profile::a100();
+        let s = Snapshot { launches: 1000, ..Default::default() };
+        let t = device_time(&s, &p);
+        assert!((t.launch_s - 0.005).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,331 @@
+//! Compressed Sparse Fiber (CSF) trees (Smith & Karypis; Section 3.2 of the
+//! paper) for an arbitrary mode ordering, plus the B-CSF balanced splitting
+//! of heavy root sub-trees (Nisa et al., IPDPS '19).
+//!
+//! Level `l` of the tree stores mode `mode_order[l]`; `fptr[l][i]..fptr[l][i+1]`
+//! are the children of node `i` at level `l+1`. Leaf nodes align with `vals`.
+
+use crate::tensor::coo::CooTensor;
+
+/// A CSF tensor with a fixed mode ordering.
+#[derive(Clone, Debug)]
+pub struct Csf {
+    pub dims: Vec<u64>,
+    /// level -> tensor mode stored at that level (root = 0, leaf = N-1)
+    pub mode_order: Vec<usize>,
+    /// per level: the index value of each node
+    pub fids: Vec<Vec<u32>>,
+    /// per non-leaf level: child ranges into the next level
+    /// (`fptr[l].len() == fids[l].len() + 1`)
+    pub fptr: Vec<Vec<u32>>,
+    /// leaf values, aligned with `fids[order-1]`
+    pub vals: Vec<f64>,
+}
+
+impl Csf {
+    /// Build from COO with the given mode ordering (a permutation of modes).
+    pub fn from_coo(t: &CooTensor, mode_order: &[usize]) -> Self {
+        let order = t.order();
+        assert_eq!(mode_order.len(), order);
+        {
+            let mut seen = vec![false; order];
+            for &m in mode_order {
+                assert!(m < order && !seen[m], "bad mode order {mode_order:?}");
+                seen[m] = true;
+            }
+        }
+        // sort non-zeros lexicographically along mode_order
+        let mut perm: Vec<u32> = (0..t.nnz() as u32).collect();
+        perm.sort_unstable_by(|&a, &b| {
+            for &m in mode_order {
+                match t.coords[m][a as usize].cmp(&t.coords[m][b as usize]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+
+        // pass 1: node ids per level (a new node opens at every level below
+        // the longest common prefix with the previous non-zero)
+        let mut fids: Vec<Vec<u32>> = vec![Vec::new(); order];
+        let mut vals = Vec::with_capacity(t.nnz());
+        let lcp_of = |a: usize, b: usize| -> usize {
+            let mut lcp = 0usize;
+            while lcp < order - 1
+                && t.coords[mode_order[lcp]][a] == t.coords[mode_order[lcp]][b]
+            {
+                lcp += 1;
+            }
+            lcp
+        };
+        for (i, &e) in perm.iter().enumerate() {
+            let e = e as usize;
+            let from = if i == 0 { 0 } else { lcp_of(e, perm[i - 1] as usize) };
+            for l in from..order {
+                fids[l].push(t.coords[mode_order[l]][e]);
+            }
+            vals.push(t.vals[e]);
+        }
+
+        // pass 2: child ranges. fptr[l][i+1] tracks the running end of node
+        // i's children; node_at[l] is the current (last-opened) node.
+        let mut fptr: Vec<Vec<u32>> = (0..order.saturating_sub(1))
+            .map(|l| vec![0u32; fids[l].len() + 1])
+            .collect();
+        if !perm.is_empty() {
+            let mut node_at = vec![0usize; order];
+            for l in 0..order.saturating_sub(1) {
+                fptr[l][1] = 1;
+            }
+            for i in 1..perm.len() {
+                let lcp = lcp_of(perm[i] as usize, perm[i - 1] as usize);
+                for l in lcp..order {
+                    node_at[l] += 1;
+                }
+                for l in 0..order.saturating_sub(1) {
+                    fptr[l][node_at[l] + 1] = node_at[l + 1] as u32 + 1;
+                }
+            }
+        }
+
+        Csf { dims: t.dims.clone(), mode_order: mode_order.to_vec(), fids, fptr, vals }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.mode_order.len()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Number of root sub-trees.
+    pub fn roots(&self) -> usize {
+        self.fids[0].len()
+    }
+
+    /// Leaf count under root `r` (its workload).
+    pub fn root_nnz(&self, r: usize) -> usize {
+        let (mut lo, mut hi) = (r, r + 1);
+        for l in 0..self.order() - 1 {
+            lo = self.fptr[l][lo] as usize;
+            hi = self.fptr[l][hi] as usize;
+        }
+        hi - lo
+    }
+
+    /// Bytes of the representation (ids + pointers + values).
+    pub fn footprint_bytes(&self) -> usize {
+        let ids: usize = self.fids.iter().map(|v| v.len() * 4).sum();
+        let ptrs: usize = self.fptr.iter().map(|v| v.len() * 4).sum();
+        ids + ptrs + self.vals.len() * 8
+    }
+
+    /// B-CSF: split roots whose sub-tree exceeds `max_nnz` leaves at child
+    /// granularity. Root ids may then repeat — the MTTKRP engines must
+    /// combine repeated roots with atomic updates (that is B-CSF's tradeoff:
+    /// balance for synchronization).
+    pub fn split_roots(&self, max_nnz: usize) -> Csf {
+        assert!(self.order() >= 2);
+        let mut out = self.clone();
+        let mut new_roots: Vec<u32> = Vec::new();
+        let mut new_ptr: Vec<u32> = vec![0];
+        for r in 0..self.roots() {
+            let c0 = self.fptr[0][r] as usize;
+            let c1 = self.fptr[0][r + 1] as usize;
+            let mut run_start = c0;
+            let mut run_nnz = 0usize;
+            for c in c0..c1 {
+                let sz = self.child_nnz(1, c);
+                if run_nnz > 0 && run_nnz + sz > max_nnz {
+                    new_roots.push(self.fids[0][r]);
+                    new_ptr.push(c as u32);
+                    run_start = c;
+                    run_nnz = 0;
+                }
+                run_nnz += sz;
+            }
+            if c1 > run_start {
+                new_roots.push(self.fids[0][r]);
+                new_ptr.push(c1 as u32);
+            }
+        }
+        out.fids[0] = new_roots;
+        out.fptr[0] = new_ptr;
+        out
+    }
+
+    /// Leaf count under node `node` at level `l`.
+    pub fn child_nnz(&self, l: usize, node: usize) -> usize {
+        let (mut lo, mut hi) = (node, node + 1);
+        for lev in l..self.order() - 1 {
+            lo = self.fptr[lev][lo] as usize;
+            hi = self.fptr[lev][hi] as usize;
+        }
+        hi - lo
+    }
+
+    /// Reconstruct COO (round-trip tests).
+    pub fn to_coo(&self) -> CooTensor {
+        let mut t = CooTensor::with_capacity(&self.dims, self.nnz());
+        let order = self.order();
+        let mut coord = vec![0u32; order];
+        // walk every leaf, tracking the ancestor node at each level
+        for leaf in 0..self.nnz() {
+            let mut node = leaf;
+            coord[self.mode_order[order - 1]] = self.fids[order - 1][leaf];
+            for l in (0..order - 1).rev() {
+                // find parent of `node` at level l by binary search on fptr
+                let p = match self.fptr[l].binary_search(&(node as u32)) {
+                    Ok(mut i) => {
+                        // fptr may contain repeated values for empty ranges;
+                        // advance to the last equal entry
+                        while i + 1 < self.fptr[l].len()
+                            && self.fptr[l][i + 1] as usize == node
+                        {
+                            i += 1;
+                        }
+                        i
+                    }
+                    Err(i) => i - 1,
+                };
+                coord[self.mode_order[l]] = self.fids[l][p];
+                node = p;
+            }
+            t.push(&coord, self.vals[leaf]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth;
+    use std::collections::HashMap;
+
+    fn key_count(t: &CooTensor) -> HashMap<(Vec<u32>, u64), u32> {
+        let mut m = HashMap::new();
+        for e in 0..t.nnz() {
+            *m.entry((t.coord(e), t.vals[e].to_bits())).or_insert(0u32) += 1;
+        }
+        m
+    }
+
+    fn paper_tensor() -> CooTensor {
+        // Figure 4a, 0-based
+        let mut t = CooTensor::new(&[4, 4, 4]);
+        for (c, v) in [
+            ([0u32, 0, 0], 1.0),
+            ([0, 0, 1], 2.0),
+            ([0, 2, 2], 3.0),
+            ([1, 0, 1], 4.0),
+            ([1, 0, 2], 5.0),
+            ([2, 0, 1], 6.0),
+            ([2, 3, 3], 7.0),
+            ([3, 1, 0], 8.0),
+            ([3, 1, 1], 9.0),
+            ([3, 2, 2], 10.0),
+            ([3, 2, 3], 11.0),
+            ([3, 3, 3], 12.0),
+        ] {
+            t.push(&c, v);
+        }
+        t
+    }
+
+    #[test]
+    fn paper_tensor_structure() {
+        let t = paper_tensor();
+        let c = Csf::from_coo(&t, &[0, 1, 2]);
+        assert_eq!(c.roots(), 4); // i0 ∈ {0,1,2,3}
+        assert_eq!(c.nnz(), 12);
+        // root 0 = index 0 has fibers (0,0,*) and (0,2,*): 2 children
+        assert_eq!(c.fptr[0][1] - c.fptr[0][0], 2);
+        // root 3 = index 3 has fibers (3,1,*),(3,2,*),(3,3,*): 3 children
+        assert_eq!(c.fptr[0][4] - c.fptr[0][3], 3);
+        assert_eq!(c.root_nnz(0), 3);
+        assert_eq!(c.root_nnz(3), 5);
+    }
+
+    #[test]
+    fn roundtrip_all_mode_orders() {
+        let t = synth::uniform(&[20, 15, 10], 800, 1);
+        for mo in [[0usize, 1, 2], [2, 1, 0], [1, 0, 2], [1, 2, 0], [0, 2, 1], [2, 0, 1]] {
+            let c = Csf::from_coo(&t, &mo);
+            assert_eq!(c.nnz(), t.nnz());
+            assert_eq!(key_count(&c.to_coo()), key_count(&t), "order {mo:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_4mode() {
+        let t = synth::uniform(&[10, 8, 6, 4], 500, 2);
+        for mo in [[0usize, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]] {
+            let c = Csf::from_coo(&t, &mo);
+            assert_eq!(key_count(&c.to_coo()), key_count(&t), "order {mo:?}");
+        }
+    }
+
+    #[test]
+    fn fptr_invariants() {
+        let t = synth::uniform(&[30, 20, 10], 1_000, 3);
+        let c = Csf::from_coo(&t, &[0, 1, 2]);
+        for l in 0..2 {
+            assert_eq!(c.fptr[l].len(), c.fids[l].len() + 1);
+            assert_eq!(c.fptr[l][0], 0);
+            assert_eq!(*c.fptr[l].last().unwrap() as usize, c.fids[l + 1].len());
+            for w in c.fptr[l].windows(2) {
+                assert!(w[0] < w[1], "every node has at least one child");
+            }
+        }
+        let total: usize = (0..c.roots()).map(|r| c.root_nnz(r)).sum();
+        assert_eq!(total, c.nnz());
+    }
+
+    #[test]
+    fn compression_beats_coo_on_dense_fibers() {
+        let t = synth::fiber_clustered(&[200, 200, 200], 20_000, 2, 1.2, 4);
+        let c = Csf::from_coo(&t, &[0, 1, 2]);
+        // dense fibers: far fewer fiber nodes than nnz
+        assert!(c.fids[1].len() < t.nnz() / 2);
+        assert!(c.footprint_bytes() < t.footprint_bytes() * 2);
+    }
+
+    #[test]
+    fn split_roots_balances() {
+        let t = synth::fiber_clustered(&[10, 100, 100], 8_000, 2, 1.0, 5);
+        let c = Csf::from_coo(&t, &[0, 1, 2]);
+        let max_root = (0..c.roots()).map(|r| c.root_nnz(r)).max().unwrap();
+        assert!(max_root > 500, "test premise: some root is heavy");
+        let b = c.split_roots(500);
+        // same leaves, same values
+        assert_eq!(b.nnz(), c.nnz());
+        assert_eq!(key_count(&b.to_coo()), key_count(&t));
+        // no root exceeds the budget unless a single fiber does
+        let max_fiber = (0..b.fids[1].len())
+            .map(|f| b.child_nnz(1, f))
+            .max()
+            .unwrap();
+        for r in 0..b.roots() {
+            assert!(
+                b.root_nnz(r) <= 500.max(max_fiber),
+                "root {r}: {}",
+                b.root_nnz(r)
+            );
+        }
+        assert!(b.roots() > c.roots());
+    }
+
+    #[test]
+    fn empty_tensor() {
+        let t = CooTensor::new(&[4, 4, 4]);
+        let c = Csf::from_coo(&t, &[0, 1, 2]);
+        assert_eq!(c.roots(), 0);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.to_coo().nnz(), 0);
+    }
+}

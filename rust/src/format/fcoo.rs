@@ -1,0 +1,196 @@
+//! The Flagged COOrdinate (F-COO) format (Liu et al., CLUSTER '17;
+//! Section 3.1 / Figure 4b of the paper).
+//!
+//! One *mode-specific* copy per target mode: non-zeros sorted by the target
+//! index, the target index replaced by a bit flag `bf` (1 while the next
+//! non-zero continues the same segment, 0 at the last element of a segment)
+//! plus per-chunk start flags `sf` used by the GPU-style segmented scan.
+//! The N copies are the format's memory-footprint tradeoff the paper
+//! criticizes.
+
+use crate::tensor::coo::CooTensor;
+
+/// The mode-`target` copy of an F-COO tensor.
+#[derive(Clone, Debug)]
+pub struct FCooMode {
+    pub target: usize,
+    /// modes stored explicitly (all but `target`)
+    pub other_modes: Vec<usize>,
+    /// index planes for `other_modes`, parallel to `vals`
+    pub other_idx: Vec<Vec<u32>>,
+    pub vals: Vec<f64>,
+    /// `bf[i]` = the non-zero after `i` has the same target index
+    pub bf: Vec<bool>,
+    /// target row of each segment, in segment order
+    pub seg_rows: Vec<u32>,
+    /// processing chunk (thread group) size
+    pub chunk: usize,
+    /// `sf[c]` = a new segment starts inside chunk `c`
+    pub sf: Vec<bool>,
+}
+
+/// F-COO: one sorted, flagged copy per mode.
+#[derive(Clone, Debug)]
+pub struct FCoo {
+    pub dims: Vec<u64>,
+    pub modes: Vec<FCooMode>,
+}
+
+impl FCooMode {
+    pub fn from_coo(t: &CooTensor, target: usize, chunk: usize) -> Self {
+        assert!(target < t.order());
+        assert!(chunk > 0);
+        let nnz = t.nnz();
+        // stable sort by target index groups segments without disturbing
+        // intra-segment order
+        let mut perm: Vec<u32> = (0..nnz as u32).collect();
+        perm.sort_by_key(|&e| t.coords[target][e as usize]);
+
+        let other_modes: Vec<usize> =
+            (0..t.order()).filter(|&n| n != target).collect();
+        let other_idx: Vec<Vec<u32>> = other_modes
+            .iter()
+            .map(|&n| perm.iter().map(|&e| t.coords[n][e as usize]).collect())
+            .collect();
+        let vals: Vec<f64> =
+            perm.iter().map(|&e| t.vals[e as usize]).collect();
+
+        let tgt = |i: usize| t.coords[target][perm[i] as usize];
+        let mut bf = vec![false; nnz];
+        let mut seg_rows = Vec::new();
+        for i in 0..nnz {
+            if i == 0 || tgt(i) != tgt(i - 1) {
+                seg_rows.push(tgt(i));
+            }
+            bf[i] = i + 1 < nnz && tgt(i + 1) == tgt(i);
+        }
+        let nchunks = nnz.div_ceil(chunk);
+        let mut sf = vec![false; nchunks];
+        for c in 0..nchunks {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(nnz);
+            sf[c] = (lo..hi).any(|i| i == 0 || tgt(i) != tgt(i - 1));
+        }
+        FCooMode { target, other_modes, other_idx, vals, bf, seg_rows, chunk, sf }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Bytes of this copy: explicit indices + values + flags (flags modeled
+    /// at 1 bit each, as stored on device).
+    pub fn footprint_bytes(&self) -> usize {
+        let idx: usize = self.other_idx.iter().map(|p| p.len() * 4).sum();
+        let flags = (self.nnz() + self.sf.len() + 7) / 8;
+        idx + self.vals.len() * 8 + self.seg_rows.len() * 4 + flags
+    }
+}
+
+impl FCoo {
+    pub fn from_coo(t: &CooTensor, chunk: usize) -> Self {
+        let modes = (0..t.order())
+            .map(|m| FCooMode::from_coo(t, m, chunk))
+            .collect();
+        FCoo { dims: t.dims.clone(), modes }
+    }
+
+    pub fn footprint_bytes(&self) -> usize {
+        self.modes.iter().map(|m| m.footprint_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth;
+
+    #[test]
+    fn paper_figure4b() {
+        // Figure 4a tensor, mode-1 copy: segments per i1 = [3, 2, 2, 5]
+        let mut t = CooTensor::new(&[4, 4, 4]);
+        for (c, v) in [
+            ([0u32, 0, 0], 1.0),
+            ([0, 0, 1], 2.0),
+            ([0, 2, 2], 3.0),
+            ([1, 0, 1], 4.0),
+            ([1, 0, 2], 5.0),
+            ([2, 0, 1], 6.0),
+            ([2, 3, 3], 7.0),
+            ([3, 1, 0], 8.0),
+            ([3, 1, 1], 9.0),
+            ([3, 2, 2], 10.0),
+            ([3, 2, 3], 11.0),
+            ([3, 3, 3], 12.0),
+        ] {
+            t.push(&c, v);
+        }
+        let f = FCooMode::from_coo(&t, 0, 6);
+        assert_eq!(f.seg_rows, vec![0, 1, 2, 3]);
+        // bf per Figure 4b: 1,1,0 | 1,0 | 1,0 | 1,1,1,1,0
+        let expect = [true, true, false, true, false, true, false, true, true, true, true, false];
+        assert_eq!(f.bf, expect);
+        // chunks of 6: both contain segment starts
+        assert_eq!(f.sf, vec![true, true]);
+    }
+
+    #[test]
+    fn segments_count_matches_distinct_rows() {
+        let t = synth::uniform(&[50, 40, 30], 3_000, 1);
+        for m in 0..3 {
+            let f = FCooMode::from_coo(&t, m, 128);
+            let mut rows: Vec<u32> = t.coords[m].clone();
+            rows.sort_unstable();
+            rows.dedup();
+            assert_eq!(f.seg_rows.len(), rows.len(), "mode {m}");
+            assert_eq!(f.seg_rows, rows, "mode {m} (sorted order)");
+            // number of bf=0 entries equals number of segments
+            let ends = f.bf.iter().filter(|&&b| !b).count();
+            assert_eq!(ends, rows.len());
+        }
+    }
+
+    #[test]
+    fn values_preserved_per_segment() {
+        let t = synth::uniform(&[10, 10, 10], 400, 2);
+        let f = FCooMode::from_coo(&t, 1, 64);
+        // total value mass per target row must match COO
+        let mut per_row_coo = vec![0.0f64; 10];
+        for e in 0..t.nnz() {
+            per_row_coo[t.coords[1][e] as usize] += t.vals[e];
+        }
+        let mut per_row_f = vec![0.0f64; 10];
+        let mut seg = 0usize;
+        for i in 0..f.nnz() {
+            per_row_f[f.seg_rows[seg] as usize] += f.vals[i];
+            if !f.bf[i] {
+                seg += 1;
+            }
+        }
+        for r in 0..10 {
+            assert!((per_row_coo[r] - per_row_f[r]).abs() < 1e-9, "row {r}");
+        }
+    }
+
+    #[test]
+    fn full_fcoo_keeps_n_copies() {
+        let t = synth::uniform(&[30, 30, 30, 30], 1_000, 3);
+        let f = FCoo::from_coo(&t, 256);
+        assert_eq!(f.modes.len(), 4);
+        // N copies: footprint far exceeds one COO copy
+        assert!(f.footprint_bytes() > t.footprint_bytes() * 2);
+    }
+
+    #[test]
+    fn sf_flags_empty_and_dense_chunks() {
+        // all nnz share one target row: only chunk 0 sees a segment start
+        let mut t = CooTensor::new(&[4, 64, 4]);
+        for j in 0..64u32 {
+            t.push(&[2, j, 1], 1.0);
+        }
+        let f = FCooMode::from_coo(&t, 0, 16);
+        assert_eq!(f.sf, vec![true, false, false, false]);
+        assert_eq!(f.seg_rows, vec![2]);
+    }
+}

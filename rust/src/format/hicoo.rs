@@ -1,0 +1,174 @@
+//! HiCOO (Li et al., SC '18) — the block-based format the paper contrasts
+//! BLCO against (Section 7): non-zeros are grouped into fixed-size
+//! multi-dimensional blocks (side `2^block_bits`), each storing compact
+//! per-mode *element* offsets (u8) against the block's base coordinates.
+//! Compression is good when blocks are dense, but hypersparse tensors
+//! degenerate to one-element blocks with *more* metadata than COO — the
+//! load-imbalance/overhead pathology the paper cites for why HiCOO has no
+//! GPU implementation.
+
+use std::collections::HashMap;
+
+use crate::tensor::coo::CooTensor;
+
+/// One HiCOO block: base coordinates (block index per mode) plus compact
+/// element offsets.
+#[derive(Clone, Debug)]
+pub struct HicooBlock {
+    /// per-mode block coordinates (global coordinate >> block_bits)
+    pub base: Vec<u32>,
+    /// per-mode element offsets within the block (mode-major planes)
+    pub eidx: Vec<Vec<u8>>,
+    pub vals: Vec<f64>,
+}
+
+impl HicooBlock {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// The HiCOO tensor: blocks sorted by block coordinate (Z-like row-major).
+#[derive(Clone, Debug)]
+pub struct HicooTensor {
+    pub dims: Vec<u64>,
+    pub block_bits: u32,
+    pub blocks: Vec<HicooBlock>,
+    pub nnz: usize,
+}
+
+impl HicooTensor {
+    /// Build with blocks of side `2^block_bits` (HiCOO's default is 7,
+    /// i.e. 128, matching its u8 element offsets).
+    pub fn from_coo(t: &CooTensor, block_bits: u32) -> Self {
+        assert!(block_bits <= 8, "u8 element offsets cap block side at 256");
+        let order = t.order();
+        let mut groups: HashMap<Vec<u32>, Vec<usize>> = HashMap::new();
+        for e in 0..t.nnz() {
+            let key: Vec<u32> =
+                (0..order).map(|n| t.coords[n][e] >> block_bits).collect();
+            groups.entry(key).or_default().push(e);
+        }
+        let mut keys: Vec<Vec<u32>> = groups.keys().cloned().collect();
+        keys.sort_unstable();
+        let blocks = keys
+            .into_iter()
+            .map(|key| {
+                let elems = &groups[&key];
+                let mask = (1u32 << block_bits) - 1;
+                HicooBlock {
+                    eidx: (0..order)
+                        .map(|n| {
+                            elems
+                                .iter()
+                                .map(|&e| (t.coords[n][e] & mask) as u8)
+                                .collect()
+                        })
+                        .collect(),
+                    vals: elems.iter().map(|&e| t.vals[e]).collect(),
+                    base: key,
+                }
+            })
+            .collect();
+        HicooTensor { dims: t.dims.clone(), block_bits, blocks, nnz: t.nnz() }
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Bytes: per block, base coords (4B/mode) + per nnz (1B/mode + 8B val).
+    pub fn footprint_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.base.len() * 4 + b.nnz() * (b.base.len() + 8))
+            .sum()
+    }
+
+    /// Mean non-zeros per block (the density HiCOO's compression relies on).
+    pub fn avg_block_nnz(&self) -> f64 {
+        if self.blocks.is_empty() {
+            0.0
+        } else {
+            self.nnz as f64 / self.blocks.len() as f64
+        }
+    }
+
+    /// Round-trip reconstruction (tests).
+    pub fn to_coo(&self) -> CooTensor {
+        let mut t = CooTensor::with_capacity(&self.dims, self.nnz);
+        let order = self.order();
+        let mut coord = vec![0u32; order];
+        for b in &self.blocks {
+            for i in 0..b.nnz() {
+                for n in 0..order {
+                    coord[n] = (b.base[n] << self.block_bits) | b.eidx[n][i] as u32;
+                }
+                t.push(&coord, b.vals[i]);
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth;
+    use std::collections::HashMap as Map;
+
+    fn key_count(t: &CooTensor) -> Map<(Vec<u32>, u64), u32> {
+        let mut m = Map::new();
+        for e in 0..t.nnz() {
+            *m.entry((t.coord(e), t.vals[e].to_bits())).or_insert(0u32) += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = synth::uniform(&[300, 200, 100], 5_000, 1);
+        let h = HicooTensor::from_coo(&t, 7);
+        assert_eq!(h.nnz, t.nnz());
+        assert_eq!(key_count(&h.to_coo()), key_count(&t));
+    }
+
+    #[test]
+    fn blocks_partition_nnz() {
+        let t = synth::fiber_clustered(&[256, 256, 256], 8_000, 2, 1.0, 2);
+        let h = HicooTensor::from_coo(&t, 6);
+        let total: usize = h.blocks.iter().map(|b| b.nnz()).sum();
+        assert_eq!(total, t.nnz());
+        // element offsets must fit the block side
+        for b in &h.blocks {
+            for plane in &b.eidx {
+                assert!(plane.iter().all(|&x| (x as u32) < (1 << 6)));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_blocks_compress_hypersparse_bloats() {
+        // clustered tensor in a small space → dense blocks → smaller than COO
+        let dense = synth::fiber_clustered(&[128, 128, 128], 40_000, 2, 1.2, 3);
+        let hd = HicooTensor::from_coo(&dense, 7);
+        assert!(hd.avg_block_nnz() > 8.0, "avg {}", hd.avg_block_nnz());
+        assert!(hd.footprint_bytes() < dense.footprint_bytes());
+
+        // hypersparse tensor → singleton blocks → more bytes than COO
+        // (the paper's §7 criticism, quantified)
+        let hyper = synth::uniform(&[1 << 20, 1 << 20, 1 << 20], 5_000, 4);
+        let hh = HicooTensor::from_coo(&hyper, 7);
+        assert!(hh.avg_block_nnz() < 1.5, "avg {}", hh.avg_block_nnz());
+        assert!(hh.footprint_bytes() > hyper.footprint_bytes() * 3 / 4);
+    }
+
+    #[test]
+    fn block_sorted_order() {
+        let t = synth::uniform(&[512, 512, 512], 3_000, 5);
+        let h = HicooTensor::from_coo(&t, 7);
+        for w in h.blocks.windows(2) {
+            assert!(w[0].base <= w[1].base);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse tensor formats: the paper's BLCO format plus every baseline its
+//! evaluation compares against, implemented from scratch — list-based
+//! (COO is [`crate::tensor::coo`], F-COO) and tree-based (CSF, B-CSF,
+//! MM-CSF).
+
+pub mod blco;
+pub mod csf;
+pub mod fcoo;
+pub mod hicoo;
+pub mod mmcsf;

@@ -1,0 +1,35 @@
+//! # BLCO — Blocked Linearized COOrdinate sparse tensors, out of memory
+//!
+//! A reproduction of *"Efficient, Out-of-Memory Sparse MTTKRP on Massively
+//! Parallel Architectures"* (Nguyen et al., ICS '22) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the BLCO format
+//!   ([`format::blco`]), the unified mode-agnostic MTTKRP with hierarchical /
+//!   register conflict resolution ([`mttkrp`]), the out-of-memory streaming
+//!   orchestrator ([`coordinator`]), simulated accelerator profiles
+//!   ([`device`]) and a full CP-ALS driver ([`cpals`]). Baseline formats the
+//!   paper compares against (COO, F-COO, CSF, B-CSF, MM-CSF) are implemented
+//!   from scratch in [`format`].
+//! * **L2/L1 (build time, `python/`)** — the per-block MTTKRP compute graph
+//!   and its Pallas kernel, AOT-lowered to HLO text and executed from the
+//!   request path through the PJRT bridge in [`runtime`].
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod cpals;
+pub mod device;
+pub mod format;
+pub mod linear;
+pub mod mttkrp;
+pub mod ops;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use coordinator::engine::MttkrpEngine;
+pub use format::blco::BlcoTensor;
+pub use tensor::coo::CooTensor;

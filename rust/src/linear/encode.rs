@@ -1,0 +1,426 @@
+//! The BLCO re-encoding (Section 4.1–4.2): split the ALTO-linearized index
+//! into a *block key* (the uppermost bits of every mode that exceed the
+//! 63-bit in-block budget) and an *in-block index* whose per-mode bits are
+//! rearranged into contiguous fields, so de-linearization needs only a
+//! shift and a mask per mode — natively fast on accelerators.
+//!
+//! Layout (must match `python/compile/config.py` bit-for-bit): mode 0
+//! occupies the uppermost field of both the key and the in-block index,
+//! mode N-1 the lowermost (Figure 6b).
+
+use super::alto::Encoding;
+use crate::util::bitops::{mask64, mode_bits};
+
+/// In-block indices use at most 63 bits so they round-trip through the
+/// non-negative range of `i64` at the PJRT boundary.
+pub const MAX_INBLOCK_BITS: u32 = 63;
+
+/// The derived bit layout for one tensor shape.
+#[derive(Clone, Debug)]
+pub struct BlcoSpec {
+    pub dims: Vec<u64>,
+    pub alto: Encoding,
+    /// per-mode bits kept inside the block
+    pub inblock_bits: Vec<u32>,
+    /// per-mode bits stripped into the block key (adaptive blocking)
+    pub key_bits: Vec<u32>,
+    /// in-block field shifts, mode 0 uppermost
+    pub offsets: Vec<u32>,
+    /// key field shifts, mode 0 uppermost
+    pub key_offsets: Vec<u32>,
+    pub total_inblock_bits: u32,
+    pub total_key_bits: u32,
+    /// byte-lookup re-encoding tables (§Perf): `tables[i][b]` is the
+    /// (key, inblock) contribution of byte `i` of the ALTO index having
+    /// value `b`. Replaces the per-bit scatter loop on the construction
+    /// hot path (one table probe per ALTO byte instead of one shift/mask
+    /// per bit, and no per-call allocation).
+    reencode_tables: Vec<[(u64, u64); 256]>,
+}
+
+impl BlcoSpec {
+    /// Derive the layout for `dims` with the given in-block bit budget
+    /// (pass [`MAX_INBLOCK_BITS`] outside tests).
+    ///
+    /// Excess bits are stripped following the ALTO bit order from the MSB
+    /// down — each stripped position removes the current top bit of the mode
+    /// that owns it, so the stripped set is exactly "the uppermost bits from
+    /// every mode" and block sub-spaces adapt to the tensor space (§4.2).
+    pub fn with_budget(dims: &[u64], budget: u32) -> Self {
+        let alto = Encoding::new(dims);
+        let order = dims.len();
+        let mb: Vec<u32> = dims.iter().map(|&d| mode_bits(d)).collect();
+        let total: u32 = mb.iter().sum();
+
+        let mut key_bits = vec![0u32; order];
+        if total > budget {
+            let excess = (total - budget) as usize;
+            // the top `excess` ALTO positions, MSB down
+            for p in (total as usize - excess..total as usize).rev() {
+                key_bits[alto.bit_mode[p] as usize] += 1;
+            }
+        }
+        let inblock_bits: Vec<u32> =
+            mb.iter().zip(&key_bits).map(|(&b, &k)| b - k).collect();
+        let total_key_bits: u32 = key_bits.iter().sum();
+        assert!(total_key_bits <= 64, "block key needs {total_key_bits} bits > 64");
+        let total_inblock_bits: u32 = inblock_bits.iter().sum();
+
+        let field_offsets = |bits: &[u32]| -> Vec<u32> {
+            let mut offs = Vec::with_capacity(bits.len());
+            let mut acc: u32 = bits.iter().sum();
+            for &b in bits {
+                acc -= b;
+                offs.push(acc);
+            }
+            offs
+        };
+        let offsets = field_offsets(&inblock_bits);
+        let key_offsets = field_offsets(&key_bits);
+
+        let mut spec = BlcoSpec {
+            dims: dims.to_vec(),
+            alto,
+            inblock_bits,
+            key_bits,
+            offsets,
+            key_offsets,
+            total_inblock_bits,
+            total_key_bits,
+            reencode_tables: Vec::new(),
+        };
+        spec.build_reencode_tables();
+        spec
+    }
+
+    /// Precompute the byte-granular re-encoding tables (see field docs).
+    fn build_reencode_tables(&mut self) {
+        let total = self.alto.total_bits as usize;
+        let nbytes = total.div_ceil(8);
+        // per-ALTO-bit destination: (is_key, shift) — derived exactly like
+        // the reference per-bit encoders below
+        let mut dest = vec![(false, 0u32); total];
+        let mut filled = vec![0u32; self.order()];
+        for p in 0..self.total_inblock_bits as usize {
+            let m = self.alto.bit_mode[p] as usize;
+            dest[p] = (false, self.offsets[m] + filled[m]);
+            filled[m] += 1;
+        }
+        let mut remaining = self.key_bits.clone();
+        for p in (self.total_inblock_bits as usize..total).rev() {
+            let m = self.alto.bit_mode[p] as usize;
+            remaining[m] -= 1;
+            dest[p] = (true, self.key_offsets[m] + remaining[m]);
+        }
+        self.reencode_tables = (0..nbytes)
+            .map(|i| {
+                let mut table = [(0u64, 0u64); 256];
+                for (b, entry) in table.iter_mut().enumerate() {
+                    let (mut k, mut l) = (0u64, 0u64);
+                    for bit in 0..8usize {
+                        let p = i * 8 + bit;
+                        if p >= total || (b >> bit) & 1 == 0 {
+                            continue;
+                        }
+                        let (is_key, sh) = dest[p];
+                        if is_key {
+                            k |= 1u64 << sh;
+                        } else {
+                            l |= 1u64 << sh;
+                        }
+                    }
+                    *entry = (k, l);
+                }
+                table
+            })
+            .collect();
+    }
+
+    /// Re-encode a full ALTO index in one pass: `(block_key, in_block)`.
+    /// Table-driven (one probe per ALTO byte); agrees bit-for-bit with
+    /// [`Self::key_of_alto`] + [`Self::inblock_of_alto`].
+    #[inline]
+    pub fn reencode_alto(&self, alto_idx: u128) -> (u64, u64) {
+        let (mut k, mut l) = (0u64, 0u64);
+        for (i, table) in self.reencode_tables.iter().enumerate() {
+            let byte = ((alto_idx >> (i * 8)) & 0xFF) as usize;
+            let (tk, tl) = table[byte];
+            k |= tk;
+            l |= tl;
+        }
+        (k, l)
+    }
+
+    pub fn new(dims: &[u64]) -> Self {
+        Self::with_budget(dims, MAX_INBLOCK_BITS)
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Does this shape need more than one top-level block?
+    #[inline]
+    pub fn needs_blocking(&self) -> bool {
+        self.total_key_bits > 0
+    }
+
+    /// Split a coordinate tuple into `(block_key, in_block_index)`.
+    #[inline]
+    pub fn encode(&self, coord: &[u32]) -> (u64, u64) {
+        debug_assert_eq!(coord.len(), self.order());
+        let mut key: u64 = 0;
+        let mut l: u64 = 0;
+        for n in 0..self.order() {
+            let c = coord[n] as u64;
+            let ib = self.inblock_bits[n];
+            l |= (c & mask64(ib)) << self.offsets[n];
+            key |= ((c >> ib) & mask64(self.key_bits[n])) << self.key_offsets[n];
+        }
+        (key, l)
+    }
+
+    /// Recover global coordinates from `(block_key, in_block_index)` —
+    /// one shift + mask per mode plus the block base.
+    #[inline]
+    pub fn decode(&self, key: u64, l: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.order());
+        for n in 0..self.order() {
+            let ib = (l >> self.offsets[n]) & mask64(self.inblock_bits[n]);
+            let kb = (key >> self.key_offsets[n]) & mask64(self.key_bits[n]);
+            out[n] = ((kb << self.inblock_bits[n]) | ib) as u32;
+        }
+    }
+
+    /// Decode only the target-mode coordinate (the hot path of the MTTKRP
+    /// computing phase needs the target first for segment detection).
+    #[inline]
+    pub fn decode_mode(&self, key: u64, l: u64, n: usize) -> u32 {
+        let ib = (l >> self.offsets[n]) & mask64(self.inblock_bits[n]);
+        let kb = (key >> self.key_offsets[n]) & mask64(self.key_bits[n]);
+        ((kb << self.inblock_bits[n]) | ib) as u32
+    }
+
+    /// Per-mode factor-row bases of a block (its key's contribution to every
+    /// global coordinate) — handed to the AOT kernel as the `bases` input.
+    pub fn bases(&self, key: u64) -> Vec<u32> {
+        (0..self.order())
+            .map(|n| {
+                let kb = (key >> self.key_offsets[n]) & mask64(self.key_bits[n]);
+                (kb << self.inblock_bits[n]) as u32
+            })
+            .collect()
+    }
+
+    /// Block key of an ALTO linear index: its top `total_key_bits` bits.
+    /// (The stripped positions are exactly the uppermost ALTO positions, so
+    /// ALTO order groups equal keys contiguously — blocks fall out of one
+    /// sort.) The key is then *re-encoded* mode-contiguously to match
+    /// [`Self::encode`].
+    #[inline]
+    pub fn key_of_alto(&self, alto_idx: u128) -> u64 {
+        if self.total_key_bits == 0 {
+            return 0;
+        }
+        let total = self.alto.total_bits;
+        let mut key: u64 = 0;
+        // walk stripped positions MSB-down, depositing into per-mode fields
+        let mut remaining = vec![0u32; self.order()];
+        for n in 0..self.order() {
+            remaining[n] = self.key_bits[n];
+        }
+        for p in (self.total_inblock_bits..total).rev() {
+            let m = self.alto.bit_mode[p as usize] as usize;
+            remaining[m] -= 1;
+            let bit = ((alto_idx >> p) & 1) as u64;
+            key |= bit << (self.key_offsets[m] + remaining[m]);
+        }
+        key
+    }
+
+    /// In-block index of an ALTO linear index: re-encode the low
+    /// `total_inblock_bits` ALTO positions into contiguous mode fields.
+    #[inline]
+    pub fn inblock_of_alto(&self, alto_idx: u128) -> u64 {
+        let mut l: u64 = 0;
+        let mut filled = vec![0u32; self.order()];
+        for p in 0..self.total_inblock_bits {
+            let m = self.alto.bit_mode[p as usize] as usize;
+            let bit = ((alto_idx >> p) & 1) as u64;
+            l |= bit << (self.offsets[m] + filled[m]);
+            filled[m] += 1;
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn no_blocking_when_line_fits() {
+        let s = BlcoSpec::new(&[1024, 1024, 1024]);
+        assert_eq!(s.total_key_bits, 0);
+        assert!(!s.needs_blocking());
+        assert_eq!(s.total_inblock_bits, 30);
+        assert_eq!(s.offsets, vec![20, 10, 0]); // mode 0 uppermost
+    }
+
+    #[test]
+    fn blocking_strips_uppermost_bits() {
+        // 3 x 24 bits = 72 > 63 → 9 key bits, like the paper's 72-bit example
+        let dims = vec![1 << 24, 1 << 24, 1 << 24];
+        let s = BlcoSpec::new(&dims);
+        assert_eq!(s.total_key_bits, 9);
+        assert_eq!(s.total_inblock_bits, 63);
+        // round-robin ALTO: the top 9 positions hit each mode 3 times
+        assert_eq!(s.key_bits, vec![3, 3, 3]);
+        assert_eq!(s.inblock_bits, vec![21, 21, 21]);
+    }
+
+    #[test]
+    fn figure6b_reencoding() {
+        // The paper's example (Figure 6b): 6-bit line, budget 5 → 1 key bit.
+        let s = BlcoSpec::with_budget(&[4, 4, 4], 5);
+        assert_eq!(s.total_key_bits, 1);
+        // the stripped ALTO MSB (pos 5) belongs to mode 2 in round-robin
+        assert_eq!(s.key_bits, vec![0, 0, 1]);
+        // every coordinate round-trips through (key, inblock)
+        let mut out = vec![0u32; 3];
+        for i0 in 0..4u32 {
+            for i1 in 0..4u32 {
+                for i2 in 0..4u32 {
+                    let (k, l) = s.encode(&[i0, i1, i2]);
+                    assert!(k <= 1);
+                    assert!(l < 32);
+                    s.decode(k, l, &mut out);
+                    assert_eq!(out, vec![i0, i1, i2]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_prop() {
+        check("blco_roundtrip", Config { cases: 96, max_size: 1 << 26, ..Default::default() }, |ctx| {
+            let order = 2 + ctx.rng.below(3) as usize;
+            let dims: Vec<u64> =
+                (0..order).map(|_| 2 + ctx.rng.below(ctx.size as u64)).collect();
+            let s = BlcoSpec::new(&dims);
+            let mut out = vec![0u32; order];
+            for _ in 0..40 {
+                let coord: Vec<u32> =
+                    dims.iter().map(|&d| ctx.rng.below(d) as u32).collect();
+                let (k, l) = s.encode(&coord);
+                if l >= (1u64 << s.total_inblock_bits.min(63)) && s.total_inblock_bits < 64 {
+                    return Err(format!("in-block overflow {l}"));
+                }
+                s.decode(k, l, &mut out);
+                if out != coord {
+                    return Err(format!("{dims:?}: {coord:?} -> ({k},{l}) -> {out:?}"));
+                }
+                // decode_mode agrees with full decode
+                for n in 0..order {
+                    if s.decode_mode(k, l, n) != coord[n] {
+                        return Err(format!("decode_mode {n} mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn table_reencode_matches_reference_encoders() {
+        check("table_vs_bitloop", Config { cases: 64, max_size: 1 << 26, ..Default::default() }, |ctx| {
+            let order = 2 + ctx.rng.below(3) as usize;
+            let dims: Vec<u64> =
+                (0..order).map(|_| 2 + ctx.rng.below(ctx.size as u64)).collect();
+            let s = BlcoSpec::new(&dims);
+            for _ in 0..50 {
+                let coord: Vec<u32> =
+                    dims.iter().map(|&d| ctx.rng.below(d) as u32).collect();
+                let a = s.alto.encode(&coord);
+                let fast = s.reencode_alto(a);
+                let slow = (s.key_of_alto(a), s.inblock_of_alto(a));
+                if fast != slow {
+                    return Err(format!("{dims:?} {coord:?}: {fast:?} != {slow:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alto_path_matches_direct_encode() {
+        // key_of_alto / inblock_of_alto must agree with encode() for all
+        // coordinates: the construction pipeline uses the ALTO path, the
+        // kernels use the direct field layout.
+        check("alto_vs_direct", Config { cases: 64, max_size: 1 << 24, ..Default::default() }, |ctx| {
+            let order = 2 + ctx.rng.below(3) as usize;
+            let dims: Vec<u64> =
+                (0..order).map(|_| 2 + ctx.rng.below(ctx.size as u64)).collect();
+            let s = BlcoSpec::new(&dims);
+            for _ in 0..40 {
+                let coord: Vec<u32> =
+                    dims.iter().map(|&d| ctx.rng.below(d) as u32).collect();
+                let a = s.alto.encode(&coord);
+                let (k1, l1) = (s.key_of_alto(a), s.inblock_of_alto(a));
+                let (k2, l2) = s.encode(&coord);
+                if (k1, l1) != (k2, l2) {
+                    return Err(format!(
+                        "{dims:?} {coord:?}: alto path ({k1},{l1}) != direct ({k2},{l2})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bases_decompose_keys() {
+        let dims = vec![1 << 24, 1 << 22, 1 << 20]; // 66 bits → 3 key bits
+        let s = BlcoSpec::new(&dims);
+        assert_eq!(s.total_key_bits, 3);
+        let mut rng = crate::util::prng::Rng::new(3);
+        let mut out = vec![0u32; 3];
+        for _ in 0..200 {
+            let coord: Vec<u32> =
+                dims.iter().map(|&d| rng.below(d) as u32).collect();
+            let (k, l) = s.encode(&coord);
+            let bases = s.bases(k);
+            s.decode(0, l, &mut out); // decode with zero key = in-block coords
+            for n in 0..3 {
+                assert_eq!(bases[n] + out[n], coord[n], "mode {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn keys_are_contiguous_under_alto_sort() {
+        // sorting by ALTO index must group equal block keys contiguously
+        let dims = vec![1 << 23, 1 << 21, 1 << 22]; // 66 bits
+        let s = BlcoSpec::new(&dims);
+        let mut rng = crate::util::prng::Rng::new(11);
+        let mut items: Vec<u128> = (0..2000)
+            .map(|_| {
+                let coord: Vec<u32> =
+                    dims.iter().map(|&d| rng.below(d) as u32).collect();
+                s.alto.encode(&coord)
+            })
+            .collect();
+        items.sort_unstable();
+        let keys: Vec<u64> = items.iter().map(|&a| s.key_of_alto(a)).collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut prev = None;
+        for k in keys {
+            if prev != Some(k) {
+                assert!(seen.insert(k), "key {k} appeared in two runs");
+                prev = Some(k);
+            }
+        }
+    }
+}

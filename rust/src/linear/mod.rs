@@ -1,0 +1,7 @@
+//! Index linearization: the ALTO space-filling encoding (Section 4.1,
+//! adopted from Helal et al. ICS '21) over up-to-128-bit lines, and the BLCO
+//! re-encoding into contiguous per-mode bit fields decodable with shift+mask,
+//! including the adaptive-blocking split into (block key, in-block index).
+
+pub mod alto;
+pub mod encode;

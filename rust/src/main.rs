@@ -1,0 +1,237 @@
+//! `blco` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   convert   — build a BLCO tensor from a .tns file or preset, print stats
+//!   mttkrp    — run mode-n (or all-mode) MTTKRP on a preset/file
+//!   cpals     — run CP-ALS end to end, print the fit trace
+//!   stream    — force the out-of-memory streaming path and report overlap
+//!   datasets  — list the built-in scaled dataset presets
+//!   runtime   — run the AOT/PJRT path on the demo preset (needs artifacts)
+//!
+//! Examples:
+//!   blco mttkrp --tensor nell2 --rank 32 --device a100
+//!   blco cpals --tensor uber --rank 16 --iters 10
+//!   blco stream --tensor amazon --rank 32 --device a100
+
+use anyhow::{bail, Context, Result};
+
+use blco::bench::Table;
+use blco::coordinator::engine::{ExecPath, MttkrpEngine};
+use blco::cpals::CpAlsOptions;
+use blco::device::model::throughput_tbps;
+use blco::device::Profile;
+use blco::format::blco::BlcoConfig;
+use blco::mttkrp::oracle::random_factors;
+use blco::tensor::{coo::CooTensor, datasets, io, stats};
+use blco::util::cli::Args;
+use blco::util::pool::default_threads;
+use blco::util::timer::fmt_duration;
+
+fn load_tensor(args: &Args) -> Result<CooTensor> {
+    if let Some(path) = args.get("input") {
+        return io::read_tns(std::path::Path::new(path), None);
+    }
+    let name = args.get_or("tensor", "demo3");
+    let preset = datasets::by_name(name)
+        .with_context(|| format!("unknown preset {name:?} (see `blco datasets`)"))?;
+    eprintln!("building preset {name} ({} nnz requested)...", preset.nnz);
+    Ok(preset.build())
+}
+
+fn profile(args: &Args) -> Result<Profile> {
+    let name = args.get_or("device", "a100");
+    Profile::by_name(name).with_context(|| format!("unknown device {name:?}"))
+}
+
+fn cmd_datasets() -> Result<()> {
+    let tbl = Table::new(&[10, 30, 12, 8, 6]);
+    tbl.header(&["name", "dims", "nnz", "theta", "oom"]);
+    for p in datasets::all() {
+        tbl.row(&[
+            p.name.to_string(),
+            format!("{:?}", p.dims),
+            p.nnz.to_string(),
+            format!("{:.2}", p.theta),
+            if p.oom { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    println!("\nplus demo presets: demo3, demo4 (match the AOT artifact dims)");
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<()> {
+    let t = load_tensor(args)?;
+    let b = blco::format::blco::BlcoTensor::from_coo(&t);
+    println!("dims            {:?}", t.dims);
+    println!("nnz             {}", t.nnz());
+    println!("density         {:.3e}", t.density());
+    println!("encoding bits   {}", b.spec.alto.total_bits);
+    println!("in-block bits   {}", b.spec.total_inblock_bits);
+    println!("key bits        {}", b.spec.total_key_bits);
+    println!("blocks          {}", b.blocks.len());
+    println!("batches         {}", b.batches.len());
+    println!("footprint       {:.1} MiB", b.footprint_bytes() as f64 / (1 << 20) as f64);
+    println!("construction:");
+    for (name, d) in &b.stages.stages {
+        println!("  {name:<10} {}", fmt_duration(*d));
+    }
+    for m in 0..t.order() {
+        let fs = stats::fiber_stats(&t, m);
+        println!(
+            "mode {m}: len {}  fibers {} (avg {:.2} nnz, max {})",
+            t.dims[m], fs.fibers, fs.avg_len, fs.max_len
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mttkrp(args: &Args) -> Result<()> {
+    let t = load_tensor(args)?;
+    let rank: usize = args.parse_or("rank", 32);
+    let threads: usize = args.parse_or("threads", default_threads());
+    let engine = MttkrpEngine::from_coo(&t, profile(args)?).with_threads(threads);
+    let factors = random_factors(&t.dims, rank, 7);
+    let modes: Vec<usize> = match args.get("mode") {
+        Some(m) => vec![m.parse()?],
+        None => (0..t.order()).collect(),
+    };
+    let tbl = Table::new(&[6, 14, 12, 12, 14, 12]);
+    tbl.header(&["mode", "path", "wall", "model", "volume(GB)", "TP(TB/s)"]);
+    for target in modes {
+        engine.counters.reset();
+        let w0 = std::time::Instant::now();
+        let (_m, path) = engine.mttkrp(target, &factors);
+        let wall = w0.elapsed();
+        let snap = engine.counters.snapshot();
+        let model =
+            blco::device::model::device_time(&snap, &engine.eng.profile).total();
+        let (path_s, model_s) = match &path {
+            ExecPath::InMemory(r) => (format!("{r:?}"), model),
+            ExecPath::Streamed(rep) => ("streamed".to_string(), rep.overall_s),
+        };
+        tbl.row(&[
+            target.to_string(),
+            path_s,
+            fmt_duration(wall),
+            format!("{:.3} ms", model_s * 1e3),
+            format!("{:.3}", snap.volume_bytes() as f64 / 1e9),
+            format!("{:.2}", throughput_tbps(snap.volume_bytes(), model_s)),
+        ]);
+    }
+    Ok(())
+}
+
+fn cmd_cpals(args: &Args) -> Result<()> {
+    let t = load_tensor(args)?;
+    let opts = CpAlsOptions {
+        rank: args.parse_or("rank", 16),
+        max_iters: args.parse_or("iters", 20),
+        tol: args.parse_or("tol", 1e-5),
+        threads: args.parse_or("threads", default_threads()),
+        seed: args.parse_or("seed", 0xCA1),
+    };
+    let engine = MttkrpEngine::from_coo(&t, profile(args)?).with_threads(opts.threads);
+    let rep = engine.cp_als(opts);
+    println!("iterations      {}", rep.iterations);
+    println!("mttkrp time     {:.3} s", rep.mttkrp_seconds);
+    println!("total time      {:.3} s", rep.total_seconds);
+    println!("lambda          {:?}", &rep.lambda[..rep.lambda.len().min(8)]);
+    for (i, f) in rep.fits.iter().enumerate() {
+        println!("iter {:>3}: fit = {f:.6}", i + 1);
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let t = load_tensor(args)?;
+    let rank: usize = args.parse_or("rank", 32);
+    let threads: usize = args.parse_or("threads", default_threads());
+    let p = profile(args)?;
+    let engine = MttkrpEngine::from_coo_with(&t, p, BlcoConfig::default())
+        .with_threads(threads);
+    println!(
+        "working set {:.1} MiB vs device {:.1} MiB → {}",
+        engine.working_set_bytes(rank) as f64 / (1 << 20) as f64,
+        engine.eng.profile.dev_mem_bytes as f64 / (1 << 20) as f64,
+        if engine.is_oom(rank) { "OUT-OF-MEMORY" } else { "in-memory" }
+    );
+    let factors = random_factors(&t.dims, rank, 7);
+    for target in 0..t.order() {
+        engine.counters.reset();
+        let mut out =
+            blco::mttkrp::dense::Matrix::zeros(t.dims[target] as usize, rank);
+        let rep = blco::coordinator::streamer::stream_mttkrp(
+            &engine.eng,
+            target,
+            &factors,
+            &mut out,
+            threads,
+            &engine.counters,
+        );
+        let vol = engine.counters.snapshot().volume_bytes();
+        println!(
+            "mode {target}: batches {:>4}  wall {:>9}  overall(model) {:.3} s  \
+             compute(model) {:.3} s  transfer {:.3} s  overlap-eff {:.2}  \
+             TP overall {:.2} / in-mem {:.2} TB/s",
+            rep.batches.len(),
+            fmt_duration(std::time::Duration::from_secs_f64(rep.wall_s)),
+            rep.overall_s,
+            rep.compute_s,
+            rep.transfer_s,
+            rep.overlap_efficiency(),
+            throughput_tbps(vol, rep.overall_s),
+            throughput_tbps(vol, rep.compute_s),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let t = load_tensor(args)?;
+    let rank: usize = args.parse_or("rank", 32);
+    let dir = blco::runtime::artifacts::default_dir();
+    let rt = blco::runtime::PjrtRuntime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let b = blco::format::blco::BlcoTensor::from_coo(&t);
+    let factors = random_factors(&t.dims, rank, 7);
+    let counters = blco::device::Counters::new();
+    let mut out = blco::mttkrp::dense::Matrix::zeros(t.dims[0] as usize, rank);
+    let w0 = std::time::Instant::now();
+    rt.mttkrp_fused(&b, 0, &factors, &mut out, &counters)?;
+    println!(
+        "mode-0 MTTKRP through AOT/PJRT: {} ({} launches)",
+        fmt_duration(w0.elapsed()),
+        counters.snapshot().launches
+    );
+    // verify against the rust oracle
+    let expect = blco::mttkrp::oracle::mttkrp_oracle(&t, 0, &factors);
+    let diff = out.max_abs_diff(&expect);
+    println!("max |pjrt - oracle| = {diff:.3e} (f32 kernel vs f64 oracle)");
+    if diff > 1e-2 {
+        bail!("PJRT result diverges from oracle");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("datasets") => cmd_datasets(),
+        Some("convert") => cmd_convert(&args),
+        Some("mttkrp") => cmd_mttkrp(&args),
+        Some("cpals") => cmd_cpals(&args),
+        Some("stream") => cmd_stream(&args),
+        Some("runtime") => cmd_runtime(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "usage: blco <datasets|convert|mttkrp|cpals|stream|runtime> \
+                 [--tensor NAME | --input FILE] [--rank R] [--mode N] \
+                 [--device a100|v100|intel_d1] [--threads T]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

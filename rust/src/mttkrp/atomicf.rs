@@ -1,0 +1,91 @@
+//! Atomic f64 accumulation — the CPU analogue of the GPU's global
+//! `atomicAdd(double*)`, implemented as a compare-and-swap loop over the
+//! bit representation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Reinterpret a mutable f64 slice as atomic u64 slots. Sound: `AtomicU64`
+/// has the same size/alignment as `u64`/`f64`, and the borrow of `data`
+/// is held for the returned lifetime, so no unsynchronized plain access
+/// can coexist with the atomic view.
+pub fn as_atomic(data: &mut [f64]) -> &[AtomicU64] {
+    unsafe { &*(data as *mut [f64] as *const [AtomicU64]) }
+}
+
+/// `slot += v` with CAS retry.
+#[inline]
+pub fn atomic_add(slot: &AtomicU64, v: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match slot.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Add `row` into `out[row_start..row_start+row.len()]` atomically.
+#[inline]
+pub fn atomic_add_row(out: &[AtomicU64], row_start: usize, row: &[f64]) {
+    for (k, &v) in row.iter().enumerate() {
+        atomic_add(&out[row_start + k], v);
+    }
+}
+
+/// Unsynchronized add through the atomic view — only sound when a single
+/// thread owns the destination (the engines' `threads == 1` fast path: a
+/// CAS is ~20 cycles even uncontended, which dominates single-core runs).
+#[inline]
+pub fn serial_add_row(out: &[AtomicU64], row_start: usize, row: &[f64]) {
+    for (k, &v) in row.iter().enumerate() {
+        let slot = &out[row_start + k];
+        let cur = f64::from_bits(slot.load(Ordering::Relaxed));
+        slot.store((cur + v).to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_adds_sum_exactly() {
+        // 2^k increments are exactly representable: the sum must be exact
+        let mut data = vec![0.0f64; 4];
+        {
+            let a = as_atomic(&mut data);
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    s.spawn(|| {
+                        for i in 0..1024 {
+                            atomic_add(&a[i % 4], 1.0);
+                        }
+                    });
+                }
+            });
+        }
+        assert_eq!(data, vec![2048.0; 4]);
+    }
+
+    #[test]
+    fn add_row() {
+        let mut data = vec![0.0f64; 6];
+        {
+            let a = as_atomic(&mut data);
+            atomic_add_row(a, 2, &[1.0, 2.0, 3.0]);
+            atomic_add_row(a, 2, &[0.5, 0.5, 0.5]);
+        }
+        assert_eq!(data, vec![0.0, 0.0, 1.5, 2.5, 3.5, 0.0]);
+    }
+
+    #[test]
+    fn negative_and_fractional() {
+        let mut data = vec![1.0f64];
+        {
+            let a = as_atomic(&mut data);
+            atomic_add(&a[0], -0.25);
+        }
+        assert_eq!(data[0], 0.75);
+    }
+}

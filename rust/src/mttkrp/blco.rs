@@ -1,0 +1,560 @@
+//! The paper's unified, mode-agnostic MTTKRP over BLCO blocks (Section 5).
+//!
+//! Execution follows the two-phase structure of Figure 7. Each *work-group*
+//! (one `wg_block`/`wg_offset` entry of a batch — a tile of at most
+//! `workgroup` non-zeros of one block) runs:
+//!
+//! * **processing phase** — coalesced load of the linearized tile,
+//!   on-the-fly de-linearization (shift/mask + block base), reorder of the
+//!   tile by target index (the warp histogram/prefix-sum of §5.1.1 becomes
+//!   a small in-tile sort on the CPU) and segmented-scan flag generation;
+//! * **computing phase** — rank-wise accumulation in a register while the
+//!   target index is unchanged, then at each segment boundary either
+//!   - **register-based** (§5.2): atomic add straight into the output, or
+//!   - **hierarchical** (§5.1.2): write into one of `slices` shadow copies
+//!     of the output (the "multiple factor matrix copies"), merged at the
+//!     end. The per-tile sort already plays the role of the local-memory
+//!     stash: each row flushes at most once per work-group.
+//!
+//! The §5.3 heuristic picks hierarchical when the target mode is shorter
+//! than the device's SM/subslice count, register-based otherwise.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::atomicf::{as_atomic, atomic_add_row, serial_add_row};
+use super::dense::Matrix;
+use super::{check_shapes, Mttkrp, MAX_RANK};
+use crate::device::counters::{Counters, Snapshot};
+use crate::device::profile::Profile;
+use crate::format::blco::BlcoTensor;
+use crate::util::pool::parallel_dynamic;
+
+/// Conflict-resolution strategy (Sections 5.1, 5.2, 5.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// pick per the §5.3 heuristic
+    Auto,
+    /// §5.2: registers + global atomics at segment boundaries
+    Register,
+    /// §5.1: registers + shadow output copies + final merge
+    Hierarchical,
+}
+
+/// The §5.3 adaptation heuristic.
+pub fn choose_resolution(target_len: u64, p: &Profile) -> Resolution {
+    if target_len < p.sms as u64 {
+        Resolution::Hierarchical
+    } else {
+        Resolution::Register
+    }
+}
+
+pub struct BlcoEngine {
+    pub t: Arc<BlcoTensor>,
+    pub profile: Profile,
+    pub resolution: Resolution,
+}
+
+impl BlcoEngine {
+    pub fn new(t: BlcoTensor, profile: Profile) -> Self {
+        BlcoEngine { t: Arc::new(t), profile, resolution: Resolution::Auto }
+    }
+
+    pub fn with_resolution(mut self, r: Resolution) -> Self {
+        self.resolution = r;
+        self
+    }
+
+    /// The strategy that will run for `target`.
+    pub fn effective_resolution(&self, target: usize) -> Resolution {
+        match self.resolution {
+            Resolution::Auto => {
+                choose_resolution(self.t.dims()[target], &self.profile)
+            }
+            r => r,
+        }
+    }
+
+    pub fn footprint_bytes(&self) -> usize {
+        self.t.footprint_bytes()
+    }
+}
+
+/// Per-work-group scratch, reused across the tiles a thread processes.
+struct Scratch {
+    /// decoded global coordinates, mode-major: coords[n][i]
+    coords: Vec<Vec<u32>>,
+    /// tile-local permutation (the §5.1.1 reorder)
+    order: Vec<u32>,
+    /// scratch for the cold/hot gather split (clobbered by sorting)
+    rows: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(order_n: usize, wg: usize) -> Self {
+        Scratch {
+            coords: vec![vec![0u32; wg]; order_n],
+            order: vec![0u32; wg],
+            rows: vec![0u32; wg],
+        }
+    }
+}
+
+/// Process one work-group tile. Returns (segments, flushes are done inside).
+#[allow(clippy::too_many_arguments)]
+fn process_tile(
+    t: &BlcoTensor,
+    block_id: usize,
+    offset: usize,
+    target: usize,
+    factors: &[Matrix],
+    rank: usize,
+    dest: &[AtomicU64],
+    dest_rank_stride: usize,
+    serial: bool,
+    scratch: &mut Scratch,
+    tally: &mut Snapshot,
+) {
+    let blk = &t.blocks[block_id];
+    let order_n = t.order();
+    let wg = t.config.workgroup;
+    let len = (blk.nnz() - offset).min(wg);
+    let lidx = &blk.lidx[offset..offset + len];
+    let vals = &blk.vals[offset..offset + len];
+    let spec = &t.spec;
+    let bases = spec.bases(blk.key);
+
+    // ---- processing phase: coalesced load + on-the-fly de-linearization.
+    // Every mode decodes independently (ILP), one shift + mask each.
+    for n in 0..order_n {
+        let off = spec.offsets[n];
+        let mask = crate::util::bitops::mask64(spec.inblock_bits[n]);
+        let base = bases[n];
+        let out = &mut scratch.coords[n][..len];
+        for (i, &l) in lidx.iter().enumerate() {
+            out[i] = base + ((l >> off) & mask) as u32;
+        }
+    }
+    tally.bytes_streamed += len as u64 * 16; // lidx + vals
+
+    // measured gather locality: distinct rows per non-target mode within
+    // the tile fetch from HBM, repeats hit cache (ALTO order clusters every
+    // mode at once — the paper's data-locality claim, quantified)
+    for n in 0..order_n {
+        if n == target {
+            continue;
+        }
+        scratch.rows[..len].copy_from_slice(&scratch.coords[n][..len]);
+        let (cold, hot) = crate::mttkrp::split_cold_hot(&mut scratch.rows[..len]);
+        tally.bytes_gathered += cold * rank as u64 * 8;
+        tally.bytes_local += hot * rank as u64 * 8;
+    }
+
+    // reorder the tile by target index + segmented-scan flags (implicit in
+    // the sorted runs). Small tiles: insertion-friendly unstable sort.
+    let ord = &mut scratch.order[..len];
+    for (i, o) in ord.iter_mut().enumerate() {
+        *o = i as u32;
+    }
+    let tcoords = &scratch.coords[target][..len];
+    ord.sort_unstable_by_key(|&i| tcoords[i as usize]);
+
+    // ---- computing phase: rank-wise register accumulation over segments
+    let mut reg = [0.0f64; MAX_RANK];
+    let mut cur_row = u32::MAX;
+    let mut open = false;
+    for &i in ord.iter() {
+        let i = i as usize;
+        let row = tcoords[i];
+        if open && row != cur_row {
+            // segment boundary: flush the register
+            if serial {
+                serial_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
+            } else {
+                atomic_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
+            }
+            tally.atomics += rank as u64;
+            tally.bytes_written += rank as u64 * 8;
+            tally.segments += 1;
+            reg[..rank].iter_mut().for_each(|x| *x = 0.0);
+        } else if open {
+            tally.stash_hits += 1; // absorbed in the register
+        }
+        cur_row = row;
+        open = true;
+        // product of non-target factor rows, scaled by the value
+        // (slice-to-rank bindings let LLVM elide bounds checks + vectorize)
+        let mut row_acc = [0.0f64; MAX_RANK];
+        let ra = &mut row_acc[..rank];
+        ra.iter_mut().for_each(|x| *x = vals[i]);
+        for n in 0..order_n {
+            if n == target {
+                continue;
+            }
+            let f = &factors[n].row(scratch.coords[n][i] as usize)[..rank];
+            for (a, &b) in ra.iter_mut().zip(f) {
+                *a *= b;
+            }
+        }
+        for (r, &a) in reg[..rank].iter_mut().zip(ra.iter()) {
+            *r += a;
+        }
+    }
+    if open {
+        if serial {
+            serial_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
+        } else {
+            atomic_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
+        }
+        tally.atomics += rank as u64;
+        tally.bytes_written += rank as u64 * 8;
+        tally.segments += 1;
+    }
+}
+
+impl Mttkrp for BlcoEngine {
+    fn name(&self) -> String {
+        match self.resolution {
+            Resolution::Auto => "blco".into(),
+            Resolution::Register => "blco-reg".into(),
+            Resolution::Hierarchical => "blco-hier".into(),
+        }
+    }
+
+    fn mttkrp(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let t = &self.t;
+        let rank = check_shapes(t.dims(), target, factors, out);
+        let rows = t.dims()[target] as usize;
+        out.fill(0.0);
+        let resolution = self.effective_resolution(target);
+
+        match resolution {
+            Resolution::Register | Resolution::Auto => {
+                let out_at = as_atomic(&mut out.data);
+                self.run(target, factors, rank, out_at, rank, threads, counters);
+                counters.add(&Snapshot {
+                    atomic_fanout: (rows * rank) as u64,
+                    ..Default::default()
+                });
+            }
+            Resolution::Hierarchical => {
+                // shadow output copies, one per device slice (§5.1.2 step 6)
+                let slices = self.profile.slices.max(1);
+                let mut shadows = vec![0.0f64; slices * rows * rank];
+                {
+                    let sh_at = as_atomic(&mut shadows);
+                    // destination of a work-group = shadow (wg % slices);
+                    // encode by offsetting the row stride region
+                    self.run_hier(
+                        target, factors, rank, sh_at, rows, threads, counters,
+                    );
+                }
+                // final merge (§5.1.2 step 7): parallel over rows, plain adds
+                let out_data = as_atomic(&mut out.data);
+                parallel_dynamic(threads, rows, 256, |_, lo, hi| {
+                    let mut written = 0u64;
+                    for r in lo..hi {
+                        for k in 0..rank {
+                            let mut acc = 0.0;
+                            for s in 0..slices {
+                                acc += shadows[(s * rows + r) * rank + k];
+                            }
+                            out_data[r * rank + k]
+                                .store(acc.to_bits(), Ordering::Relaxed);
+                            written += 8;
+                        }
+                    }
+                    counters.add(&Snapshot {
+                        bytes_streamed: written * slices as u64,
+                        bytes_written: written,
+                        ..Default::default()
+                    });
+                });
+                counters.add(&Snapshot {
+                    atomic_fanout: (rows * rank * slices) as u64,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+}
+
+impl BlcoEngine {
+    /// Run a single batch (one "kernel launch") of the register path,
+    /// *accumulating* into `out` — the streaming coordinator's entry point:
+    /// each batch is processed as its blocks arrive on a device queue, so
+    /// the output must not be zeroed here.
+    pub fn mttkrp_batch(
+        &self,
+        batch_idx: usize,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let t = &self.t;
+        let rank = check_shapes(t.dims(), target, factors, out);
+        let out_at = as_atomic(&mut out.data);
+        let batch = &t.batches[batch_idx];
+        let wgs = batch.wg_block.len();
+        parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+            let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+            let mut tally = Snapshot::default();
+            for w in lo..hi {
+                process_tile(
+                    t,
+                    batch.wg_block[w] as usize,
+                    batch.wg_offset[w] as usize,
+                    target,
+                    factors,
+                    rank,
+                    out_at,
+                    rank,
+                    threads <= 1,
+                    &mut scratch,
+                    &mut tally,
+                );
+            }
+            counters.add(&tally);
+        });
+        counters.add(&Snapshot {
+            launches: 1,
+            atomic_fanout: t.dims()[target] * rank as u64,
+            ..Default::default()
+        });
+    }
+
+    /// Register path: every work-group flushes straight into `dest`.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        dest: &[AtomicU64],
+        stride: usize,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let t = &self.t;
+        for batch in &t.batches {
+            let wgs = batch.wg_block.len();
+            parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+                let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+                let mut tally = Snapshot::default();
+                for w in lo..hi {
+                    process_tile(
+                        t,
+                        batch.wg_block[w] as usize,
+                        batch.wg_offset[w] as usize,
+                        target,
+                        factors,
+                        rank,
+                        dest,
+                        stride,
+                        threads <= 1,
+                        &mut scratch,
+                        &mut tally,
+                    );
+                }
+                counters.add(&tally);
+            });
+            counters.add(&Snapshot { launches: 1, ..Default::default() });
+        }
+    }
+
+    /// Hierarchical path: work-group w flushes into shadow copy (w % slices).
+    #[allow(clippy::too_many_arguments)]
+    fn run_hier(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        shadows: &[AtomicU64],
+        rows: usize,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let t = &self.t;
+        let slices = self.profile.slices.max(1);
+        for batch in &t.batches {
+            let wgs = batch.wg_block.len();
+            parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+                let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+                let mut tally = Snapshot::default();
+                for w in lo..hi {
+                    let copy = w % slices;
+                    let dest = &shadows[copy * rows * rank..(copy + 1) * rows * rank];
+                    process_tile(
+                        t,
+                        batch.wg_block[w] as usize,
+                        batch.wg_offset[w] as usize,
+                        target,
+                        factors,
+                        rank,
+                        dest,
+                        rank,
+                        threads <= 1,
+                        &mut scratch,
+                        &mut tally,
+                    );
+                }
+                counters.add(&tally);
+            });
+            counters.add(&Snapshot { launches: 1, ..Default::default() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::blco::BlcoConfig;
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    fn engine(t: &crate::tensor::coo::CooTensor, r: Resolution) -> BlcoEngine {
+        BlcoEngine::new(BlcoTensor::from_coo(t), Profile::a100()).with_resolution(r)
+    }
+
+    #[test]
+    fn register_matches_oracle_all_modes() {
+        let dims = [50u64, 40, 30];
+        let t = synth::uniform(&dims, 5_000, 1);
+        let factors = random_factors(&dims, 8, 2);
+        let eng = engine(&t, Resolution::Register);
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 8);
+            eng.mttkrp(target, &factors, &mut out, 4, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_oracle_all_modes() {
+        let dims = [20u64, 40, 60];
+        let t = synth::uniform(&dims, 4_000, 3);
+        let factors = random_factors(&dims, 16, 5);
+        let eng = engine(&t, Resolution::Hierarchical);
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 16);
+            eng.mttkrp(target, &factors, &mut out, 8, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn auto_heuristic_follows_553() {
+        let p = Profile::a100(); // 108 SMs
+        assert_eq!(choose_resolution(24, &p), Resolution::Hierarchical);
+        assert_eq!(choose_resolution(107, &p), Resolution::Hierarchical);
+        assert_eq!(choose_resolution(108, &p), Resolution::Register);
+        assert_eq!(choose_resolution(1 << 20, &p), Resolution::Register);
+
+        let dims = [24u64, 2000, 2000]; // mode 0 short, others long
+        let t = synth::uniform(&dims, 2_000, 7);
+        let eng = engine(&t, Resolution::Auto);
+        assert_eq!(eng.effective_resolution(0), Resolution::Hierarchical);
+        assert_eq!(eng.effective_resolution(1), Resolution::Register);
+    }
+
+    #[test]
+    fn auto_matches_oracle() {
+        let dims = [24u64, 500, 300];
+        let t = synth::uniform(&dims, 6_000, 9);
+        let factors = random_factors(&dims, 8, 11);
+        let eng = engine(&t, Resolution::Auto);
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 8);
+            eng.mttkrp(target, &factors, &mut out, 8, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn works_with_blocking_keys() {
+        // force the adaptive-blocking key path on a small shape by lowering
+        // the in-block bit budget: 18-bit line squeezed into 10 bits → 8-bit
+        // keys, many blocks with non-zero per-mode bases
+        let dims = [64u64, 64, 64];
+        let t = synth::uniform(&dims, 4_000, 13);
+        let cfg = BlcoConfig {
+            max_block_nnz: 4096,
+            workgroup: 64,
+            threads: 2,
+            inblock_budget: 10,
+        };
+        let b = BlcoTensor::from_coo_with(&t, cfg);
+        assert!(b.spec.needs_blocking());
+        assert!(b.blocks.len() > 4, "blocks {}", b.blocks.len());
+        let eng = BlcoEngine::new(b, Profile::a100());
+        let factors = random_factors(&dims, 8, 15);
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(64, 8);
+            eng.mttkrp(target, &factors, &mut out, 4, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn capacity_one_tile_per_workgroup() {
+        // workgroup smaller than block: many tiles per block
+        let dims = [30u64, 30, 30];
+        let t = synth::uniform(&dims, 3_000, 17);
+        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, threads: 2, ..Default::default() };
+        let b = BlcoTensor::from_coo_with(&t, cfg);
+        let eng = BlcoEngine::new(b, Profile::v100());
+        let factors = random_factors(&dims, 4, 19);
+        let expect = mttkrp_oracle(&t, 1, &factors);
+        let mut out = Matrix::zeros(30, 4);
+        eng.mttkrp(1, &factors, &mut out, 4, &Counters::new());
+        assert!(out.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn reorder_reduces_atomics_vs_coo() {
+        // BLCO's in-tile reorder + registers must issue far fewer atomics
+        // than nnz*rank (COO's count) on a clustered tensor
+        let dims = [64u64, 400, 400];
+        let t = synth::fiber_clustered(&dims, 20_000, 0, 1.2, 21);
+        let factors = random_factors(&dims, 8, 23);
+        let eng = engine(&t, Resolution::Register);
+        let c = Counters::new();
+        let mut out = Matrix::zeros(64, 8);
+        eng.mttkrp(0, &factors, &mut out, 4, &c);
+        let s = c.snapshot();
+        assert!(s.atomics < t.nnz() as u64 * 8 / 2, "atomics {}", s.atomics);
+        assert!(s.stash_hits > 0);
+        // correctness too
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        assert!(out.max_abs_diff(&expect) < 1e-8);
+    }
+
+    #[test]
+    fn hierarchical_reports_larger_fanout() {
+        let dims = [16u64, 200, 200];
+        let t = synth::uniform(&dims, 3_000, 25);
+        let factors = random_factors(&dims, 4, 27);
+        let (cr, ch) = (Counters::new(), Counters::new());
+        let mut out = Matrix::zeros(16, 4);
+        engine(&t, Resolution::Register).mttkrp(0, &factors, &mut out, 4, &cr);
+        engine(&t, Resolution::Hierarchical).mttkrp(0, &factors, &mut out, 4, &ch);
+        let (sr, sh) = (cr.snapshot(), ch.snapshot());
+        assert!(sh.atomic_fanout > sr.atomic_fanout);
+        // a100 has 7 slices (shadow copies)
+        assert_eq!(sh.atomic_fanout, sr.atomic_fanout * 7);
+    }
+}

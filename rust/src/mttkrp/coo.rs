@@ -1,0 +1,144 @@
+//! COO + global atomics: the naive massively-parallel baseline. Every
+//! non-zero issues `rank` atomic adds to the output row — the RAW-hazard
+//! storm of Section 3.1 that all the smarter formats try to avoid.
+
+use super::atomicf::{as_atomic, atomic_add};
+use super::dense::Matrix;
+use super::{check_shapes, Mttkrp, MAX_RANK};
+use crate::device::counters::{Counters, Snapshot};
+use crate::tensor::coo::CooTensor;
+use crate::util::pool::parallel_dynamic;
+
+/// Chunk of non-zeros grabbed per scheduling step.
+const CHUNK: usize = 4096;
+
+pub struct CooAtomicEngine {
+    pub t: CooTensor,
+}
+
+impl CooAtomicEngine {
+    pub fn new(t: CooTensor) -> Self {
+        CooAtomicEngine { t }
+    }
+}
+
+impl Mttkrp for CooAtomicEngine {
+    fn name(&self) -> String {
+        "coo-atomic".into()
+    }
+
+    fn mttkrp(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let t = &self.t;
+        let rank = check_shapes(&t.dims, target, factors, out);
+        let order = t.order();
+        out.fill(0.0);
+        let out_at = as_atomic(&mut out.data);
+
+        parallel_dynamic(threads, t.nnz(), CHUNK, |_, lo, hi| {
+            let mut row = [0.0f64; MAX_RANK];
+            let mut scratch = vec![0u32; hi - lo];
+            let (mut cold, mut hot) = (0u64, 0u64);
+            for n in 0..order {
+                if n == target {
+                    continue;
+                }
+                scratch.copy_from_slice(&t.coords[n][lo..hi]);
+                let (c, h) = crate::mttkrp::split_cold_hot(&mut scratch);
+                cold += c;
+                hot += h;
+            }
+            for e in lo..hi {
+                row[..rank].iter_mut().for_each(|x| *x = t.vals[e]);
+                for n in 0..order {
+                    if n == target {
+                        continue;
+                    }
+                    let f = factors[n].row(t.coords[n][e] as usize);
+                    for k in 0..rank {
+                        row[k] *= f[k];
+                    }
+                }
+                let base = t.coords[target][e] as usize * rank;
+                for k in 0..rank {
+                    atomic_add(&out_at[base + k], row[k]);
+                }
+            }
+            let n = (hi - lo) as u64;
+            counters.add(&Snapshot {
+                // index planes + values stream linearly
+                bytes_streamed: n * (order as u64 * 4 + 8),
+                // factor rows: cold rows gather from HBM, repeats hit cache
+                bytes_gathered: cold * rank as u64 * 8,
+                bytes_local: hot * rank as u64 * 8,
+                bytes_written: n * rank as u64 * 8,
+                atomics: n * rank as u64,
+                segments: n, // every non-zero is its own segment
+                ..Default::default()
+            });
+        });
+        counters.add(&Snapshot {
+            launches: 1,
+            atomic_fanout: t.dims[target] * rank as u64,
+            ..Default::default()
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    #[test]
+    fn matches_oracle_all_modes() {
+        let dims = [60u64, 50, 40];
+        let t = synth::uniform(&dims, 5_000, 1);
+        let factors = random_factors(&dims, 8, 2);
+        let eng = CooAtomicEngine::new(t.clone());
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 8);
+            let c = Counters::new();
+            eng.mttkrp(target, &factors, &mut out, 4, &c);
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+            let s = c.snapshot();
+            assert_eq!(s.atomics, t.nnz() as u64 * 8);
+            assert!(s.volume_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn four_mode() {
+        let dims = [20u64, 16, 12, 8];
+        let t = synth::uniform(&dims, 2_000, 3);
+        let factors = random_factors(&dims, 4, 5);
+        let eng = CooAtomicEngine::new(t.clone());
+        for target in 0..4 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 4);
+            eng.mttkrp(target, &factors, &mut out, 8, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn contended_short_mode_is_exact() {
+        // dims[0] = 2: all threads hammer two rows; CAS must not lose updates
+        let dims = [2u64, 100, 100];
+        let t = synth::uniform(&dims, 8_000, 9);
+        let factors = random_factors(&dims, 16, 1);
+        let eng = CooAtomicEngine::new(t.clone());
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        let mut out = Matrix::zeros(2, 16);
+        eng.mttkrp(0, &factors, &mut out, 16, &Counters::new());
+        assert!(out.max_abs_diff(&expect) < 1e-8);
+    }
+}

@@ -1,0 +1,148 @@
+//! Row-major dense matrices for factor matrices and MTTKRP outputs.
+
+use crate::util::prng::Rng;
+
+/// A row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Uniform(0,1) entries — the CP-ALS random initialization convention
+    /// (non-negative init keeps early gram matrices well-conditioned).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.f64()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, o: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        self.data
+            .iter()
+            .zip(&o.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Gram matrix AᵀA (cols × cols).
+    pub fn gram(&self) -> Matrix {
+        let c = self.cols;
+        let mut g = Matrix::zeros(c, c);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..c {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(a);
+                for b in 0..c {
+                    grow[b] += ra * r[b];
+                }
+            }
+        }
+        g
+    }
+
+    /// Elementwise (Hadamard) product, in place.
+    pub fn hadamard_assign(&mut self, o: &Matrix) {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        for (a, b) in self.data.iter_mut().zip(&o.data) {
+            *a *= b;
+        }
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Inner product ⟨self, o⟩ (elementwise).
+    pub fn dot(&self, o: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        self.data.iter().zip(&o.data).map(|(a, b)| a * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_norms() {
+        let m = Matrix::from_rows(vec![vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert_eq!(m.row(0), &[3.0, 0.0]);
+        assert_eq!(m.row(1), &[0.0, 4.0]);
+        assert!((m.norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_small() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let g = m.gram();
+        // AᵀA = [[10, 14], [14, 20]]
+        assert_eq!(g.data, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+
+    #[test]
+    fn hadamard_and_dot() {
+        let mut a = Matrix::from_rows(vec![vec![1.0, 2.0]]);
+        let b = Matrix::from_rows(vec![vec![3.0, 5.0]]);
+        assert_eq!(a.dot(&b), 13.0);
+        a.hadamard_assign(&b);
+        assert_eq!(a.data, vec![3.0, 10.0]);
+        assert_eq!(a.sum(), 13.0);
+    }
+
+    #[test]
+    fn random_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::random(10, 10, &mut rng);
+        assert!(m.data.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0]]);
+        let b = Matrix::from_rows(vec![vec![1.5, 2.0]]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,239 @@
+//! F-COO segmented-scan MTTKRP (Liu et al., Section 3.1): non-zeros are
+//! pre-sorted by target index with bit flags, so each processing chunk
+//! accumulates locally in a register and only the segments that cross chunk
+//! boundaries need global atomics.
+
+use super::atomicf::{as_atomic, atomic_add_row};
+use super::dense::Matrix;
+use super::{check_shapes, Mttkrp, MAX_RANK};
+use crate::device::counters::{Counters, Snapshot};
+use crate::format::fcoo::FCoo;
+use crate::util::pool::parallel_dynamic;
+
+/// Rank elements per GPU pass: the F-COO kernel scans rank-wide partial
+/// rows through local memory, whose capacity bounds the tile to ~8 lanes —
+/// larger ranks re-read the whole tensor payload once per tile (a real
+/// structural cost of the format's two-phase kernel).
+pub const RANK_TILE: usize = 8;
+
+pub struct FCooEngine {
+    pub f: FCoo,
+    /// cumulative segment count before each position (per mode), so a chunk
+    /// knows which `seg_rows` entry it is in without scanning from 0
+    seg_before: Vec<Vec<u32>>,
+}
+
+impl FCooEngine {
+    pub fn new(f: FCoo) -> Self {
+        let seg_before = f
+            .modes
+            .iter()
+            .map(|m| {
+                let mut acc = 0u32;
+                let mut v = Vec::with_capacity(m.nnz());
+                for i in 0..m.nnz() {
+                    v.push(acc);
+                    if !m.bf[i] {
+                        acc += 1;
+                    }
+                }
+                v
+            })
+            .collect();
+        FCooEngine { f, seg_before }
+    }
+}
+
+impl Mttkrp for FCooEngine {
+    fn name(&self) -> String {
+        "fcoo".into()
+    }
+
+    fn mttkrp(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let rank = check_shapes(&self.f.dims, target, factors, out);
+        let m = &self.f.modes[target];
+        let seg_before = &self.seg_before[target];
+        out.fill(0.0);
+        let out_at = as_atomic(&mut out.data);
+        let nnz = m.nnz();
+        let chunk = m.chunk;
+
+        // each scheduling step takes one format chunk; segments interior to
+        // a chunk write without atomics (sorted target ⇒ the row belongs to
+        // this chunk alone), boundary segments use atomics
+        parallel_dynamic(threads, nnz.div_ceil(chunk), 1, |_, clo, chi| {
+            for c in clo..chi {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(nnz);
+                let mut scratch = vec![0u32; hi - lo];
+                let (mut cold, mut hot) = (0u64, 0u64);
+                for plane in &m.other_idx {
+                    scratch.copy_from_slice(&plane[lo..hi]);
+                    let (cc, hh) = crate::mttkrp::split_cold_hot(&mut scratch);
+                    cold += cc;
+                    hot += hh;
+                }
+                let mut reg = [0.0f64; MAX_RANK];
+                let mut seg = seg_before[lo] as usize;
+                // the segment containing position lo is shared with the
+                // previous chunk unless it starts exactly at lo
+                let mut seg_started_inside = lo == 0 || !m.bf[lo - 1];
+                let mut atomics = 0u64;
+                let mut segments = 0u64;
+                let mut writes = 0u64;
+                for i in lo..hi {
+                    // rank-wise product of non-target rows
+                    let mut row = [0.0f64; MAX_RANK];
+                    row[..rank].iter_mut().for_each(|x| *x = m.vals[i]);
+                    for (j, &n) in m.other_modes.iter().enumerate() {
+                        let fr = factors[n].row(m.other_idx[j][i] as usize);
+                        for k in 0..rank {
+                            row[k] *= fr[k];
+                        }
+                    }
+                    for k in 0..rank {
+                        reg[k] += row[k];
+                    }
+                    if !m.bf[i] {
+                        // segment ends at i
+                        let r = m.seg_rows[seg] as usize;
+                        segments += 1;
+                        if seg_started_inside {
+                            // segment fully inside this chunk: the row is
+                            // exclusively ours (sorted target ⇒ one segment
+                            // per row), plain read-modify-write suffices
+                            let o = r * rank;
+                            for k in 0..rank {
+                                let cur = f64::from_bits(
+                                    out_at[o + k].load(std::sync::atomic::Ordering::Relaxed),
+                                );
+                                out_at[o + k].store(
+                                    (cur + reg[k]).to_bits(),
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                            }
+                            writes += rank as u64;
+                        } else {
+                            // continuation from the previous chunk
+                            atomic_add_row(out_at, r * rank, &reg[..rank]);
+                            atomics += rank as u64;
+                        }
+                        reg[..rank].iter_mut().for_each(|x| *x = 0.0);
+                        seg += 1;
+                        seg_started_inside = true;
+                    }
+                }
+                // trailing open segment: crosses the chunk boundary → atomic
+                if hi > lo && m.bf[hi - 1] {
+                    let r = m.seg_rows[seg] as usize;
+                    atomic_add_row(out_at, r * rank, &reg[..rank]);
+                    atomics += rank as u64;
+                }
+                let n = (hi - lo) as u64;
+                // the GPU F-COO merges partial rows with a log-depth
+                // segmented scan over the chunk in local memory (log2(chunk)
+                // barrier-separated passes); local-memory capacity forces
+                // rank tiling (payload re-read per tile); and the two-phase
+                // product→scan pipeline stages the rank-wide partial rows
+                // through GLOBAL memory between its kernels (one write +
+                // one read per non-zero)
+                let scan_passes = (chunk.max(2) as f64).log2().ceil() as u64;
+                let rank_tiles = rank.div_ceil(RANK_TILE) as u64;
+                counters.add(&Snapshot {
+                    bytes_streamed: (n * ((m.other_modes.len() as u64) * 4 + 8)
+                        + n / 8 // bit flags
+                        + 4) // sf flag
+                        * rank_tiles
+                        + n * rank as u64 * 8 * 2, // staged partials
+                    bytes_gathered: cold * rank as u64 * 8,
+                    bytes_local: hot * rank as u64 * 8
+                        + n * rank as u64 * 8 * scan_passes,
+                    bytes_written: writes * 8 + atomics * 8,
+                    atomics,
+                    segments,
+                    ..Default::default()
+                });
+            }
+        });
+        counters.add(&Snapshot {
+            launches: rank.div_ceil(RANK_TILE) as u64,
+            atomic_fanout: self.f.dims[target] * rank as u64,
+            ..Default::default()
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    fn engine(t: &crate::tensor::coo::CooTensor, chunk: usize) -> FCooEngine {
+        FCooEngine::new(FCoo::from_coo(t, chunk))
+    }
+
+    #[test]
+    fn matches_oracle_all_modes() {
+        let dims = [40u64, 30, 20];
+        let t = synth::uniform(&dims, 4_000, 1);
+        let factors = random_factors(&dims, 8, 2);
+        let eng = engine(&t, 64);
+        for target in 0..3 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 8);
+            let c = Counters::new();
+            eng.mttkrp(target, &factors, &mut out, 4, &c);
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+            // segmented scan must use far fewer atomics than nnz*rank
+            let s = c.snapshot();
+            assert!(s.atomics < t.nnz() as u64 * 8 / 4, "atomics {}", s.atomics);
+        }
+    }
+
+    #[test]
+    fn chunk_boundary_segments_exact() {
+        // tiny chunks force many boundary crossings
+        let dims = [5u64, 50, 50];
+        let t = synth::uniform(&dims, 3_000, 7);
+        let factors = random_factors(&dims, 4, 3);
+        let eng = engine(&t, 8);
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        let mut out = Matrix::zeros(5, 4);
+        eng.mttkrp(0, &factors, &mut out, 8, &Counters::new());
+        assert!(out.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn four_mode() {
+        let dims = [12u64, 10, 8, 6];
+        let t = synth::uniform(&dims, 1_500, 5);
+        let factors = random_factors(&dims, 8, 9);
+        let eng = engine(&t, 32);
+        for target in 0..4 {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            let mut out = Matrix::zeros(dims[target] as usize, 8);
+            eng.mttkrp(target, &factors, &mut out, 3, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn single_thread_matches() {
+        let dims = [16u64, 16, 16];
+        let t = synth::uniform(&dims, 800, 11);
+        let factors = random_factors(&dims, 8, 13);
+        let eng = engine(&t, 128);
+        let expect = mttkrp_oracle(&t, 2, &factors);
+        let mut out = Matrix::zeros(16, 8);
+        eng.mttkrp(2, &factors, &mut out, 1, &Counters::new());
+        assert!(out.max_abs_diff(&expect) < 1e-9);
+    }
+}

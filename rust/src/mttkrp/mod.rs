@@ -1,0 +1,136 @@
+//! Parallel sparse MTTKRP engines — one per format — all implementing
+//! [`Mttkrp`] against the same dense [`Matrix`](dense::Matrix) factors and
+//! reporting exact traffic into [`Counters`](crate::device::Counters):
+//!
+//! * [`oracle`] — serial COO reference (the correctness anchor);
+//! * [`coo`] — COO + global atomics (the naive massively-parallel baseline);
+//! * [`genten`] — GenTen-style permutation + register accumulation;
+//! * [`hicoo`] — HiCOO block-based engine (Li et al.);
+//! * [`fcoo`] — F-COO segmented scan (Liu et al.);
+//! * [`csf`] — CSF-N / B-CSF tree walks and the MM-CSF mixed-mode engine
+//!   (Smith & Karypis; Nisa et al.);
+//! * [`blco`] — the paper's unified mode-agnostic algorithm with
+//!   register-based and hierarchical conflict resolution (Section 5).
+
+pub mod atomicf;
+pub mod blco;
+pub mod coo;
+pub mod csf;
+pub mod dense;
+pub mod fcoo;
+pub mod genten;
+pub mod hicoo;
+pub mod oracle;
+
+use crate::device::Counters;
+use dense::Matrix;
+
+/// Reuse window for the measured gather-locality split: row fetches that
+/// repeat within this many consecutive non-zeros are charged as
+/// cache-resident. One size for every engine so layouts compete fairly;
+/// 256 ≈ the footprint a warp's tile keeps live in L1/L2.
+pub const LOCALITY_WINDOW: usize = 256;
+
+/// Split a chunk's factor-row fetches into cold (distinct rows → HBM
+/// gathers) and cache-resident repeats (→ local-class traffic), counted in
+/// [`LOCALITY_WINDOW`]-sized windows.
+///
+/// This is *measured*, per chunk, per mode: `rows` is scratch space whose
+/// first `len` entries hold the chunk's row ids for one mode (clobbered by
+/// per-window sorting). Returns `(distinct, repeats)`. The space-filling
+/// BLCO order clusters coordinates in every mode at once, so its tiles see
+/// far more repeats than target-sorted or unsorted layouts — the
+/// data-locality mechanism the paper credits for BLCO's throughput edge.
+#[inline]
+pub(crate) fn split_cold_hot(rows: &mut [u32]) -> (u64, u64) {
+    let len = rows.len();
+    let (mut distinct, mut repeats) = (0u64, 0u64);
+    let mut lo = 0usize;
+    while lo < len {
+        let hi = (lo + LOCALITY_WINDOW).min(len);
+        let w = &mut rows[lo..hi];
+        w.sort_unstable();
+        let mut d = 1u64;
+        for i in 1..w.len() {
+            if w[i] != w[i - 1] {
+                d += 1;
+            }
+        }
+        distinct += d;
+        repeats += w.len() as u64 - d;
+        lo = hi;
+    }
+    (distinct, repeats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::split_cold_hot;
+
+    #[test]
+    fn all_distinct() {
+        let mut v: Vec<u32> = (0..100).collect();
+        assert_eq!(split_cold_hot(&mut v), (100, 0));
+    }
+
+    #[test]
+    fn all_same() {
+        let mut v = vec![7u32; 50];
+        assert_eq!(split_cold_hot(&mut v), (1, 49));
+    }
+
+    #[test]
+    fn windowed_counting() {
+        // the same row in two different windows is cold twice
+        let mut v = vec![3u32; 512];
+        assert_eq!(split_cold_hot(&mut v), (2, 510));
+    }
+
+    #[test]
+    fn empty() {
+        let mut v: Vec<u32> = vec![];
+        assert_eq!(split_cold_hot(&mut v), (0, 0));
+    }
+}
+
+/// Maximum decomposition rank supported by the stack-allocated register
+/// accumulators in the hot loops.
+pub const MAX_RANK: usize = 64;
+
+/// A parallel mode-`target` MTTKRP engine over some tensor format.
+pub trait Mttkrp {
+    /// Engine name for reports (e.g. `"blco-reg"`).
+    fn name(&self) -> String;
+
+    /// Compute `out = X_(target) ⨀ (⊙ factors[n != target])`, overwriting
+    /// `out` (shape `dims[target] × rank`). Traffic is accumulated into
+    /// `counters`.
+    fn mttkrp(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    );
+}
+
+/// Validate common preconditions shared by all engines.
+pub(crate) fn check_shapes(
+    dims: &[u64],
+    target: usize,
+    factors: &[Matrix],
+    out: &Matrix,
+) -> usize {
+    assert!(target < dims.len(), "target {target} out of range");
+    assert_eq!(factors.len(), dims.len(), "one factor per mode");
+    let rank = factors[0].cols;
+    assert!(rank <= MAX_RANK, "rank {rank} > MAX_RANK {MAX_RANK}");
+    for (n, f) in factors.iter().enumerate() {
+        assert_eq!(f.rows as u64, dims[n], "factor {n} rows");
+        assert_eq!(f.cols, rank, "factor {n} cols");
+    }
+    assert_eq!(out.rows as u64, dims[target], "out rows");
+    assert_eq!(out.cols, rank, "out cols");
+    rank
+}

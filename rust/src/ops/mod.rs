@@ -1,0 +1,6 @@
+//! Further tensor operations over the BLCO format — the paper's future
+//! work ("other tensor algorithms") made concrete: the same unified
+//! mode-agnostic block iteration that powers MTTKRP also drives
+//! tensor-times-vector contraction ([`ttv`]).
+
+pub mod ttv;

@@ -1,0 +1,183 @@
+//! Artifact manifest parsing. `make artifacts` writes
+//! `artifacts/manifest.txt` with one flat `key=value` line per AOT variant
+//! (see `python/compile/aot.py`); this module locates and indexes it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled computation, mirroring `python/compile/config.Variant`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactVariant {
+    pub name: String,
+    pub file: String,
+    pub order: usize,
+    pub rank: usize,
+    /// block capacity (inputs are zero-padded to this many non-zeros)
+    pub capacity: usize,
+    pub target: usize,
+    /// "fused" (in-graph segment-sum) or "partials" (L3 merges)
+    pub kind: String,
+    pub dtype: String,
+    /// padded factor-matrix row counts
+    pub dims: Vec<u64>,
+}
+
+/// The manifest index.
+#[derive(Clone, Debug, Default)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub variants: Vec<ArtifactVariant>,
+}
+
+/// Default artifacts directory: `$BLCO_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("BLCO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            variants.push(
+                parse_line(line)
+                    .with_context(|| format!("{}:{}", manifest.display(), lineno + 1))?,
+            );
+        }
+        if variants.is_empty() {
+            bail!("{}: no variants", manifest.display());
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Find a variant able to run a mode-`target` MTTKRP for a tensor with
+    /// `dims` (padded dims must cover the tensor's) at `rank`.
+    pub fn find(
+        &self,
+        dims: &[u64],
+        rank: usize,
+        target: usize,
+        kind: &str,
+    ) -> Option<&ArtifactVariant> {
+        self.variants.iter().find(|v| {
+            v.order == dims.len()
+                && v.rank == rank
+                && v.target == target
+                && v.kind == kind
+                && v.dims.iter().zip(dims).all(|(&pad, &d)| pad >= d)
+        })
+    }
+
+    pub fn path_of(&self, v: &ArtifactVariant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+fn parse_line(line: &str) -> Result<ArtifactVariant> {
+    let mut kv = std::collections::HashMap::new();
+    for tok in line.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .with_context(|| format!("bad token {tok:?}"))?;
+        kv.insert(k.to_string(), v.to_string());
+    }
+    let get = |k: &str| -> Result<String> {
+        kv.get(k).cloned().with_context(|| format!("missing key {k}"))
+    };
+    let dims: Vec<u64> = get("dims")?
+        .split(',')
+        .map(|d| d.parse().context("bad dim"))
+        .collect::<Result<_>>()?;
+    let v = ArtifactVariant {
+        name: get("name")?,
+        file: get("file")?,
+        order: get("order")?.parse()?,
+        rank: get("rank")?.parse()?,
+        capacity: get("capacity")?.parse()?,
+        target: get("target")?.parse()?,
+        kind: get("kind")?,
+        dtype: get("dtype")?,
+        dims,
+    };
+    if v.dims.len() != v.order {
+        bail!("{}: dims/order mismatch", v.name);
+    }
+    if v.target >= v.order {
+        bail!("{}: target out of range", v.name);
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_good_line() {
+        let v = parse_line(
+            "name=x file=x.hlo.txt order=3 rank=32 capacity=4096 target=1 \
+             kind=fused dtype=float32 dims=1024,512,256",
+        )
+        .unwrap();
+        assert_eq!(v.name, "x");
+        assert_eq!(v.dims, vec![1024, 512, 256]);
+        assert_eq!(v.target, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_line("name=x").is_err());
+        assert!(parse_line(
+            "name=x file=f order=2 rank=4 capacity=16 target=5 kind=fused \
+             dtype=float32 dims=4,4"
+        )
+        .is_err());
+        assert!(parse_line(
+            "name=x file=f order=3 rank=4 capacity=16 target=0 kind=fused \
+             dtype=float32 dims=4,4"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn find_honours_dims_and_kind() {
+        let a = Artifacts {
+            dir: PathBuf::from("."),
+            variants: vec![parse_line(
+                "name=x file=f order=3 rank=32 capacity=4096 target=0 \
+                 kind=fused dtype=float32 dims=1024,1024,1024",
+            )
+            .unwrap()],
+        };
+        assert!(a.find(&[1000, 800, 600], 32, 0, "fused").is_some());
+        assert!(a.find(&[2000, 800, 600], 32, 0, "fused").is_none()); // too big
+        assert!(a.find(&[1000, 800, 600], 16, 0, "fused").is_none()); // rank
+        assert!(a.find(&[1000, 800, 600], 32, 1, "fused").is_none()); // target
+        assert!(a.find(&[1000, 800, 600], 32, 0, "partials").is_none()); // kind
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // exercises the end-to-end manifest when `make artifacts` has run
+        let dir = default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts dir at {}", dir.display());
+            return;
+        }
+        let a = Artifacts::load(&dir).unwrap();
+        assert!(a.find(&[1000, 800, 600], 32, 0, "fused").is_some());
+        assert!(a.find(&[250, 250, 250, 60], 32, 3, "partials").is_some());
+        for v in &a.variants {
+            assert!(a.path_of(v).exists(), "{} missing", v.file);
+        }
+    }
+}

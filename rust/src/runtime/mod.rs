@@ -1,0 +1,10 @@
+//! The PJRT bridge: load the AOT-compiled HLO text produced by
+//! `python/compile/aot.py` (the L2 JAX graph embedding the L1 Pallas
+//! kernel), compile it once on the PJRT CPU client, and execute BLCO blocks
+//! through it from the Rust request path. Python never runs here.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactVariant, Artifacts};
+pub use exec::PjrtRuntime;

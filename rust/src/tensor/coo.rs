@@ -1,0 +1,235 @@
+//! Coordinate (COO) sparse tensors — the raw interchange representation all
+//! formats are constructed from (Figure 4a of the paper).
+
+use anyhow::{bail, Result};
+
+/// An N-order sparse tensor in coordinate form.
+///
+/// Indices are stored *mode-major* (`coords[n][e]` is the mode-`n` index of
+/// non-zero `e`) so per-mode scans touch contiguous memory. Coordinates are
+/// `u32` (every tensor in the paper's evaluation has mode lengths < 2^32);
+/// mode lengths themselves are `u64` so encoding-line arithmetic never
+/// overflows intermediate products.
+#[derive(Clone, Debug, Default)]
+pub struct CooTensor {
+    pub dims: Vec<u64>,
+    pub coords: Vec<Vec<u32>>,
+    pub vals: Vec<f64>,
+}
+
+impl CooTensor {
+    /// Empty tensor with the given mode lengths.
+    pub fn new(dims: &[u64]) -> Self {
+        CooTensor {
+            dims: dims.to_vec(),
+            coords: vec![Vec::new(); dims.len()],
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(dims: &[u64], nnz: usize) -> Self {
+        CooTensor {
+            dims: dims.to_vec(),
+            coords: vec![Vec::with_capacity(nnz); dims.len()],
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of occupied cells; 0 for degenerate shapes.
+    pub fn density(&self) -> f64 {
+        let cells: f64 = self.dims.iter().map(|&d| d as f64).product();
+        if cells == 0.0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells
+        }
+    }
+
+    /// Append one non-zero. Debug-asserts bounds.
+    #[inline]
+    pub fn push(&mut self, coord: &[u32], val: f64) {
+        debug_assert_eq!(coord.len(), self.order());
+        for (n, &c) in coord.iter().enumerate() {
+            debug_assert!((c as u64) < self.dims[n], "mode {n}: {c} >= {}", self.dims[n]);
+            self.coords[n].push(c);
+        }
+        self.vals.push(val);
+    }
+
+    /// The coordinates of non-zero `e` as a fresh vector.
+    pub fn coord(&self, e: usize) -> Vec<u32> {
+        self.coords.iter().map(|m| m[e]).collect()
+    }
+
+    /// Full validation: plane lengths agree and all indices are in bounds.
+    pub fn validate(&self) -> Result<()> {
+        if self.coords.len() != self.dims.len() {
+            bail!("{} coordinate planes for {} modes", self.coords.len(), self.dims.len());
+        }
+        for (n, plane) in self.coords.iter().enumerate() {
+            if plane.len() != self.vals.len() {
+                bail!("mode {n}: {} indices vs {} values", plane.len(), self.vals.len());
+            }
+            if let Some(&bad) = plane.iter().find(|&&c| c as u64 >= self.dims[n]) {
+                bail!("mode {n}: index {bad} out of bounds {}", self.dims[n]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reorder all non-zeros by `perm` (a permutation of `0..nnz`).
+    pub fn permute(&mut self, perm: &[u32]) {
+        debug_assert_eq!(perm.len(), self.nnz());
+        for plane in &mut self.coords {
+            let old = std::mem::take(plane);
+            *plane = perm.iter().map(|&p| old[p as usize]).collect();
+        }
+        let old = std::mem::take(&mut self.vals);
+        self.vals = perm.iter().map(|&p| old[p as usize]).collect();
+    }
+
+    /// Deduplicate identical coordinates by summing their values. Sorting is
+    /// lexicographic over modes. Returns the number of merged duplicates.
+    pub fn sum_duplicates(&mut self) -> usize {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return 0;
+        }
+        let mut idx: Vec<u32> = (0..nnz as u32).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            for plane in &self.coords {
+                match plane[a as usize].cmp(&plane[b as usize]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        let mut out = CooTensor::with_capacity(&self.dims, nnz);
+        let mut merged = 0usize;
+        for &e in &idx {
+            let e = e as usize;
+            let same = out.nnz() > 0
+                && self
+                    .coords
+                    .iter()
+                    .zip(&out.coords)
+                    .all(|(p, q)| p[e] == *q.last().unwrap());
+            if same {
+                *out.vals.last_mut().unwrap() += self.vals[e];
+                merged += 1;
+            } else {
+                let c = self.coord(e);
+                out.push(&c, self.vals[e]);
+            }
+        }
+        *self = out;
+        merged
+    }
+
+    /// Bytes of a plain COO representation (paper accounting: one u64 value
+    /// + N u32/u64 indices per non-zero). Uses u32 indices like this struct.
+    pub fn footprint_bytes(&self) -> usize {
+        self.nnz() * (8 + 4 * self.order())
+    }
+
+    /// Frobenius norm of the non-zero values.
+    pub fn norm(&self) -> f64 {
+        self.vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CooTensor {
+        // the running example tensor of the paper (Figure 4a), 0-based
+        let mut t = CooTensor::new(&[4, 4, 4]);
+        let data: [([u32; 3], f64); 12] = [
+            ([0, 0, 0], 1.0),
+            ([0, 0, 1], 2.0),
+            ([0, 2, 2], 3.0),
+            ([1, 0, 1], 4.0),
+            ([1, 0, 2], 5.0),
+            ([2, 0, 1], 6.0),
+            ([2, 3, 3], 7.0),
+            ([3, 1, 0], 8.0),
+            ([3, 1, 1], 9.0),
+            ([3, 2, 2], 10.0),
+            ([3, 2, 3], 11.0),
+            ([3, 3, 3], 12.0),
+        ];
+        for (c, v) in data {
+            t.push(&c, v);
+        }
+        t
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let t = tiny();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 12);
+        assert_eq!(t.coord(3), vec![1, 0, 1]);
+        assert!((t.density() - 12.0 / 64.0).abs() < 1e-12);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_out_of_bounds() {
+        let mut t = tiny();
+        t.coords[1][5] = 99;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_ragged_planes() {
+        let mut t = tiny();
+        t.coords[0].pop();
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let mut t = tiny();
+        let orig = t.clone();
+        let perm: Vec<u32> = (0..t.nnz() as u32).rev().collect();
+        t.permute(&perm);
+        assert_eq!(t.vals[0], 12.0);
+        t.permute(&perm);
+        assert_eq!(t.vals, orig.vals);
+        assert_eq!(t.coords, orig.coords);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let mut t = CooTensor::new(&[2, 2]);
+        t.push(&[0, 1], 1.0);
+        t.push(&[1, 1], 5.0);
+        t.push(&[0, 1], 2.0);
+        let merged = t.sum_duplicates();
+        assert_eq!(merged, 1);
+        assert_eq!(t.nnz(), 2);
+        let e = (0..2).find(|&e| t.coord(e) == vec![0, 1]).unwrap();
+        assert_eq!(t.vals[e], 3.0);
+    }
+
+    #[test]
+    fn footprint_and_norm() {
+        let t = tiny();
+        assert_eq!(t.footprint_bytes(), 12 * (8 + 12));
+        let expect: f64 = (1..=12).map(|v| (v * v) as f64).sum::<f64>().sqrt();
+        assert!((t.norm() - expect).abs() < 1e-12);
+    }
+}

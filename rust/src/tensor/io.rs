@@ -1,0 +1,154 @@
+//! FROSTT `.tns` text IO: one non-zero per line, 1-based indices followed by
+//! the value; `#` comments allowed. This is the format the paper's datasets
+//! ship in, so converted real tensors drop straight into the pipeline.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::coo::CooTensor;
+
+/// Read a `.tns` file. Mode lengths are inferred as the per-mode maxima
+/// unless `dims` is given (required if any trailing mode is longer than its
+/// max index suggests).
+pub fn read_tns(path: &Path, dims: Option<&[u64]>) -> Result<CooTensor> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(file);
+
+    let mut order: Option<usize> = None;
+    let mut raw_coords: Vec<Vec<u32>> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 2 {
+            bail!("{}:{}: too few fields", path.display(), lineno + 1);
+        }
+        let n = toks.len() - 1;
+        match order {
+            None => {
+                order = Some(n);
+                raw_coords = vec![Vec::new(); n];
+            }
+            Some(o) if o != n => {
+                bail!("{}:{}: {} indices, expected {}", path.display(), lineno + 1, n, o)
+            }
+            _ => {}
+        }
+        for (m, tok) in toks[..n].iter().enumerate() {
+            let idx: u64 = tok
+                .parse()
+                .with_context(|| format!("{}:{}: bad index", path.display(), lineno + 1))?;
+            if idx == 0 {
+                bail!("{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
+            }
+            raw_coords[m].push((idx - 1) as u32);
+        }
+        let v: f64 = toks[n]
+            .parse()
+            .with_context(|| format!("{}:{}: bad value", path.display(), lineno + 1))?;
+        vals.push(v);
+    }
+
+    let order = order.unwrap_or(0);
+    if order == 0 {
+        bail!("{}: no non-zero entries", path.display());
+    }
+    let inferred: Vec<u64> = raw_coords
+        .iter()
+        .map(|p| p.iter().map(|&c| c as u64 + 1).max().unwrap_or(1))
+        .collect();
+    let dims = match dims {
+        Some(d) => {
+            if d.len() != order {
+                bail!("explicit dims order {} != file order {}", d.len(), order);
+            }
+            for (n, (&given, &seen)) in d.iter().zip(&inferred).enumerate() {
+                if given < seen {
+                    bail!("mode {n}: dim {given} < max index {seen}");
+                }
+            }
+            d.to_vec()
+        }
+        None => inferred,
+    };
+    let t = CooTensor { dims, coords: raw_coords, vals };
+    t.validate()?;
+    Ok(t)
+}
+
+/// Write a tensor as `.tns` (1-based indices).
+pub fn write_tns(path: &Path, t: &CooTensor) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# {} modes, dims {:?}, {} nnz", t.order(), t.dims, t.nnz())?;
+    for e in 0..t.nnz() {
+        for n in 0..t.order() {
+            write!(w, "{} ", t.coords[n][e] as u64 + 1)?;
+        }
+        writeln!(w, "{}", t.vals[e])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("blco_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut t = CooTensor::new(&[5, 6, 7]);
+        t.push(&[0, 0, 0], 1.5);
+        t.push(&[4, 5, 6], -2.25);
+        t.push(&[2, 3, 1], 0.5);
+        let p = tmpfile("roundtrip.tns");
+        write_tns(&p, &t).unwrap();
+        let back = read_tns(&p, Some(&[5, 6, 7])).unwrap();
+        assert_eq!(back.dims, t.dims);
+        assert_eq!(back.coords, t.coords);
+        assert_eq!(back.vals, t.vals);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn infers_dims_and_skips_comments() {
+        let p = tmpfile("infer.tns");
+        std::fs::write(&p, "# header\n1 1 1 1.0\n\n3 2 5 2.0\n").unwrap();
+        let t = read_tns(&p, None).unwrap();
+        assert_eq!(t.dims, vec![3, 2, 5]);
+        assert_eq!(t.nnz(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_zero_based() {
+        let p = tmpfile("zerobased.tns");
+        std::fs::write(&p, "0 1 1 1.0\n").unwrap();
+        assert!(read_tns(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_and_small_dims() {
+        let p = tmpfile("ragged.tns");
+        std::fs::write(&p, "1 1 1 1.0\n1 1 2.0\n").unwrap();
+        assert!(read_tns(&p, None).is_err());
+        std::fs::write(&p, "5 1 1 1.0\n").unwrap();
+        assert!(read_tns(&p, Some(&[2, 2, 2])).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse tensor substrate: COO storage, FROSTT `.tns` IO, synthetic
+//! dataset generators mirroring the paper's 14-tensor evaluation suite, and
+//! the structural statistics (fiber densities, mode histograms) that the
+//! MM-CSF baseline and the experiment analysis need.
+
+pub mod coo;
+pub mod datasets;
+pub mod io;
+pub mod stats;
+pub mod synth;

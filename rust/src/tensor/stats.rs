@@ -1,0 +1,130 @@
+//! Structural statistics of sparse tensors: fiber densities (the quantity
+//! MM-CSF partitions by) and per-mode slice histograms (the contention
+//! predictor behind the paper's §5.3 adaptation heuristic).
+
+use std::collections::HashMap;
+
+use super::coo::CooTensor;
+
+/// Statistics of the mode-`leaf` fibers (vectors obtained by fixing every
+/// index except `leaf`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FiberStats {
+    /// number of distinct non-empty fibers
+    pub fibers: usize,
+    /// max non-zeros in one fiber
+    pub max_len: usize,
+    /// mean non-zeros per non-empty fiber
+    pub avg_len: f64,
+}
+
+/// Hash key of the fiber containing non-zero `e` for the given leaf mode.
+pub fn fiber_key(t: &CooTensor, e: usize, leaf: usize) -> u128 {
+    let mut key: u128 = 0;
+    for n in 0..t.order() {
+        if n == leaf {
+            continue;
+        }
+        key = key
+            .wrapping_mul(t.dims[n] as u128)
+            .wrapping_add(t.coords[n][e] as u128);
+    }
+    key
+}
+
+/// Count non-zeros per mode-`leaf` fiber.
+pub fn fiber_histogram(t: &CooTensor, leaf: usize) -> HashMap<u128, u32> {
+    let mut h = HashMap::with_capacity(t.nnz());
+    for e in 0..t.nnz() {
+        *h.entry(fiber_key(t, e, leaf)).or_insert(0u32) += 1;
+    }
+    h
+}
+
+pub fn fiber_stats(t: &CooTensor, leaf: usize) -> FiberStats {
+    let h = fiber_histogram(t, leaf);
+    let fibers = h.len();
+    let max_len = h.values().copied().max().unwrap_or(0) as usize;
+    let avg_len = if fibers == 0 {
+        0.0
+    } else {
+        t.nnz() as f64 / fibers as f64
+    };
+    FiberStats { fibers, max_len, avg_len }
+}
+
+/// Non-zeros per index along `mode` (slice histogram). `hist[i]` is the
+/// number of updates row `i` of the mode-`mode` factor matrix receives
+/// during mode-`mode` MTTKRP — i.e. the atomic-contention profile.
+pub fn slice_histogram(t: &CooTensor, mode: usize) -> Vec<u64> {
+    let mut hist = vec![0u64; t.dims[mode] as usize];
+    for &c in &t.coords[mode] {
+        hist[c as usize] += 1;
+    }
+    hist
+}
+
+/// Imbalance factor of a histogram: max/mean over non-empty entries.
+pub fn imbalance(hist: &[u64]) -> f64 {
+    let nz: Vec<u64> = hist.iter().copied().filter(|&x| x > 0).collect();
+    if nz.is_empty() {
+        return 0.0;
+    }
+    let max = *nz.iter().max().unwrap() as f64;
+    let mean = nz.iter().sum::<u64>() as f64 / nz.len() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor() -> CooTensor {
+        let mut t = CooTensor::new(&[3, 3, 3]);
+        // two nnz share the mode-2 fiber (0,1,*); one separate
+        t.push(&[0, 1, 0], 1.0);
+        t.push(&[0, 1, 2], 2.0);
+        t.push(&[2, 2, 2], 3.0);
+        t
+    }
+
+    #[test]
+    fn fiber_stats_counts_fibers() {
+        let s = fiber_stats(&tensor(), 2);
+        assert_eq!(s.fibers, 2);
+        assert_eq!(s.max_len, 2);
+        assert!((s.avg_len - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fiber_stats_leaf_mode_matters() {
+        let s0 = fiber_stats(&tensor(), 0);
+        // fibers along mode 0: (1,0), (1,2), (2,2) — all distinct
+        assert_eq!(s0.fibers, 3);
+        assert_eq!(s0.max_len, 1);
+    }
+
+    #[test]
+    fn slice_histogram_counts_updates() {
+        let h = slice_histogram(&tensor(), 0);
+        assert_eq!(h, vec![2, 0, 1]);
+        let h1 = slice_histogram(&tensor(), 1);
+        assert_eq!(h1, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn imbalance_of_uniform_is_one() {
+        assert!((imbalance(&[5, 5, 5]) - 1.0).abs() < 1e-12);
+        assert!(imbalance(&[9, 1, 0, 2]) > 2.0);
+        assert_eq!(imbalance(&[]), 0.0);
+        assert_eq!(imbalance(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn empty_tensor_stats() {
+        let t = CooTensor::new(&[4, 4]);
+        let s = fiber_stats(&t, 0);
+        assert_eq!(s.fibers, 0);
+        assert_eq!(s.max_len, 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic sparse tensor generators.
+//!
+//! The paper evaluates on FROSTT/HaTen2 tensors which are not redistributable
+//! here (multi-GB downloads, up to 4.7B non-zeros). These generators
+//! reproduce the *drivers* behind every effect the paper measures
+//! (DESIGN.md §3): mode shape (→ atomics contention and the §5.3 heuristic),
+//! fiber-density skew (→ MM-CSF compression quality) and total footprint
+//! vs device memory (→ the out-of-memory path).
+
+use std::collections::HashSet;
+
+use super::coo::CooTensor;
+use crate::util::prng::Rng;
+
+/// Uniform random tensor: coordinates i.i.d. uniform per mode, values
+/// standard normal. Duplicates are merged, so the resulting nnz can be
+/// slightly below the request on dense shapes.
+pub fn uniform(dims: &[u64], nnz: usize, seed: u64) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    let mut t = CooTensor::with_capacity(dims, nnz);
+    let mut seen = HashSet::with_capacity(nnz * 2);
+    let cells: f64 = dims.iter().map(|&d| d as f64).product();
+    let dedupe = (nnz as f64) / cells > 1e-4; // only worth it when collisions are likely
+    let mut coord = vec![0u32; dims.len()];
+    let mut attempts = 0usize;
+    while t.nnz() < nnz && attempts < nnz * 4 {
+        attempts += 1;
+        for (n, &d) in dims.iter().enumerate() {
+            coord[n] = rng.below(d) as u32;
+        }
+        if dedupe {
+            let key = pack_coord(&coord, dims);
+            if !seen.insert(key) {
+                continue;
+            }
+        }
+        t.push(&coord, rng.normal());
+    }
+    t
+}
+
+/// Fiber-clustered tensor: non-zeros are grouped into fibers along
+/// `leaf_mode`, with the number of fibers and the per-fiber occupancy both
+/// Zipf-skewed by `theta`. Large `theta` → few very dense fibers (the
+/// NELL-2/Chicago regime where CSF-family compression shines); `theta ≈ 0`
+/// → near-uniform, hypersparse fibers (the DARPA/FB-M regime where MM-CSF
+/// degrades, Section 6.2).
+pub fn fiber_clustered(
+    dims: &[u64],
+    nnz: usize,
+    leaf_mode: usize,
+    theta: f64,
+    seed: u64,
+) -> CooTensor {
+    assert!(leaf_mode < dims.len());
+    let mut rng = Rng::new(seed);
+    // Pool of candidate fibers: random coordinates for every non-leaf mode.
+    // Zipf over the pool concentrates non-zeros in the early (dense) fibers.
+    let n_fibers = (nnz / 4).clamp(1, 1 << 20);
+    let non_leaf: Vec<usize> =
+        (0..dims.len()).filter(|&n| n != leaf_mode).collect();
+    let mut pool: Vec<Vec<u32>> = Vec::with_capacity(n_fibers);
+    for _ in 0..n_fibers {
+        pool.push(non_leaf.iter().map(|&n| rng.below(dims[n]) as u32).collect());
+    }
+
+    let mut t = CooTensor::with_capacity(dims, nnz);
+    let mut seen = HashSet::with_capacity(nnz * 2);
+    let mut coord = vec![0u32; dims.len()];
+    let mut attempts = 0usize;
+    while t.nnz() < nnz && attempts < nnz * 6 {
+        attempts += 1;
+        let f = rng.zipf(n_fibers as u64, theta) as usize;
+        for (k, &n) in non_leaf.iter().enumerate() {
+            coord[n] = pool[f][k];
+        }
+        coord[leaf_mode] = rng.zipf(dims[leaf_mode], theta * 0.5) as u32;
+        let key = pack_coord(&coord, dims);
+        if !seen.insert(key) {
+            continue;
+        }
+        t.push(&coord, rng.normal());
+    }
+    t
+}
+
+/// Pack coordinates into a u128 for dedup hashing (row-major).
+fn pack_coord(coord: &[u32], dims: &[u64]) -> u128 {
+    let mut key: u128 = 0;
+    for (n, &c) in coord.iter().enumerate() {
+        key = key.wrapping_mul(dims[n] as u128).wrapping_add(c as u128);
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::stats;
+
+    #[test]
+    fn uniform_shape_and_bounds() {
+        let t = uniform(&[50, 40, 30], 5_000, 1);
+        assert!(t.nnz() >= 4_500, "nnz {}", t.nnz());
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn uniform_is_deterministic() {
+        let a = uniform(&[100, 100, 100], 1_000, 7);
+        let b = uniform(&[100, 100, 100], 1_000, 7);
+        assert_eq!(a.coords, b.coords);
+        assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn uniform_has_no_duplicates_when_dense() {
+        let t = uniform(&[10, 10, 10], 500, 3);
+        let mut keys: Vec<u128> = (0..t.nnz())
+            .map(|e| pack_coord(&t.coord(e), &t.dims))
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), t.nnz());
+    }
+
+    #[test]
+    fn fiber_clustered_skews_density() {
+        let dims = [200u64, 150, 100];
+        let skewed = fiber_clustered(&dims, 8_000, 2, 1.3, 11);
+        let flat = fiber_clustered(&dims, 8_000, 2, 0.0, 11);
+        skewed.validate().unwrap();
+        let fs = stats::fiber_stats(&skewed, 2);
+        let ff = stats::fiber_stats(&flat, 2);
+        // skew concentrates non-zeros: fewer distinct fibers, denser max
+        assert!(fs.fibers < ff.fibers, "{} vs {}", fs.fibers, ff.fibers);
+        assert!(fs.max_len > ff.max_len, "{} vs {}", fs.max_len, ff.max_len);
+    }
+
+    #[test]
+    fn fiber_clustered_other_leaf_modes() {
+        for leaf in 0..3 {
+            let t = fiber_clustered(&[64, 64, 64], 2_000, leaf, 0.8, leaf as u64);
+            assert!(t.nnz() > 1_000);
+            t.validate().unwrap();
+        }
+    }
+}

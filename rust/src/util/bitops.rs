@@ -1,0 +1,94 @@
+//! Bit-manipulation helpers for encoding lines up to 128 bits.
+
+/// Bits needed to represent coordinates in `[0, dim)`; at least 1.
+#[inline]
+pub fn mode_bits(dim: u64) -> u32 {
+    if dim <= 1 {
+        1
+    } else {
+        64 - (dim - 1).leading_zeros()
+    }
+}
+
+/// Mask with the low `bits` bits set (u64, `bits <= 64`).
+#[inline]
+pub fn mask64(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Mask with the low `bits` bits set (u128, `bits <= 128`).
+#[inline]
+pub fn mask128(bits: u32) -> u128 {
+    if bits >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << bits) - 1
+    }
+}
+
+/// Extract `bits` bits of `x` starting at `shift`.
+#[inline]
+pub fn extract128(x: u128, shift: u32, bits: u32) -> u64 {
+    ((x >> shift) & mask128(bits)) as u64
+}
+
+/// Ceil division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_bits_edges() {
+        assert_eq!(mode_bits(0), 1);
+        assert_eq!(mode_bits(1), 1);
+        assert_eq!(mode_bits(2), 1);
+        assert_eq!(mode_bits(3), 2);
+        assert_eq!(mode_bits(4), 2);
+        assert_eq!(mode_bits(5), 3);
+        assert_eq!(mode_bits(1024), 10);
+        assert_eq!(mode_bits(1025), 11);
+        assert_eq!(mode_bits(1 << 32), 32);
+        assert_eq!(mode_bits(u64::MAX), 64);
+    }
+
+    #[test]
+    fn masks() {
+        assert_eq!(mask64(0), 0);
+        assert_eq!(mask64(3), 0b111);
+        assert_eq!(mask64(64), u64::MAX);
+        assert_eq!(mask128(128), u128::MAX);
+        assert_eq!(mask128(65), (1u128 << 65) - 1);
+    }
+
+    #[test]
+    fn extract() {
+        let x: u128 = 0b1011_0110;
+        assert_eq!(extract128(x, 1, 3), 0b011);
+        assert_eq!(extract128(x, 4, 4), 0b1011);
+        let hi = 0xABCDu128 << 100;
+        assert_eq!(extract128(hi, 100, 16), 0xABCD);
+    }
+
+    #[test]
+    fn rounding() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal CLI argument parsing (clap is not in the offline vendor set).
+//! Supports `--flag`, `--key value` and `--key=value`, plus positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]). The
+    /// first non-option token becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Parse option `key` as `T`, falling back to `default`. Panics with a
+    /// readable message on malformed input.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {s:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: `--flag positional` would parse the positional as the flag's
+        // value (standard greedy `--key value`), so positionals come first
+        let a = parse("mttkrp x.tns --tensor uber --mode 2 --rank=16 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("mttkrp"));
+        assert_eq!(a.get("tensor"), Some("uber"));
+        assert_eq!(a.parse_or::<usize>("mode", 0), 2);
+        assert_eq!(a.parse_or::<usize>("rank", 0), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["x.tns"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.parse_or::<u32>("missing", 7), 7);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("cmd --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_number_panics() {
+        let a = parse("cmd --n abc");
+        let _: usize = a.parse_or("n", 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: PRNG, bit tricks, timing, a scoped
+//! parallel-for, a shrinking-lite property-test harness and a tiny CLI
+//! argument parser. Everything std-only — the offline vendor set has no
+//! rand/rayon/proptest/clap.
+
+pub mod bitops;
+pub mod cli;
+pub mod pool;
+pub mod prng;
+pub mod psort;
+pub mod prop;
+pub mod timer;

@@ -1,0 +1,116 @@
+//! Scoped data-parallel helpers on std threads (rayon is not in the offline
+//! vendor set). These model the "massively parallel" execution of the paper:
+//! a team of worker threads plays the role of the GPU's execution units.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `BLCO_THREADS` env or available
+/// parallelism (min 1).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("BLCO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(thread_id, lo, hi)` over `nthreads` contiguous slices of `0..len`.
+/// Slices differ in size by at most one element.
+pub fn parallel_chunks<F>(nthreads: usize, len: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(len.max(1));
+    if nthreads == 1 {
+        f(0, 0, len);
+        return;
+    }
+    let base = len / nthreads;
+    let rem = len % nthreads;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut lo = 0usize;
+        for t in 0..nthreads {
+            let sz = base + usize::from(t < rem);
+            let hi = lo + sz;
+            s.spawn(move || f(t, lo, hi));
+            lo = hi;
+        }
+    });
+}
+
+/// Dynamic work-stealing-ish loop: threads grab chunks of `chunk` items from
+/// a shared counter until `len` is exhausted. Mirrors the GPU hardware
+/// scheduler balancing non-uniform non-zero work (Section 4.2 of the paper).
+pub fn parallel_dynamic<F>(nthreads: usize, len: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1);
+    let chunk = chunk.max(1);
+    if nthreads == 1 || len <= chunk {
+        f(0, 0, len);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let f = &f;
+        let next = &next;
+        for t in 0..nthreads {
+            s.spawn(move || loop {
+                let lo = next.fetch_add(chunk, Ordering::Relaxed);
+                if lo >= len {
+                    break;
+                }
+                let hi = (lo + chunk).min(len);
+                f(t, lo, hi);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for len in [0usize, 1, 7, 100, 101] {
+            for nt in [1usize, 2, 3, 8, 200] {
+                let sum = AtomicU64::new(0);
+                let count = AtomicU64::new(0);
+                parallel_chunks(nt, len, |_, lo, hi| {
+                    for i in lo..hi {
+                        sum.fetch_add(i as u64, Ordering::Relaxed);
+                        count.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert_eq!(count.load(Ordering::Relaxed), len as u64);
+                let expect: u64 = (0..len as u64).sum();
+                assert_eq!(sum.load(Ordering::Relaxed), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_covers_exactly() {
+        for len in [0usize, 5, 1000] {
+            for chunk in [1usize, 3, 64] {
+                let hits = AtomicU64::new(0);
+                parallel_dynamic(4, len, chunk, |_, lo, hi| {
+                    hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), len as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

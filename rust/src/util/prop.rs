@@ -1,0 +1,127 @@
+//! Shrinking-lite property testing (proptest is not in the offline vendor
+//! set). A property runs against `cases` random seeds; on failure the seed
+//! is reported so the case can be replayed deterministically, and the
+//! harness retries the failing case with "smaller" size hints to aid
+//! debugging.
+
+use super::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint handed to generators
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xB1C0_5EED, max_size: 64 }
+    }
+}
+
+/// Per-case context: a seeded RNG plus a size hint that grows with the case
+/// index (small cases first, like proptest).
+pub struct Ctx {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+/// Run `prop` for `cfg.cases` cases. `prop` returns `Err(msg)` to fail.
+/// Panics with seed + message on failure (after a bounded shrink attempt).
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Ctx) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // ramp the size hint: early cases are tiny, later ones larger
+        let size = 2 + (cfg.max_size.saturating_sub(2)) * case / cfg.cases.max(1);
+        let mut ctx = Ctx { rng: Rng::new(seed), size };
+        if let Err(msg) = prop(&mut ctx) {
+            // shrink-lite: replay the same seed with smaller size hints and
+            // report the smallest size that still fails
+            let mut min_fail = size;
+            let mut min_msg = msg;
+            let mut s = size / 2;
+            while s >= 2 {
+                let mut ctx = Ctx { rng: Rng::new(seed), size: s };
+                if let Err(m) = prop(&mut ctx) {
+                    min_fail = s;
+                    min_msg = m;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}, \
+                 size {min_fail}): {min_msg}"
+            );
+        }
+    }
+}
+
+impl Ctx {
+    /// Random length in `[1, size]`.
+    pub fn len(&mut self) -> usize {
+        1 + self.rng.below(self.size as u64) as usize
+    }
+
+    /// Random dims vector for an `order`-mode tensor, each in `[1, size]`.
+    pub fn dims(&mut self, order: usize) -> Vec<u64> {
+        (0..order).map(|_| 1 + self.rng.below(self.size as u64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0;
+        // interior mutability not needed: run a fresh counter via Cell
+        let counter = std::cell::Cell::new(0usize);
+        check("always_ok", Config { cases: 10, ..Default::default() }, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        seen += counter.get();
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", Config { cases: 3, ..Default::default() }, |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn size_hint_ramps() {
+        let sizes = std::cell::RefCell::new(Vec::new());
+        check(
+            "sizes",
+            Config { cases: 8, max_size: 64, ..Default::default() },
+            |ctx| {
+                sizes.borrow_mut().push(ctx.size);
+                Ok(())
+            },
+        );
+        let s = sizes.borrow();
+        assert!(s.first().unwrap() < s.last().unwrap());
+    }
+
+    #[test]
+    fn ctx_helpers_in_range() {
+        let mut ctx = Ctx { rng: Rng::new(7), size: 10 };
+        for _ in 0..100 {
+            let l = ctx.len();
+            assert!((1..=10).contains(&l));
+        }
+        let d = ctx.dims(3);
+        assert_eq!(d.len(), 3);
+        assert!(d.iter().all(|&x| (1..=10).contains(&x)));
+    }
+}

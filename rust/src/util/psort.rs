@@ -1,0 +1,123 @@
+//! Parallel MSB-bucket sort for (u128 key, u32 payload) pairs — the BLCO
+//! construction sort (§Perf). One counting pass over the top byte of the
+//! key domain, a scatter into 256 buckets, then per-bucket `sort_unstable`
+//! across threads. Falls back to `sort_unstable` for small inputs.
+
+use super::pool::parallel_dynamic;
+
+/// Threshold below which the serial sort wins.
+const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Sort pairs ascending by key (then payload), in parallel.
+pub fn par_sort_pairs(data: &mut [(u128, u32)], threads: usize, key_bits: u32) {
+    let n = data.len();
+    if n < PAR_THRESHOLD || threads <= 1 {
+        data.sort_unstable();
+        return;
+    }
+    // bucket by the top byte of the *used* key range so buckets are
+    // balanced even when key_bits << 128
+    let shift = key_bits.saturating_sub(8);
+    let bucket_of = |k: u128| -> usize { ((k >> shift) & 0xFF) as usize };
+
+    // counting pass
+    let mut counts = [0usize; 256];
+    for &(k, _) in data.iter() {
+        counts[bucket_of(k)] += 1;
+    }
+    let mut starts = [0usize; 256];
+    let mut acc = 0usize;
+    for b in 0..256 {
+        starts[b] = acc;
+        acc += counts[b];
+    }
+
+    // scatter into a scratch buffer
+    let mut scratch: Vec<(u128, u32)> = vec![(0, 0); n];
+    {
+        let mut cursor = starts;
+        for &pair in data.iter() {
+            let b = bucket_of(pair.0);
+            scratch[cursor[b]] = pair;
+            cursor[b] += 1;
+        }
+    }
+    data.copy_from_slice(&scratch);
+    drop(scratch);
+
+    // sort each bucket independently; buckets are contiguous and disjoint
+    let ranges: Vec<(usize, usize)> = (0..256)
+        .map(|b| (starts[b], starts[b] + counts[b]))
+        .filter(|(lo, hi)| hi > lo)
+        .collect();
+    let base = data.as_mut_ptr() as usize;
+    parallel_dynamic(threads, ranges.len(), 1, |_, rlo, rhi| {
+        for r in rlo..rhi {
+            let (lo, hi) = ranges[r];
+            // SAFETY: bucket ranges are disjoint, each handled by one task
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (base as *mut (u128, u32)).add(lo),
+                    hi - lo,
+                )
+            };
+            slice.sort_unstable();
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_pairs(n: usize, bits: u32, seed: u64) -> Vec<(u128, u32)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let hi = if bits > 64 { rng.next_u64() as u128 } else { 0 };
+                let k = ((hi << 64) | rng.next_u64() as u128)
+                    & crate::util::bitops::mask128(bits);
+                (k, i as u32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_sort_large() {
+        let mut a = random_pairs(200_000, 37, 1);
+        let mut b = a.clone();
+        par_sort_pairs(&mut a, 8, 37);
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matches_serial_sort_wide_keys() {
+        let mut a = random_pairs(100_000, 100, 2);
+        let mut b = a.clone();
+        par_sort_pairs(&mut a, 4, 100);
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn small_input_falls_back() {
+        let mut a = random_pairs(1000, 20, 3);
+        let mut b = a.clone();
+        par_sort_pairs(&mut a, 8, 20);
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn skewed_keys() {
+        // everything in one bucket: correctness must not depend on balance
+        let mut a: Vec<(u128, u32)> =
+            (0..100_000u32).rev().map(|i| (5u128, i)).collect();
+        par_sort_pairs(&mut a, 8, 10);
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

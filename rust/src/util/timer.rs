@@ -1,0 +1,90 @@
+//! Wall-clock timing helpers used by format-construction stage breakdowns,
+//! the bench harness and the streaming coordinator.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named stage durations in order.
+#[derive(Debug, Default)]
+pub struct Stages {
+    last: Option<Instant>,
+    pub stages: Vec<(String, Duration)>,
+}
+
+impl Stages {
+    pub fn new() -> Self {
+        Stages { last: Some(Instant::now()), stages: Vec::new() }
+    }
+
+    /// Record the time since the previous mark under `name`.
+    pub fn mark(&mut self, name: &str) {
+        let now = Instant::now();
+        let start = self.last.replace(now).unwrap_or(now);
+        self.stages.push((name.to_string(), now - start));
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.stages.iter().find(|(n, _)| n == name).map(|(_, d)| *d)
+    }
+}
+
+/// Median-of-k timing of `f`, with one untimed warmup run.
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> Duration {
+    f(); // warmup
+    let mut samples: Vec<Duration> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// Pretty duration, e.g. "1.23 ms".
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_accumulate_in_order() {
+        let mut st = Stages::new();
+        st.mark("a");
+        st.mark("b");
+        assert_eq!(st.stages.len(), 2);
+        assert_eq!(st.stages[0].0, "a");
+        assert!(st.get("b").is_some());
+        assert!(st.get("c").is_none());
+        assert!(st.total() >= st.get("a").unwrap());
+    }
+
+    #[test]
+    fn median_timing_runs() {
+        let mut n = 0u64;
+        let d = time_median(3, || n += 1);
+        assert_eq!(n, 4); // warmup + 3
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn fmt() {
+        assert!(fmt_duration(Duration::from_millis(1500)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_micros(1500)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_nanos(1500)).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration over the user-facing surfaces: .tns round-trip through the
+//! whole pipeline, preset coverage of every format, and TTV on the
+//! streaming engine's tensor — the paths the CLI drives.
+
+use blco::coordinator::engine::MttkrpEngine;
+use blco::device::{Counters, Profile};
+use blco::format::blco::BlcoTensor;
+use blco::format::csf::Csf;
+use blco::format::fcoo::FCoo;
+use blco::format::hicoo::HicooTensor;
+use blco::format::mmcsf::MmCsf;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::ops::ttv::ttv;
+use blco::tensor::{datasets, io, synth};
+
+#[test]
+fn tns_file_through_full_pipeline() {
+    // write a .tns, read it back, run MTTKRP through the facade
+    let t = synth::fiber_clustered(&[80, 60, 40], 4_000, 2, 0.9, 5);
+    let mut path = std::env::temp_dir();
+    path.push(format!("blco_it_{}.tns", std::process::id()));
+    io::write_tns(&path, &t).unwrap();
+    let back = io::read_tns(&path, Some(&t.dims)).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.nnz(), t.nnz());
+
+    let engine = MttkrpEngine::from_coo(&back, Profile::a100()).with_threads(2);
+    let factors = random_factors(&back.dims, 8, 1);
+    let (m, _) = engine.mttkrp(0, &factors);
+    let expect = mttkrp_oracle(&t, 0, &factors);
+    assert!(m.max_abs_diff(&expect) < 1e-8);
+}
+
+#[test]
+fn every_format_constructs_on_small_presets() {
+    // the format zoo must digest representative skewed/hypersparse shapes
+    for name in ["uber", "darpa", "nips"] {
+        let mut preset = datasets::by_name(name).unwrap();
+        preset.nnz = preset.nnz.min(30_000); // keep the suite fast
+        let t = preset.build();
+        let b = BlcoTensor::from_coo_with(&t, preset.blco_config());
+        assert_eq!(b.nnz, t.nnz(), "{name} blco");
+        let f = FCoo::from_coo(&t, 256);
+        assert_eq!(f.modes.len(), t.order(), "{name} fcoo");
+        let c = Csf::from_coo(&t, &(0..t.order()).collect::<Vec<_>>());
+        assert_eq!(c.nnz(), t.nnz(), "{name} csf");
+        let m = MmCsf::from_coo(&t);
+        assert_eq!(
+            m.groups.iter().map(|g| g.csf.nnz()).sum::<usize>(),
+            t.nnz(),
+            "{name} mmcsf"
+        );
+        let h = HicooTensor::from_coo(&t, 7);
+        assert_eq!(h.nnz, t.nnz(), "{name} hicoo");
+    }
+}
+
+#[test]
+fn ttv_consistent_with_mttkrp_rank_one() {
+    // rank-1 MTTKRP with all-ones non-target factors except mode c reduces
+    // to a TTV against that factor column summed over remaining modes —
+    // cross-validate the two kernels on a 3-mode tensor:
+    //   M[i, 0] = Σ_{j,k} x_{ijk} * a_j * b_k
+    //   ttv(ttv(X, 2, b), 1, a)[i] must equal it
+    let dims = [30u64, 20, 10];
+    let t = synth::uniform(&dims, 1_500, 9);
+    let b = BlcoTensor::from_coo(&t);
+    let mut rng = blco::util::prng::Rng::new(3);
+    let va: Vec<f64> = (0..dims[1]).map(|_| rng.normal()).collect();
+    let vb: Vec<f64> = (0..dims[2]).map(|_| rng.normal()).collect();
+
+    // MTTKRP path (rank 1)
+    let factors = vec![
+        blco::mttkrp::dense::Matrix::zeros(30, 1), // target, unused
+        blco::mttkrp::dense::Matrix { rows: 20, cols: 1, data: va.clone() },
+        blco::mttkrp::dense::Matrix { rows: 10, cols: 1, data: vb.clone() },
+    ];
+    let eng = blco::mttkrp::blco::BlcoEngine::new(b.clone(), Profile::a100());
+    let mut m = blco::mttkrp::dense::Matrix::zeros(30, 1);
+    blco::mttkrp::Mttkrp::mttkrp(&eng, 0, &factors, &mut m, 2, &Counters::new());
+
+    // double-TTV path
+    let y = ttv(&b, 2, &vb, 2); // (30, 20)
+    let yb = BlcoTensor::from_coo(&y);
+    let z = ttv(&yb, 1, &va, 2); // (30,)
+    let mut dense = vec![0.0f64; 30];
+    for e in 0..z.nnz() {
+        dense[z.coords[0][e] as usize] += z.vals[e];
+    }
+    for i in 0..30 {
+        assert!(
+            (dense[i] - m.row(i)[0]).abs() < 1e-9,
+            "row {i}: ttv {} vs mttkrp {}",
+            dense[i],
+            m.row(i)[0]
+        );
+    }
+}
+
+#[test]
+fn demo_presets_cover_runtime_artifacts() {
+    // keep the promise the PJRT path depends on: demo tensors fit the AOT
+    // variant dims even after regeneration
+    for p in [datasets::demo3(), datasets::demo4()] {
+        let t = p.build();
+        t.validate().unwrap();
+        for (n, &d) in t.dims.iter().enumerate() {
+            let max = t.coords[n].iter().copied().max().unwrap_or(0) as u64;
+            assert!(max < d, "{}: mode {n}", p.name);
+        }
+    }
+}

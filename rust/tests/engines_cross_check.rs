@@ -1,0 +1,107 @@
+//! Integration: every parallel engine × every small preset × every mode
+//! agrees with the serial COO oracle — the repository's strongest
+//! correctness statement (all formats encode the same tensor; all conflict
+//! resolution schemes converge to the same MTTKRP).
+
+use blco::device::{Counters, Profile};
+use blco::format::blco::BlcoTensor;
+use blco::format::fcoo::FCoo;
+use blco::mttkrp::blco::{BlcoEngine, Resolution};
+use blco::mttkrp::coo::CooAtomicEngine;
+use blco::mttkrp::csf::{BCsfEngine, CsfEngine, MmCsfEngine};
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::fcoo::FCooEngine;
+use blco::mttkrp::genten::GenTenEngine;
+use blco::mttkrp::hicoo::HicooEngine;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::mttkrp::Mttkrp;
+use blco::tensor::coo::CooTensor;
+use blco::tensor::synth;
+
+fn engines(t: &CooTensor) -> Vec<Box<dyn Mttkrp>> {
+    vec![
+        Box::new(CooAtomicEngine::new(t.clone())),
+        Box::new(GenTenEngine::new(t.clone())),
+        Box::new(HicooEngine::new(
+            blco::format::hicoo::HicooTensor::from_coo(t, 6),
+        )),
+        Box::new(FCooEngine::new(FCoo::from_coo(t, 128))),
+        Box::new(CsfEngine::new(t)),
+        Box::new(BCsfEngine::new(t, 256)),
+        Box::new(MmCsfEngine::new(t)),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo(t), Profile::a100())
+                .with_resolution(Resolution::Register),
+        ),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo(t), Profile::a100())
+                .with_resolution(Resolution::Hierarchical),
+        ),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo(t), Profile::intel_d1())
+                .with_resolution(Resolution::Auto),
+        ),
+    ]
+}
+
+fn cross_check(t: &CooTensor, rank: usize) {
+    let factors = random_factors(&t.dims, rank, 0xC0FFEE);
+    for target in 0..t.order() {
+        let expect = mttkrp_oracle(t, target, &factors);
+        for eng in engines(t) {
+            let mut out = Matrix::zeros(t.dims[target] as usize, rank);
+            eng.mttkrp(target, &factors, &mut out, 8, &Counters::new());
+            let d = out.max_abs_diff(&expect);
+            assert!(
+                d < 1e-8,
+                "{} mode {target}: max diff {d:e} (dims {:?})",
+                eng.name(),
+                t.dims
+            );
+        }
+    }
+}
+
+#[test]
+fn uniform_3mode() {
+    cross_check(&synth::uniform(&[70, 50, 30], 6_000, 1), 16);
+}
+
+#[test]
+fn uniform_4mode() {
+    cross_check(&synth::uniform(&[24, 20, 16, 12], 4_000, 2), 8);
+}
+
+#[test]
+fn fiber_clustered_skewed() {
+    cross_check(&synth::fiber_clustered(&[60, 80, 100], 8_000, 2, 1.2, 3), 16);
+}
+
+#[test]
+fn short_mode_contention() {
+    // dims[0]=4 stresses the atomic paths and the hierarchical heuristic
+    cross_check(&synth::uniform(&[4, 200, 200], 10_000, 5), 32);
+}
+
+#[test]
+fn hypersparse_low_fiber_density() {
+    // DARPA-like: nnz ≈ distinct fibers (MM-CSF's worst case)
+    cross_check(&synth::uniform(&[500, 500, 2000], 3_000, 7), 8);
+}
+
+#[test]
+fn single_nonzero_and_tiny() {
+    let mut t = CooTensor::new(&[3, 3, 3]);
+    t.push(&[1, 2, 0], 2.5);
+    cross_check(&t, 4);
+}
+
+#[test]
+fn rank_one() {
+    cross_check(&synth::uniform(&[30, 30, 30], 1_000, 11), 1);
+}
+
+#[test]
+fn max_rank_boundary() {
+    cross_check(&synth::uniform(&[20, 20, 20], 800, 13), 64);
+}

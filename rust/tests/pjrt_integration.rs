@@ -1,0 +1,126 @@
+//! Integration: the AOT (JAX/Pallas → HLO text) computation executed via
+//! PJRT from Rust must agree with the Rust engines — the L1/L2/L3
+//! composition proof. Skips gracefully when `make artifacts` has not run.
+
+use blco::device::Counters;
+use blco::format::blco::BlcoTensor;
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::runtime::{artifacts, PjrtRuntime};
+use blco::tensor::datasets;
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    Some(PjrtRuntime::new(&dir).expect("create PJRT runtime"))
+}
+
+#[test]
+fn fused_mode0_matches_oracle_on_demo3() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = datasets::demo3().build();
+    let b = BlcoTensor::from_coo(&t);
+    let factors = random_factors(&t.dims, 32, 1);
+    let mut out = Matrix::zeros(t.dims[0] as usize, 32);
+    let c = Counters::new();
+    rt.mttkrp_fused(&b, 0, &factors, &mut out, &c).unwrap();
+    let expect = mttkrp_oracle(&t, 0, &factors);
+    // f32 kernel vs f64 oracle: relative tolerance scaled by magnitude
+    let scale = expect.norm().max(1.0);
+    let d = out.max_abs_diff(&expect);
+    assert!(d / scale < 1e-4, "diff {d:e} scale {scale:e}");
+    assert!(c.snapshot().launches > 0);
+}
+
+#[test]
+fn fused_all_modes_match_oracle_on_demo3() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = datasets::demo3().build();
+    let b = BlcoTensor::from_coo(&t);
+    let factors = random_factors(&t.dims, 32, 3);
+    for target in 0..3 {
+        let mut out = Matrix::zeros(t.dims[target] as usize, 32);
+        rt.mttkrp_fused(&b, target, &factors, &mut out, &Counters::new())
+            .unwrap();
+        let expect = mttkrp_oracle(&t, target, &factors);
+        let rel = out.max_abs_diff(&expect) / expect.norm().max(1.0);
+        assert!(rel < 1e-4, "mode {target}: rel {rel:e}");
+    }
+}
+
+#[test]
+fn pjrt_agrees_with_rust_blco_engine() {
+    // the two execution backends of the same coordinator must agree with
+    // each other (not just with the oracle)
+    use blco::device::Profile;
+    use blco::mttkrp::blco::BlcoEngine;
+    use blco::mttkrp::Mttkrp;
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = datasets::demo3().build();
+    let factors = random_factors(&t.dims, 32, 5);
+
+    let b = BlcoTensor::from_coo(&t);
+    let mut pjrt_out = Matrix::zeros(t.dims[1] as usize, 32);
+    rt.mttkrp_fused(&b, 1, &factors, &mut pjrt_out, &Counters::new())
+        .unwrap();
+
+    let eng = BlcoEngine::new(b, Profile::a100());
+    let mut rust_out = Matrix::zeros(t.dims[1] as usize, 32);
+    eng.mttkrp(1, &factors, &mut rust_out, 4, &Counters::new());
+
+    let rel = pjrt_out.max_abs_diff(&rust_out) / rust_out.norm().max(1.0);
+    assert!(rel < 1e-4, "backends disagree: rel {rel:e}");
+}
+
+#[test]
+fn partials_path_with_l3_merge_matches_oracle() {
+    // the architecture's headline variant: the XLA executable computes the
+    // per-nnz partial rows, the Rust coordinator resolves the conflicts
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = datasets::demo3().build();
+    let b = BlcoTensor::from_coo(&t);
+    let factors = random_factors(&t.dims, 32, 7);
+    for target in 0..3 {
+        let mut out = Matrix::zeros(t.dims[target] as usize, 32);
+        rt.mttkrp_partials(&b, target, &factors, &mut out, &Counters::new())
+            .unwrap();
+        let expect = mttkrp_oracle(&t, target, &factors);
+        let rel = out.max_abs_diff(&expect) / expect.norm().max(1.0);
+        assert!(rel < 1e-4, "mode {target}: rel {rel:e}");
+    }
+}
+
+#[test]
+fn partials_and_fused_backends_agree() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = datasets::demo4().build(); // 4-mode: only partials variants exist
+    let b = BlcoTensor::from_coo(&t);
+    let factors = random_factors(&t.dims, 32, 9);
+    let mut out = Matrix::zeros(t.dims[2] as usize, 32);
+    rt.mttkrp_partials(&b, 2, &factors, &mut out, &Counters::new())
+        .unwrap();
+    let expect = mttkrp_oracle(&t, 2, &factors);
+    let rel = out.max_abs_diff(&expect) / expect.norm().max(1.0);
+    assert!(rel < 1e-4, "4-mode partials: rel {rel:e}");
+}
+
+#[test]
+fn manifest_covers_demo_presets() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = &rt.artifacts;
+    let d3 = datasets::demo3();
+    for target in 0..3 {
+        assert!(a.find(&d3.dims, 32, target, "fused").is_some());
+        assert!(a.find(&d3.dims, 32, target, "partials").is_some());
+    }
+    let d4 = datasets::demo4();
+    for target in 0..4 {
+        assert!(a.find(&d4.dims, 32, target, "partials").is_some());
+    }
+}

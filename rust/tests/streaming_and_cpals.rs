@@ -1,0 +1,103 @@
+//! Integration over the coordinator: out-of-memory streaming equivalence,
+//! facade routing, and CP-ALS convergence through every path.
+
+use blco::coordinator::engine::{ExecPath, MttkrpEngine};
+use blco::cpals::CpAlsOptions;
+use blco::device::{Counters, Profile};
+use blco::format::blco::BlcoConfig;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::tensor::synth;
+
+#[test]
+fn streamed_and_in_memory_paths_agree_bitwise_modulo_fp() {
+    let t = synth::fiber_clustered(&[80, 60, 40], 12_000, 2, 0.9, 17);
+    let cfg = BlcoConfig { max_block_nnz: 1024, ..Default::default() };
+    let factors = random_factors(&t.dims, 16, 23);
+
+    let big = MttkrpEngine::from_coo_with(&t, Profile::a100(), cfg).with_threads(4);
+    let small = MttkrpEngine::from_coo_with(&t, Profile::tiny(64 * 1024), cfg)
+        .with_threads(4);
+    assert!(!big.is_oom(16));
+    assert!(small.is_oom(16));
+
+    for target in 0..3 {
+        let (m_in, p_in) = big.mttkrp(target, &factors);
+        let (m_st, p_st) = small.mttkrp(target, &factors);
+        assert!(matches!(p_in, ExecPath::InMemory(_)));
+        assert!(matches!(p_st, ExecPath::Streamed(_)));
+        let expect = mttkrp_oracle(&t, target, &factors);
+        assert!(m_in.max_abs_diff(&expect) < 1e-8, "in-memory mode {target}");
+        assert!(m_st.max_abs_diff(&expect) < 1e-8, "streamed mode {target}");
+    }
+}
+
+#[test]
+fn cpals_converges_on_streamed_path() {
+    // even when every MTTKRP is streamed through a tiny device, CP-ALS
+    // must converge identically in structure
+    let t = synth::fiber_clustered(&[40, 30, 20], 5_000, 2, 1.0, 31);
+    let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+    let engine = MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg)
+        .with_threads(4);
+    assert!(engine.is_oom(8));
+    let rep = engine.cp_als(CpAlsOptions {
+        rank: 8,
+        max_iters: 8,
+        tol: 0.0,
+        threads: 4,
+        seed: 2,
+    });
+    assert_eq!(rep.fits.len(), 8);
+    // monotone-ish improvement over the run as a whole
+    assert!(
+        rep.fits.last().unwrap() >= &(rep.fits[0] - 1e-6),
+        "fits {:?}",
+        rep.fits
+    );
+}
+
+#[test]
+fn oom_preset_streams_on_every_real_profile() {
+    // a downsized Amazon-like tensor (the real preset is exercised by the
+    // fig10 bench; this keeps the test suite fast)
+    let t = synth::fiber_clustered(&[12_000, 4_500, 4_500], 300_000, 2, 0.6, 7);
+    for prof in Profile::all() {
+        let mut small = prof.clone();
+        small.dev_mem_bytes = 1 << 20; // scale the budget to the scaled tensor
+        let engine = MttkrpEngine::from_coo_with(
+            &t,
+            small,
+            BlcoConfig { max_block_nnz: 1 << 15, ..Default::default() },
+        )
+        .with_threads(8);
+        assert!(engine.is_oom(32), "{}", prof.name);
+        let factors = random_factors(&t.dims, 32, 5);
+        let (m, path) = engine.mttkrp(0, &factors);
+        let ExecPath::Streamed(rep) = path else {
+            panic!("expected streaming on {}", prof.name)
+        };
+        assert!(rep.batches.len() > 1);
+        // perfect overlap invariant: overall ≥ serialized link time
+        assert!(rep.overall_s >= rep.transfer_s * 0.999);
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-8);
+    }
+}
+
+#[test]
+fn counters_volume_scales_with_rank() {
+    let t = synth::uniform(&[50, 50, 50], 5_000, 3);
+    let engine = MttkrpEngine::from_coo(&t, Profile::a100());
+    let f8 = random_factors(&t.dims, 8, 1);
+    let f32f = random_factors(&t.dims, 32, 1);
+    engine.counters.reset();
+    let _ = engine.mttkrp(0, &f8);
+    let v8 = engine.counters.snapshot().volume_bytes();
+    engine.counters.reset();
+    let _ = engine.mttkrp(0, &f32f);
+    let v32 = engine.counters.snapshot().volume_bytes();
+    // gather traffic scales with rank (sublinearly: cache-resident repeats
+    // are excluded from global volume)
+    assert!(v32 > v8 * 2, "v8 {v8} v32 {v32}");
+    let _ = Counters::new();
+}
