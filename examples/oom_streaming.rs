@@ -8,10 +8,11 @@
 //! Defaults to a fast down-scaled Amazon-like tensor; pass `amazon`,
 //! `patents` or `reddit` for the full Figure-10 presets (slower to build).
 
+use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::MttkrpEngine;
 use blco::coordinator::streamer::stream_mttkrp;
 use blco::device::model::throughput_tbps;
-use blco::device::Profile;
+use blco::device::{LinkTopology, Profile};
 use blco::format::blco::BlcoConfig;
 use blco::mttkrp::dense::Matrix;
 use blco::mttkrp::oracle::random_factors;
@@ -81,5 +82,43 @@ fn main() {
     println!(
         "\nthe gap between overall and in-memory throughput is the \
          host-device interconnect — the paper's Figure 10 conclusion"
+    );
+
+    // ---- past the paper: shard the same streamed MTTKRP across a
+    // simulated multi-GPU cluster (greedy load-balanced batch placement,
+    // tree-merged partials) and watch mode-0 throughput scale 1 → 4
+    // devices under both host-link topologies.
+    println!("\nmulti-device scaling (mode 0):");
+    for links in [LinkTopology::Shared, LinkTopology::Dedicated] {
+        let mut base = 0.0f64;
+        for d in [1usize, 2, 4] {
+            let prof = engine.eng.profile.clone().with_devices(d).with_links(links);
+            // share the BLCO tensor through its Arc — no payload copy
+            let eng = engine.eng.share_with_profile(prof.clone());
+            let counters = blco::device::Counters::new();
+            let mut out = Matrix::zeros(t.dims[0] as usize, rank);
+            let rep = cluster_mttkrp(&eng, 0, &factors, &mut out, threads, &counters);
+            let vol = counters.snapshot().volume_bytes();
+            if d == 1 {
+                base = rep.overall_s;
+            }
+            println!(
+                "  {:>9} links, {d} device(s): overall {:.2} TB/s \
+                 ({:.2}x vs 1 dev) | stream {:.1} ms + merge {:.1} ms | \
+                 imbalance {:.3} | link busy {:.0}%",
+                format!("{links:?}").to_lowercase(),
+                throughput_tbps(vol, rep.overall_s),
+                base / rep.overall_s.max(1e-12),
+                rep.stream_s * 1e3,
+                rep.merge_s * 1e3,
+                rep.imbalance(),
+                rep.link_occupancy(&prof) * 100.0,
+            );
+        }
+    }
+    println!(
+        "\nshared links saturate the single host interconnect; dedicated \
+         links recover near-linear streaming scaling with the tree merge \
+         as the remaining fixed cost"
     );
 }

@@ -47,6 +47,7 @@ fn main() {
             match path {
                 ExecPath::InMemory(r) => format!("{r:?}"),
                 ExecPath::Streamed(_) => "streamed".into(),
+                ExecPath::Clustered(rep) => format!("cluster×{}", rep.devices),
             },
             fmt_duration(wall),
             model * 1e3,

@@ -4,6 +4,7 @@
 //! streaming otherwise — exactly the paper's "single tensor copy, unified
 //! implementation" story. Also drives CP-ALS end to end.
 
+use crate::coordinator::cluster::{cluster_mttkrp, ClusterReport};
 use crate::coordinator::streamer::{stream_mttkrp, StreamReport};
 use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
 use crate::device::counters::Counters;
@@ -20,6 +21,8 @@ use crate::util::pool::default_threads;
 pub enum ExecPath {
     InMemory(Resolution),
     Streamed(StreamReport),
+    /// out-of-memory on a multi-device profile: sharded cluster streaming
+    Clustered(ClusterReport),
 }
 
 /// High-level BLCO MTTKRP engine (the library's main entry point).
@@ -88,11 +91,24 @@ impl MttkrpEngine {
         !self.eng.profile.fits(self.working_set_bytes(rank))
     }
 
-    /// Mode-`target` MTTKRP. Chooses in-memory vs streamed automatically.
+    /// Mode-`target` MTTKRP. Chooses in-memory, streamed or (when the
+    /// profile declares more than one device) cluster-sharded streaming
+    /// automatically.
     pub fn mttkrp(&self, target: usize, factors: &[Matrix]) -> (Matrix, ExecPath) {
         let rank = factors[0].cols;
         let mut out = Matrix::zeros(self.dims[target] as usize, rank);
         if self.is_oom(rank) {
+            if self.eng.profile.devices > 1 {
+                let rep = cluster_mttkrp(
+                    &self.eng,
+                    target,
+                    factors,
+                    &mut out,
+                    self.threads,
+                    &self.counters,
+                );
+                return (out, ExecPath::Clustered(rep));
+            }
             let rep = stream_mttkrp(
                 &self.eng,
                 target,
@@ -130,7 +146,11 @@ impl Mttkrp for MttkrpEngine {
     ) {
         let rank = factors[0].cols;
         if self.is_oom(rank) {
-            stream_mttkrp(&self.eng, target, factors, out, threads, counters);
+            if self.eng.profile.devices > 1 {
+                cluster_mttkrp(&self.eng, target, factors, out, threads, counters);
+            } else {
+                stream_mttkrp(&self.eng, target, factors, out, threads, counters);
+            }
         } else {
             self.eng.mttkrp(target, factors, out, threads, counters);
         }
@@ -170,6 +190,30 @@ mod tests {
                 assert!(rep.transfer_s > 0.0);
             }
             _ => panic!("expected streamed path"),
+        }
+        let expect = mttkrp_oracle(&t, 2, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn clustered_path_on_multi_device_profile() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine = MttkrpEngine::from_coo_with(
+            &t,
+            Profile::tiny(32 * 1024).with_devices(2),
+            cfg,
+        );
+        assert!(engine.is_oom(8));
+        let factors = random_factors(&t.dims, 8, 5);
+        let (m, path) = engine.mttkrp(2, &factors);
+        match path {
+            ExecPath::Clustered(rep) => {
+                assert_eq!(rep.devices, 2);
+                assert_eq!(rep.per_device.len(), 2);
+                assert!(rep.merge_bytes > 0, "merge traffic must be charged");
+            }
+            other => panic!("expected clustered path, got {other:?}"),
         }
         let expect = mttkrp_oracle(&t, 2, &factors);
         assert!(m.max_abs_diff(&expect) < 1e-9);

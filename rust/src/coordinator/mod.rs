@@ -1,8 +1,35 @@
 //! The L3 coordination layer: out-of-memory streaming of BLCO batches
-//! through simulated device queues ([`streamer`]) and the high-level
-//! [`engine::MttkrpEngine`] facade that picks the in-memory or streaming
-//! path per tensor × device, exposes CP-ALS, and (optionally) routes
-//! per-block compute through the AOT-compiled PJRT executable.
+//! through simulated device queues ([`streamer`]), the multi-device
+//! sharded generalization with load-balanced batch placement and a
+//! tree-merged output ([`cluster`]), and the high-level
+//! [`engine::MttkrpEngine`] facade that picks the in-memory, streamed or
+//! clustered path per tensor × device, exposes CP-ALS, and (optionally)
+//! routes per-block compute through the AOT-compiled PJRT executable.
+//!
+//! # Pipeline model
+//!
+//! Both streamers share one first-order model. Every batch is charged
+//! `bytes / link_gbps` on a host interconnect and its exact-counter
+//! device time on a serialized compute engine; queue reservations let a
+//! pending batch's transfer overlap the active batch's kernel, which is
+//! how the paper reaches perfect overlap in Figure 10. The cluster
+//! streamer extends this along three axes:
+//!
+//! * **sharding** — batches are placed onto `D` devices by modelled cost
+//!   (greedy longest-processing-time), so skewed batch sizes do not
+//!   serialize behind one hot device;
+//! * **link topology** — [`device::LinkTopology::Shared`] serializes all
+//!   `D` transfer streams through one host link (a single PCIe root
+//!   complex, the pessimistic Figure-10 regime), while `Dedicated` gives
+//!   each device a full-rate link and the streaming phase scales until
+//!   compute binds;
+//! * **merge traffic** — per-device partial outputs are combined by a
+//!   binary tree reduction whose device↔device traffic is charged at
+//!   `peer_gbps` and added to the counters, so the overall throughput
+//!   honestly includes the cost of sharding the output.
+//!
+//! [`device::LinkTopology::Shared`]: crate::device::LinkTopology::Shared
 
+pub mod cluster;
 pub mod engine;
 pub mod streamer;

@@ -9,8 +9,22 @@
 use crate::device::counters::Counters;
 use crate::device::model::{device_time, transfer_time};
 use crate::device::profile::Profile;
+use crate::format::blco::BlcoTensor;
 use crate::mttkrp::blco::BlcoEngine;
 use crate::mttkrp::dense::Matrix;
+
+/// Host→device bytes one batch occupies on the wire: its blocks' payload
+/// plus the work-group batching maps that ride along. Shared by the
+/// single-device pipeline below and the cluster streamer
+/// ([`super::cluster`]), so both charge the link identically.
+pub fn batch_bytes(t: &BlcoTensor, b: usize) -> usize {
+    t.batches[b]
+        .blocks
+        .clone()
+        .map(|i| t.blocks[i].bytes())
+        .sum::<usize>()
+        + t.batches[b].wg_block.len() * 8
+}
 
 /// Per-batch trace entry.
 #[derive(Clone, Copy, Debug)]
@@ -82,12 +96,7 @@ pub fn stream_mttkrp(
     let mut queue_free = vec![0.0f64; queues];
 
     for b in 0..nbatches {
-        let bytes: usize = eng.t.batches[b]
-            .blocks
-            .clone()
-            .map(|i| eng.t.blocks[i].bytes())
-            .sum::<usize>()
-            + eng.t.batches[b].wg_block.len() * 8; // batching maps ride along
+        let bytes = batch_bytes(&eng.t, b);
         let tr = transfer_time(bytes, profile);
 
         // real computation of this batch, with exact per-batch counters

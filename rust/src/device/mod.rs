@@ -14,4 +14,4 @@ pub mod model;
 pub mod profile;
 
 pub use counters::Counters;
-pub use profile::Profile;
+pub use profile::{LinkTopology, Profile};

@@ -7,6 +7,18 @@
 //! hardware. Bandwidths keep their real values; modelled times are
 //! therefore directly comparable across profiles.
 
+/// Host-link topology of a multi-device cluster (the knob behind the
+/// cluster streamer's transfer model, [`crate::coordinator::cluster`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkTopology {
+    /// every device shares one serialized host interconnect (a single
+    /// PCIe root complex): transfers to different devices queue up
+    Shared,
+    /// each device owns a dedicated host link at the full `link_gbps`
+    /// (one switch port per device): transfers overlap across devices
+    Dedicated,
+}
+
 /// A massively parallel accelerator profile.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Profile {
@@ -31,6 +43,14 @@ pub struct Profile {
     pub launch_us: f64,
     /// device queues available for out-of-memory streaming (paper: up to 8)
     pub queues: usize,
+    /// simulated devices in the cluster; 1 = the paper's single-GPU
+    /// configuration, >1 enables the sharded cluster streamer
+    pub devices: usize,
+    /// how the cluster's host links are shared (see [`LinkTopology`])
+    pub links: LinkTopology,
+    /// device↔device bandwidth, GB/s (NVLink/Xe-Link class), used by the
+    /// cluster streamer's tree-merge traffic model
+    pub peer_gbps: f64,
 }
 
 impl Profile {
@@ -46,6 +66,9 @@ impl Profile {
             atomic_ns: 20.0,
             launch_us: 5.0,
             queues: 8,
+            devices: 1,
+            links: LinkTopology::Shared,
+            peer_gbps: 300.0,
         }
     }
 
@@ -61,6 +84,9 @@ impl Profile {
             atomic_ns: 30.0,
             launch_us: 6.0,
             queues: 8,
+            devices: 1,
+            links: LinkTopology::Shared,
+            peer_gbps: 150.0,
         }
     }
 
@@ -80,6 +106,9 @@ impl Profile {
             atomic_ns: 45.0,
             launch_us: 8.0,
             queues: 8,
+            devices: 1,
+            links: LinkTopology::Shared,
+            peer_gbps: 100.0,
         }
     }
 
@@ -96,6 +125,9 @@ impl Profile {
             atomic_ns: 20.0,
             launch_us: 2.0,
             queues: 4,
+            devices: 1,
+            links: LinkTopology::Shared,
+            peer_gbps: 20.0,
         }
     }
 
@@ -116,6 +148,26 @@ impl Profile {
     pub fn fits(&self, bytes: usize) -> bool {
         bytes <= self.dev_mem_bytes
     }
+
+    /// Same part, `n` of them (builder for the cluster streamer).
+    pub fn with_devices(mut self, n: usize) -> Self {
+        self.devices = n.max(1);
+        self
+    }
+
+    /// Same part, different host-link topology.
+    pub fn with_links(mut self, links: LinkTopology) -> Self {
+        self.links = links;
+        self
+    }
+
+    /// Number of independent host links the cluster can drive at once.
+    pub fn host_links(&self) -> usize {
+        match self.links {
+            LinkTopology::Shared => 1,
+            LinkTopology::Dedicated => self.devices.max(1),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,7 +181,19 @@ mod tests {
             assert!(p.hbm_gbps > p.link_gbps);
             assert!(p.dev_mem_bytes > 1 << 20);
             assert!(p.queues >= 1);
+            assert_eq!(p.devices, 1, "presets are single-device by default");
+            assert!(p.peer_gbps > p.link_gbps, "peer links outrun host links");
         }
+    }
+
+    #[test]
+    fn cluster_builders() {
+        let p = Profile::a100().with_devices(4);
+        assert_eq!(p.devices, 4);
+        assert_eq!(p.host_links(), 1); // shared by default
+        let d = p.with_links(LinkTopology::Dedicated);
+        assert_eq!(d.host_links(), 4);
+        assert_eq!(Profile::v100().with_devices(0).devices, 1);
     }
 
     #[test]

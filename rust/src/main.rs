@@ -16,10 +16,11 @@
 use anyhow::{bail, Context, Result};
 
 use blco::bench::Table;
+use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::{ExecPath, MttkrpEngine};
 use blco::cpals::CpAlsOptions;
 use blco::device::model::throughput_tbps;
-use blco::device::Profile;
+use blco::device::{LinkTopology, Profile};
 use blco::format::blco::BlcoConfig;
 use blco::mttkrp::oracle::random_factors;
 use blco::tensor::{coo::CooTensor, datasets, io, stats};
@@ -40,7 +41,16 @@ fn load_tensor(args: &Args) -> Result<CooTensor> {
 
 fn profile(args: &Args) -> Result<Profile> {
     let name = args.get_or("device", "a100");
-    Profile::by_name(name).with_context(|| format!("unknown device {name:?}"))
+    let mut p = Profile::by_name(name)
+        .with_context(|| format!("unknown device {name:?}"))?;
+    p.devices = args.parse_or::<usize>("devices", 1).max(1);
+    match args.get("links") {
+        None => {}
+        Some("shared") => p.links = LinkTopology::Shared,
+        Some("dedicated") => p.links = LinkTopology::Dedicated,
+        Some(other) => bail!("unknown link topology {other:?} (shared|dedicated)"),
+    }
+    Ok(p)
 }
 
 fn cmd_datasets() -> Result<()> {
@@ -108,6 +118,9 @@ fn cmd_mttkrp(args: &Args) -> Result<()> {
         let (path_s, model_s) = match &path {
             ExecPath::InMemory(r) => (format!("{r:?}"), model),
             ExecPath::Streamed(rep) => ("streamed".to_string(), rep.overall_s),
+            ExecPath::Clustered(rep) => {
+                (format!("cluster×{}", rep.devices), rep.overall_s)
+            }
         };
         tbl.row(&[
             target.to_string(),
@@ -156,6 +169,51 @@ fn cmd_stream(args: &Args) -> Result<()> {
         if engine.is_oom(rank) { "OUT-OF-MEMORY" } else { "in-memory" }
     );
     let factors = random_factors(&t.dims, rank, 7);
+    if engine.eng.profile.devices > 1 {
+        println!(
+            "cluster: {} devices, {} host link(s), peer {} GB/s",
+            engine.eng.profile.devices,
+            engine.eng.profile.host_links(),
+            engine.eng.profile.peer_gbps,
+        );
+        for target in 0..t.order() {
+            engine.counters.reset();
+            let mut out =
+                blco::mttkrp::dense::Matrix::zeros(t.dims[target] as usize, rank);
+            let rep = cluster_mttkrp(
+                &engine.eng,
+                target,
+                &factors,
+                &mut out,
+                threads,
+                &engine.counters,
+            );
+            let vol = engine.counters.snapshot().volume_bytes();
+            println!(
+                "mode {target}: batches {:>4}  overall(model) {:.3} s  \
+                 (stream {:.3} s + merge {:.3} s)  imbalance {:.3}  \
+                 link busy {:.0}%  TP overall {:.2} TB/s",
+                rep.batches.len(),
+                rep.overall_s,
+                rep.stream_s,
+                rep.merge_s,
+                rep.imbalance(),
+                rep.link_occupancy(&engine.eng.profile) * 100.0,
+                throughput_tbps(vol, rep.overall_s),
+            );
+            for (d, tl) in rep.per_device.iter().enumerate() {
+                println!(
+                    "    dev {d}: {:>4} batches  {:>7.1} MiB  busy {:.3} s  \
+                     finish {:.3} s",
+                    tl.batches.len(),
+                    tl.bytes as f64 / (1 << 20) as f64,
+                    tl.busy_s(),
+                    tl.finish_s,
+                );
+            }
+        }
+        return Ok(());
+    }
     for target in 0..t.order() {
         engine.counters.reset();
         let mut out =
@@ -229,7 +287,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: blco <datasets|convert|mttkrp|cpals|stream|runtime> \
                  [--tensor NAME | --input FILE] [--rank R] [--mode N] \
-                 [--device a100|v100|intel_d1] [--threads T]"
+                 [--device a100|v100|intel_d1] [--devices D] \
+                 [--links shared|dedicated] [--threads T]"
             );
             std::process::exit(2);
         }

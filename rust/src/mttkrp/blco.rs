@@ -66,6 +66,13 @@ impl BlcoEngine {
         self
     }
 
+    /// The same tensor on a different (e.g. cluster) profile, sharing the
+    /// payload through its `Arc` — no copy. Used by the device-count
+    /// sweeps in the benches/examples.
+    pub fn share_with_profile(&self, profile: Profile) -> Self {
+        BlcoEngine { t: Arc::clone(&self.t), profile, resolution: self.resolution }
+    }
+
     /// The strategy that will run for `target`.
     pub fn effective_resolution(&self, target: usize) -> Resolution {
         match self.resolution {
@@ -237,7 +244,13 @@ impl Mttkrp for BlcoEngine {
         let resolution = self.effective_resolution(target);
 
         match resolution {
-            Resolution::Register | Resolution::Auto => {
+            // `effective_resolution` always resolves `Auto` to a concrete
+            // strategy; a silent `Auto` arm here could mask a future
+            // dispatch bug, so it is a hard error instead.
+            Resolution::Auto => {
+                unreachable!("effective_resolution returned Auto")
+            }
+            Resolution::Register => {
                 let out_at = as_atomic(&mut out.data);
                 self.run(target, factors, rank, out_at, rank, threads, counters);
                 counters.add(&Snapshot {
@@ -257,7 +270,11 @@ impl Mttkrp for BlcoEngine {
                         target, factors, rank, sh_at, rows, threads, counters,
                     );
                 }
-                // final merge (§5.1.2 step 7): parallel over rows, plain adds
+                // final merge (§5.1.2 step 7): parallel over rows, plain
+                // adds. The merge *accumulates* into `out` (matching
+                // `mttkrp_batch` semantics) rather than storing, so prior
+                // contents are never silently dropped if a caller ever
+                // reuses this path without the zero-fill above.
                 let out_data = as_atomic(&mut out.data);
                 parallel_dynamic(threads, rows, 256, |_, lo, hi| {
                     let mut written = 0u64;
@@ -267,13 +284,18 @@ impl Mttkrp for BlcoEngine {
                             for s in 0..slices {
                                 acc += shadows[(s * rows + r) * rank + k];
                             }
-                            out_data[r * rank + k]
-                                .store(acc.to_bits(), Ordering::Relaxed);
+                            // rows are owned by one chunk: a plain
+                            // load+store through the atomic view is sound
+                            let slot = &out_data[r * rank + k];
+                            let prev = f64::from_bits(slot.load(Ordering::Relaxed));
+                            slot.store((prev + acc).to_bits(), Ordering::Relaxed);
                             written += 8;
                         }
                     }
                     counters.add(&Snapshot {
-                        bytes_streamed: written * slices as u64,
+                        // reads: `slices` shadow values + the prior output
+                        // value the accumulate folds in
+                        bytes_streamed: written * (slices as u64 + 1),
                         bytes_written: written,
                         ..Default::default()
                     });
@@ -541,6 +563,31 @@ mod tests {
         // correctness too
         let expect = mttkrp_oracle(&t, 0, &factors);
         assert!(out.max_abs_diff(&expect) < 1e-8);
+    }
+
+    #[test]
+    fn output_overwritten_regardless_of_prior_contents() {
+        // Regression for the hierarchical final merge: `mttkrp` overwrites
+        // `out` per the trait contract, and the merge step must neither
+        // drop nor double prior contents no matter what the buffer held
+        // before the call (it accumulates into a zero-filled output).
+        let dims = [16u64, 120, 90];
+        let t = synth::uniform(&dims, 3_000, 29);
+        let factors = random_factors(&dims, 8, 31);
+        for res in [Resolution::Register, Resolution::Hierarchical] {
+            let eng = engine(&t, res);
+            let expect = mttkrp_oracle(&t, 0, &factors);
+            let mut out = Matrix::zeros(16, 8);
+            out.fill(1e30); // poison
+            eng.mttkrp(0, &factors, &mut out, 4, &Counters::new());
+            assert!(
+                out.max_abs_diff(&expect) < 1e-9,
+                "{res:?}: poison leaked into the merge"
+            );
+            // second call on the dirty buffer must give the same answer
+            eng.mttkrp(0, &factors, &mut out, 4, &Counters::new());
+            assert!(out.max_abs_diff(&expect) < 1e-9, "{res:?}: not idempotent");
+        }
     }
 
     #[test]

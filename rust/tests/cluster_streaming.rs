@@ -1,0 +1,208 @@
+//! Integration over the multi-device cluster streamer: sharded results
+//! match the single-device path and the serial oracle on every mode for
+//! D ∈ {1, 2, 4}; the degenerate D = 1 cluster reproduces
+//! `stream_mttkrp`'s report; greedy placement is never worse than
+//! round-robin on modelled makespan (and strictly better on skewed
+//! costs); merge traffic is charged to the counters.
+
+use blco::coordinator::cluster::{
+    cluster_mttkrp, cluster_mttkrp_with, estimate_batch_cost, modelled_makespan,
+    plan_placement, Placement,
+};
+use blco::coordinator::streamer::stream_mttkrp;
+use blco::device::{Counters, LinkTopology, Profile};
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::tensor::synth;
+
+fn batched_engine(devices: usize, links: LinkTopology) -> (blco::CooTensor, BlcoEngine) {
+    let t = synth::fiber_clustered(&[60, 50, 40], 9_000, 2, 1.0, 41);
+    let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, threads: 2, ..Default::default() };
+    let b = BlcoTensor::from_coo_with(&t, cfg);
+    assert!(b.batches.len() > 4, "need a long pipeline");
+    let prof = Profile::tiny(1 << 16).with_devices(devices).with_links(links);
+    let eng = BlcoEngine::new(b, prof);
+    (t, eng)
+}
+
+#[test]
+fn sharded_matches_oracle_all_modes_and_device_counts() {
+    for links in [LinkTopology::Shared, LinkTopology::Dedicated] {
+        for devices in [1usize, 2, 4] {
+            let (t, eng) = batched_engine(devices, links);
+            let factors = random_factors(&t.dims, 8, 5);
+            for target in 0..3 {
+                let expect = mttkrp_oracle(&t, target, &factors);
+                let mut out = Matrix::zeros(t.dims[target] as usize, 8);
+                let rep = cluster_mttkrp(
+                    &eng, target, &factors, &mut out, 4, &Counters::new(),
+                );
+                assert!(
+                    out.max_abs_diff(&expect) < 1e-9,
+                    "links {links:?} D={devices} mode {target}"
+                );
+                assert_eq!(rep.devices, devices);
+                assert_eq!(rep.batches.len(), eng.t.batches.len());
+                // every batch placed exactly once
+                let mut seen = vec![false; eng.t.batches.len()];
+                for tl in &rep.per_device {
+                    for &b in &tl.batches {
+                        assert!(!seen[b], "batch {b} on two devices");
+                        seen[b] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "some batch unplaced");
+                assert!(rep.imbalance() >= 1.0 - 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_single_device_result() {
+    let (t, eng1) = batched_engine(1, LinkTopology::Shared);
+    let (_, eng4) = batched_engine(4, LinkTopology::Dedicated);
+    let factors = random_factors(&t.dims, 16, 7);
+    for target in 0..3 {
+        let mut a = Matrix::zeros(t.dims[target] as usize, 16);
+        let mut b = Matrix::zeros(t.dims[target] as usize, 16);
+        stream_mttkrp(&eng1, target, &factors, &mut a, 4, &Counters::new());
+        cluster_mttkrp(&eng4, target, &factors, &mut b, 4, &Counters::new());
+        assert!(a.max_abs_diff(&b) < 1e-9, "mode {target}");
+    }
+}
+
+#[test]
+fn degenerate_single_device_reproduces_stream_report() {
+    let (t, eng) = batched_engine(1, LinkTopology::Shared);
+    let factors = random_factors(&t.dims, 8, 9);
+    let mut a = Matrix::zeros(t.dims[0] as usize, 8);
+    let mut b = Matrix::zeros(t.dims[0] as usize, 8);
+    let sr = stream_mttkrp(&eng, 0, &factors, &mut a, 4, &Counters::new());
+    let cr = cluster_mttkrp(&eng, 0, &factors, &mut b, 4, &Counters::new());
+
+    assert_eq!(cr.devices, 1);
+    assert_eq!(cr.merge_bytes, 0, "no merge traffic with one device");
+    assert_eq!(cr.merge_s, 0.0);
+    assert_eq!(cr.batches.len(), sr.batches.len());
+    assert_eq!(cr.bytes, sr.bytes);
+    // identical pipeline model → identical modelled times (same float ops)
+    let close = |x: f64, y: f64| (x - y).abs() <= 1e-12 * x.abs().max(y.abs()).max(1e-30);
+    assert!(close(cr.stream_s, sr.overall_s), "{} vs {}", cr.stream_s, sr.overall_s);
+    assert!(close(cr.overall_s, sr.overall_s));
+    assert!(close(cr.transfer_s, sr.transfer_s));
+    assert!(close(cr.compute_s, sr.compute_s));
+    for (cb, sb) in cr.batches.iter().zip(&sr.batches) {
+        assert_eq!(cb.bytes, sb.bytes);
+        assert!(close(cb.transfer_s, sb.transfer_s));
+        assert!(close(cb.compute_s, sb.compute_s));
+    }
+    // and the same numbers out (up to atomic-accumulation reordering
+    // across threads, which is not deterministic between runs)
+    assert!(a.max_abs_diff(&b) < 1e-9);
+}
+
+#[test]
+fn greedy_beats_round_robin_on_skewed_costs() {
+    // synthetic heavy-tailed batch costs: one giant batch + a long tail —
+    // the hypersparse regime where naive round-robin stacks light batches
+    // behind the heavy one
+    let mut costs = vec![1.0f64; 31];
+    costs[0] = 10.0;
+    for (i, c) in costs.iter_mut().enumerate().skip(1) {
+        *c = 1.0 + (i % 5) as f64 * 0.5;
+    }
+    for devices in [2usize, 4] {
+        let g = plan_placement(&costs, devices, Placement::Greedy);
+        let r = plan_placement(&costs, devices, Placement::RoundRobin);
+        let mg = modelled_makespan(&costs, &g, devices);
+        let mr = modelled_makespan(&costs, &r, devices);
+        assert!(mg < mr, "D={devices}: greedy {mg} vs round-robin {mr}");
+    }
+}
+
+#[test]
+fn greedy_meets_list_scheduling_bound_on_real_batches() {
+    // Graham's list-scheduling guarantee holds against the *computable*
+    // lower bound: when the last-finishing batch was placed, its device
+    // had the least load ≤ (total − c)/D, so
+    // makespan ≤ total/D + cmax — for greedy under any order, hence for
+    // LPT. (The 4/3·OPT bound cannot be checked without OPT itself;
+    // the strict greedy-vs-round-robin win on skew is asserted above.)
+    let (_, eng) = batched_engine(4, LinkTopology::Dedicated);
+    let costs: Vec<f64> = (0..eng.t.batches.len())
+        .map(|b| estimate_batch_cost(&eng, b, 0, 16))
+        .collect();
+    assert!(costs.iter().all(|&c| c > 0.0));
+    let g = plan_placement(&costs, 4, Placement::Greedy);
+    let mg = modelled_makespan(&costs, &g, 4);
+    let total: f64 = costs.iter().sum();
+    let cmax = costs.iter().fold(0.0f64, |a, &b| a.max(b));
+    assert!(
+        mg <= total / 4.0 + cmax + 1e-12,
+        "greedy {mg} exceeds the list-scheduling bound {}",
+        total / 4.0 + cmax
+    );
+    // and it is never worse than putting everything on one device
+    assert!(mg <= total + 1e-12);
+}
+
+#[test]
+fn placement_policy_does_not_change_the_answer() {
+    let (t, eng) = batched_engine(4, LinkTopology::Shared);
+    let factors = random_factors(&t.dims, 8, 13);
+    let expect = mttkrp_oracle(&t, 1, &factors);
+    for placement in [Placement::Greedy, Placement::RoundRobin] {
+        let mut out = Matrix::zeros(t.dims[1] as usize, 8);
+        let rep = cluster_mttkrp_with(
+            &eng, 1, &factors, &mut out, 4, &Counters::new(), placement,
+        );
+        assert_eq!(rep.placement, placement);
+        assert!(out.max_abs_diff(&expect) < 1e-9, "{placement:?}");
+    }
+}
+
+#[test]
+fn merge_traffic_charged_and_modelled() {
+    let (t, eng2) = batched_engine(2, LinkTopology::Shared);
+    let (_, eng1) = batched_engine(1, LinkTopology::Shared);
+    let factors = random_factors(&t.dims, 8, 15);
+    let (c1, c2) = (Counters::new(), Counters::new());
+    let mut a = Matrix::zeros(t.dims[0] as usize, 8);
+    let mut b = Matrix::zeros(t.dims[0] as usize, 8);
+    let r1 = cluster_mttkrp(&eng1, 0, &factors, &mut a, 4, &c1);
+    let r2 = cluster_mttkrp(&eng2, 0, &factors, &mut b, 4, &c2);
+    // one reduction round: one output-sized segment over the peer link
+    let seg = t.dims[0] as usize * 8 * 8;
+    assert_eq!(r2.merge_bytes, seg);
+    assert!(r2.merge_s > 0.0);
+    assert!((r2.overall_s - (r2.stream_s + r2.merge_s)).abs() < 1e-15);
+    // the merge's reads/writes land in the counters
+    assert_eq!(r1.merge_bytes, 0);
+    let extra = c2.snapshot().volume_bytes() as i64 - c1.snapshot().volume_bytes() as i64;
+    assert_eq!(extra, (seg * 3) as i64, "merge reads 2 partials, writes 1");
+}
+
+#[test]
+fn dedicated_links_never_slower_than_shared() {
+    let (t, shared) = batched_engine(4, LinkTopology::Shared);
+    let (_, dedicated) = batched_engine(4, LinkTopology::Dedicated);
+    let factors = random_factors(&t.dims, 8, 17);
+    let mut a = Matrix::zeros(t.dims[0] as usize, 8);
+    let mut b = Matrix::zeros(t.dims[0] as usize, 8);
+    let rs = cluster_mttkrp(&shared, 0, &factors, &mut a, 4, &Counters::new());
+    let rd = cluster_mttkrp(&dedicated, 0, &factors, &mut b, 4, &Counters::new());
+    assert!(
+        rd.stream_s <= rs.stream_s * (1.0 + 1e-9),
+        "dedicated {} vs shared {}",
+        rd.stream_s,
+        rs.stream_s
+    );
+    // four host links: per-link occupancy is a fraction of the shared case
+    let occ_shared = rs.link_occupancy(&shared.profile);
+    let occ_dedicated = rd.link_occupancy(&dedicated.profile);
+    assert!(occ_shared > 0.0 && occ_shared <= 1.0);
+    assert!(occ_dedicated > 0.0 && occ_dedicated <= 1.0);
+}

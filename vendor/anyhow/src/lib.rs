@@ -1,0 +1,233 @@
+//! Offline shim of the [`anyhow`](https://docs.rs/anyhow) API — exactly the
+//! subset this repository uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait on `Result`/`Option`, and the [`anyhow!`]/[`bail!`]
+//! macros. Error chains render like the real crate's: `Display` shows the
+//! outermost message, `{:#}` and `Debug` walk the "Caused by" chain.
+
+use std::fmt;
+
+/// A type-erased error with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error under a new outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            if causes.len() == 1 {
+                write!(f, "\n    {}", causes[0])?;
+            } else {
+                for (i, c) in causes.iter().enumerate() {
+                    write!(f, "\n    {i}: {c}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into `Error` (this is why `Error` itself must
+// never implement `std::error::Error` — coherence with the impl below).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // preserve the source chain as message text
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(err) = cur {
+            msgs.push(err.to_string());
+            cur = err.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut out = Error::msg(it.next().unwrap_or_default());
+        for m in it {
+            out = out.context(m);
+        }
+        out
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// `.context(..)` on a Result that is already anyhow-typed (no overlap with
+// the impl above: `Error` does not implement `std::error::Error`).
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chains_and_renders() {
+        let r: Result<()> = Err(io_err()).context("opening file");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("opening file: "), "{full}");
+        assert!(full.contains("missing"), "{full}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.with_context(|| format!("missing {}", 7));
+        assert_eq!(format!("{}", r.unwrap_err()), "missing 7");
+        let ok: Result<i32> = Some(3).context("unused");
+        assert_eq!(ok.unwrap(), 3);
+    }
+
+    #[test]
+    fn anyhow_result_context() {
+        fn inner() -> Result<()> {
+            bail!("inner {}", 42)
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(e.root_cause(), "inner 42");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn run() -> Result<()> {
+            let _: usize = "abc".parse()?;
+            Ok(())
+        }
+        assert!(run().is_err());
+    }
+}
