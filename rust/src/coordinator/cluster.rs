@@ -5,17 +5,22 @@
 //! BLCO batches are *sharded* across `D` simulated devices (one
 //! [`Profile`] describes every device of the homogeneous cluster):
 //!
-//! 1. **placement** — every batch gets a *modelled* cost, host-link
+//! 1. **planning** — every batch gets a *modelled* cost, host-link
 //!    transfer time + device-model compute time, and a greedy
 //!    longest-processing-time assignment puts the next-heaviest batch on
 //!    the least-loaded device ([`Placement::Greedy`]; [`Placement::RoundRobin`]
-//!    is kept as the ablation baseline the greedy policy must beat);
+//!    is kept as the ablation baseline the greedy policy must beat). The
+//!    whole plan is reified as a [`StreamSchedule`]
+//!    ([`super::schedule`]) — built once per `(target, rank)` and cached
+//!    by the facade across CP-ALS iterations;
 //! 2. **streaming** — each device runs its batches through its own queue
 //!    reservations exactly like the single-device pipeline
 //!    ([`super::streamer`]), computing for real on CPU threads into a
 //!    per-device partial output. Host links follow the profile's
 //!    [`LinkTopology`]: `Shared` serializes every transfer through one
-//!    root complex, `Dedicated` gives each device its own full-rate link;
+//!    root complex, `Dedicated` gives each device its own full-rate link,
+//!    and `Ports(n)` interleaves the devices over `n` links
+//!    (`device % n`);
 //! 3. **merge** — per-device partials are combined by a parallel binary
 //!    tree reduction over the peer interconnect (`peer_gbps`), with the
 //!    merge's read/write traffic charged to the counters and its modelled
@@ -26,23 +31,20 @@
 //! bit-for-bit to [`super::streamer::stream_mttkrp`]'s — the regression
 //! anchor of `rust/tests/cluster_streaming.rs`.
 
-use crate::coordinator::streamer::{batch_bytes, BatchTrace};
+use crate::coordinator::schedule::StreamSchedule;
+use crate::coordinator::streamer::BatchTrace;
 use crate::device::counters::{Counters, Snapshot};
-use crate::device::model::{device_time, transfer_time};
+use crate::device::model::device_time;
 use crate::device::profile::Profile;
 use crate::mttkrp::blco::BlcoEngine;
 use crate::mttkrp::dense::Matrix;
 
-/// Batch → device placement policy.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum Placement {
-    /// longest-processing-time greedy: heaviest remaining batch onto the
-    /// least-loaded device (by modelled cost)
-    #[default]
-    Greedy,
-    /// `batch % devices` — the naive baseline greedy must beat on skew
-    RoundRobin,
-}
+// Planning (placement policy, modelled batch costs, makespan) lives in the
+// schedule subsystem now; re-exported here so existing call sites keep
+// their import paths.
+pub use crate::coordinator::schedule::{
+    estimate_batch_cost, modelled_makespan, plan_placement, Placement,
+};
 
 /// One device's slice of the run.
 #[derive(Clone, Debug, Default)]
@@ -123,80 +125,6 @@ impl ClusterReport {
     }
 }
 
-/// Modelled cost of streaming + computing one batch, available *before*
-/// execution (exact counters exist only after a batch runs): host-link
-/// transfer of its bytes plus the device-model time of an estimated
-/// traffic snapshot — streamed payload, factor-row gathers for every
-/// non-target mode, and roughly one register flush per four non-zeros
-/// (the reorder's typical segment density on the evaluation suite).
-pub fn estimate_batch_cost(
-    eng: &BlcoEngine,
-    batch: usize,
-    target: usize,
-    rank: usize,
-) -> f64 {
-    let t = &eng.t;
-    let p = &eng.profile;
-    let nnz = t.batches[batch].nnz as u64;
-    let order = t.order() as u64;
-    let rank64 = rank as u64;
-    let flushes = (nnz / 4).max(1) * rank64;
-    let est = Snapshot {
-        bytes_streamed: nnz * 16,
-        bytes_gathered: nnz * (order - 1) * rank64 * 8,
-        bytes_written: flushes * 8,
-        atomics: flushes,
-        atomic_fanout: t.dims()[target] * rank64,
-        launches: 1,
-        ..Default::default()
-    };
-    transfer_time(batch_bytes(t, batch), p) + device_time(&est, p).total()
-}
-
-/// Assign each batch (by its modelled cost) to a device. Returns
-/// `assign[batch] = device`.
-pub fn plan_placement(costs: &[f64], devices: usize, placement: Placement) -> Vec<usize> {
-    let devices = devices.max(1);
-    match placement {
-        Placement::RoundRobin => (0..costs.len()).map(|b| b % devices).collect(),
-        Placement::Greedy => {
-            // longest-processing-time: heaviest first, ties by index so the
-            // schedule is deterministic
-            let mut order: Vec<usize> = (0..costs.len()).collect();
-            order.sort_by(|&a, &b| {
-                costs[b]
-                    .partial_cmp(&costs[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            });
-            let mut load = vec![0.0f64; devices];
-            let mut assign = vec![0usize; costs.len()];
-            for &b in &order {
-                let mut best = 0usize;
-                for d in 1..devices {
-                    if load[d] < load[best] {
-                        best = d;
-                    }
-                }
-                assign[b] = best;
-                load[best] += costs[b];
-            }
-            assign
-        }
-    }
-}
-
-/// Makespan of an assignment under the modelled per-batch costs: the
-/// heaviest device's total. (The quantity greedy placement minimizes and
-/// the tests compare policies by.)
-pub fn modelled_makespan(costs: &[f64], assign: &[usize], devices: usize) -> f64 {
-    let mut load = vec![0.0f64; devices.max(1)];
-    for (b, &d) in assign.iter().enumerate() {
-        load[d] += costs[b];
-    }
-    load.into_iter().fold(0.0, f64::max)
-}
-
 /// Stream a mode-`target` MTTKRP of `eng`'s tensor across
 /// `eng.profile.devices` simulated devices with greedy load-balanced
 /// placement. The real computation accumulates into per-device partials
@@ -214,6 +142,11 @@ pub fn cluster_mttkrp(
 }
 
 /// [`cluster_mttkrp`] with an explicit placement policy.
+///
+/// Thin wrapper: plans a fresh [`StreamSchedule`] and runs
+/// [`cluster_mttkrp_scheduled`]. The CP-ALS loop goes through
+/// [`MttkrpEngine`](super::engine::MttkrpEngine)'s schedule cache instead,
+/// which reuses one plan per `(target, rank)` across iterations.
 pub fn cluster_mttkrp_with(
     eng: &BlcoEngine,
     target: usize,
@@ -223,23 +156,43 @@ pub fn cluster_mttkrp_with(
     counters: &Counters,
     placement: Placement,
 ) -> ClusterReport {
+    let sched = StreamSchedule::build(eng, target, factors[0].cols, placement);
+    cluster_mttkrp_scheduled(eng, &sched, factors, out, threads, counters)
+}
+
+/// Sharded streaming with a prebuilt plan: placement, per-batch transfer
+/// times and the queue/link skeleton all come from `sched`; only the
+/// kernels (and their exact counters) and the tree merge run here.
+pub fn cluster_mttkrp_scheduled(
+    eng: &BlcoEngine,
+    sched: &StreamSchedule,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    threads: usize,
+    counters: &Counters,
+) -> ClusterReport {
     let profile: &Profile = &eng.profile;
-    let devices = profile.devices.max(1);
-    let queues = profile.queues.max(1);
-    let links = profile.host_links();
+    let target = sched.target;
+    let devices = sched.devices;
+    let queues = sched.queues.max(1);
+    let links = sched.links.max(1);
+    let nbatches = eng.t.batches.len();
+    assert_eq!(
+        sched.devices,
+        eng.profile.devices.max(1),
+        "schedule was planned for a different device count"
+    );
+    assert_eq!(
+        sched.bytes.len(),
+        nbatches,
+        "schedule was planned for a different tensor"
+    );
+    let rank = factors[0].cols;
+    assert_eq!(sched.rank, rank, "schedule was planned for a different rank");
     let t0 = std::time::Instant::now();
     out.fill(0.0);
 
-    let rank = factors[0].cols;
-    let nbatches = eng.t.batches.len();
-
-    // ---- 1. placement by modelled cost
-    let costs: Vec<f64> = (0..nbatches)
-        .map(|b| estimate_batch_cost(eng, b, target, rank))
-        .collect();
-    let assign = plan_placement(&costs, devices, placement);
-
-    // ---- 2. per-device pipelined streaming with real compute.
+    // ---- per-device pipelined streaming with real compute.
     // Batches are submitted in global batch order (the ALTO-curve order the
     // host reads them in); each lands on its assigned device's next queue.
     // Device 0 accumulates directly into `out` (zeroed above), so the
@@ -251,14 +204,13 @@ pub fn cluster_mttkrp_with(
     let mut link_free = vec![0.0f64; links];
     let mut device_free = vec![0.0f64; devices];
     let mut queue_free = vec![vec![0.0f64; queues]; devices];
-    let mut next_queue = vec![0usize; devices];
     let mut timelines = vec![DeviceTimeline::default(); devices];
     let mut traces = Vec::with_capacity(nbatches);
 
     for b in 0..nbatches {
-        let d = assign[b];
-        let bytes = batch_bytes(&eng.t, b);
-        let tr = transfer_time(bytes, profile);
+        let d = sched.assign[b];
+        let bytes = sched.bytes[b];
+        let tr = sched.transfer_s[b];
 
         // real computation with exact per-batch counters
         let batch_counters = Counters::new();
@@ -276,11 +228,11 @@ pub fn cluster_mttkrp_with(
         let compute_s = device_time(&snap, profile).total();
 
         // pipeline clock: the transfer waits for this device's host link
-        // and its queue reservation; the kernel waits for the data and the
-        // device's compute engine
-        let li = if links == 1 { 0 } else { d };
-        let q = next_queue[d] % queues;
-        next_queue[d] += 1;
+        // (`device % links` — devices round-robin over the independent
+        // links) and its queue reservation; the kernel waits for the data
+        // and the device's compute engine
+        let li = sched.link_of[b];
+        let q = sched.queue_of[b];
         let start = link_free[li].max(queue_free[d][q]);
         let landed = start + tr;
         link_free[li] = landed;
@@ -303,7 +255,7 @@ pub fn cluster_mttkrp_with(
         .chain(link_free.iter())
         .fold(0.0f64, |a, &b| a.max(b));
 
-    // ---- 3. parallel binary-tree merge of the partials. Round r halves
+    // ---- parallel binary-tree merge of the partials. Round r halves
     // the live devices: pairs (i, i+stride) exchange one output-sized
     // segment over the peer interconnect concurrently, so each round costs
     // one segment of peer time; the adds run for real below. Device 0's
@@ -350,7 +302,7 @@ pub fn cluster_mttkrp_with(
 
     ClusterReport {
         devices,
-        placement,
+        placement: sched.placement,
         overall_s: stream_s + merge_s,
         stream_s,
         merge_s,

@@ -3,9 +3,22 @@
 //! when the working set fits the (simulated) device, out-of-memory
 //! streaming otherwise — exactly the paper's "single tensor copy, unified
 //! implementation" story. Also drives CP-ALS end to end.
+//!
+//! Routing is *mode-aware*: the working set is sized by the target mode's
+//! actual output ([`MttkrpEngine::is_oom_for`]), so one ALS sweep can mix
+//! in-memory short modes with streamed/clustered long modes over the same
+//! tensor copy. Out-of-memory plans are memoized per `(target, rank)` in a
+//! [`ScheduleCache`] — the decomposition loop reuses one
+//! [`StreamSchedule`] across all its iterations instead of replanning
+//! `order × max_iters` times.
 
-use crate::coordinator::cluster::{cluster_mttkrp, ClusterReport};
-use crate::coordinator::streamer::{stream_mttkrp, StreamReport};
+use std::sync::Arc;
+
+use crate::coordinator::cluster::{cluster_mttkrp_scheduled, ClusterReport};
+use crate::coordinator::schedule::{
+    Placement, ScheduleCache, ScheduleStats, StreamSchedule,
+};
+use crate::coordinator::streamer::{stream_mttkrp_scheduled, StreamReport};
 use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
 use crate::device::counters::Counters;
 use crate::device::profile::Profile;
@@ -23,6 +36,18 @@ pub enum ExecPath {
     Streamed(StreamReport),
     /// out-of-memory on a multi-device profile: sharded cluster streaming
     Clustered(ClusterReport),
+}
+
+impl ExecPath {
+    /// Short human-readable label for report lines (CLI `decompose`
+    /// section, examples).
+    pub fn summary(&self) -> String {
+        match self {
+            ExecPath::InMemory(r) => format!("{r:?}"),
+            ExecPath::Streamed(s) => format!("streamed ({} batches)", s.batches.len()),
+            ExecPath::Clustered(c) => format!("cluster×{}", c.devices),
+        }
+    }
 }
 
 /// High-level BLCO MTTKRP engine (the library's main entry point).
@@ -45,6 +70,11 @@ pub struct MttkrpEngine {
     pub norm_x: f64,
     pub threads: usize,
     pub counters: Counters,
+    /// memoized out-of-memory plans, one per `(target, rank)`
+    schedules: ScheduleCache,
+    /// set false to replan every call (the cold baseline of the
+    /// cached-vs-cold bench sweep)
+    cache_schedules: bool,
 }
 
 impl MttkrpEngine {
@@ -60,6 +90,8 @@ impl MttkrpEngine {
             norm_x: t.norm(),
             threads: default_threads(),
             counters: Counters::new(),
+            schedules: ScheduleCache::new(),
+            cache_schedules: true,
         }
     }
 
@@ -77,8 +109,26 @@ impl MttkrpEngine {
         self
     }
 
-    /// Working-set bytes for a rank-`rank` MTTKRP: tensor blocks + all
-    /// factor matrices + the output.
+    /// Enable/disable schedule memoization (on by default). With caching
+    /// off every out-of-memory call replans from scratch — the cold
+    /// baseline the fig10 bench sweep compares against.
+    pub fn with_schedule_caching(mut self, on: bool) -> Self {
+        self.cache_schedules = on;
+        self
+    }
+
+    /// Working-set bytes for a mode-`target`, rank-`rank` MTTKRP: tensor
+    /// blocks + all factor matrices + the *target mode's* output.
+    pub fn working_set_bytes_for(&self, target: usize, rank: usize) -> usize {
+        let factors: usize =
+            self.dims.iter().map(|&d| d as usize * rank * 8).sum();
+        let out = self.dims[target] as usize * rank * 8;
+        self.eng.footprint_bytes() + factors + out
+    }
+
+    /// Conservative working-set bytes at `rank`: the output is sized by
+    /// the *largest* mode, so this upper-bounds every target. Use
+    /// [`Self::working_set_bytes_for`] for exact per-mode accounting.
     pub fn working_set_bytes(&self, rank: usize) -> usize {
         let factors: usize =
             self.dims.iter().map(|&d| d as usize * rank * 8).sum();
@@ -86,43 +136,82 @@ impl MttkrpEngine {
         self.eng.footprint_bytes() + factors + out
     }
 
-    /// Does this tensor require the out-of-memory path at `rank`?
+    /// Does a mode-`target` MTTKRP at `rank` require the out-of-memory
+    /// path? Exact per-target accounting — short modes of an otherwise
+    /// out-of-memory tensor can still run in-memory.
+    pub fn is_oom_for(&self, target: usize, rank: usize) -> bool {
+        !self.eng.profile.fits(self.working_set_bytes_for(target, rank))
+    }
+
+    /// Does *any* mode require the out-of-memory path at `rank`? (The
+    /// conservative max-mode classification; routing itself is per-target
+    /// via [`Self::is_oom_for`].)
     pub fn is_oom(&self, rank: usize) -> bool {
         !self.eng.profile.fits(self.working_set_bytes(rank))
     }
 
+    /// The (memoized) streaming plan for `(target, rank)`. Built on first
+    /// use and reused by every later call — including all CP-ALS
+    /// iterations — unless caching was disabled.
+    pub fn schedule(&self, target: usize, rank: usize) -> Arc<StreamSchedule> {
+        if self.cache_schedules {
+            self.schedules.get_or_build(&self.eng, target, rank, Placement::Greedy)
+        } else {
+            self.schedules.note_uncached_build();
+            Arc::new(StreamSchedule::build(
+                &self.eng,
+                target,
+                rank,
+                Placement::Greedy,
+            ))
+        }
+    }
+
+    /// Plans built / reused so far (see [`ScheduleStats`]).
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        self.schedules.stats()
+    }
+
+    /// Route one MTTKRP: in-memory when the target mode's working set
+    /// fits, otherwise streamed (one device) or cluster-sharded (several),
+    /// through the memoized schedule.
+    fn route(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) -> ExecPath {
+        let rank = factors[0].cols;
+        if self.is_oom_for(target, rank) {
+            let sched = self.schedule(target, rank);
+            if self.eng.profile.devices > 1 {
+                let rep = cluster_mttkrp_scheduled(
+                    &self.eng, &sched, factors, out, threads, counters,
+                );
+                ExecPath::Clustered(rep)
+            } else {
+                let rep = stream_mttkrp_scheduled(
+                    &self.eng, &sched, factors, out, threads, counters,
+                );
+                ExecPath::Streamed(rep)
+            }
+        } else {
+            self.eng.mttkrp(target, factors, out, threads, counters);
+            ExecPath::InMemory(self.eng.effective_resolution(target))
+        }
+    }
+
     /// Mode-`target` MTTKRP. Chooses in-memory, streamed or (when the
     /// profile declares more than one device) cluster-sharded streaming
-    /// automatically.
+    /// automatically, per target mode.
     pub fn mttkrp(&self, target: usize, factors: &[Matrix]) -> (Matrix, ExecPath) {
         let rank = factors[0].cols;
         let mut out = Matrix::zeros(self.dims[target] as usize, rank);
-        if self.is_oom(rank) {
-            if self.eng.profile.devices > 1 {
-                let rep = cluster_mttkrp(
-                    &self.eng,
-                    target,
-                    factors,
-                    &mut out,
-                    self.threads,
-                    &self.counters,
-                );
-                return (out, ExecPath::Clustered(rep));
-            }
-            let rep = stream_mttkrp(
-                &self.eng,
-                target,
-                factors,
-                &mut out,
-                self.threads,
-                &self.counters,
-            );
-            (out, ExecPath::Streamed(rep))
-        } else {
-            self.eng
-                .mttkrp(target, factors, &mut out, self.threads, &self.counters);
-            (out, ExecPath::InMemory(self.eng.effective_resolution(target)))
-        }
+        let path =
+            self.route(target, factors, &mut out, self.threads, &self.counters);
+        (out, path)
     }
 
     /// Full CP-ALS decomposition using this engine's routing.
@@ -144,16 +233,22 @@ impl Mttkrp for MttkrpEngine {
         threads: usize,
         counters: &Counters,
     ) {
-        let rank = factors[0].cols;
-        if self.is_oom(rank) {
-            if self.eng.profile.devices > 1 {
-                cluster_mttkrp(&self.eng, target, factors, out, threads, counters);
-            } else {
-                stream_mttkrp(&self.eng, target, factors, out, threads, counters);
-            }
-        } else {
-            self.eng.mttkrp(target, factors, out, threads, counters);
-        }
+        self.route(target, factors, out, threads, counters);
+    }
+
+    fn mttkrp_traced(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) -> Option<ExecPath> {
+        Some(self.route(target, factors, out, threads, counters))
+    }
+
+    fn schedule_stats(&self) -> ScheduleStats {
+        self.schedules.stats()
     }
 }
 
@@ -173,6 +268,8 @@ mod tests {
         assert!(matches!(path, ExecPath::InMemory(_)));
         let expect = mttkrp_oracle(&t, 1, &factors);
         assert!(m.max_abs_diff(&expect) < 1e-9);
+        // no out-of-memory plan was built
+        assert_eq!(engine.schedule_stats(), ScheduleStats::default());
     }
 
     #[test]
@@ -228,6 +325,13 @@ mod tests {
         assert_eq!(rep.fits.len(), 5);
         assert!(rep.fits.iter().all(|&f| f <= 1.0 + 1e-9));
         assert!(engine.counters.snapshot().volume_bytes() > 0);
+        // every mode ran in-memory and no plan was needed
+        assert_eq!(rep.schedule, ScheduleStats::default());
+        assert_eq!(rep.mode_traces.len(), 3);
+        for tr in &rep.mode_traces {
+            assert_eq!(tr.in_memory, 5);
+            assert_eq!(tr.streamed + tr.clustered, 0);
+        }
     }
 
     #[test]
@@ -238,5 +342,99 @@ mod tests {
         let ws32 = engine.working_set_bytes(32);
         assert!(ws32 > ws8);
         assert!(ws8 >= engine.eng.footprint_bytes());
+        // cube tensor: every per-target working set equals the max
+        for m in 0..3 {
+            assert_eq!(engine.working_set_bytes_for(m, 8), ws8);
+        }
+    }
+
+    #[test]
+    fn per_target_working_set_is_exact() {
+        // one long mode, two short ones: the conservative max says OOM,
+        // exact per-target accounting disagrees for the short modes
+        let t = synth::uniform(&[4096, 8, 8], 2_000, 3);
+        let cfg = BlcoConfig { max_block_nnz: 256, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(800 * 1024), cfg);
+        let rank = 16;
+        assert!(
+            engine.working_set_bytes_for(0, rank) > engine.working_set_bytes_for(1, rank)
+        );
+        assert_eq!(
+            engine.working_set_bytes(rank),
+            engine.working_set_bytes_for(0, rank),
+            "conservative accounting = largest mode"
+        );
+        assert!(engine.is_oom(rank), "max-mode classification says OOM");
+        assert!(engine.is_oom_for(0, rank), "long mode streams");
+        assert!(!engine.is_oom_for(1, rank), "short mode fits");
+        assert!(!engine.is_oom_for(2, rank), "short mode fits");
+    }
+
+    #[test]
+    fn mode_aware_routing_mixes_paths_in_one_sweep() {
+        // regression for the old max-mode `is_oom` routing: short modes
+        // of a long-mode-OOM tensor must run in-memory, and both paths
+        // must stay correct
+        let t = synth::uniform(&[4096, 8, 8], 2_000, 3);
+        let cfg = BlcoConfig { max_block_nnz: 256, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(800 * 1024), cfg);
+        let factors = random_factors(&t.dims, 16, 1);
+        let (m0, p0) = engine.mttkrp(0, &factors);
+        let (m1, p1) = engine.mttkrp(1, &factors);
+        let (m2, p2) = engine.mttkrp(2, &factors);
+        assert!(matches!(p0, ExecPath::Streamed(_)), "long mode streams");
+        assert!(matches!(p1, ExecPath::InMemory(_)), "short mode in-memory");
+        assert!(matches!(p2, ExecPath::InMemory(_)), "short mode in-memory");
+        for (target, m) in [(0usize, &m0), (1, &m1), (2, &m2)] {
+            let expect = mttkrp_oracle(&t, target, &factors);
+            assert!(m.max_abs_diff(&expect) < 1e-9, "mode {target}");
+        }
+        // only the streamed mode needed a plan
+        let stats = engine.schedule_stats();
+        assert_eq!(stats.built, 1);
+        assert_eq!(stats.hits, 0);
+    }
+
+    #[test]
+    fn schedule_cache_counts_builds_and_hits() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg);
+        let f8 = random_factors(&t.dims, 8, 5);
+        let f16 = random_factors(&t.dims, 16, 5);
+        let _ = engine.mttkrp(0, &f8);
+        let _ = engine.mttkrp(0, &f8); // cache hit
+        let _ = engine.mttkrp(1, &f8); // new target
+        let _ = engine.mttkrp(0, &f16); // new rank
+        let stats = engine.schedule_stats();
+        assert_eq!(stats.built, 3, "distinct (target, rank) pairs");
+        assert_eq!(stats.hits, 1);
+    }
+
+    #[test]
+    fn caching_disabled_replans_every_call() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine = MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg)
+            .with_schedule_caching(false);
+        let f8 = random_factors(&t.dims, 8, 5);
+        let (a, _) = engine.mttkrp(0, &f8);
+        let (b, _) = engine.mttkrp(0, &f8);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+        let stats = engine.schedule_stats();
+        assert_eq!(stats.built, 2, "cold mode plans per call");
+        assert_eq!(stats.hits, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid profile")]
+    fn engine_rejects_invalid_profile() {
+        let t = synth::uniform(&[20, 20, 20], 500, 1);
+        let mut p = Profile::a100();
+        p.link_gbps = 0.0;
+        let _ = MttkrpEngine::from_coo(&t, p);
     }
 }

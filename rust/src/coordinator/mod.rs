@@ -1,10 +1,12 @@
 //! The L3 coordination layer: out-of-memory streaming of BLCO batches
 //! through simulated device queues ([`streamer`]), the multi-device
 //! sharded generalization with load-balanced batch placement and a
-//! tree-merged output ([`cluster`]), and the high-level
-//! [`engine::MttkrpEngine`] facade that picks the in-memory, streamed or
-//! clustered path per tensor × device, exposes CP-ALS, and (optionally)
-//! routes per-block compute through the AOT-compiled PJRT executable.
+//! tree-merged output ([`cluster`]), the streaming schedule subsystem
+//! that reifies and memoizes the per-`(target, rank)` plan both executors
+//! consume ([`schedule`]), and the high-level [`engine::MttkrpEngine`]
+//! facade that picks the in-memory, streamed or clustered path per
+//! *target mode* × device, exposes CP-ALS, and (optionally) routes
+//! per-block compute through the AOT-compiled PJRT executable.
 //!
 //! # Pipeline model
 //!
@@ -32,4 +34,5 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod schedule;
 pub mod streamer;

@@ -1,0 +1,447 @@
+//! The streaming schedule subsystem: everything about an out-of-memory
+//! MTTKRP that can be decided *before* any batch runs, reified as a
+//! [`StreamSchedule`] value — modelled per-batch costs, the batch → device
+//! assignment, and the pipeline clock skeleton (which host link and which
+//! queue reservation every batch will occupy).
+//!
+//! A schedule depends only on `(target, rank, placement)` for a fixed
+//! tensor × profile, so the CP-ALS driver reuses one plan across every
+//! iteration instead of replanning `order × max_iters` times (cf. AMPED's
+//! amortized multi-GPU partitioning and Nisa et al.'s precomputed
+//! load-balanced placement, PAPERS.md). [`ScheduleCache`] does that
+//! memoization behind interior mutability inside
+//! [`MttkrpEngine`](super::engine::MttkrpEngine), and counts plans built
+//! vs reused so schedule reuse is observable in reports and tests.
+//!
+//! Both executors consume prebuilt schedules:
+//! [`stream_mttkrp_scheduled`](super::streamer::stream_mttkrp_scheduled)
+//! for the single-device pipeline and
+//! [`cluster_mttkrp_scheduled`](super::cluster::cluster_mttkrp_scheduled)
+//! for the sharded one; the original call-and-plan entry points survive as
+//! thin wrappers.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::streamer::batch_bytes;
+use crate::device::counters::Snapshot;
+use crate::device::model::{device_time, transfer_time};
+use crate::mttkrp::blco::BlcoEngine;
+
+/// Batch → device placement policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// longest-processing-time greedy: heaviest remaining batch onto the
+    /// least-loaded device (by modelled cost)
+    #[default]
+    Greedy,
+    /// `batch % devices` — the naive baseline greedy must beat on skew
+    RoundRobin,
+}
+
+/// Modelled cost of streaming + computing one batch, available *before*
+/// execution (exact counters exist only after a batch runs): host-link
+/// transfer of its bytes plus the device-model time of an estimated
+/// traffic snapshot — streamed payload, factor-row gathers for every
+/// non-target mode, and roughly one register flush per four non-zeros
+/// (the reorder's typical segment density on the evaluation suite).
+///
+/// Total and finite by contract: [`crate::device::Profile::validate`]
+/// rejects zero/NaN rates before an engine (and hence a schedule) can be
+/// built over them, and the debug assertion below catches any profile
+/// mutated into an invalid state after construction.
+pub fn estimate_batch_cost(
+    eng: &BlcoEngine,
+    batch: usize,
+    target: usize,
+    rank: usize,
+) -> f64 {
+    let cost = transfer_time(batch_bytes(&eng.t, batch), &eng.profile)
+        + estimate_kernel_cost(eng, batch, target, rank);
+    debug_assert!(
+        cost.is_finite(),
+        "modelled batch cost must be finite (batch {batch}, target {target}, \
+         rank {rank}, profile {:?}): got {cost}",
+        eng.profile.name
+    );
+    cost
+}
+
+/// The device-model (compute) half of [`estimate_batch_cost`] — split out
+/// so schedule construction can combine it with the transfer times it has
+/// already computed instead of re-deriving them per batch.
+fn estimate_kernel_cost(eng: &BlcoEngine, batch: usize, target: usize, rank: usize) -> f64 {
+    let t = &eng.t;
+    let p = &eng.profile;
+    let nnz = t.batches[batch].nnz as u64;
+    let order = t.order() as u64;
+    let rank64 = rank as u64;
+    let flushes = (nnz / 4).max(1) * rank64;
+    let est = Snapshot {
+        bytes_streamed: nnz * 16,
+        bytes_gathered: nnz * (order - 1) * rank64 * 8,
+        bytes_written: flushes * 8,
+        atomics: flushes,
+        atomic_fanout: t.dims()[target] * rank64,
+        launches: 1,
+        ..Default::default()
+    };
+    device_time(&est, p).total()
+}
+
+/// Assign each batch (by its modelled cost) to a device. Returns
+/// `assign[batch] = device`.
+pub fn plan_placement(costs: &[f64], devices: usize, placement: Placement) -> Vec<usize> {
+    let devices = devices.max(1);
+    match placement {
+        Placement::RoundRobin => (0..costs.len()).map(|b| b % devices).collect(),
+        Placement::Greedy => {
+            // longest-processing-time: heaviest first, ties by index so the
+            // schedule is deterministic
+            let mut order: Vec<usize> = (0..costs.len()).collect();
+            order.sort_by(|&a, &b| {
+                costs[b]
+                    .partial_cmp(&costs[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut load = vec![0.0f64; devices];
+            let mut assign = vec![0usize; costs.len()];
+            for &b in &order {
+                let mut best = 0usize;
+                for d in 1..devices {
+                    if load[d] < load[best] {
+                        best = d;
+                    }
+                }
+                assign[b] = best;
+                load[best] += costs[b];
+            }
+            assign
+        }
+    }
+}
+
+/// Makespan of an assignment under the modelled per-batch costs: the
+/// heaviest device's total. (The quantity greedy placement minimizes and
+/// the tests compare policies by.)
+pub fn modelled_makespan(costs: &[f64], assign: &[usize], devices: usize) -> f64 {
+    let mut load = vec![0.0f64; devices.max(1)];
+    for (b, &d) in assign.iter().enumerate() {
+        load[d] += costs[b];
+    }
+    load.into_iter().fold(0.0, f64::max)
+}
+
+/// The reified plan for one `(target, rank, placement)` streamed MTTKRP:
+/// per-batch modelled costs and transfer times, the device assignment, and
+/// the pipeline clock skeleton (host-link and queue-reservation indices in
+/// submission order). Everything here is a pure function of the tensor and
+/// the profile, so one schedule serves every ALS iteration.
+#[derive(Clone, Debug)]
+pub struct StreamSchedule {
+    pub target: usize,
+    pub rank: usize,
+    pub placement: Placement,
+    /// devices this plan shards across (1 = the single-device pipeline)
+    pub devices: usize,
+    /// queue reservations per device
+    pub queues: usize,
+    /// independent host links the transfers interleave over
+    pub links: usize,
+    /// host→device wire bytes per batch
+    pub bytes: Vec<usize>,
+    /// modelled host→device transfer seconds per batch
+    pub transfer_s: Vec<f64>,
+    /// modelled total (transfer + compute) cost per batch
+    pub costs: Vec<f64>,
+    /// batch → device
+    pub assign: Vec<usize>,
+    /// batch → queue reservation on its device (submission order % queues)
+    pub queue_of: Vec<usize>,
+    /// batch → host link its transfer serializes on (`device % links`)
+    pub link_of: Vec<usize>,
+}
+
+impl StreamSchedule {
+    /// Plan a sharded streamed MTTKRP across the profile's declared
+    /// device count.
+    pub fn build(
+        eng: &BlcoEngine,
+        target: usize,
+        rank: usize,
+        placement: Placement,
+    ) -> Self {
+        Self::build_for_devices(eng, target, rank, placement, eng.profile.devices.max(1))
+    }
+
+    /// Plan for the single-device pipeline regardless of what the profile
+    /// declares — what the plain
+    /// [`stream_mttkrp`](super::streamer::stream_mttkrp) wrapper uses.
+    pub fn single_device(eng: &BlcoEngine, target: usize, rank: usize) -> Self {
+        Self::build_for_devices(eng, target, rank, Placement::Greedy, 1)
+    }
+
+    fn build_for_devices(
+        eng: &BlcoEngine,
+        target: usize,
+        rank: usize,
+        placement: Placement,
+        devices: usize,
+    ) -> Self {
+        if let Err(e) = eng.profile.validate() {
+            panic!("invalid profile {:?}: {e}", eng.profile.name);
+        }
+        let devices = devices.max(1);
+        let queues = eng.profile.queues.max(1);
+        // one device streams over one link; a cluster interleaves its
+        // transfers across the profile's independent host links
+        let links = if devices == 1 { 1 } else { eng.profile.host_links().max(1) };
+
+        let nbatches = eng.t.batches.len();
+        let bytes: Vec<usize> = (0..nbatches).map(|b| batch_bytes(&eng.t, b)).collect();
+        let transfer_s: Vec<f64> =
+            bytes.iter().map(|&b| transfer_time(b, &eng.profile)).collect();
+        // same definition as `estimate_batch_cost`, reusing the transfer
+        // times computed above
+        let costs: Vec<f64> = (0..nbatches)
+            .map(|b| transfer_s[b] + estimate_kernel_cost(eng, b, target, rank))
+            .collect();
+        let assign = plan_placement(&costs, devices, placement);
+
+        // clock skeleton: queue reservations rotate per device in global
+        // submission order; each device's transfers serialize on link
+        // `device % links` (Shared → everyone on link 0, Dedicated → one
+        // per device, Ports(n) → round-robin over n links)
+        let mut next_queue = vec![0usize; devices];
+        let mut queue_of = vec![0usize; nbatches];
+        let mut link_of = vec![0usize; nbatches];
+        for b in 0..nbatches {
+            let d = assign[b];
+            queue_of[b] = next_queue[d] % queues;
+            next_queue[d] += 1;
+            link_of[b] = d % links;
+        }
+
+        StreamSchedule {
+            target,
+            rank,
+            placement,
+            devices,
+            queues,
+            links,
+            bytes,
+            transfer_s,
+            costs,
+            assign,
+            queue_of,
+            link_of,
+        }
+    }
+
+    /// Modelled makespan of this plan (heaviest device's total cost).
+    pub fn makespan(&self) -> f64 {
+        modelled_makespan(&self.costs, &self.assign, self.devices)
+    }
+}
+
+/// Plans-built / plans-reused counters of a [`ScheduleCache`] (or the
+/// zero value for engines without one). `built` is the acceptance-criteria
+/// observable: across a full CP-ALS it must equal the number of distinct
+/// `(mode, rank)` pairs, not `modes × iterations`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// schedules computed from scratch
+    pub built: usize,
+    /// requests served from the cache
+    pub hits: usize,
+}
+
+impl ScheduleStats {
+    /// Stats accumulated since an `earlier` snapshot (what
+    /// [`CpAlsReport`](crate::cpals::als::CpAlsReport) records per run).
+    pub fn delta_since(self, earlier: ScheduleStats) -> ScheduleStats {
+        ScheduleStats {
+            built: self.built.saturating_sub(earlier.built),
+            hits: self.hits.saturating_sub(earlier.hits),
+        }
+    }
+}
+
+/// What one memoized plan is keyed by: `(target, rank, placement)`.
+type PlanKey = (usize, usize, Placement);
+
+/// Memoized `(target, rank, placement) → Arc<StreamSchedule>` map with
+/// build/hit counters. Interior-mutable so the read-only
+/// [`MttkrpEngine`](super::engine::MttkrpEngine) facade can populate it
+/// lazily from `&self`.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: Mutex<HashMap<PlanKey, Arc<StreamSchedule>>>,
+    built: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The memoized schedule for `(target, rank, placement)`, building it
+    /// on first request.
+    pub fn get_or_build(
+        &self,
+        eng: &BlcoEngine,
+        target: usize,
+        rank: usize,
+        placement: Placement,
+    ) -> Arc<StreamSchedule> {
+        let mut map = self.map.lock().expect("schedule cache poisoned");
+        match map.entry((target, rank, placement)) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                let sched = Arc::new(StreamSchedule::build(eng, target, rank, placement));
+                self.built.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(sched))
+            }
+        }
+    }
+
+    /// Record a plan built outside the cache (the facade's
+    /// caching-disabled mode still counts planning work, which is how the
+    /// cold-vs-cached bench sweep observes the difference).
+    pub fn note_uncached_build(&self) {
+        self.built.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> ScheduleStats {
+        ScheduleStats {
+            built: self.built.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct plans currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("schedule cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Profile;
+    use crate::format::blco::{BlcoConfig, BlcoTensor};
+    use crate::tensor::synth;
+
+    fn engine(devices: usize) -> BlcoEngine {
+        let t = synth::uniform(&[60, 50, 40], 6_000, 3);
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let b = BlcoTensor::from_coo_with(&t, cfg);
+        assert!(b.batches.len() > 4);
+        BlcoEngine::new(b, Profile::tiny(1 << 16).with_devices(devices))
+    }
+
+    #[test]
+    fn single_device_skeleton_matches_legacy_clock() {
+        // the D = 1 plan must reproduce the original streamer's
+        // queue rotation (q = batch % queues) and single link
+        let eng = engine(1);
+        let s = StreamSchedule::single_device(&eng, 0, 8);
+        assert_eq!(s.devices, 1);
+        assert_eq!(s.links, 1);
+        let queues = eng.profile.queues.max(1);
+        for b in 0..s.queue_of.len() {
+            assert_eq!(s.queue_of[b], b % queues);
+            assert_eq!(s.link_of[b], 0);
+            assert_eq!(s.assign[b], 0);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_and_complete() {
+        let eng = engine(4);
+        let a = StreamSchedule::build(&eng, 1, 16, Placement::Greedy);
+        let b = StreamSchedule::build(&eng, 1, 16, Placement::Greedy);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.queue_of, b.queue_of);
+        assert_eq!(a.link_of, b.link_of);
+        assert_eq!(a.bytes, b.bytes);
+        let n = eng.t.batches.len();
+        assert_eq!(a.bytes.len(), n);
+        assert_eq!(a.transfer_s.len(), n);
+        assert_eq!(a.costs.len(), n);
+        assert!(a.costs.iter().all(|c| c.is_finite() && *c > 0.0));
+        assert!(a.assign.iter().all(|&d| d < 4));
+        assert!(a.makespan() > 0.0);
+    }
+
+    #[test]
+    fn queue_rotation_is_per_device() {
+        let eng = engine(2);
+        let s = StreamSchedule::build(&eng, 0, 8, Placement::Greedy);
+        let queues = s.queues;
+        let mut next = vec![0usize; s.devices];
+        for b in 0..s.assign.len() {
+            let d = s.assign[b];
+            assert_eq!(s.queue_of[b], next[d] % queues, "batch {b}");
+            next[d] += 1;
+            assert_eq!(s.link_of[b], d % s.links);
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_per_target_rank() {
+        let eng = engine(1);
+        let cache = ScheduleCache::new();
+        assert!(cache.is_empty());
+        let a = cache.get_or_build(&eng, 0, 8, Placement::Greedy);
+        let b = cache.get_or_build(&eng, 0, 8, Placement::Greedy);
+        assert!(Arc::ptr_eq(&a, &b), "same plan object on a hit");
+        let _c = cache.get_or_build(&eng, 1, 8, Placement::Greedy);
+        let _d = cache.get_or_build(&eng, 0, 16, Placement::Greedy);
+        let stats = cache.stats();
+        assert_eq!(stats.built, 3, "distinct (target, rank) pairs");
+        assert_eq!(stats.hits, 1);
+        assert_eq!(cache.len(), 3);
+        cache.note_uncached_build();
+        assert_eq!(cache.stats().built, 4);
+        assert_eq!(
+            cache.stats().delta_since(stats),
+            ScheduleStats { built: 1, hits: 0 }
+        );
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_cost_trips_the_debug_contract() {
+        // a profile mutated into an invalid state *after* construction
+        // bypasses validation; the cost contract still catches it
+        let mut eng = engine(1);
+        eng.profile.link_gbps = 0.0;
+        let _ = estimate_batch_cost(&eng, 0, 0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid profile")]
+    fn schedule_build_revalidates_the_profile() {
+        let mut eng = engine(1);
+        eng.profile.hbm_gbps = f64::NAN;
+        let _ = StreamSchedule::single_device(&eng, 0, 8);
+    }
+}

@@ -6,8 +6,9 @@
 //! and a queue can only start computing once its transfer completes and its
 //! reservation is free.
 
+use crate::coordinator::schedule::StreamSchedule;
 use crate::device::counters::Counters;
-use crate::device::model::{device_time, transfer_time};
+use crate::device::model::device_time;
 use crate::device::profile::Profile;
 use crate::format::blco::BlcoTensor;
 use crate::mttkrp::blco::BlcoEngine;
@@ -71,6 +72,12 @@ impl StreamReport {
 /// queues. The output accumulates across batches exactly like the
 /// in-memory path (BLCO's opportunistic conflict resolution makes blocks
 /// independent, Section 4.2).
+///
+/// Thin wrapper: plans a fresh single-device [`StreamSchedule`] and runs
+/// [`stream_mttkrp_scheduled`]. Callers issuing the same `(target, rank)`
+/// repeatedly (the CP-ALS loop) should go through
+/// [`MttkrpEngine`](super::engine::MttkrpEngine), whose schedule cache
+/// amortizes the planning.
 pub fn stream_mttkrp(
     eng: &BlcoEngine,
     target: usize,
@@ -79,12 +86,44 @@ pub fn stream_mttkrp(
     threads: usize,
     counters: &Counters,
 ) -> StreamReport {
+    let sched = StreamSchedule::single_device(eng, target, factors[0].cols);
+    stream_mttkrp_scheduled(eng, &sched, factors, out, threads, counters)
+}
+
+/// Stream with a prebuilt plan: per-batch wire bytes, transfer times and
+/// the queue skeleton all come from `sched`; only the kernels themselves
+/// (and their exact counters) run here.
+pub fn stream_mttkrp_scheduled(
+    eng: &BlcoEngine,
+    sched: &StreamSchedule,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    threads: usize,
+    counters: &Counters,
+) -> StreamReport {
     let profile: &Profile = &eng.profile;
-    let queues = profile.queues.max(1);
+    let target = sched.target;
+    let queues = sched.queues.max(1);
+    let nbatches = eng.t.batches.len();
+    assert_eq!(
+        sched.devices, 1,
+        "single-device streamer given a {}-device schedule (use \
+         cluster_mttkrp_scheduled, or plan with StreamSchedule::single_device)",
+        sched.devices
+    );
+    assert_eq!(
+        sched.bytes.len(),
+        nbatches,
+        "schedule was planned for a different tensor"
+    );
+    assert_eq!(
+        sched.rank,
+        factors[0].cols,
+        "schedule was planned for a different rank"
+    );
     let t0 = std::time::Instant::now();
     out.fill(0.0);
 
-    let nbatches = eng.t.batches.len();
     let mut traces = Vec::with_capacity(nbatches);
 
     // pipeline state: one staging reservation per queue, a shared
@@ -96,8 +135,8 @@ pub fn stream_mttkrp(
     let mut queue_free = vec![0.0f64; queues];
 
     for b in 0..nbatches {
-        let bytes = batch_bytes(&eng.t, b);
-        let tr = transfer_time(bytes, profile);
+        let bytes = sched.bytes[b];
+        let tr = sched.transfer_s[b];
 
         // real computation of this batch, with exact per-batch counters
         let batch_counters = Counters::new();
@@ -111,7 +150,7 @@ pub fn stream_mttkrp(
         // pipeline: queue q starts its transfer when the link and its
         // reservation are free; the kernel starts when the data has landed
         // and the device is free
-        let q = b % queues;
+        let q = sched.queue_of[b];
         let start = link_free.max(queue_free[q]);
         let landed = start + tr;
         link_free = landed;
@@ -184,6 +223,26 @@ mod tests {
         // both serialized resources lower-bound the pipeline
         assert!(rep.overall_s >= rep.transfer_s.max(rep.compute_s) * 0.999);
         assert!(rep.bytes >= t.nnz() * 16);
+    }
+
+    #[test]
+    fn scheduled_entry_point_matches_the_wrapper() {
+        // one prebuilt schedule reused across calls must reproduce the
+        // plan-per-call wrapper exactly (same modelled clock, same result)
+        let (t, eng) = small_batched_engine();
+        let factors = random_factors(&t.dims, 8, 21);
+        let sched = StreamSchedule::single_device(&eng, 1, 8);
+        let mut a = Matrix::zeros(t.dims[1] as usize, 8);
+        let mut b = Matrix::zeros(t.dims[1] as usize, 8);
+        let ra = stream_mttkrp(&eng, 1, &factors, &mut a, 4, &Counters::new());
+        let rb =
+            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut b, 4, &Counters::new());
+        let rb2 =
+            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut b, 4, &Counters::new());
+        assert_eq!(ra.bytes, rb.bytes);
+        assert_eq!(ra.transfer_s, rb.transfer_s, "identical modelled transfers");
+        assert_eq!(rb.transfer_s, rb2.transfer_s, "schedule reuse is stable");
+        assert!(a.max_abs_diff(&b) < 1e-9);
     }
 
     #[test]

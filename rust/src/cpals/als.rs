@@ -4,6 +4,8 @@
 //! `fit = 1 − ‖X − X̂‖ / ‖X‖`, with
 //! `‖X − X̂‖² = ‖X‖² − 2⟨M_N, A_N⟩ + 1ᵀ(⊛_n AᵀA)1`.
 
+use crate::coordinator::engine::ExecPath;
+use crate::coordinator::schedule::ScheduleStats;
 use crate::cpals::linalg::{gram_hadamard, normalize_columns, solve_pseudo};
 use crate::device::Counters;
 use crate::mttkrp::dense::Matrix;
@@ -32,6 +34,37 @@ impl Default for CpAlsOptions {
     }
 }
 
+/// Which execution paths served one mode's MTTKRPs across the run.
+#[derive(Clone, Debug, Default)]
+pub struct ModeTrace {
+    /// calls served by the in-memory unified kernel
+    pub in_memory: usize,
+    /// calls served by single-device out-of-memory streaming
+    pub streamed: usize,
+    /// calls served by sharded cluster streaming
+    pub clustered: usize,
+    /// the final iteration's full path report (per-batch traces included
+    /// for the streamed/clustered cases)
+    pub last: Option<ExecPath>,
+}
+
+/// Aggregate out-of-memory traffic across every MTTKRP of a CP-ALS run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub streamed_calls: usize,
+    pub clustered_calls: usize,
+    /// host→device bytes shipped across all streamed/clustered calls
+    pub bytes: usize,
+    /// device↔device bytes moved by cluster tree merges
+    pub merge_bytes: usize,
+    /// total modelled host-link transfer seconds
+    pub transfer_s: f64,
+    /// total modelled device compute seconds
+    pub compute_s: f64,
+    /// total pipeline-simulated end-to-end seconds
+    pub overall_s: f64,
+}
+
 /// Per-iteration trace + final factors.
 #[derive(Debug)]
 pub struct CpAlsReport {
@@ -41,6 +74,14 @@ pub struct CpAlsReport {
     pub iterations: usize,
     pub mttkrp_seconds: f64,
     pub total_seconds: f64,
+    /// which execution path served each mode, per mode
+    pub mode_traces: Vec<ModeTrace>,
+    /// aggregate out-of-memory traffic of the whole decomposition
+    pub stream: StreamStats,
+    /// schedule-cache activity during this run: `built` must equal the
+    /// number of distinct `(mode, rank)` pairs that streamed, not
+    /// `modes × iterations` (zeros for engines without a cache)
+    pub schedule: ScheduleStats,
 }
 
 /// Run CP-ALS over a tensor exposed through `engine`. `dims` and `norm_x`
@@ -56,6 +97,7 @@ pub fn cp_als(
     let order = dims.len();
     let rank = opts.rank;
     let t_start = std::time::Instant::now();
+    let sched_start = engine.schedule_stats();
 
     let mut factors = random_factors(dims, rank, opts.seed);
     let mut lambda = vec![1.0f64; rank];
@@ -65,6 +107,8 @@ pub fn cp_als(
     let mut prev_fit = 0.0f64;
     let mut mttkrp_seconds = 0.0f64;
     let mut last_m = Matrix::zeros(dims[order - 1] as usize, rank);
+    let mut mode_traces = vec![ModeTrace::default(); order];
+    let mut stream = StreamStats::default();
 
     let mut iterations = 0;
     for _it in 0..opts.max_iters {
@@ -75,8 +119,33 @@ pub fn cp_als(
             // Line 4: M = MTTKRP(X, factors, n)
             let mut m = Matrix::zeros(dims[n] as usize, rank);
             let t0 = std::time::Instant::now();
-            engine.mttkrp(n, &factors, &mut m, opts.threads, counters);
+            let path =
+                engine.mttkrp_traced(n, &factors, &mut m, opts.threads, counters);
             mttkrp_seconds += t0.elapsed().as_secs_f64();
+            if let Some(p) = path {
+                let tr = &mut mode_traces[n];
+                match &p {
+                    ExecPath::InMemory(_) => tr.in_memory += 1,
+                    ExecPath::Streamed(rep) => {
+                        tr.streamed += 1;
+                        stream.streamed_calls += 1;
+                        stream.bytes += rep.bytes;
+                        stream.transfer_s += rep.transfer_s;
+                        stream.compute_s += rep.compute_s;
+                        stream.overall_s += rep.overall_s;
+                    }
+                    ExecPath::Clustered(rep) => {
+                        tr.clustered += 1;
+                        stream.clustered_calls += 1;
+                        stream.bytes += rep.bytes;
+                        stream.merge_bytes += rep.merge_bytes;
+                        stream.transfer_s += rep.transfer_s;
+                        stream.compute_s += rep.compute_s;
+                        stream.overall_s += rep.overall_s;
+                    }
+                }
+                tr.last = Some(p);
+            }
             // Line 5: A_n = M V⁺, then normalize columns into λ
             let mut a = solve_pseudo(&m, &v);
             lambda = normalize_columns(&mut a);
@@ -125,6 +194,9 @@ pub fn cp_als(
         iterations,
         mttkrp_seconds,
         total_seconds: t_start.elapsed().as_secs_f64(),
+        mode_traces,
+        stream,
+        schedule: engine.schedule_stats().delta_since(sched_start),
     }
 }
 
@@ -229,5 +301,13 @@ mod tests {
         assert_eq!(rep.factors.len(), 3);
         assert_eq!(rep.lambda.len(), 2);
         assert!(rep.mttkrp_seconds <= rep.total_seconds);
+        // a single-path engine reports no routing traces and no plans
+        assert_eq!(rep.mode_traces.len(), 3);
+        for tr in &rep.mode_traces {
+            assert_eq!(tr.in_memory + tr.streamed + tr.clustered, 0);
+            assert!(tr.last.is_none());
+        }
+        assert_eq!(rep.stream.streamed_calls + rep.stream.clustered_calls, 0);
+        assert_eq!(rep.schedule, Default::default());
     }
 }

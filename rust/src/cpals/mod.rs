@@ -5,4 +5,4 @@
 pub mod als;
 pub mod linalg;
 
-pub use als::{cp_als, CpAlsOptions, CpAlsReport};
+pub use als::{cp_als, CpAlsOptions, CpAlsReport, ModeTrace, StreamStats};

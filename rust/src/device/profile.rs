@@ -17,6 +17,11 @@ pub enum LinkTopology {
     /// each device owns a dedicated host link at the full `link_gbps`
     /// (one switch port per device): transfers overlap across devices
     Dedicated,
+    /// `n` independent host links (switch ports), shared round-robin by
+    /// the devices (`device % n`) — the middle ground between `Shared`
+    /// (n = 1) and `Dedicated` (n = devices), e.g. a dual-root-complex
+    /// host feeding four accelerators
+    Ports(usize),
 }
 
 /// A massively parallel accelerator profile.
@@ -166,7 +171,53 @@ impl Profile {
         match self.links {
             LinkTopology::Shared => 1,
             LinkTopology::Dedicated => self.devices.max(1),
+            LinkTopology::Ports(n) => n.max(1),
         }
+    }
+
+    /// Check every modelled rate and capacity. The streaming cost model
+    /// divides by the bandwidth fields, so a zero/NaN rate would produce
+    /// `inf`/NaN batch costs that greedy placement's NaN-tolerant sort
+    /// silently accepts — engines and schedules reject such profiles at
+    /// construction instead.
+    pub fn validate(&self) -> Result<(), String> {
+        let rate = |name: &str, v: f64| -> Result<(), String> {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("{name} must be finite and > 0, got {v}"));
+            }
+            Ok(())
+        };
+        rate("hbm_gbps", self.hbm_gbps)?;
+        rate("link_gbps", self.link_gbps)?;
+        rate("peer_gbps", self.peer_gbps)?;
+        if !self.atomic_ns.is_finite() || self.atomic_ns < 0.0 {
+            return Err(format!(
+                "atomic_ns must be finite and >= 0, got {}",
+                self.atomic_ns
+            ));
+        }
+        if !self.launch_us.is_finite() || self.launch_us < 0.0 {
+            return Err(format!(
+                "launch_us must be finite and >= 0, got {}",
+                self.launch_us
+            ));
+        }
+        if self.sms == 0 || self.slices == 0 {
+            return Err("sms and slices must be >= 1".into());
+        }
+        if self.dev_mem_bytes == 0 {
+            return Err("dev_mem_bytes must be > 0".into());
+        }
+        if self.queues == 0 {
+            return Err("queues must be >= 1".into());
+        }
+        if self.devices == 0 {
+            return Err("devices must be >= 1".into());
+        }
+        if let LinkTopology::Ports(0) = self.links {
+            return Err("Ports(n) needs n >= 1".into());
+        }
+        Ok(())
     }
 }
 
@@ -245,5 +296,62 @@ mod tests {
     fn tiny_profile_forces_oom_on_demo() {
         let t = Profile::tiny(1 << 19);
         assert!(!t.fits(50_000 * 16));
+    }
+
+    #[test]
+    fn ports_topology_sits_between_shared_and_dedicated() {
+        let p = Profile::a100()
+            .with_devices(4)
+            .with_links(LinkTopology::Ports(2));
+        assert_eq!(p.host_links(), 2);
+        assert!(p.validate().is_ok());
+        // degenerate port counts still behave
+        assert_eq!(
+            Profile::a100().with_links(LinkTopology::Ports(8)).host_links(),
+            8
+        );
+    }
+
+    #[test]
+    fn validation_accepts_every_preset() {
+        for p in Profile::all() {
+            assert!(p.validate().is_ok(), "{}", p.name);
+        }
+        assert!(Profile::tiny(1 << 16).validate().is_ok());
+        assert!(Profile::a100()
+            .with_devices(4)
+            .with_links(LinkTopology::Dedicated)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_rates() {
+        let zero_link = {
+            let mut p = Profile::a100();
+            p.link_gbps = 0.0;
+            p
+        };
+        assert!(zero_link.validate().is_err());
+        let nan_peer = {
+            let mut p = Profile::v100();
+            p.peer_gbps = f64::NAN;
+            p
+        };
+        assert!(nan_peer.validate().is_err());
+        let negative_hbm = {
+            let mut p = Profile::intel_d1();
+            p.hbm_gbps = -1.0;
+            p
+        };
+        assert!(negative_hbm.validate().is_err());
+        let zero_ports = Profile::a100().with_links(LinkTopology::Ports(0));
+        assert!(zero_ports.validate().is_err());
+        let no_queues = {
+            let mut p = Profile::tiny(1 << 16);
+            p.queues = 0;
+            p
+        };
+        assert!(no_queues.validate().is_err());
     }
 }

@@ -98,6 +98,19 @@ impl BlcoTensor {
     }
 
     pub fn from_coo_with(t: &CooTensor, config: BlcoConfig) -> Self {
+        // a zero work-group would make the batching maps loop forever, and
+        // a zero block budget degenerates the adaptive blocking — reject
+        // both up front with a readable message
+        assert!(
+            config.workgroup > 0,
+            "BlcoConfig.workgroup must be > 0 (the per-launch work-group \
+             size tiles each block; 0 would never advance)"
+        );
+        assert!(
+            config.max_block_nnz > 0,
+            "BlcoConfig.max_block_nnz must be > 0 (the adaptive-blocking \
+             nnz budget; 0 would split every non-zero into its own block)"
+        );
         let mut stages = Stages::new();
         let spec = BlcoSpec::with_budget(&t.dims, config.inblock_budget);
         let nnz = t.nnz();
@@ -396,5 +409,22 @@ mod tests {
         assert_eq!(b.blocks.len(), 0);
         assert_eq!(b.batches.len(), 0);
         assert_eq!(b.nnz, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "workgroup")]
+    fn zero_workgroup_is_rejected() {
+        // regression: workgroup 0 used to infinite-loop build_batches
+        let t = synth::uniform(&[16, 16, 16], 200, 7);
+        let cfg = BlcoConfig { workgroup: 0, ..Default::default() };
+        let _ = BlcoTensor::from_coo_with(&t, cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_block_nnz")]
+    fn zero_block_budget_is_rejected() {
+        let t = synth::uniform(&[16, 16, 16], 200, 7);
+        let cfg = BlcoConfig { max_block_nnz: 0, ..Default::default() };
+        let _ = BlcoTensor::from_coo_with(&t, cfg);
     }
 }

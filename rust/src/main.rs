@@ -48,7 +48,10 @@ fn profile(args: &Args) -> Result<Profile> {
         None => {}
         Some("shared") => p.links = LinkTopology::Shared,
         Some("dedicated") => p.links = LinkTopology::Dedicated,
-        Some(other) => bail!("unknown link topology {other:?} (shared|dedicated)"),
+        Some(other) => match other.parse::<usize>() {
+            Ok(n) if n >= 1 => p.links = LinkTopology::Ports(n),
+            _ => bail!("unknown link topology {other:?} (shared|dedicated|<n>)"),
+        },
     }
     Ok(p)
 }
@@ -152,6 +155,29 @@ fn cmd_cpals(args: &Args) -> Result<()> {
     for (i, f) in rep.fits.iter().enumerate() {
         println!("iter {:>3}: fit = {f:.6}", i + 1);
     }
+    // ---- decompose report: per-mode routing + schedule-cache activity
+    println!("\ndecompose:");
+    println!(
+        "  plans built     {} (reused {}x across {} iterations)",
+        rep.schedule.built, rep.schedule.hits, rep.iterations
+    );
+    for (n, tr) in rep.mode_traces.iter().enumerate() {
+        let last = tr.last.as_ref().map(ExecPath::summary).unwrap_or_else(|| "-".into());
+        println!(
+            "  mode {n}: in-memory {:>3} | streamed {:>3} | clustered {:>3} | last {last}",
+            tr.in_memory, tr.streamed, tr.clustered
+        );
+    }
+    if rep.stream.streamed_calls + rep.stream.clustered_calls > 0 {
+        println!(
+            "  OOM traffic     {:.1} MiB shipped (+{:.1} MiB merge), \
+             transfer {:.3} s, overall(model) {:.3} s",
+            rep.stream.bytes as f64 / (1 << 20) as f64,
+            rep.stream.merge_bytes as f64 / (1 << 20) as f64,
+            rep.stream.transfer_s,
+            rep.stream.overall_s,
+        );
+    }
     Ok(())
 }
 
@@ -168,6 +194,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
         engine.eng.profile.dev_mem_bytes as f64 / (1 << 20) as f64,
         if engine.is_oom(rank) { "OUT-OF-MEMORY" } else { "in-memory" }
     );
+    // routing is mode-aware: short modes of an OOM tensor may still fit
+    for mode in 0..t.order() {
+        println!(
+            "  mode {mode}: working set {:.1} MiB → {}",
+            engine.working_set_bytes_for(mode, rank) as f64 / (1 << 20) as f64,
+            if engine.is_oom_for(mode, rank) { "streams" } else { "in-memory" }
+        );
+    }
     let factors = random_factors(&t.dims, rank, 7);
     if engine.eng.profile.devices > 1 {
         println!(
@@ -288,7 +322,7 @@ fn main() -> Result<()> {
                 "usage: blco <datasets|convert|mttkrp|cpals|stream|runtime> \
                  [--tensor NAME | --input FILE] [--rank R] [--mode N] \
                  [--device a100|v100|intel_d1] [--devices D] \
-                 [--links shared|dedicated] [--threads T]"
+                 [--links shared|dedicated|<n>] [--threads T]"
             );
             std::process::exit(2);
         }

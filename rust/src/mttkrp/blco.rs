@@ -57,7 +57,13 @@ pub struct BlcoEngine {
 }
 
 impl BlcoEngine {
+    /// Panics when the profile's modelled rates are degenerate (zero/NaN
+    /// bandwidths would poison every downstream cost model — see
+    /// [`Profile::validate`]).
     pub fn new(t: BlcoTensor, profile: Profile) -> Self {
+        if let Err(e) = profile.validate() {
+            panic!("invalid profile {:?}: {e}", profile.name);
+        }
         BlcoEngine { t: Arc::new(t), profile, resolution: Resolution::Auto }
     }
 
@@ -68,8 +74,12 @@ impl BlcoEngine {
 
     /// The same tensor on a different (e.g. cluster) profile, sharing the
     /// payload through its `Arc` — no copy. Used by the device-count
-    /// sweeps in the benches/examples.
+    /// sweeps in the benches/examples. Panics on an invalid profile like
+    /// [`BlcoEngine::new`].
     pub fn share_with_profile(&self, profile: Profile) -> Self {
+        if let Err(e) = profile.validate() {
+            panic!("invalid profile {:?}: {e}", profile.name);
+        }
         BlcoEngine { t: Arc::clone(&self.t), profile, resolution: self.resolution }
     }
 

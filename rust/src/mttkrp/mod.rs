@@ -113,6 +113,29 @@ pub trait Mttkrp {
         threads: usize,
         counters: &Counters,
     );
+
+    /// Like [`Mttkrp::mttkrp`], additionally reporting which execution
+    /// path served the call. Single-path engines keep this default (run
+    /// and report nothing); the routing facade
+    /// ([`MttkrpEngine`](crate::coordinator::engine::MttkrpEngine))
+    /// overrides it so drivers like CP-ALS can trace per-mode paths.
+    fn mttkrp_traced(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) -> Option<crate::coordinator::engine::ExecPath> {
+        self.mttkrp(target, factors, out, threads, counters);
+        None
+    }
+
+    /// Streaming-schedule cache statistics (out-of-memory plans built vs
+    /// reused). Engines without a schedule cache report zeros.
+    fn schedule_stats(&self) -> crate::coordinator::schedule::ScheduleStats {
+        crate::coordinator::schedule::ScheduleStats::default()
+    }
 }
 
 /// Validate common preconditions shared by all engines.

@@ -186,6 +186,47 @@ fn merge_traffic_charged_and_modelled() {
 }
 
 #[test]
+fn four_devices_on_two_link_ports() {
+    // regression: the host-link array used to be indexed with the raw
+    // device id whenever links > 1, so any profile with
+    // 1 < host_links() < devices walked off the end. Devices now
+    // round-robin over the ports (`device % links`).
+    let (t, eng) = batched_engine(4, LinkTopology::Ports(2));
+    assert_eq!(eng.profile.host_links(), 2);
+    let factors = random_factors(&t.dims, 8, 19);
+    for target in 0..3 {
+        let expect = mttkrp_oracle(&t, target, &factors);
+        let mut out = Matrix::zeros(t.dims[target] as usize, 8);
+        let rep = cluster_mttkrp(&eng, target, &factors, &mut out, 4, &Counters::new());
+        assert!(out.max_abs_diff(&expect) < 1e-9, "mode {target}");
+        assert_eq!(rep.devices, 4);
+        assert_eq!(rep.batches.len(), eng.t.batches.len());
+    }
+    // two ports sit between the one-shared-link and four-dedicated-link
+    // extremes on modelled streaming makespan
+    let (_, shared) = batched_engine(4, LinkTopology::Shared);
+    let (_, dedicated) = batched_engine(4, LinkTopology::Dedicated);
+    let mut o1 = Matrix::zeros(t.dims[0] as usize, 8);
+    let mut o2 = Matrix::zeros(t.dims[0] as usize, 8);
+    let mut o3 = Matrix::zeros(t.dims[0] as usize, 8);
+    let rp = cluster_mttkrp(&eng, 0, &factors, &mut o1, 4, &Counters::new());
+    let rs = cluster_mttkrp(&shared, 0, &factors, &mut o2, 4, &Counters::new());
+    let rd = cluster_mttkrp(&dedicated, 0, &factors, &mut o3, 4, &Counters::new());
+    assert!(
+        rp.stream_s <= rs.stream_s * (1.0 + 1e-9),
+        "2 ports {} vs shared {}",
+        rp.stream_s,
+        rs.stream_s
+    );
+    assert!(
+        rp.stream_s >= rd.stream_s * (1.0 - 1e-9),
+        "2 ports {} vs dedicated {}",
+        rp.stream_s,
+        rd.stream_s
+    );
+}
+
+#[test]
 fn dedicated_links_never_slower_than_shared() {
     let (t, shared) = batched_engine(4, LinkTopology::Shared);
     let (_, dedicated) = batched_engine(4, LinkTopology::Dedicated);

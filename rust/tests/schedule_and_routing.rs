@@ -1,0 +1,201 @@
+//! End-to-end coverage of the streaming schedule subsystem and mode-aware
+//! OOM routing: the same seeded tensor decomposed through in-memory,
+//! streamed and clustered engines must produce matching fit trajectories;
+//! the schedule cache must plan once per distinct `(mode, rank)` pair (not
+//! `modes × iterations`); and a mixed tensor must route short modes
+//! in-memory while its long mode streams — all over one tensor copy.
+
+use blco::coordinator::engine::{ExecPath, MttkrpEngine};
+use blco::coordinator::schedule::{Placement, ScheduleStats, StreamSchedule};
+use blco::cpals::CpAlsOptions;
+use blco::device::Profile;
+use blco::format::blco::BlcoConfig;
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::tensor::synth;
+
+fn opts(rank: usize, iters: usize) -> CpAlsOptions {
+    CpAlsOptions { rank, max_iters: iters, tol: 0.0, threads: 4, seed: 9 }
+}
+
+#[test]
+fn oom_cpals_matches_in_memory_fit_trajectory() {
+    // one seeded tensor, three engines: big device (all in-memory), tiny
+    // device (every mode streamed), tiny 2-device cluster (every mode
+    // sharded). The decomposition must not care which path ran.
+    let t = synth::fiber_clustered(&[30, 24, 18], 4_000, 2, 0.9, 11);
+    let cfg = BlcoConfig { max_block_nnz: 256, ..Default::default() };
+    let o = opts(6, 5);
+
+    let big = MttkrpEngine::from_coo_with(&t, Profile::a100(), cfg).with_threads(4);
+    let small =
+        MttkrpEngine::from_coo_with(&t, Profile::tiny(16 * 1024), cfg).with_threads(4);
+    let cluster = MttkrpEngine::from_coo_with(
+        &t,
+        Profile::tiny(16 * 1024).with_devices(2),
+        cfg,
+    )
+    .with_threads(4);
+    assert!(!big.is_oom(o.rank));
+    assert!(small.is_oom_for(0, o.rank) && small.is_oom_for(2, o.rank));
+
+    let r_mem = big.cp_als(o);
+    let r_str = small.cp_als(o);
+    let r_clu = cluster.cp_als(o);
+
+    assert_eq!(r_mem.fits.len(), 5);
+    assert_eq!(r_str.fits.len(), 5);
+    assert_eq!(r_clu.fits.len(), 5);
+    for i in 0..5 {
+        assert!(
+            (r_mem.fits[i] - r_str.fits[i]).abs() < 1e-4,
+            "iter {i}: in-memory {} vs streamed {}",
+            r_mem.fits[i],
+            r_str.fits[i]
+        );
+        assert!(
+            (r_mem.fits[i] - r_clu.fits[i]).abs() < 1e-4,
+            "iter {i}: in-memory {} vs clustered {}",
+            r_mem.fits[i],
+            r_clu.fits[i]
+        );
+    }
+
+    // and each engine took the path its profile dictates, every call
+    for tr in &r_mem.mode_traces {
+        assert_eq!((tr.in_memory, tr.streamed, tr.clustered), (5, 0, 0));
+    }
+    for tr in &r_str.mode_traces {
+        assert_eq!((tr.in_memory, tr.streamed, tr.clustered), (0, 5, 0));
+        assert!(matches!(tr.last, Some(ExecPath::Streamed(_))));
+    }
+    for tr in &r_clu.mode_traces {
+        assert_eq!((tr.in_memory, tr.streamed, tr.clustered), (0, 0, 5));
+        assert!(matches!(tr.last, Some(ExecPath::Clustered(_))));
+    }
+    assert!(r_str.stream.bytes > 0);
+    assert!(r_clu.stream.merge_bytes > 0, "cluster runs charge merge traffic");
+}
+
+#[test]
+fn cpals_plans_once_per_distinct_mode_rank_pair() {
+    let t = synth::fiber_clustered(&[40, 30, 20], 5_000, 2, 1.0, 31);
+    let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+    let engine =
+        MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg).with_threads(4);
+    for m in 0..3 {
+        assert!(engine.is_oom_for(m, 8), "mode {m} must stream");
+    }
+
+    let iters = 6;
+    let rep = engine.cp_als(opts(8, iters));
+    assert_eq!(rep.iterations, iters);
+    assert_eq!(
+        rep.schedule,
+        ScheduleStats { built: 3, hits: 3 * (iters - 1) },
+        "one plan per (mode, rank), every later iteration a cache hit"
+    );
+    assert_eq!(rep.stream.streamed_calls, 3 * iters);
+
+    // a second decomposition at the same rank reuses the same 3 plans...
+    let rep2 = engine.cp_als(opts(8, 2));
+    assert_eq!(rep2.schedule, ScheduleStats { built: 0, hits: 6 });
+    // ...and a different rank plans 3 fresh ones
+    let rep3 = engine.cp_als(opts(4, 2));
+    assert_eq!(rep3.schedule, ScheduleStats { built: 3, hits: 3 });
+}
+
+#[test]
+fn cold_engine_plans_every_iteration() {
+    // the pre-cache behavior, kept reachable as the bench baseline: plans
+    // built must be modes × iterations and results must not change
+    let t = synth::fiber_clustered(&[40, 30, 20], 5_000, 2, 1.0, 31);
+    let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+    let cached =
+        MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg).with_threads(4);
+    let cold = MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg)
+        .with_threads(4)
+        .with_schedule_caching(false);
+
+    let iters = 4;
+    let rc = cached.cp_als(opts(8, iters));
+    let rf = cold.cp_als(opts(8, iters));
+    assert_eq!(rf.schedule, ScheduleStats { built: 3 * iters, hits: 0 });
+    for i in 0..iters {
+        assert!(
+            (rc.fits[i] - rf.fits[i]).abs() < 1e-5,
+            "caching must not change the math (iter {i}): {} vs {}",
+            rc.fits[i],
+            rf.fits[i]
+        );
+    }
+}
+
+#[test]
+fn mixed_tensor_routes_per_mode_through_cpals() {
+    // one long mode (streams) + two short modes (fit in-memory): the
+    // mode-aware facade mixes paths inside a single ALS sweep on one
+    // tensor copy
+    let t = synth::uniform(&[4096, 8, 8], 2_000, 3);
+    let cfg = BlcoConfig { max_block_nnz: 256, ..Default::default() };
+    let engine =
+        MttkrpEngine::from_coo_with(&t, Profile::tiny(800 * 1024), cfg).with_threads(4);
+    let rank = 16;
+    assert!(engine.is_oom(rank), "conservative classification: OOM");
+    assert!(engine.is_oom_for(0, rank));
+    assert!(!engine.is_oom_for(1, rank) && !engine.is_oom_for(2, rank));
+
+    let iters = 3;
+    let rep = engine.cp_als(opts(rank, iters));
+    assert_eq!(
+        (rep.mode_traces[0].streamed, rep.mode_traces[0].in_memory),
+        (iters, 0),
+        "long mode streams every iteration"
+    );
+    for m in 1..3 {
+        assert_eq!(
+            (rep.mode_traces[m].in_memory, rep.mode_traces[m].streamed),
+            (iters, 0),
+            "short mode {m} stays in-memory"
+        );
+    }
+    // only the streamed mode needed a plan, built exactly once
+    assert_eq!(rep.schedule, ScheduleStats { built: 1, hits: iters - 1 });
+}
+
+#[test]
+fn prebuilt_schedule_reuse_is_exact_across_iterations() {
+    // the schedule consumed by iteration 10 is the *same object* built at
+    // iteration 1 (Arc identity), and replanning from scratch produces an
+    // identical plan — so reuse can never drift from cold planning
+    let t = synth::fiber_clustered(&[40, 30, 20], 5_000, 2, 1.0, 31);
+    let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+    let engine = MttkrpEngine::from_coo_with(&t, Profile::tiny(32 * 1024), cfg);
+    let a = engine.schedule(0, 8);
+    let b = engine.schedule(0, 8);
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+
+    let beng = BlcoEngine::new(
+        blco::format::blco::BlcoTensor::from_coo_with(&t, cfg),
+        Profile::tiny(32 * 1024),
+    );
+    let fresh = StreamSchedule::build(&beng, 0, 8, Placement::Greedy);
+    assert_eq!(a.assign, fresh.assign);
+    assert_eq!(a.queue_of, fresh.queue_of);
+    assert_eq!(a.link_of, fresh.link_of);
+    assert_eq!(a.bytes, fresh.bytes);
+    assert_eq!(a.transfer_s, fresh.transfer_s);
+}
+
+#[test]
+fn direct_mttkrp_calls_agree_with_oracle_on_mixed_routing() {
+    let t = synth::uniform(&[4096, 8, 8], 2_000, 3);
+    let cfg = BlcoConfig { max_block_nnz: 256, ..Default::default() };
+    let engine = MttkrpEngine::from_coo_with(&t, Profile::tiny(800 * 1024), cfg);
+    let factors = random_factors(&t.dims, 16, 7);
+    for target in 0..3 {
+        let (m, _) = engine.mttkrp(target, &factors);
+        let expect = mttkrp_oracle(&t, target, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-9, "mode {target}");
+    }
+}
