@@ -83,16 +83,32 @@ impl MttkrpEngine {
     }
 
     pub fn from_coo_with(t: &CooTensor, profile: Profile, cfg: BlcoConfig) -> Self {
-        let blco = BlcoTensor::from_coo_with(t, cfg);
+        Self::from_blco(Arc::new(BlcoTensor::from_coo_with(t, cfg)), profile)
+    }
+
+    /// Construct over an already-built, possibly *shared* BLCO tensor: the
+    /// payload rides in through its `Arc` with no copy, which is how the
+    /// serving registry ([`crate::service`]) keeps one resident tensor
+    /// serving many concurrent jobs (and how benches sweep device counts
+    /// without rebuilding). Shape and Frobenius norm are recovered from
+    /// the blocks, so the COO form does not need to stay alive.
+    pub fn from_blco(t: Arc<BlcoTensor>, profile: Profile) -> Self {
+        let dims = t.dims().to_vec();
+        let norm_x = t.norm();
         MttkrpEngine {
-            eng: BlcoEngine::new(blco, profile),
-            dims: t.dims.clone(),
-            norm_x: t.norm(),
+            eng: BlcoEngine::from_arc(t, profile),
+            dims,
+            norm_x,
             threads: default_threads(),
             counters: Counters::new(),
             schedules: ScheduleCache::new(),
             cache_schedules: true,
         }
+    }
+
+    /// The shared tensor payload (cloning the `Arc`, never the data).
+    pub fn tensor(&self) -> Arc<BlcoTensor> {
+        Arc::clone(&self.eng.t)
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
@@ -148,6 +164,60 @@ impl MttkrpEngine {
     /// via [`Self::is_oom_for`].)
     pub fn is_oom(&self, rank: usize) -> bool {
         !self.eng.profile.fits(self.working_set_bytes(rank))
+    }
+
+    /// Bytes one streamed mode-`target`, rank-`rank` job keeps resident on
+    /// device for its whole run: every factor matrix plus the target
+    /// mode's output. (The tensor itself streams through and is excluded.)
+    pub fn resident_job_bytes(&self, target: usize, rank: usize) -> usize {
+        let factors: usize =
+            self.dims.iter().map(|&d| d as usize * rank * 8).sum();
+        factors + self.dims[target] as usize * rank * 8
+    }
+
+    /// The double-buffered batch staging window of the streaming pipeline:
+    /// one batch computing while the next one lands.
+    fn stream_buffer_bytes(&self) -> usize {
+        let max_batch = (0..self.eng.t.batches.len())
+            .map(|b| crate::coordinator::streamer::batch_bytes(&self.eng.t, b))
+            .max()
+            .unwrap_or(0);
+        2 * max_batch
+    }
+
+    /// The *minimum* resident bytes a streamed mode-`target` MTTKRP at
+    /// `rank` needs on device: [`Self::resident_job_bytes`] plus the
+    /// double-buffered batch window. When even this floor exceeds device
+    /// memory the request cannot be served at all — the admission
+    /// controller's reject threshold ([`crate::service::admission`]).
+    pub fn streaming_floor_bytes(&self, target: usize, rank: usize) -> usize {
+        self.resident_job_bytes(target, rank) + self.stream_buffer_bytes()
+    }
+
+    /// How many same-`(target, rank)` jobs one fused streamed pass can
+    /// co-host within device memory: `k` jobs keep `k` factor/output sets
+    /// resident but share one batch double buffer, so
+    /// `k × resident_job_bytes + buffer ≤ dev_mem_bytes`. At least 1
+    /// whenever the job is admissible at all (the fused scheduler's group
+    /// cap — fusion must not overcommit what admission guaranteed).
+    pub fn fused_jobs_capacity(&self, target: usize, rank: usize) -> usize {
+        let per_job = self.resident_job_bytes(target, rank);
+        if per_job == 0 {
+            return usize::MAX;
+        }
+        let budget = self
+            .eng
+            .profile
+            .dev_mem_bytes
+            .saturating_sub(self.stream_buffer_bytes());
+        (budget / per_job).max(1)
+    }
+
+    /// Can a mode-`target` MTTKRP at `rank` be served at all — in memory
+    /// or streamed? `false` means even the streaming floor does not fit.
+    pub fn can_serve(&self, target: usize, rank: usize) -> bool {
+        !self.is_oom_for(target, rank)
+            || self.eng.profile.fits(self.streaming_floor_bytes(target, rank))
     }
 
     /// The (memoized) streaming plan for `(target, rank)`. Built on first
@@ -427,6 +497,66 @@ mod tests {
         let stats = engine.schedule_stats();
         assert_eq!(stats.built, 2, "cold mode plans per call");
         assert_eq!(stats.hits, 0);
+    }
+
+    #[test]
+    fn from_blco_shares_payload_and_recovers_metadata() {
+        let t = synth::uniform(&[50, 40, 30], 4_000, 6);
+        let shared = Arc::new(crate::format::blco::BlcoTensor::from_coo(&t));
+        let a = MttkrpEngine::from_blco(Arc::clone(&shared), Profile::a100());
+        let b = MttkrpEngine::from_blco(Arc::clone(&shared), Profile::v100());
+        assert!(Arc::ptr_eq(&a.tensor(), &shared), "no payload copy");
+        assert!(Arc::ptr_eq(&a.tensor(), &b.tensor()));
+        assert_eq!(a.dims, t.dims);
+        assert!((a.norm_x - t.norm()).abs() < 1e-9);
+        // same answers as the from_coo construction
+        let reference = MttkrpEngine::from_coo(&t, Profile::a100());
+        let factors = random_factors(&t.dims, 8, 9);
+        let (ma, _) = a.mttkrp(1, &factors);
+        let (mr, _) = reference.mttkrp(1, &factors);
+        assert!(ma.max_abs_diff(&mr) < 1e-12);
+    }
+
+    #[test]
+    fn streaming_floor_sits_below_working_set_and_gates_serving() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(48 * 1024), cfg);
+        let rank = 8;
+        for m in 0..3 {
+            assert!(
+                engine.streaming_floor_bytes(m, rank)
+                    < engine.working_set_bytes_for(m, rank),
+                "the floor must not count the streamed tensor"
+            );
+        }
+        // this tensor is OOM yet streamable on 48 KiB
+        assert!(engine.is_oom_for(0, rank));
+        assert!(engine.can_serve(0, rank));
+        // on a device too small even for factors + output, serving fails
+        let starved =
+            MttkrpEngine::from_blco(engine.tensor(), Profile::tiny(4 * 1024));
+        assert!(!starved.can_serve(0, rank));
+    }
+
+    #[test]
+    fn fused_capacity_follows_the_memory_budget() {
+        let t = synth::uniform(&[60, 50, 40], 8_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let engine =
+            MttkrpEngine::from_coo_with(&t, Profile::tiny(48 * 1024), cfg);
+        let rank = 8;
+        let per_job = engine.resident_job_bytes(0, rank);
+        let buffer = engine.streaming_floor_bytes(0, rank) - per_job;
+        let cap = engine.fused_jobs_capacity(0, rank);
+        assert!(cap >= 1, "admissible jobs always fit alone");
+        // the cap saturates the budget without exceeding it
+        assert!(cap * per_job + buffer <= 48 * 1024);
+        assert!((cap + 1) * per_job + buffer > 48 * 1024);
+        // doubling memory at least keeps (and here grows) the capacity
+        let roomy = MttkrpEngine::from_blco(engine.tensor(), Profile::tiny(96 * 1024));
+        assert!(roomy.fused_jobs_capacity(0, rank) > cap);
     }
 
     #[test]

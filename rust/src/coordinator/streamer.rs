@@ -93,6 +93,10 @@ pub fn stream_mttkrp(
 /// Stream with a prebuilt plan: per-batch wire bytes, transfer times and
 /// the queue skeleton all come from `sched`; only the kernels themselves
 /// (and their exact counters) run here.
+///
+/// Thin wrapper over [`stream_mttkrp_fused`] with a single job — identical
+/// operation order, so prebuilt-plan parity with [`stream_mttkrp`] holds
+/// bit-for-bit.
 pub fn stream_mttkrp_scheduled(
     eng: &BlcoEngine,
     sched: &StreamSchedule,
@@ -101,10 +105,47 @@ pub fn stream_mttkrp_scheduled(
     threads: usize,
     counters: &Counters,
 ) -> StreamReport {
+    stream_mttkrp_fused(
+        eng,
+        sched,
+        &[factors],
+        std::slice::from_mut(out),
+        threads,
+        counters,
+    )
+}
+
+/// Stream *several* same-`(target, rank)` MTTKRP jobs through one pass over
+/// the tensor — the serving layer's batching primitive
+/// ([`crate::service`]): each BLCO batch is shipped over the host link
+/// **once** and every job's kernel runs on it while it is resident, so a
+/// fused group of `k` jobs pays the Figure-10 interconnect cost once
+/// instead of `k` times. `factor_sets[j]` and `outs[j]` are job `j`'s
+/// factors and output; all jobs must match the schedule's rank.
+///
+/// The pipeline clock is the single-device streamer's — one serialized
+/// link, one serialized compute engine, queue reservations from the plan —
+/// with each batch's compute slot holding the *sum* of the group's kernels.
+pub fn stream_mttkrp_fused(
+    eng: &BlcoEngine,
+    sched: &StreamSchedule,
+    factor_sets: &[&[Matrix]],
+    outs: &mut [Matrix],
+    threads: usize,
+    counters: &Counters,
+) -> StreamReport {
     let profile: &Profile = &eng.profile;
     let target = sched.target;
     let queues = sched.queues.max(1);
     let nbatches = eng.t.batches.len();
+    assert!(!factor_sets.is_empty(), "fused stream needs at least one job");
+    assert_eq!(
+        factor_sets.len(),
+        outs.len(),
+        "one output per fused job ({} factor sets, {} outputs)",
+        factor_sets.len(),
+        outs.len()
+    );
     assert_eq!(
         sched.devices, 1,
         "single-device streamer given a {}-device schedule (use \
@@ -116,13 +157,17 @@ pub fn stream_mttkrp_scheduled(
         nbatches,
         "schedule was planned for a different tensor"
     );
-    assert_eq!(
-        sched.rank,
-        factors[0].cols,
-        "schedule was planned for a different rank"
-    );
+    for f in factor_sets {
+        assert_eq!(
+            sched.rank,
+            f[0].cols,
+            "schedule was planned for a different rank"
+        );
+    }
     let t0 = std::time::Instant::now();
-    out.fill(0.0);
+    for out in outs.iter_mut() {
+        out.fill(0.0);
+    }
 
     let mut traces = Vec::with_capacity(nbatches);
 
@@ -138,10 +183,13 @@ pub fn stream_mttkrp_scheduled(
         let bytes = sched.bytes[b];
         let tr = sched.transfer_s[b];
 
-        // real computation of this batch, with exact per-batch counters
+        // real computation of this batch for every fused job, with exact
+        // per-batch counters (the wire bytes above are charged once)
         let batch_counters = Counters::new();
         let w0 = std::time::Instant::now();
-        eng.mttkrp_batch(b, target, factors, out, threads, &batch_counters);
+        for (factors, out) in factor_sets.iter().zip(outs.iter_mut()) {
+            eng.mttkrp_batch(b, target, factors, out, threads, &batch_counters);
+        }
         let wall_s = w0.elapsed().as_secs_f64();
         let snap = batch_counters.snapshot();
         counters.add(&snap);
@@ -243,6 +291,66 @@ mod tests {
         assert_eq!(ra.transfer_s, rb.transfer_s, "identical modelled transfers");
         assert_eq!(rb.transfer_s, rb2.transfer_s, "schedule reuse is stable");
         assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn fused_group_ships_bytes_once_and_stays_correct() {
+        // k fused jobs: every output matches its own oracle, wire bytes are
+        // charged once (not k times), and the fused pipeline is strictly
+        // faster than running the k jobs back-to-back
+        let (t, eng) = small_batched_engine();
+        let rank = 8;
+        let seeds = [31u64, 37, 41];
+        let factor_sets: Vec<Vec<Matrix>> =
+            seeds.iter().map(|&s| random_factors(&t.dims, rank, s)).collect();
+        let refs: Vec<&[Matrix]> = factor_sets.iter().map(|f| f.as_slice()).collect();
+        let mut outs: Vec<Matrix> =
+            seeds.iter().map(|_| Matrix::zeros(t.dims[0] as usize, rank)).collect();
+        let sched = StreamSchedule::single_device(&eng, 0, rank);
+        let fused =
+            stream_mttkrp_fused(&eng, &sched, &refs, &mut outs, 4, &Counters::new());
+        let mut serial_overall = 0.0;
+        let mut serial_bytes = 0usize;
+        for (factors, out) in factor_sets.iter().zip(&outs) {
+            let expect = mttkrp_oracle(&t, 0, factors);
+            assert!(out.max_abs_diff(&expect) < 1e-9);
+            let mut solo = Matrix::zeros(t.dims[0] as usize, rank);
+            let rep = stream_mttkrp_scheduled(
+                &eng, &sched, factors, &mut solo, 4, &Counters::new(),
+            );
+            serial_overall += rep.overall_s;
+            serial_bytes += rep.bytes;
+        }
+        assert_eq!(fused.bytes * seeds.len(), serial_bytes, "payload shipped once");
+        assert!(
+            fused.overall_s < serial_overall,
+            "fused {} vs serial {}",
+            fused.overall_s,
+            serial_overall
+        );
+    }
+
+    #[test]
+    fn fused_with_one_job_is_the_scheduled_path() {
+        let (t, eng) = small_batched_engine();
+        let factors = random_factors(&t.dims, 8, 43);
+        let sched = StreamSchedule::single_device(&eng, 2, 8);
+        let mut a = Matrix::zeros(t.dims[2] as usize, 8);
+        let mut b = Matrix::zeros(t.dims[2] as usize, 8);
+        let ra =
+            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut a, 4, &Counters::new());
+        let rb = stream_mttkrp_fused(
+            &eng,
+            &sched,
+            &[&factors],
+            std::slice::from_mut(&mut b),
+            4,
+            &Counters::new(),
+        );
+        assert_eq!(ra.bytes, rb.bytes);
+        assert_eq!(ra.transfer_s, rb.transfer_s);
+        assert_eq!(ra.overall_s, rb.overall_s, "same modelled clock");
+        assert_eq!(a.data, b.data, "bit-for-bit identical output");
     }
 
     #[test]

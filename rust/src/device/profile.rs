@@ -166,6 +166,21 @@ impl Profile {
         self
     }
 
+    /// Same part, different device-memory budget (builder for serving
+    /// scenarios that need a specific in-/out-of-memory mix without
+    /// building multi-GB tensors).
+    pub fn with_memory(mut self, dev_mem_bytes: usize) -> Self {
+        self.dev_mem_bytes = dev_mem_bytes;
+        self
+    }
+
+    /// One device of this part. The serving registry plans per-device
+    /// streaming pipelines, so its engines always see a single-device
+    /// profile even when the fleet has many ([`crate::service`]).
+    pub fn single_device(&self) -> Self {
+        self.clone().with_devices(1)
+    }
+
     /// Number of independent host links the cluster can drive at once.
     pub fn host_links(&self) -> usize {
         match self.links {
@@ -245,6 +260,17 @@ mod tests {
         let d = p.with_links(LinkTopology::Dedicated);
         assert_eq!(d.host_links(), 4);
         assert_eq!(Profile::v100().with_devices(0).devices, 1);
+    }
+
+    #[test]
+    fn memory_and_single_device_builders() {
+        let p = Profile::a100().with_devices(4).with_memory(1 << 20);
+        assert_eq!(p.dev_mem_bytes, 1 << 20);
+        let s = p.single_device();
+        assert_eq!(s.devices, 1);
+        assert_eq!(s.dev_mem_bytes, 1 << 20);
+        assert_eq!(s.name, p.name);
+        assert!(s.validate().is_ok());
     }
 
     #[test]

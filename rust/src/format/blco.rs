@@ -245,6 +245,20 @@ impl BlcoTensor {
         &self.spec.dims
     }
 
+    /// Frobenius norm of the stored values. Construction preserves values
+    /// exactly (reordering only), so this equals the source
+    /// [`CooTensor::norm`] — which lets callers that hold only the
+    /// `Arc<BlcoTensor>` (the serving registry) drive CP-ALS without
+    /// keeping the COO form alive.
+    pub fn norm(&self) -> f64 {
+        self.blocks
+            .iter()
+            .flat_map(|b| &b.vals)
+            .map(|v| v * v)
+            .sum::<f64>()
+            .sqrt()
+    }
+
     /// Total bytes of the on-device representation: per-nnz payload plus
     /// per-block key metadata and batching maps.
     pub fn footprint_bytes(&self) -> usize {
@@ -400,6 +414,14 @@ mod tests {
         let t = synth::uniform(&[64, 64, 64], 1_000, 6);
         let b = BlcoTensor::from_coo(&t);
         assert!(b.footprint_bytes() >= t.nnz() * 16);
+    }
+
+    #[test]
+    fn norm_matches_coo() {
+        let t = synth::uniform(&[64, 48, 32], 2_000, 8);
+        let b = BlcoTensor::from_coo(&t);
+        assert!((b.norm() - t.norm()).abs() < 1e-9);
+        assert_eq!(BlcoTensor::from_coo(&CooTensor::new(&[4, 4, 4])).norm(), 0.0);
     }
 
     #[test]

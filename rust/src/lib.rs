@@ -15,6 +15,10 @@
 //! * **L2/L1 (build time, `python/`)** — the per-block MTTKRP compute graph
 //!   and its Pallas kernel, AOT-lowered to HLO text and executed from the
 //!   request path through the PJRT bridge in [`runtime`].
+//! * **Serving ([`service`])** — a multi-tenant decomposition front end
+//!   over shared tensor payloads: admission control on the engine's exact
+//!   memory accounting, weighted-round-robin fair scheduling, and fused
+//!   streaming of compatible jobs over one tensor copy.
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -33,6 +37,7 @@ pub mod linear;
 pub mod mttkrp;
 pub mod ops;
 pub mod runtime;
+pub mod service;
 pub mod tensor;
 pub mod util;
 

@@ -5,6 +5,9 @@
 //!   mttkrp    — run mode-n (or all-mode) MTTKRP on a preset/file
 //!   cpals     — run CP-ALS end to end, print the fit trace
 //!   stream    — force the out-of-memory streaming path and report overlap
+//!   serve     — replay a synthetic mixed-tenant trace through the
+//!               multi-tenant serving layer (admission, WRR fairness,
+//!               fused streaming) and compare against the naive baseline
 //!   datasets  — list the built-in scaled dataset presets
 //!   runtime   — run the AOT/PJRT path on the demo preset (needs artifacts)
 //!
@@ -23,7 +26,11 @@ use blco::device::model::throughput_tbps;
 use blco::device::{LinkTopology, Profile};
 use blco::format::blco::BlcoConfig;
 use blco::mttkrp::oracle::random_factors;
-use blco::tensor::{coo::CooTensor, datasets, io, stats};
+use blco::service::{
+    serve, synthetic_trace, ServeOptions, ServiceReport, Tenant, TensorRegistry,
+    TraceConfig,
+};
+use blco::tensor::{coo::CooTensor, datasets, io, stats, synth};
 use blco::util::cli::Args;
 use blco::util::pool::default_threads;
 use blco::util::timer::fmt_duration;
@@ -278,6 +285,142 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_service_report(label: &str, tenants: &[Tenant], rep: &ServiceReport) {
+    println!("\n[{label}] per-tenant:");
+    let tbl = Table::new(&[10, 7, 5, 5, 5, 6, 12, 12, 6]);
+    tbl.header(&[
+        "tenant", "weight", "jobs", "done", "rej", "fused", "mean lat", "max lat", "maxQ",
+    ]);
+    for t in tenants {
+        if let Some(s) = rep.per_tenant.get(&t.name) {
+            tbl.row(&[
+                t.name.clone(),
+                s.weight.to_string(),
+                s.submitted.to_string(),
+                s.completed.to_string(),
+                s.rejected.to_string(),
+                s.fused.to_string(),
+                format!("{:.2} ms", s.mean_latency_s * 1e3),
+                format!("{:.2} ms", s.max_latency_s * 1e3),
+                s.max_queue_depth.to_string(),
+            ]);
+        }
+    }
+    println!(
+        "[{label}] makespan {:.3} ms | {} devices | {} fused group(s) covering {} job(s) \
+         | plans built {} reused {} (hit rate {:.0}%) | {:.1} MiB shipped | wall {:.0} ms",
+        rep.makespan_s * 1e3,
+        rep.devices,
+        rep.fused_groups,
+        rep.fused_jobs,
+        rep.schedule.built,
+        rep.schedule.hits,
+        rep.cache_hit_rate() * 100.0,
+        rep.bytes_shipped as f64 / (1 << 20) as f64,
+        rep.wall_s * 1e3,
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let base = profile(args)?;
+    let fleet = base.devices.max(1);
+    let threads: usize = args.parse_or("threads", default_threads());
+    // shrink device memory so the demo mixes one in-memory and one
+    // streamed tensor without building multi-GB payloads
+    let mem_kib: usize = args.parse_or("mem-kib", 4096);
+    let reg_profile = base.with_memory(mem_kib << 10);
+
+    eprintln!("building tensors ...");
+    let hot = synth::uniform(&[200, 150, 100], 30_000, 11);
+    let cold = synth::fiber_clustered(&[2_000, 1_200, 900], 400_000, 2, 0.7, 13);
+    let mut reg = TensorRegistry::new(reg_profile.clone());
+    reg.register("hot", &hot, BlcoConfig::default());
+    reg.register(
+        "cold",
+        &cold,
+        BlcoConfig { max_block_nnz: 1 << 15, ..Default::default() },
+    );
+    println!(
+        "registry: {} tensors, {:.1} MiB resident vs {:.1} MiB device memory",
+        reg.len(),
+        reg.resident_bytes() as f64 / (1 << 20) as f64,
+        reg.profile().dev_mem_bytes as f64 / (1 << 20) as f64,
+    );
+    for name in reg.names() {
+        let eng = &reg.get(&name).unwrap().engine;
+        let rank = 16;
+        let routes: Vec<String> = (0..eng.dims.len())
+            .map(|m| {
+                if eng.is_oom_for(m, rank) { "streamed".into() } else { "in-memory".into() }
+            })
+            .collect();
+        println!("  {name}: dims {:?}, rank-{rank} routes {routes:?}", eng.dims);
+    }
+
+    let cfg = TraceConfig {
+        tenants: args.parse_or("tenants", 3),
+        jobs: args.parse_or("jobs", 30),
+        mean_gap_s: args.parse_or::<f64>("gap-us", 50.0) * 1e-6,
+        ranks: vec![16],
+        cpals_every: args.parse_or("cpals-every", 12),
+        seed: args.parse_or("seed", 0x5EB0),
+    };
+    let (tenants, jobs) = synthetic_trace(&reg, &cfg);
+    println!(
+        "\nreplaying {} jobs from {} tenants over a {}-device fleet ({} threads)",
+        jobs.len(),
+        tenants.len(),
+        fleet,
+        threads,
+    );
+
+    // full policy: WRR fairness + fused streaming
+    let rep_b = serve(&reg, &tenants, &jobs, &ServeOptions::batched(fleet, threads));
+    print_service_report("batched+fair", &tenants, &rep_b);
+
+    // ablation baseline: one job at a time, global FIFO, on a fresh
+    // registry sharing the same payload Arcs (fresh schedule caches)
+    let mut reg_naive = TensorRegistry::new(reg_profile);
+    for name in reg.names() {
+        reg_naive.register_shared(&name, reg.get(&name).unwrap().engine.tensor());
+    }
+    let rep_n = serve(&reg_naive, &tenants, &jobs, &ServeOptions::naive(fleet, threads));
+    print_service_report("naive FIFO", &tenants, &rep_n);
+
+    println!(
+        "\nbatched+fair vs naive: makespan {:.3} ms vs {:.3} ms ({:.2}x), \
+         shipped {:.1} vs {:.1} MiB",
+        rep_b.makespan_s * 1e3,
+        rep_n.makespan_s * 1e3,
+        rep_n.makespan_s / rep_b.makespan_s.max(1e-12),
+        rep_b.bytes_shipped as f64 / (1 << 20) as f64,
+        rep_n.bytes_shipped as f64 / (1 << 20) as f64,
+    );
+
+    if args.flag("check") {
+        // the acceptance-criteria observables, hard-asserted for CI
+        if rep_b.rejected() != 0 {
+            bail!("expected zero rejections, got {}", rep_b.rejected());
+        }
+        if rep_b.schedule.hits == 0 {
+            bail!("expected schedule-cache hits for repeated (tensor, mode, rank) jobs");
+        }
+        if rep_b.fused_groups == 0 {
+            bail!("expected at least one fused streamed group");
+        }
+        if rep_b.makespan_s >= rep_n.makespan_s {
+            bail!(
+                "batched scheduling must beat the one-job-at-a-time baseline: \
+                 {} vs {}",
+                rep_b.makespan_s,
+                rep_n.makespan_s
+            );
+        }
+        println!("check: OK (no rejections, cache hits, fusion, makespan win)");
+    }
+    Ok(())
+}
+
 fn cmd_runtime(args: &Args) -> Result<()> {
     let t = load_tensor(args)?;
     let rank: usize = args.parse_or("rank", 32);
@@ -313,16 +456,19 @@ fn main() -> Result<()> {
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("cpals") => cmd_cpals(&args),
         Some("stream") => cmd_stream(&args),
+        Some("serve") => cmd_serve(&args),
         Some("runtime") => cmd_runtime(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: blco <datasets|convert|mttkrp|cpals|stream|runtime> \
+                "usage: blco <datasets|convert|mttkrp|cpals|stream|serve|runtime> \
                  [--tensor NAME | --input FILE] [--rank R] [--mode N] \
                  [--device a100|v100|intel_d1] [--devices D] \
-                 [--links shared|dedicated|<n>] [--threads T]"
+                 [--links shared|dedicated|<n>] [--threads T]\n\
+                 serve: [--tenants N] [--jobs J] [--gap-us G] [--mem-kib M] \
+                 [--cpals-every K] [--seed S] [--check]"
             );
             std::process::exit(2);
         }

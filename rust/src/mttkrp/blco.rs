@@ -61,10 +61,18 @@ impl BlcoEngine {
     /// bandwidths would poison every downstream cost model — see
     /// [`Profile::validate`]).
     pub fn new(t: BlcoTensor, profile: Profile) -> Self {
+        Self::from_arc(Arc::new(t), profile)
+    }
+
+    /// Construct over an *already shared* tensor payload — the serving
+    /// registry's entry point: many engines (and therefore many concurrent
+    /// jobs) reference one resident BLCO copy through the same `Arc`.
+    /// Panics on an invalid profile like [`BlcoEngine::new`].
+    pub fn from_arc(t: Arc<BlcoTensor>, profile: Profile) -> Self {
         if let Err(e) = profile.validate() {
             panic!("invalid profile {:?}: {e}", profile.name);
         }
-        BlcoEngine { t: Arc::new(t), profile, resolution: Resolution::Auto }
+        BlcoEngine { t, profile, resolution: Resolution::Auto }
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {

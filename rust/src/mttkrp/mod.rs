@@ -138,7 +138,11 @@ pub trait Mttkrp {
     }
 }
 
-/// Validate common preconditions shared by all engines.
+/// Validate common preconditions shared by all engines. Panics (with a
+/// message naming the violated contract) on: target out of range, missing
+/// or extra factor matrices, rank over [`MAX_RANK`], per-factor row/column
+/// mismatches, and wrongly shaped outputs — the negative paths are pinned
+/// by `shape_contract` tests below so they cannot silently regress.
 pub(crate) fn check_shapes(
     dims: &[u64],
     target: usize,
@@ -156,4 +160,91 @@ pub(crate) fn check_shapes(
     assert_eq!(out.rows as u64, dims[target], "out rows");
     assert_eq!(out.cols, rank, "out cols");
     rank
+}
+
+#[cfg(test)]
+mod shape_contract {
+    use super::*;
+
+    const DIMS: [u64; 3] = [4, 3, 2];
+
+    fn factors(rank: usize) -> Vec<Matrix> {
+        DIMS.iter().map(|&d| Matrix::zeros(d as usize, rank)).collect()
+    }
+
+    #[test]
+    fn well_formed_inputs_pass_and_return_rank() {
+        let out = Matrix::zeros(3, 8);
+        assert_eq!(check_shapes(&DIMS, 1, &factors(8), &out), 8);
+        // the register-budget boundary itself is legal
+        let out = Matrix::zeros(4, MAX_RANK);
+        assert_eq!(check_shapes(&DIMS, 0, &factors(MAX_RANK), &out), MAX_RANK);
+    }
+
+    #[test]
+    #[should_panic(expected = "target 3 out of range")]
+    fn target_out_of_range() {
+        let out = Matrix::zeros(2, 4);
+        check_shapes(&DIMS, 3, &factors(4), &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "one factor per mode")]
+    fn missing_factor() {
+        let out = Matrix::zeros(4, 4);
+        let two = factors(4)[..2].to_vec();
+        check_shapes(&DIMS, 0, &two, &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "> MAX_RANK")]
+    fn rank_over_register_budget() {
+        let out = Matrix::zeros(4, MAX_RANK + 1);
+        check_shapes(&DIMS, 0, &factors(MAX_RANK + 1), &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "factor 1 rows")]
+    fn wrong_factor_rows() {
+        let out = Matrix::zeros(4, 4);
+        let mut f = factors(4);
+        f[1] = Matrix::zeros(99, 4);
+        check_shapes(&DIMS, 0, &f, &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "factor 2 cols")]
+    fn mismatched_factor_cols() {
+        let out = Matrix::zeros(4, 4);
+        let mut f = factors(4);
+        f[2] = Matrix::zeros(2, 5);
+        check_shapes(&DIMS, 0, &f, &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "out rows")]
+    fn wrong_output_rows() {
+        let out = Matrix::zeros(1, 4);
+        check_shapes(&DIMS, 0, &factors(4), &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "out cols")]
+    fn wrong_output_cols() {
+        let out = Matrix::zeros(4, 5);
+        check_shapes(&DIMS, 0, &factors(4), &out);
+    }
+
+    #[test]
+    #[should_panic(expected = "target 0 out of range")]
+    fn engines_surface_the_contract() {
+        // the panic reaches callers through a real engine entry point
+        use crate::device::Counters;
+        use crate::mttkrp::coo::CooAtomicEngine;
+        use crate::tensor::coo::CooTensor;
+        let t = CooTensor::new(&[]);
+        let eng = CooAtomicEngine::new(t);
+        let mut out = Matrix::zeros(0, 1);
+        eng.mttkrp(0, &[], &mut out, 1, &Counters::new());
+    }
 }

@@ -1,0 +1,216 @@
+//! Admission control: decide per job — **before** any work is queued —
+//! whether it runs on the in-memory unified kernel, queues for a streamed
+//! slot, or is rejected outright with a structured error. Decisions reuse
+//! the engine's exact accounting: `working_set_bytes_for`/`is_oom_for`
+//! for the in-memory test, and the new
+//! [`streaming_floor_bytes`](crate::coordinator::engine::MttkrpEngine::streaming_floor_bytes)
+//! (factors + target output + a double-buffered batch) for the
+//! can-it-stream-at-all test. Rejection is a value, never a panic: the
+//! serving loop must survive hostile or oversized requests.
+
+use std::fmt;
+
+use crate::coordinator::engine::MttkrpEngine;
+use crate::mttkrp::MAX_RANK;
+
+use super::registry::TensorRegistry;
+use super::trace::{JobKind, JobRequest};
+
+/// Which execution class an admitted job was assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// full working set fits: unified in-memory kernel
+    InMemory,
+    /// working set exceeds device memory but the streaming floor fits:
+    /// queue for a streamed slot (fusible with same-key jobs)
+    Streamed,
+}
+
+/// Why a request cannot be served. Variants carry the numbers the client
+/// needs to fix the request (or pick a bigger device).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// no tensor registered under this name
+    UnknownTensor { tensor: String },
+    /// target mode index out of range for the tensor's order
+    TargetOutOfRange { target: usize, order: usize },
+    /// rank is zero or exceeds the engines' register budget
+    /// ([`MAX_RANK`])
+    InvalidRank { rank: usize, max: usize },
+    /// even the streaming floor (factors + output + double-buffered
+    /// batch) exceeds device memory — the job cannot run at any route
+    WontFit { target: usize, rank: usize, floor_bytes: usize, budget_bytes: usize },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::UnknownTensor { tensor } => {
+                write!(f, "unknown tensor {tensor:?}")
+            }
+            AdmissionError::TargetOutOfRange { target, order } => {
+                write!(f, "target mode {target} out of range for order {order}")
+            }
+            AdmissionError::InvalidRank { rank, max } => {
+                write!(f, "rank {rank} outside the supported range 1..={max}")
+            }
+            AdmissionError::WontFit { target, rank, floor_bytes, budget_bytes } => {
+                write!(
+                    f,
+                    "mode-{target} rank-{rank} job cannot be served: streaming \
+                     floor {floor_bytes} B exceeds device memory {budget_bytes} B"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// A positive admission decision with the numbers it was based on.
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    pub route: Route,
+    /// exact working set for the (worst) target mode of this job
+    pub working_set_bytes: usize,
+    /// resident floor a streamed slot would need
+    pub floor_bytes: usize,
+}
+
+/// Admit one mode-`target`, rank-`rank` MTTKRP against `engine`.
+pub fn admit_mttkrp(
+    engine: &MttkrpEngine,
+    target: usize,
+    rank: usize,
+) -> Result<Admission, AdmissionError> {
+    if rank == 0 || rank > MAX_RANK {
+        return Err(AdmissionError::InvalidRank { rank, max: MAX_RANK });
+    }
+    let order = engine.dims.len();
+    if target >= order {
+        return Err(AdmissionError::TargetOutOfRange { target, order });
+    }
+    let working_set_bytes = engine.working_set_bytes_for(target, rank);
+    let floor_bytes = engine.streaming_floor_bytes(target, rank);
+    if !engine.is_oom_for(target, rank) {
+        Ok(Admission { route: Route::InMemory, working_set_bytes, floor_bytes })
+    } else if engine.eng.profile.fits(floor_bytes) {
+        Ok(Admission { route: Route::Streamed, working_set_bytes, floor_bytes })
+    } else {
+        Err(AdmissionError::WontFit {
+            target,
+            rank,
+            floor_bytes,
+            budget_bytes: engine.eng.profile.dev_mem_bytes,
+        })
+    }
+}
+
+/// Admit a whole [`JobRequest`] against the registry. A CP-ALS job must
+/// admit on *every* mode (its sweep touches them all); its route is
+/// `Streamed` as soon as any mode streams.
+pub fn admit_job(
+    reg: &TensorRegistry,
+    job: &JobRequest,
+) -> Result<Admission, AdmissionError> {
+    let entry = reg.get(&job.tensor).ok_or_else(|| AdmissionError::UnknownTensor {
+        tensor: job.tensor.clone(),
+    })?;
+    let engine = &entry.engine;
+    match job.kind {
+        JobKind::Mttkrp { target, rank, .. } => admit_mttkrp(engine, target, rank),
+        JobKind::CpAls { rank, .. } => {
+            let mut route = Route::InMemory;
+            let mut working_set_bytes = 0usize;
+            let mut floor_bytes = 0usize;
+            for m in 0..engine.dims.len() {
+                let a = admit_mttkrp(engine, m, rank)?;
+                working_set_bytes = working_set_bytes.max(a.working_set_bytes);
+                floor_bytes = floor_bytes.max(a.floor_bytes);
+                if a.route == Route::Streamed {
+                    route = Route::Streamed;
+                }
+            }
+            Ok(Admission { route, working_set_bytes, floor_bytes })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::Profile;
+    use crate::format::blco::BlcoConfig;
+    use crate::tensor::synth;
+
+    fn registry(mem: usize) -> TensorRegistry {
+        let mut reg = TensorRegistry::new(Profile::tiny(mem));
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        reg.register("t", &t, cfg);
+        reg
+    }
+
+    #[test]
+    fn routes_follow_the_memory_budget() {
+        // plenty of memory: in-memory; tight: streamed; starved: reject
+        let roomy = registry(1 << 20);
+        let a = admit_mttkrp(&roomy.get("t").unwrap().engine, 0, 8).unwrap();
+        assert_eq!(a.route, Route::InMemory);
+
+        let tight = registry(48 * 1024);
+        let a = admit_mttkrp(&tight.get("t").unwrap().engine, 0, 8).unwrap();
+        assert_eq!(a.route, Route::Streamed);
+        assert!(a.floor_bytes < a.working_set_bytes);
+
+        let starved = registry(4 * 1024);
+        let e = admit_mttkrp(&starved.get("t").unwrap().engine, 0, 8).unwrap_err();
+        match e {
+            AdmissionError::WontFit { floor_bytes, budget_bytes, .. } => {
+                assert!(floor_bytes > budget_bytes);
+            }
+            other => panic!("expected WontFit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn structured_errors_not_panics() {
+        let reg = registry(1 << 20);
+        let eng = &reg.get("t").unwrap().engine;
+        assert_eq!(
+            admit_mttkrp(eng, 3, 8).unwrap_err(),
+            AdmissionError::TargetOutOfRange { target: 3, order: 3 }
+        );
+        assert_eq!(
+            admit_mttkrp(eng, 0, 0).unwrap_err(),
+            AdmissionError::InvalidRank { rank: 0, max: MAX_RANK }
+        );
+        assert_eq!(
+            admit_mttkrp(eng, 0, MAX_RANK + 1).unwrap_err(),
+            AdmissionError::InvalidRank { rank: MAX_RANK + 1, max: MAX_RANK }
+        );
+        // errors render human-readable text
+        let msg = admit_mttkrp(eng, 3, 8).unwrap_err().to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+    }
+
+    #[test]
+    fn cpals_admits_over_all_modes() {
+        use crate::service::trace::{JobKind, JobRequest};
+        let reg = registry(48 * 1024);
+        let job = JobRequest {
+            id: 0,
+            tenant: "a".into(),
+            tensor: "t".into(),
+            kind: JobKind::CpAls { rank: 8, iters: 2, seed: 1 },
+            arrival_s: 0.0,
+        };
+        let a = admit_job(&reg, &job).unwrap();
+        assert_eq!(a.route, Route::Streamed, "OOM tensor: the sweep streams");
+        let unknown = JobRequest { tensor: "nope".into(), ..job };
+        assert!(matches!(
+            admit_job(&reg, &unknown).unwrap_err(),
+            AdmissionError::UnknownTensor { .. }
+        ));
+    }
+}

@@ -1,0 +1,46 @@
+//! The multi-tenant decomposition service — the serving front end the
+//! ROADMAP's production north star asks for, built directly on the paper's
+//! central property: BLCO's unified, mode-agnostic implementation works on
+//! a **single tensor copy** (no per-mode replicas like MM-CSF), so many
+//! concurrent jobs can share one resident `Arc<BlcoTensor>` while the
+//! engine routes each of them in-memory or streamed.
+//!
+//! The subsystem has four pieces:
+//!
+//! * [`registry`] — the shared **tensor registry**: one
+//!   [`MttkrpEngine`](crate::coordinator::engine::MttkrpEngine) per
+//!   registered tensor, holding the payload `Arc` and the per-tensor
+//!   [`ScheduleCache`](crate::coordinator::schedule::ScheduleCache), so
+//!   every job against the same tensor shares both the bytes and the
+//!   out-of-memory plans;
+//! * [`admission`] — the **admission controller**: per-job
+//!   in-memory / streamed routing from the engine's exact
+//!   `working_set_bytes_for` accounting, and a *structured*
+//!   [`AdmissionError`](admission::AdmissionError) (never a panic) when
+//!   even the streaming floor (factors + output + a double-buffered batch)
+//!   cannot fit;
+//! * [`trace`] — tenants, [`JobRequest`](trace::JobRequest)s and a seeded
+//!   synthetic mixed-tenant trace generator for the `serve` CLI and the
+//!   throughput bench;
+//! * [`scheduler`] — the **fair scheduler**: weighted round-robin across
+//!   tenants (FIFO within a tenant), least-loaded dispatch over the
+//!   modelled device fleet, and *fusion* of compatible streamed jobs —
+//!   same `(tensor, mode, rank)` requests ride one
+//!   [`stream_mttkrp_fused`](crate::coordinator::streamer::stream_mttkrp_fused)
+//!   pass so the tensor crosses the host link once per group. Results and
+//!   per-tenant latency/throughput/queue-depth stats come back in a
+//!   [`ServiceReport`](scheduler::ServiceReport), with every duration
+//!   charged through the existing `Counters`/`Profile` cost model.
+
+pub mod admission;
+pub mod registry;
+pub mod scheduler;
+pub mod trace;
+
+pub use admission::{admit_job, admit_mttkrp, Admission, AdmissionError, Route};
+pub use registry::{TensorEntry, TensorRegistry};
+pub use scheduler::{
+    serve, JobOutcome, JobResult, JobStatus, ServeOptions, ServiceReport,
+    TenantStats,
+};
+pub use trace::{synthetic_trace, JobKind, JobRequest, Tenant, TraceConfig};

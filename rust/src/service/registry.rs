@@ -1,0 +1,146 @@
+//! The shared tensor registry: one engine per registered tensor, each
+//! holding the payload `Arc<BlcoTensor>` and its schedule cache. Every job
+//! the service runs against a tensor goes through *its* entry, so
+//! same-tensor jobs share the resident bytes and same-`(target, rank)`
+//! jobs share one memoized
+//! [`StreamSchedule`](crate::coordinator::schedule::StreamSchedule) — the
+//! single-copy story of the paper lifted to a multi-tenant front end.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::engine::MttkrpEngine;
+use crate::coordinator::schedule::ScheduleStats;
+use crate::device::profile::Profile;
+use crate::format::blco::{BlcoConfig, BlcoTensor};
+use crate::tensor::coo::CooTensor;
+
+/// One registered tensor: its name and the engine that owns the shared
+/// payload `Arc` plus the schedule cache every job over it reuses.
+pub struct TensorEntry {
+    pub name: String,
+    pub engine: MttkrpEngine,
+}
+
+/// Named map of resident tensors. All engines are built on the
+/// *single-device* view of the service profile: the scheduler dispatches
+/// whole jobs (or fused groups) to fleet devices, and each device runs its
+/// own streaming pipeline, so per-tensor planning is always per-device.
+pub struct TensorRegistry {
+    profile: Profile,
+    entries: BTreeMap<String, TensorEntry>,
+}
+
+impl TensorRegistry {
+    /// A registry whose engines see `profile.single_device()`. The fleet
+    /// size (`profile.devices`) is the scheduler's concern
+    /// ([`super::scheduler::ServeOptions::devices`]).
+    pub fn new(profile: Profile) -> Self {
+        if let Err(e) = profile.validate() {
+            panic!("invalid profile {:?}: {e}", profile.name);
+        }
+        TensorRegistry { profile: profile.single_device(), entries: BTreeMap::new() }
+    }
+
+    /// Build and register a tensor from COO. Replaces any same-named entry.
+    pub fn register(&mut self, name: &str, t: &CooTensor, cfg: BlcoConfig) -> &TensorEntry {
+        self.register_shared(name, Arc::new(BlcoTensor::from_coo_with(t, cfg)))
+    }
+
+    /// Register an *already shared* BLCO tensor — no payload copy, the
+    /// entry's engine references the caller's `Arc` directly. This is how
+    /// sweeps (and tests) stand up several registries over one resident
+    /// tensor. Replaces any same-named entry.
+    pub fn register_shared(&mut self, name: &str, t: Arc<BlcoTensor>) -> &TensorEntry {
+        assert!(!name.is_empty(), "tensor name must be non-empty");
+        let entry = TensorEntry {
+            name: name.to_string(),
+            engine: MttkrpEngine::from_blco(t, self.profile.clone()),
+        };
+        self.entries.insert(name.to_string(), entry);
+        self.entries.get(name).expect("just inserted")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TensorEntry> {
+        self.entries.get(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The (single-device) profile every entry's engine runs on.
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
+    /// Total resident bytes across registered payloads — each counted
+    /// once per entry (sharing an `Arc` across *registries* is free;
+    /// within one registry each name owns one engine).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.engine.eng.footprint_bytes()).sum()
+    }
+
+    /// Aggregate schedule-cache activity across every registered tensor.
+    pub fn schedule_stats(&self) -> ScheduleStats {
+        let mut total = ScheduleStats::default();
+        for e in self.entries.values() {
+            let s = e.engine.schedule_stats();
+            total.built += s.built;
+            total.hits += s.hits;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth;
+
+    #[test]
+    fn register_and_share_payload() {
+        let t = synth::uniform(&[40, 30, 20], 1_500, 1);
+        let shared = Arc::new(BlcoTensor::from_coo(&t));
+        let mut reg = TensorRegistry::new(Profile::a100().with_devices(4));
+        // registry engines are single-device regardless of the fleet
+        assert_eq!(reg.profile().devices, 1);
+        reg.register_shared("shared", Arc::clone(&shared));
+        reg.register("built", &t, BlcoConfig::default());
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["built".to_string(), "shared".to_string()]);
+        let e = reg.get("shared").unwrap();
+        assert!(Arc::ptr_eq(&e.engine.tensor(), &shared), "no payload copy");
+        assert!(reg.get("missing").is_none());
+        assert!(reg.resident_bytes() >= 2 * t.nnz() * 16);
+        assert_eq!(reg.schedule_stats(), ScheduleStats::default());
+    }
+
+    #[test]
+    fn reregister_replaces() {
+        let t = synth::uniform(&[20, 20, 20], 500, 2);
+        let mut reg = TensorRegistry::new(Profile::v100());
+        reg.register("x", &t, BlcoConfig::default());
+        let first = reg.get("x").unwrap().engine.tensor();
+        reg.register("x", &t, BlcoConfig::default());
+        assert_eq!(reg.len(), 1);
+        assert!(!Arc::ptr_eq(&first, &reg.get("x").unwrap().engine.tensor()));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_name_rejected() {
+        let t = synth::uniform(&[10, 10, 10], 100, 3);
+        let mut reg = TensorRegistry::new(Profile::a100());
+        reg.register("", &t, BlcoConfig::default());
+    }
+}

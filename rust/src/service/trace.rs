@@ -1,0 +1,162 @@
+//! Tenants, job requests, and the seeded synthetic mixed-tenant trace the
+//! `serve` CLI and the throughput bench replay. Everything is
+//! deterministic in the seed so serving runs are reproducible and
+//! comparable across scheduler policies.
+
+use crate::util::prng::Rng;
+
+use super::registry::TensorRegistry;
+
+/// One tenant of the service. `weight` is its share of the weighted
+/// round-robin scheduler (2 = twice the dispatch rate of a weight-1 tenant
+/// under contention).
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    pub name: String,
+    pub weight: usize,
+}
+
+/// What a job asks for. `seed` derives the job's factor matrices
+/// deterministically (`random_factors(dims, rank, seed)`), so any result
+/// can be re-verified against the serial oracle after the fact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// one mode-`target` MTTKRP at `rank`
+    Mttkrp { target: usize, rank: usize, seed: u64 },
+    /// a full CP-ALS decomposition at `rank` for `iters` iterations
+    CpAls { rank: usize, iters: usize, seed: u64 },
+}
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub id: usize,
+    pub tenant: String,
+    /// registry name of the tensor to decompose
+    pub tensor: String,
+    pub kind: JobKind,
+    /// modelled arrival time (seconds since trace start)
+    pub arrival_s: f64,
+}
+
+/// Knobs of the synthetic trace generator.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub tenants: usize,
+    pub jobs: usize,
+    /// mean inter-arrival gap; a third of arrivals are bursts (gap 0) so
+    /// queues actually form and fusion/fairness have something to do
+    pub mean_gap_s: f64,
+    /// ranks jobs draw from — keep this short to drive schedule-cache
+    /// hits and fusion on repeated `(tensor, mode, rank)` keys
+    pub ranks: Vec<usize>,
+    /// every `n`-th job is a small CP-ALS instead of a single MTTKRP
+    /// (0 = MTTKRP only)
+    pub cpals_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            tenants: 3,
+            jobs: 30,
+            mean_gap_s: 2e-4,
+            ranks: vec![16],
+            cpals_every: 0,
+            seed: 0x5EB0,
+        }
+    }
+}
+
+/// Generate tenants and an arrival-ordered mixed trace over the
+/// registry's tensors. Tenant 0 gets weight 2 (the "paying" tenant the
+/// fairness tests watch), the rest weight 1.
+pub fn synthetic_trace(
+    reg: &TensorRegistry,
+    cfg: &TraceConfig,
+) -> (Vec<Tenant>, Vec<JobRequest>) {
+    let names = reg.names();
+    assert!(!names.is_empty(), "register tensors before generating a trace");
+    assert!(!cfg.ranks.is_empty(), "TraceConfig.ranks must be non-empty");
+    let mut rng = Rng::new(cfg.seed);
+    let tenants: Vec<Tenant> = (0..cfg.tenants.max(1))
+        .map(|i| Tenant {
+            name: format!("tenant{i}"),
+            weight: if i == 0 { 2 } else { 1 },
+        })
+        .collect();
+
+    let mut arrival = 0.0f64;
+    let jobs = (0..cfg.jobs)
+        .map(|id| {
+            // bursty arrivals: ~1/3 of jobs land together
+            if rng.below(3) != 0 {
+                arrival += rng.f64() * 2.0 * cfg.mean_gap_s;
+            }
+            let tenant = tenants[rng.below(tenants.len() as u64) as usize].name.clone();
+            let tensor = names[rng.below(names.len() as u64) as usize].clone();
+            let order = reg.get(&tensor).expect("name from registry").engine.dims.len();
+            let rank = cfg.ranks[rng.below(cfg.ranks.len() as u64) as usize];
+            let kind = if cfg.cpals_every > 0 && (id + 1) % cfg.cpals_every == 0 {
+                JobKind::CpAls { rank: rank.min(8), iters: 2, seed: rng.next_u64() }
+            } else {
+                JobKind::Mttkrp {
+                    target: rng.below(order as u64) as usize,
+                    rank,
+                    seed: rng.next_u64(),
+                }
+            };
+            JobRequest { id, tenant, tensor, kind, arrival_s: arrival }
+        })
+        .collect();
+    (tenants, jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::Profile;
+    use crate::format::blco::BlcoConfig;
+    use crate::tensor::synth;
+
+    fn registry() -> TensorRegistry {
+        let mut reg = TensorRegistry::new(Profile::a100());
+        let t = synth::uniform(&[30, 20, 10], 800, 1);
+        reg.register("a", &t, BlcoConfig::default());
+        reg.register("b", &t, BlcoConfig::default());
+        reg
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_well_formed() {
+        let reg = registry();
+        let cfg = TraceConfig { jobs: 40, cpals_every: 10, ..Default::default() };
+        let (tenants, jobs) = synthetic_trace(&reg, &cfg);
+        let (_, jobs2) = synthetic_trace(&reg, &cfg);
+        assert_eq!(tenants.len(), 3);
+        assert_eq!(tenants[0].weight, 2);
+        assert_eq!(jobs.len(), 40);
+        let mut prev = 0.0;
+        let mut cpals = 0;
+        for (j, j2) in jobs.iter().zip(&jobs2) {
+            assert_eq!(j.kind, j2.kind, "same seed, same trace");
+            assert!(j.arrival_s >= prev, "arrival-ordered");
+            prev = j.arrival_s;
+            assert!(reg.get(&j.tensor).is_some());
+            match j.kind {
+                JobKind::Mttkrp { target, rank, .. } => {
+                    assert!(target < 3);
+                    assert_eq!(rank, 16);
+                }
+                JobKind::CpAls { .. } => cpals += 1,
+            }
+        }
+        assert_eq!(cpals, 4, "every 10th job decomposes");
+        // bursts exist: at least two jobs share an arrival instant
+        assert!(
+            jobs.windows(2).any(|w| w[0].arrival_s == w[1].arrival_s),
+            "expected bursty arrivals"
+        );
+    }
+}

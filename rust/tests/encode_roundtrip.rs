@@ -1,0 +1,169 @@
+//! Linearization round-trip fuzz: randomized shapes — including ones whose
+//! total ALTO line exceeds `MAX_INBLOCK_BITS = 63`, so the adaptive
+//! blocking strips real key bits — must satisfy, bit for bit:
+//!
+//! * the byte-lookup `reencode_tables` fast path (`reencode_alto`) agrees
+//!   with the naive per-bit scatter reference encoders
+//!   (`key_of_alto` + `inblock_of_alto`), and both agree with the direct
+//!   coordinate encoder (`encode`) — three independent routes to the same
+//!   `(block key, in-block index)`;
+//! * `decode` inverts all of them back to the original coordinates;
+//! * `BlcoTensor::to_coo` round-trips the original coordinate/value
+//!   multiset through the full construction pipeline.
+
+use std::collections::HashMap;
+
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::linear::encode::{BlcoSpec, MAX_INBLOCK_BITS};
+use blco::tensor::coo::CooTensor;
+use blco::tensor::synth;
+use blco::util::prng::Rng;
+
+/// Random shape whose per-mode bit widths are drawn so that a healthy
+/// fraction of cases exceeds the 63-bit in-block budget.
+fn random_wide_dims(rng: &mut Rng) -> Vec<u64> {
+    let order = 3 + rng.below(3) as usize; // 3..=5
+    (0..order)
+        .map(|_| {
+            let bits = 2 + rng.below(23); // 2..=24 bits per mode
+            // dims in (2^(bits-1), 2^bits]: exactly `bits` mode bits, with
+            // jitter so non-power-of-two lengths are exercised too
+            (1u64 << bits) - rng.below(1 << (bits - 1))
+        })
+        .collect()
+}
+
+/// Shapes that are guaranteed to exceed the 63-bit budget (72, 66, 69 and
+/// 100 total ALTO bits) — the key path must run regardless of what the
+/// random generator draws.
+fn guaranteed_wide_shapes() -> Vec<Vec<u64>> {
+    vec![
+        vec![1 << 24, 1 << 24, 1 << 24],
+        vec![1 << 23, 1 << 21, 1 << 22],
+        vec![1 << 20, 1 << 17, 1 << 18, 1 << 14],
+        vec![1 << 24, 1 << 22, 1 << 20, 1 << 18, 1 << 16],
+    ]
+}
+
+#[test]
+fn table_reencode_agrees_with_per_bit_scatter_and_direct_encode() {
+    let mut rng = Rng::new(0xB17_F0CC);
+    let mut keyed_cases = 0usize;
+    let mut shapes: Vec<Vec<u64>> = guaranteed_wide_shapes();
+    shapes.extend((0..60).map(|_| random_wide_dims(&mut rng)));
+    for dims in shapes {
+        let spec = BlcoSpec::new(&dims);
+        let total_bits: u32 = spec.alto.total_bits;
+        if total_bits > MAX_INBLOCK_BITS {
+            keyed_cases += 1;
+            assert_eq!(
+                spec.total_key_bits,
+                total_bits - MAX_INBLOCK_BITS,
+                "every excess bit must move to the key ({dims:?})"
+            );
+            assert!(spec.needs_blocking());
+        } else {
+            assert_eq!(spec.total_key_bits, 0);
+        }
+        let mut decoded = vec![0u32; dims.len()];
+        for _ in 0..40 {
+            let coord: Vec<u32> =
+                dims.iter().map(|&d| rng.below(d) as u32).collect();
+            let alto = spec.alto.encode(&coord);
+            // three independent routes to (key, inblock)
+            let fast = spec.reencode_alto(alto);
+            let scatter = (spec.key_of_alto(alto), spec.inblock_of_alto(alto));
+            let direct = spec.encode(&coord);
+            assert_eq!(
+                fast, scatter,
+                "table path vs per-bit scatter ({dims:?}, {coord:?})"
+            );
+            assert_eq!(
+                fast, direct,
+                "table path vs direct coordinate encode ({dims:?}, {coord:?})"
+            );
+            // the in-block index honours the budget (<= 63 bits always)
+            assert!(spec.total_inblock_bits <= MAX_INBLOCK_BITS);
+            assert!(
+                fast.1 < (1u64 << spec.total_inblock_bits.max(1)),
+                "in-block index {} overflows {} bits",
+                fast.1,
+                spec.total_inblock_bits
+            );
+            // ...and decodes back to the original coordinates
+            spec.decode(fast.0, fast.1, &mut decoded);
+            assert_eq!(decoded, coord, "decode must invert encode ({dims:?})");
+        }
+    }
+    assert!(
+        keyed_cases >= 4,
+        "the key path must be exercised (got {keyed_cases} keyed cases)"
+    );
+}
+
+fn coord_multiset(t: &CooTensor) -> HashMap<(Vec<u32>, u64), u32> {
+    let mut m = HashMap::new();
+    for e in 0..t.nnz() {
+        *m.entry((t.coord(e), t.vals[e].to_bits())).or_insert(0u32) += 1;
+    }
+    m
+}
+
+#[test]
+fn blco_to_coo_roundtrips_wide_shapes() {
+    let mut rng = Rng::new(0x70_C00);
+    let mut keyed_cases = 0usize;
+    let mut shapes = guaranteed_wide_shapes();
+    shapes.extend((0..4).map(|_| random_wide_dims(&mut rng)));
+    for (case, dims) in shapes.into_iter().enumerate() {
+        let t = synth::uniform(&dims, 1_500, 0xC0DE + case as u64);
+        assert!(t.nnz() > 0);
+        let b = BlcoTensor::from_coo(&t);
+        if b.spec.needs_blocking() {
+            keyed_cases += 1;
+            assert!(b.spec.total_key_bits > 0);
+        }
+        assert_eq!(b.nnz, t.nnz());
+        let back = b.to_coo();
+        back.validate().unwrap();
+        assert_eq!(
+            coord_multiset(&back),
+            coord_multiset(&t),
+            "construction must preserve the coordinate/value multiset ({dims:?})"
+        );
+    }
+    assert!(keyed_cases >= 4, "the guaranteed-wide cases must use block keys");
+}
+
+#[test]
+fn lowered_budget_forces_keys_on_small_shapes_and_roundtrips() {
+    // small dims, tiny in-block budget: every construction stage runs the
+    // key path even though the shape would fit 63 bits comfortably
+    let dims = [48u64, 36, 20];
+    let t = synth::uniform(&dims, 3_000, 7);
+    for budget in [8u32, 10, 13] {
+        let cfg = BlcoConfig { inblock_budget: budget, ..Default::default() };
+        let b = BlcoTensor::from_coo_with(&t, cfg);
+        assert!(b.spec.needs_blocking(), "budget {budget} must force keys");
+        assert_eq!(b.spec.total_inblock_bits, budget);
+        assert_eq!(coord_multiset(&b.to_coo()), coord_multiset(&t), "budget {budget}");
+    }
+}
+
+#[test]
+fn order_boundaries_roundtrip() {
+    // the extremes the linearizer supports: order 2 and order 8
+    for dims in [vec![1u64 << 20, 1 << 19], vec![4u64, 3, 5, 2, 6, 3, 2, 4]] {
+        let spec = BlcoSpec::new(&dims);
+        let mut rng = Rng::new(dims.len() as u64);
+        let mut out = vec![0u32; dims.len()];
+        for _ in 0..200 {
+            let coord: Vec<u32> =
+                dims.iter().map(|&d| rng.below(d) as u32).collect();
+            let (k, l) = spec.reencode_alto(spec.alto.encode(&coord));
+            assert_eq!((k, l), spec.encode(&coord));
+            spec.decode(k, l, &mut out);
+            assert_eq!(out, coord);
+        }
+    }
+}

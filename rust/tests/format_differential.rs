@@ -1,0 +1,201 @@
+//! Cross-format differential property suite: every format engine — BLCO
+//! (register and hierarchical resolution, with and without blocking keys),
+//! CSF, B-CSF, MM-CSF, HiCOO, F-COO, COO-atomic, GenTen — computes the
+//! same MTTKRP as a *naive dense reference* (explicit matricization ×
+//! Khatri-Rao product over a dense copy of the tensor), for **every** mode,
+//! over seeded random tensors of orders 3–5 with skewed dims, empty
+//! slices, and single-non-zero edge cases. This pins all formats to one
+//! oracle that is independent of the COO-walk serial oracle the unit tests
+//! use (cf. the MM-CSF cross-comparisons in Nisa et al.).
+
+use blco::device::{Counters, Profile};
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::format::fcoo::FCoo;
+use blco::format::hicoo::HicooTensor;
+use blco::mttkrp::blco::{BlcoEngine, Resolution};
+use blco::mttkrp::coo::CooAtomicEngine;
+use blco::mttkrp::csf::{BCsfEngine, CsfEngine, MmCsfEngine};
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::fcoo::FCooEngine;
+use blco::mttkrp::genten::GenTenEngine;
+use blco::mttkrp::hicoo::HicooEngine;
+use blco::mttkrp::oracle::random_factors;
+use blco::mttkrp::Mttkrp;
+use blco::tensor::coo::CooTensor;
+use blco::tensor::synth;
+use blco::util::prng::Rng;
+
+const TOL: f64 = 1e-9;
+
+/// Naive dense reference: materialize the tensor densely, then accumulate
+/// `out[c_target] += X[c] * prod_{n != target} factors[n][c_n]` cell by
+/// cell. Independent of every sparse walk in the crate.
+fn dense_reference(t: &CooTensor, target: usize, factors: &[Matrix]) -> Matrix {
+    let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
+    let cells: usize = dims.iter().product();
+    assert!(cells <= 1 << 21, "dense reference needs a small tensor ({cells} cells)");
+    let mut dense = vec![0.0f64; cells];
+    for e in 0..t.nnz() {
+        let mut idx = 0usize;
+        for (n, &d) in dims.iter().enumerate() {
+            idx = idx * d + t.coords[n][e] as usize;
+        }
+        dense[idx] += t.vals[e];
+    }
+    let rank = factors[0].cols;
+    let mut out = Matrix::zeros(dims[target], rank);
+    let mut coord = vec![0usize; dims.len()];
+    for (idx, &v) in dense.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let mut rem = idx;
+        for n in (0..dims.len()).rev() {
+            coord[n] = rem % dims[n];
+            rem /= dims[n];
+        }
+        let o = out.row_mut(coord[target]);
+        for k in 0..rank {
+            let mut p = v;
+            for (n, f) in factors.iter().enumerate() {
+                if n != target {
+                    p *= f.row(coord[n])[k];
+                }
+            }
+            o[k] += p;
+        }
+    }
+    out
+}
+
+/// Every engine under test over one tensor. BLCO appears four ways: both
+/// conflict resolutions, plus a register-path build with a lowered
+/// in-block bit budget so real blocking keys (non-zero per-mode bases)
+/// are exercised even on small shapes.
+fn engines(t: &CooTensor) -> Vec<Box<dyn Mttkrp>> {
+    let keyed = BlcoConfig { inblock_budget: 9, ..Default::default() };
+    vec![
+        Box::new(CooAtomicEngine::new(t.clone())),
+        Box::new(GenTenEngine::new(t.clone())),
+        Box::new(HicooEngine::new(HicooTensor::from_coo(t, 4))),
+        Box::new(FCooEngine::new(FCoo::from_coo(t, 64))),
+        Box::new(CsfEngine::new(t)),
+        Box::new(BCsfEngine::new(t, 128)),
+        Box::new(MmCsfEngine::new(t)),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo(t), Profile::a100())
+                .with_resolution(Resolution::Register),
+        ),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo(t), Profile::a100())
+                .with_resolution(Resolution::Hierarchical),
+        ),
+        Box::new(
+            BlcoEngine::new(BlcoTensor::from_coo_with(t, keyed), Profile::intel_d1())
+                .with_resolution(Resolution::Register),
+        ),
+    ]
+}
+
+fn differential_check(t: &CooTensor, rank: usize, label: &str) {
+    let factors = random_factors(&t.dims, rank, 0xD1FF ^ rank as u64);
+    for target in 0..t.order() {
+        let expect = dense_reference(t, target, &factors);
+        for eng in engines(t) {
+            let mut out = Matrix::zeros(t.dims[target] as usize, rank);
+            eng.mttkrp(target, &factors, &mut out, 4, &Counters::new());
+            let d = out.max_abs_diff(&expect);
+            assert!(
+                d < TOL,
+                "{label}: {} mode {target} diverges from the dense reference \
+                 by {d:e} (dims {:?}, nnz {}, rank {rank})",
+                eng.name(),
+                t.dims,
+                t.nnz()
+            );
+        }
+    }
+}
+
+/// Random tensor with skewed dims: one long mode, the rest short, so the
+/// dense cell count stays bounded while mode lengths differ by ~30x.
+fn skewed_tensor(rng: &mut Rng, order: usize) -> CooTensor {
+    let long_mode = rng.below(order as u64) as usize;
+    let dims: Vec<u64> = (0..order)
+        .map(|n| if n == long_mode { 30 + rng.below(90) } else { 2 + rng.below(6) })
+        .collect();
+    let cells: u64 = dims.iter().product();
+    let nnz = 1 + rng.below((cells / 2).clamp(1, 2_000)) as usize;
+    synth::uniform(&dims, nnz, rng.next_u64())
+}
+
+#[test]
+fn seeded_random_orders_3_to_5() {
+    let mut rng = Rng::new(0xF0_4A7);
+    let ranks = [1usize, 5, 16];
+    for case in 0..12 {
+        let order = 3 + case % 3;
+        let t = skewed_tensor(&mut rng, order);
+        differential_check(&t, ranks[case % ranks.len()], &format!("case {case}"));
+    }
+}
+
+#[test]
+fn empty_slices_stay_zero() {
+    // every mode has empty prefix and suffix slices: non-zeros only use
+    // the interior index range, so each engine must leave those output
+    // rows exactly zero and still match the dense reference
+    let dims = [12u64, 9, 7, 5];
+    let mut t = CooTensor::new(&dims);
+    let mut rng = Rng::new(42);
+    for _ in 0..120 {
+        let c: Vec<u32> = dims.iter().map(|&d| 2 + rng.below(d - 4) as u32).collect();
+        t.push(&c, rng.normal());
+    }
+    t.sum_duplicates();
+    differential_check(&t, 8, "empty-slices");
+    // spot-check the guarantee on one engine output
+    let factors = random_factors(&t.dims, 8, 7);
+    let eng = CsfEngine::new(&t);
+    for target in 0..t.order() {
+        let mut out = Matrix::zeros(dims[target] as usize, 8);
+        eng.mttkrp(target, &factors, &mut out, 2, &Counters::new());
+        for empty_row in [0usize, 1, dims[target] as usize - 1] {
+            assert!(
+                out.row(empty_row).iter().all(|&x| x == 0.0),
+                "mode {target} empty slice {empty_row} picked up mass"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_nonzero_every_order() {
+    for order in 3..=5usize {
+        let dims: Vec<u64> = (0..order).map(|n| 3 + n as u64).collect();
+        // corner non-zero
+        let mut corner = CooTensor::new(&dims);
+        corner.push(&vec![0u32; order], 2.5);
+        differential_check(&corner, 4, &format!("corner order {order}"));
+        // interior non-zero at the highest coordinate
+        let mut last = CooTensor::new(&dims);
+        let c: Vec<u32> = dims.iter().map(|&d| (d - 1) as u32).collect();
+        last.push(&c, -1.5);
+        differential_check(&last, 3, &format!("last-cell order {order}"));
+    }
+}
+
+#[test]
+fn order5_skewed_and_hypersparse() {
+    // DARPA-like: nnz ~ distinct fibers over a long order-5 shape
+    let t = synth::uniform(&[64, 3, 2, 5, 4], 500, 99);
+    differential_check(&t, 16, "order-5 skewed");
+    let flat = synth::fiber_clustered(&[40, 11, 6], 700, 0, 0.0, 17);
+    differential_check(&flat, 8, "hypersparse fibers");
+}
+
+#[test]
+fn max_rank_boundary_against_dense() {
+    let t = synth::uniform(&[14, 11, 9], 400, 21);
+    differential_check(&t, 64, "max rank");
+}

@@ -1,0 +1,340 @@
+//! Integration suite for the multi-tenant serving layer: a mixed-tenant
+//! trace over one shared tensor copy must (i) produce oracle-correct
+//! results on every route, (ii) reuse streaming schedules across repeated
+//! `(tensor, mode, rank)` jobs, (iii) beat the one-job-at-a-time baseline
+//! on modelled makespan via fused streaming, (iv) interleave tenants
+//! fairly under weighted round-robin, and (v) reject unservable requests
+//! with structured errors instead of panicking.
+
+use std::sync::Arc;
+
+use blco::device::Profile;
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::mttkrp::MAX_RANK;
+use blco::service::{
+    serve, AdmissionError, JobKind, JobRequest, JobResult, JobStatus, Route,
+    ServeOptions, Tenant, TensorRegistry,
+};
+use blco::tensor::coo::CooTensor;
+use blco::tensor::synth;
+
+/// Registry with one in-memory tensor ("hot") and one streamed tensor
+/// ("cold") on a 48 KiB device; returns the COO forms for oracle checks.
+fn registry() -> (TensorRegistry, CooTensor, CooTensor) {
+    let hot = synth::uniform(&[40, 30, 20], 1_000, 1);
+    let cold = synth::uniform(&[60, 50, 40], 8_000, 2);
+    let mut reg = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg.register("hot", &hot, BlcoConfig::default());
+    reg.register(
+        "cold",
+        &cold,
+        BlcoConfig { max_block_nnz: 512, ..Default::default() },
+    );
+    // the intended routing mix, asserted up front so the fixtures cannot
+    // silently drift
+    let hot_eng = &reg.get("hot").unwrap().engine;
+    let cold_eng = &reg.get("cold").unwrap().engine;
+    assert!(!hot_eng.is_oom_for(0, 8), "hot must run in-memory");
+    assert!(cold_eng.is_oom_for(0, 8), "cold must stream");
+    assert!(cold_eng.can_serve(0, 8), "cold must be streamable");
+    (reg, hot, cold)
+}
+
+fn mttkrp_job(
+    id: usize,
+    tenant: &str,
+    tensor: &str,
+    target: usize,
+    rank: usize,
+    seed: u64,
+    arrival_s: f64,
+) -> JobRequest {
+    JobRequest {
+        id,
+        tenant: tenant.into(),
+        tensor: tensor.into(),
+        kind: JobKind::Mttkrp { target, rank, seed },
+        arrival_s,
+    }
+}
+
+fn tenants(weights: &[usize]) -> Vec<Tenant> {
+    weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| Tenant { name: format!("t{i}"), weight: w })
+        .collect()
+}
+
+#[test]
+fn mixed_trace_is_oracle_correct_with_cache_hits_and_fusion() {
+    let (reg, hot, cold) = registry();
+    let ten = tenants(&[1, 1]);
+    // burst at t=0: repeated (cold, mode 0, rank 8) keys from both tenants
+    // (fusible), plus hot in-memory jobs and a second cold mode
+    let jobs = vec![
+        mttkrp_job(0, "t0", "cold", 0, 8, 100, 0.0),
+        mttkrp_job(1, "t1", "cold", 0, 8, 101, 0.0),
+        mttkrp_job(2, "t0", "cold", 0, 8, 102, 0.0),
+        mttkrp_job(3, "t1", "hot", 1, 8, 103, 0.0),
+        mttkrp_job(4, "t0", "cold", 2, 8, 104, 0.0),
+        mttkrp_job(5, "t1", "cold", 0, 8, 105, 0.0),
+        mttkrp_job(6, "t0", "hot", 0, 8, 106, 0.0),
+        mttkrp_job(7, "t1", "cold", 2, 8, 107, 0.0),
+    ];
+    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    assert_eq!(rep.completed(), 8);
+    assert_eq!(rep.rejected(), 0);
+
+    // every result matches the serial oracle for its own factors
+    for o in &rep.outcomes {
+        let (target, rank, seed) = match o.kind {
+            JobKind::Mttkrp { target, rank, seed } => (target, rank, seed),
+            _ => unreachable!(),
+        };
+        let src = if o.tensor == "hot" { &hot } else { &cold };
+        let factors = random_factors(&src.dims, rank, seed);
+        let expect = mttkrp_oracle(src, target, &factors);
+        match o.result.as_ref().expect("completed jobs carry results") {
+            JobResult::Mttkrp(m) => {
+                let d = m.max_abs_diff(&expect);
+                assert!(d < 1e-9, "job {} diverges by {d:e}", o.id);
+            }
+            JobResult::CpAls(_) => unreachable!(),
+        }
+        assert!(o.finish_s >= o.start_s);
+        assert!(o.latency_s >= 0.0);
+    }
+
+    // the t=0 burst of same-key streamed jobs fuses — but never past the
+    // device-memory capacity: on this 48 KiB fixture k resident
+    // factor/output sets cap each group at 2 jobs
+    let grouped: Vec<&_> = rep
+        .outcomes
+        .iter()
+        .filter(|o| o.group.is_some())
+        .collect();
+    assert!(rep.fused_groups >= 2, "burst of same-key jobs must fuse");
+    assert_eq!(rep.fused_jobs, grouped.len());
+    assert!(grouped.len() >= 4, "the streamed repeats ride fused passes");
+    for o in &grouped {
+        assert_eq!(o.route, Some(Route::Streamed));
+    }
+    // fusion respects the admission-guaranteed memory budget
+    let cold_eng = &reg.get("cold").unwrap().engine;
+    for gid in 0..rep.fused_groups {
+        let size = rep.outcomes.iter().filter(|o| o.group == Some(gid)).count();
+        assert!(
+            size <= cold_eng.fused_jobs_capacity(0, 8).max(cold_eng.fused_jobs_capacity(2, 8)),
+            "group {gid} of {size} jobs overcommits device memory"
+        );
+    }
+
+    // distinct streamed keys: (cold,0,8) and (cold,2,8) → 2 plans built;
+    // the capacity cap splits the mode-0 burst into two dispatches, and
+    // the second one must hit the cache
+    assert_eq!(rep.schedule.built, 2, "one plan per distinct (tensor, mode, rank)");
+    assert!(rep.schedule.hits >= 1, "repeated key reuses the memoized plan");
+    // queue depth reflects the arrived backlog at dispatch instants: the
+    // whole burst (4 jobs per tenant) was waiting when service began
+    for s in rep.per_tenant.values() {
+        assert_eq!(s.max_queue_depth, 4, "t=0 burst backlog");
+    }
+    assert!(rep.makespan_s > 0.0);
+    assert!(rep.bytes_shipped > 0);
+}
+
+#[test]
+fn repeated_keys_hit_the_schedule_cache() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1]);
+    // spaced far apart so nothing fuses: every repeat must hit the cache
+    let jobs: Vec<JobRequest> = (0..5)
+        .map(|i| mttkrp_job(i, "t0", "cold", 1, 8, 200 + i as u64, i as f64 * 10.0))
+        .collect();
+    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    assert_eq!(rep.completed(), 5);
+    assert_eq!(rep.fused_groups, 0, "spaced jobs must not fuse");
+    assert_eq!(rep.schedule.built, 1);
+    assert_eq!(rep.schedule.hits, 4, "every repeat reuses the plan");
+    assert!(rep.cache_hit_rate() > 0.0);
+}
+
+#[test]
+fn batched_beats_one_job_at_a_time_on_makespan() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1, 1]);
+    // a backlog of same-key streamed jobs: fusion ships the tensor once
+    // per group instead of once per job
+    let jobs: Vec<JobRequest> = (0..6)
+        .map(|i| {
+            mttkrp_job(i, if i % 2 == 0 { "t0" } else { "t1" }, "cold", 0, 8, 300 + i as u64, 0.0)
+        })
+        .collect();
+    let batched = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+
+    // fresh registry sharing the same payload Arc for the cold baseline
+    let mut reg2 = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg2.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
+    let naive = serve(&reg2, &ten, &jobs, &ServeOptions::naive(1, 4));
+
+    assert_eq!(batched.completed(), 6);
+    assert_eq!(naive.completed(), 6);
+    assert!(batched.fused_groups >= 1);
+    assert_eq!(naive.fused_groups, 0);
+    assert!(
+        batched.makespan_s < naive.makespan_s,
+        "fused streaming must win: {} vs {}",
+        batched.makespan_s,
+        naive.makespan_s
+    );
+    assert!(
+        batched.bytes_shipped < naive.bytes_shipped,
+        "fusion ships the payload fewer times"
+    );
+    // fleet parallelism compounds: two devices can't be slower
+    let mut reg4 = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg4.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
+    let two_dev = serve(&reg4, &ten, &jobs, &ServeOptions::naive(2, 4));
+    assert!(two_dev.makespan_s <= naive.makespan_s + 1e-12);
+}
+
+#[test]
+fn weighted_round_robin_interleaves_and_protects_latecomers() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1, 1]);
+    // t0 submits 8 jobs first (lower ids), t1 8 jobs after — all at t=0,
+    // all in-memory (hot) so nothing fuses and dispatch order is visible
+    let mut jobs = Vec::new();
+    for i in 0..8 {
+        jobs.push(mttkrp_job(i, "t0", "hot", i % 3, 8, 400 + i as u64, 0.0));
+    }
+    for i in 0..8 {
+        jobs.push(mttkrp_job(8 + i, "t1", "hot", i % 3, 8, 500 + i as u64, 0.0));
+    }
+    let fair = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    let fifo = serve(&reg, &ten, &jobs, &ServeOptions::naive(1, 4));
+
+    // dispatch order: sort completed outcomes by start instant
+    let order = |rep: &blco::service::ServiceReport| -> Vec<String> {
+        let mut done: Vec<(f64, usize, String)> = rep
+            .outcomes
+            .iter()
+            .map(|o| (o.start_s, o.id, o.tenant.clone()))
+            .collect();
+        done.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        done.into_iter().map(|(_, _, t)| t).collect()
+    };
+    let fair_order = order(&fair);
+    let fifo_order = order(&fifo);
+    // FIFO starves the latecomer: every t0 job dispatches first
+    assert!(fifo_order[..8].iter().all(|t| t == "t0"), "{fifo_order:?}");
+    // WRR interleaves: both tenants appear within the first 3 dispatches
+    assert!(
+        fair_order[..3].iter().any(|t| t == "t0")
+            && fair_order[..3].iter().any(|t| t == "t1"),
+        "{fair_order:?}"
+    );
+    // and the latecomer's mean latency improves under fairness
+    let t1_fair = fair.per_tenant.get("t1").unwrap().mean_latency_s;
+    let t1_fifo = fifo.per_tenant.get("t1").unwrap().mean_latency_s;
+    assert!(t1_fair < t1_fifo, "fair {t1_fair} vs fifo {t1_fifo}");
+
+    // weighted: a weight-2 tenant gets ~2/3 of early dispatches
+    let weighted = tenants(&[2, 1]);
+    let wrep = serve(&reg, &weighted, &jobs, &ServeOptions::batched(1, 4));
+    let worder = order(&wrep);
+    let t0_early = worder[..9].iter().filter(|t| *t == "t0").count();
+    assert!(t0_early >= 5, "weight-2 tenant got {t0_early}/9: {worder:?}");
+}
+
+#[test]
+fn admission_rejections_are_structured_outcomes() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1]);
+    let jobs = vec![
+        // fine
+        mttkrp_job(0, "t0", "hot", 0, 8, 1, 0.0),
+        // unknown tensor
+        mttkrp_job(1, "t0", "nope", 0, 8, 2, 0.0),
+        // rank over the register budget
+        mttkrp_job(2, "t0", "hot", 0, MAX_RANK + 1, 3, 0.0),
+        // target out of range
+        mttkrp_job(3, "t0", "hot", 7, 8, 4, 0.0),
+        // rank 0
+        mttkrp_job(4, "t0", "hot", 0, 0, 5, 0.0),
+    ];
+    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(2, 2));
+    assert_eq!(rep.completed(), 1);
+    assert_eq!(rep.rejected(), 4);
+    for o in &rep.outcomes {
+        match (&o.status, o.id) {
+            (JobStatus::Completed, 0) => {}
+            (JobStatus::Rejected(AdmissionError::UnknownTensor { tensor }), 1) => {
+                assert_eq!(tensor, "nope");
+            }
+            (JobStatus::Rejected(AdmissionError::InvalidRank { rank, max }), 2) => {
+                assert_eq!((*rank, *max), (MAX_RANK + 1, MAX_RANK));
+            }
+            (JobStatus::Rejected(AdmissionError::TargetOutOfRange { target, order }), 3) => {
+                assert_eq!((*target, *order), (7, 3));
+            }
+            (JobStatus::Rejected(AdmissionError::InvalidRank { rank, .. }), 4) => {
+                assert_eq!(*rank, 0);
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    // a device too small even for the streaming floor: WontFit, not panic
+    let mut starved = TensorRegistry::new(Profile::tiny(4 * 1024));
+    starved.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
+    let job = vec![mttkrp_job(0, "t0", "cold", 0, 8, 6, 0.0)];
+    let rep = serve(&starved, &ten, &job, &ServeOptions::batched(1, 2));
+    assert_eq!(rep.rejected(), 1);
+    match &rep.outcomes[0].status {
+        JobStatus::Rejected(AdmissionError::WontFit { floor_bytes, budget_bytes, .. }) => {
+            assert!(floor_bytes > budget_bytes);
+        }
+        other => panic!("expected WontFit, got {other:?}"),
+    }
+}
+
+#[test]
+fn one_payload_serves_every_registry_and_cpals_jobs_route_through_it() {
+    let (reg, _, cold) = registry();
+    let shared: Arc<BlcoTensor> = reg.get("cold").unwrap().engine.tensor();
+    let before = Arc::strong_count(&shared);
+    let mut reg2 = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg2.register_shared("cold", Arc::clone(&shared));
+    assert_eq!(Arc::strong_count(&shared), before + 1, "engine shares the Arc");
+    assert!(Arc::ptr_eq(&reg2.get("cold").unwrap().engine.tensor(), &shared));
+
+    // a CP-ALS job through the service: admitted (streamed), completed,
+    // report carried back with mode traces and plan reuse
+    let ten = tenants(&[1]);
+    let jobs = vec![JobRequest {
+        id: 0,
+        tenant: "t0".into(),
+        tensor: "cold".into(),
+        kind: JobKind::CpAls { rank: 4, iters: 3, seed: 9 },
+        arrival_s: 0.0,
+    }];
+    let rep = serve(&reg2, &ten, &jobs, &ServeOptions::batched(1, 4));
+    assert_eq!(rep.completed(), 1);
+    let o = &rep.outcomes[0];
+    assert_eq!(o.route, Some(Route::Streamed));
+    match o.result.as_ref().unwrap() {
+        JobResult::CpAls(als) => {
+            assert_eq!(als.fits.len(), 3);
+            assert_eq!(als.mode_traces.len(), cold.order());
+            // one plan per mode, reused across iterations
+            assert_eq!(rep.schedule.built, cold.order());
+            assert_eq!(rep.schedule.hits, cold.order() * 2);
+            assert!(als.fits.iter().all(|&f| f <= 1.0 + 1e-9));
+        }
+        JobResult::Mttkrp(_) => panic!("expected a CP-ALS result"),
+    }
+    assert!(o.duration_s > 0.0);
+}
