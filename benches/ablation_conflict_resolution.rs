@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench ablation_conflict_resolution
 
-use blco::bench::{banner, bench_reps, measure, Table};
+use blco::bench::{banner, bench_reps, measure, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
 use blco::mttkrp::blco::{BlcoEngine, Resolution};
@@ -27,10 +27,14 @@ fn main() {
         "mode-len", "register", "hierarch", "auto", "sorted-list", "heuristic picks",
     ]);
 
+    let mut json = BenchJson::new("ablation_conflict_resolution");
     // fix the other modes, sweep the target length through the SM threshold
-    for target_len in [4u64, 16, 64, 108, 512, 4096, 65536] {
+    let lens: &[u64] =
+        if smoke() { &[16, 512] } else { &[4, 16, 64, 108, 512, 4096, 65536] };
+    let sweep_nnz = if smoke() { 60_000 } else { 300_000 };
+    for &target_len in lens {
         let dims = [target_len, 3000, 3000];
-        let t = synth::fiber_clustered(&dims, 300_000, 2, 0.8, target_len);
+        let t = synth::fiber_clustered(&dims, sweep_nnz, 2, 0.8, target_len);
         let factors = random_factors(&dims, rank, 1);
         let rows = target_len as usize;
 
@@ -44,6 +48,9 @@ fn main() {
         let sorted = measure(&GenTenEngine::new(t.clone()), 0, &factors, rows, threads, reps, &profile);
 
         let auto_engine = make(Resolution::Auto);
+        json.metric(&format!("len{target_len}_register_ms"), reg.model_s * 1e3);
+        json.metric(&format!("len{target_len}_hierarchical_ms"), hier.model_s * 1e3);
+        json.metric(&format!("len{target_len}_auto_ms"), auto.model_s * 1e3);
         tbl.row(&[
             target_len.to_string(),
             format!("{:.3}ms", reg.model_s * 1e3),
@@ -59,4 +66,5 @@ fn main() {
          mode-specific — the price BLCO's mode-agnostic design avoids is \
          visible in its construction cost (Figure 11), not here."
     );
+    json.flush();
 }

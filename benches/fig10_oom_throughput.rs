@@ -9,7 +9,7 @@
 //! Env: BLCO_BENCH_OOM_SCALE=N divides preset nnz by N (default 4 — keeps
 //! the bench minutes-fast; set 1 for the full presets).
 
-use blco::bench::{banner, Table};
+use blco::bench::{banner, smoke, BenchJson, Table};
 use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::MttkrpEngine;
 use blco::coordinator::streamer::stream_mttkrp;
@@ -28,10 +28,13 @@ fn main() {
     let profile = Profile::a100();
     let threads = default_threads();
     let rank = 32;
+    // smoke mode shrinks the presets 64x (seconds-fast) unless the env
+    // override asks for something specific
     let scale: usize = std::env::var("BLCO_BENCH_OOM_SCALE")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(4);
+        .unwrap_or(if smoke() { 64 } else { 4 });
+    let mut json = BenchJson::new("fig10_oom_throughput");
 
     let tbl = Table::new(&[10, 6, 8, 14, 14, 12, 12]);
     tbl.header(&[
@@ -66,6 +69,14 @@ fn main() {
             let vol = counters.snapshot().volume_bytes();
             if mode == 0 {
                 mode0 = (rep.overall_s, vol, rep.transfer_s);
+                json.metric(
+                    &format!("{}_mode0_overall_tbps", preset.name),
+                    throughput_tbps(vol, rep.overall_s),
+                );
+                json.metric(
+                    &format!("{}_mode0_inmem_tbps", preset.name),
+                    throughput_tbps(vol, rep.compute_s.max(1e-12)),
+                );
             }
             tbl.row(&[
                 preset.name.to_string(),
@@ -107,6 +118,15 @@ fn main() {
                 let rep =
                     cluster_mttkrp(&ceng, 0, &factors, &mut out, threads, &counters);
                 let vol = counters.snapshot().volume_bytes();
+                json.metric(
+                    &format!(
+                        "{}_d{}_{}_makespan_s",
+                        preset.name,
+                        d,
+                        format!("{links:?}").to_lowercase()
+                    ),
+                    rep.overall_s,
+                );
                 sweep_rows.push(vec![
                     preset.name.to_string(),
                     format!("{links:?}").to_lowercase(),
@@ -152,9 +172,14 @@ fn main() {
         "ALS schedule cache (extension)",
         "cached vs cold out-of-memory planning across a CP-ALS run",
     );
-    let t = synth::fiber_clustered(&[3_000, 2_000, 1_500], 300_000, 2, 0.7, 21);
+    let (als_dims, als_nnz, als_iters): (&[u64], usize, usize) = if smoke() {
+        (&[1_200, 800, 600], 80_000, 3)
+    } else {
+        (&[3_000, 2_000, 1_500], 300_000, 5)
+    };
+    let t = synth::fiber_clustered(als_dims, als_nnz, 2, 0.7, 21);
     let cfg = BlcoConfig { max_block_nnz: 1 << 14, ..Default::default() };
-    let opts = CpAlsOptions { rank: 16, max_iters: 5, tol: 0.0, threads, seed: 3 };
+    let opts = CpAlsOptions { rank: 16, max_iters: als_iters, tol: 0.0, threads, seed: 3 };
     let tbl = Table::new(&[8, 12, 10, 12, 12, 12]);
     tbl.header(&[
         "plans", "built", "reused", "mttkrp(s)", "total(s)", "OOM MiB",
@@ -173,10 +198,14 @@ fn main() {
             format!("{:.3}", rep.total_seconds),
             format!("{:.1}", rep.stream.bytes as f64 / (1 << 20) as f64),
         ]);
+        let label = if cached { "cached" } else { "cold" };
+        json.metric(&format!("als_{label}_plans_built"), rep.schedule.built as f64);
+        json.metric(&format!("als_{label}_mttkrp_s"), rep.mttkrp_seconds);
     }
     println!(
         "\n(cached: one plan per mode, reused every iteration; cold: \
          modes × iterations plans — the planning overhead the schedule \
          cache removes from the ALS hot loop)"
     );
+    json.flush();
 }

@@ -5,7 +5,7 @@
 //!
 //!     cargo bench --bench fig11_construction
 
-use blco::bench::{banner, bench_reps, measure, total_seconds, Table};
+use blco::bench::{banner, bench_reps, measure, smoke, total_seconds, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
 use blco::format::fcoo::FCoo;
@@ -43,12 +43,19 @@ fn main() {
 
     let tbl = Table::new(&[10, 10, 10, 10, 10, 14]);
     tbl.header(&["dataset", "BLCO", "F-COO", "MM-CSF", "ALTO", "amortize(iters)"]);
+    let mut json = BenchJson::new("fig11_construction");
 
-    for preset in datasets::in_memory() {
+    for mut preset in datasets::in_memory() {
         if let Some(f) = &filter {
             if !f.iter().any(|x| x == preset.name) {
                 continue;
             }
+        }
+        if smoke() {
+            if !matches!(preset.name, "nips" | "uber") {
+                continue;
+            }
+            preset.nnz /= 4;
         }
         let t = preset.build();
 
@@ -83,9 +90,16 @@ fn main() {
             format!("{alto_s:.3}"),
             format!("{amortize:.1}"),
         ]);
+        json.metric(&format!("{}_blco_construct_s", preset.name), blco_s);
+        json.metric(
+            &format!("{}_construct_mnnz_per_s", preset.name),
+            t.nnz() as f64 / blco_s.max(1e-9) / 1e6,
+        );
+        json.metric(&format!("{}_amortize_iters", preset.name), amortize);
     }
     println!(
         "\n(paper: BLCO up to 13.6x cheaper to build than MM-CSF; ~12 \
          all-mode iterations to amortize on the A100)"
     );
+    json.flush();
 }

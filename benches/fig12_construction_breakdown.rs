@@ -5,7 +5,7 @@
 //!
 //!     cargo bench --bench fig12_construction_breakdown
 
-use blco::bench::{banner, Table};
+use blco::bench::{banner, smoke, BenchJson, Table};
 use blco::format::blco::BlcoTensor;
 use blco::tensor::datasets;
 
@@ -16,7 +16,14 @@ fn main() {
         "dataset", "total(s)", "linearize", "sort", "reencode", "block", "batch", "gpu-extra",
     ]);
 
-    for preset in datasets::in_memory() {
+    let mut json = BenchJson::new("fig12_construction_breakdown");
+    for mut preset in datasets::in_memory() {
+        if smoke() {
+            if !matches!(preset.name, "nips" | "uber") {
+                continue;
+            }
+            preset.nnz /= 4;
+        }
         let t = preset.build();
         let b = BlcoTensor::from_coo_with(&t, preset.blco_config());
         let total = b.stages.total().as_secs_f64();
@@ -36,6 +43,9 @@ fn main() {
             format!("{:.1}%", pct("batch")),
             format!("{gpu_extra:.1}%"),
         ]);
+        json.metric(&format!("{}_total_s", preset.name), total);
+        json.metric(&format!("{}_gpu_extra_pct", preset.name), gpu_extra);
     }
     println!("\n(paper: re-encode+block+batch typically < 25% of construction)");
+    json.flush();
 }

@@ -10,7 +10,7 @@
 //!
 //!     cargo bench --bench fig1_mode_variation
 
-use blco::bench::{banner, bench_reps, measure, Table};
+use blco::bench::{banner, bench_reps, measure, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::mttkrp::csf::MmCsfEngine;
 use blco::mttkrp::oracle::random_factors;
@@ -26,9 +26,15 @@ fn main() {
 
     let tbl = Table::new(&[10, 6, 14, 14, 12]);
     tbl.header(&["dataset", "mode", "model(ms)", "wall(ms)", "normalized"]);
+    let mut json = BenchJson::new("fig1_mode_variation");
 
-    for name in ["nell2", "uber", "enron", "darpa"] {
-        let preset = datasets::by_name(name).unwrap();
+    let names: &[&str] =
+        if smoke() { &["uber"] } else { &["nell2", "uber", "enron", "darpa"] };
+    for &name in names {
+        let mut preset = datasets::by_name(name).unwrap();
+        if smoke() {
+            preset.nnz /= 4;
+        }
         let t = preset.build();
         let factors = random_factors(&t.dims, rank, 1);
         let eng = MmCsfEngine::new(&t);
@@ -53,5 +59,8 @@ fn main() {
         let worst =
             ms.iter().map(|m| m.wall.as_secs_f64()).fold(0.0, f64::max) / fastest;
         println!("  -> {name}: worst/best = {worst:.2}x  (paper: 2-12x depending on dataset)\n");
+        json.metric(&format!("{name}_worst_over_best"), worst);
+        json.metric(&format!("{name}_fastest_mode_wall_ms"), fastest * 1e3);
     }
+    json.flush();
 }

@@ -7,7 +7,7 @@
 //!
 //! Env: BLCO_BENCH_PRESETS=uber,nell2 to restrict, BLCO_BENCH_REPS=N.
 
-use blco::bench::{banner, bench_reps, geomean, measure, total_seconds, Table};
+use blco::bench::{banner, bench_reps, geomean, measure, smoke, total_seconds, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
 use blco::format::fcoo::FCoo;
@@ -32,18 +32,26 @@ fn main() {
     let reps = bench_reps();
     let rank = 32;
     let filter = preset_filter();
+    let mut json = BenchJson::new("fig8_framework_speedup");
 
-    for profile in Profile::all() {
+    let profiles = if smoke() { vec![Profile::a100()] } else { Profile::all() };
+    for profile in profiles {
         println!("\n--- device: {} ---", profile.name);
         let tbl = Table::new(&[10, 10, 10, 10, 12]);
         tbl.header(&["dataset", "BLCO", "GenTen", "F-COO", "MM-CSF(ms)"]);
         let (mut g_blco, mut g_gen, mut g_fcoo) = (vec![], vec![], vec![]);
 
-        for preset in datasets::in_memory() {
+        for mut preset in datasets::in_memory() {
             if let Some(f) = &filter {
                 if !f.iter().any(|x| x == preset.name) {
                     continue;
                 }
+            }
+            if smoke() {
+                if !matches!(preset.name, "nips" | "uber") {
+                    continue;
+                }
+                preset.nnz /= 4;
             }
             let t = preset.build();
             let factors = random_factors(&t.dims, rank, 1);
@@ -86,6 +94,10 @@ fn main() {
             "-".into(),
         ]);
         println!("  (paper geomean for BLCO: 2.12-2.6x across devices)");
+        json.metric(&format!("{}_blco_geomean_speedup", profile.name), geomean(&g_blco));
+        json.metric(&format!("{}_genten_geomean_speedup", profile.name), geomean(&g_gen));
+        json.metric(&format!("{}_fcoo_geomean_speedup", profile.name), geomean(&g_fcoo));
     }
+    json.flush();
     println!("\n(GenTen = its GPU kernel, i.e. COO + global atomics; the CPU-style\n permutation variant is the separate `genten` engine, see the ablation bench.)");
 }

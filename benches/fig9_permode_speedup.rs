@@ -7,7 +7,7 @@
 //!
 //! Env: BLCO_BENCH_PRESETS / BLCO_BENCH_REPS / BLCO_BENCH_DEVICE.
 
-use blco::bench::{banner, bench_reps, measure, Table};
+use blco::bench::{banner, bench_reps, measure, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
 use blco::mttkrp::blco::BlcoEngine;
@@ -32,11 +32,17 @@ fn main() {
     let mut worst: f64 = f64::INFINITY;
     let mut best: f64 = 0.0;
 
-    for preset in datasets::in_memory() {
+    for mut preset in datasets::in_memory() {
         if let Some(f) = &filter {
             if !f.iter().any(|x| x == preset.name) {
                 continue;
             }
+        }
+        if smoke() {
+            if !matches!(preset.name, "uber" | "vast") {
+                continue;
+            }
+            preset.nnz /= 4;
         }
         let t = preset.build();
         let factors = random_factors(&t.dims, rank, 1);
@@ -63,4 +69,8 @@ fn main() {
         }
     }
     println!("\nrange: {worst:.2}x – {best:.2}x  (paper: ~0.6x on Uber/NIPS up to 33.35x)");
+    let mut json = BenchJson::new("fig9_permode_speedup");
+    json.metric("worst_mode_speedup", worst);
+    json.metric("best_mode_speedup", best);
+    json.flush();
 }

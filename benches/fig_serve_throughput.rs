@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use blco::bench::{banner, Table};
+use blco::bench::{banner, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::{BlcoConfig, BlcoTensor};
 use blco::service::{
@@ -30,14 +30,16 @@ fn main() {
     let jobs_per_tenant: usize = std::env::var("BLCO_BENCH_SERVE_JOBS_PER_TENANT")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(8);
+        .unwrap_or(if smoke() { 4 } else { 8 });
+    let mut json = BenchJson::new("fig_serve_throughput");
 
     // one in-memory tensor + one streamed tensor, built once and shared by
     // Arc across every registry in the sweep (the single-copy property)
     let profile = Profile::a100().with_memory(4 << 20);
     println!("building tensors ...");
     let hot = synth::uniform(&[200, 150, 100], 30_000, 11);
-    let cold = synth::fiber_clustered(&[2_000, 1_200, 900], 300_000, 2, 0.7, 13);
+    let cold_nnz = if smoke() { 100_000 } else { 300_000 };
+    let cold = synth::fiber_clustered(&[2_000, 1_200, 900], cold_nnz, 2, 0.7, 13);
     let hot_b = Arc::new(BlcoTensor::from_coo(&hot));
     let cold_b = Arc::new(BlcoTensor::from_coo_with(
         &cold,
@@ -49,8 +51,10 @@ fn main() {
         "tenants", "D", "policy", "makespan(ms)", "vs naive", "hit rate", "fused", "rejected",
         "mean lat(ms)",
     ]);
-    for tenants in [2usize, 4] {
-        for devices in [1usize, 2, 4] {
+    let tenant_sweep: &[usize] = if smoke() { &[2] } else { &[2, 4] };
+    let device_sweep: &[usize] = if smoke() { &[1, 2] } else { &[1, 2, 4] };
+    for &tenants in tenant_sweep {
+        for &devices in device_sweep {
             let cfg = TraceConfig {
                 tenants,
                 jobs: jobs_per_tenant * tenants,
@@ -74,6 +78,13 @@ fn main() {
                 if !batched {
                     naive_makespan = rep.makespan_s;
                 }
+                json.metric(
+                    &format!(
+                        "t{tenants}_d{devices}_{}_makespan_s",
+                        if batched { "batched" } else { "naive" }
+                    ),
+                    rep.makespan_s,
+                );
                 tbl.row(&[
                     tenants.to_string(),
                     devices.to_string(),
@@ -98,4 +109,5 @@ fn main() {
          cache turns repeated keys into plan reuse. The naive rows replay the \
          identical trace one job at a time in arrival order.)"
     );
+    json.flush();
 }

@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench table3_memory_traffic
 
-use blco::bench::{banner, bench_reps, measure, Table};
+use blco::bench::{banner, bench_reps, geomean, measure, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
 use blco::mttkrp::blco::BlcoEngine;
@@ -25,8 +25,14 @@ fn main() {
     let tbl = Table::new(&[10, 8, 6, 12, 10, 12]);
     tbl.header(&["dataset", "format", "n", "Vol(GB)", "TP(TB/s)", "coalesced"]);
 
-    for name in ["uber", "vast", "enron", "nell1"] {
-        let preset = datasets::by_name(name).unwrap();
+    let mut json = BenchJson::new("table3_memory_traffic");
+    let names: &[&str] =
+        if smoke() { &["uber"] } else { &["uber", "vast", "enron", "nell1"] };
+    for &name in names {
+        let mut preset = datasets::by_name(name).unwrap();
+        if smoke() {
+            preset.nnz /= 4;
+        }
         let t = preset.build();
         let factors = random_factors(&t.dims, rank, 1);
         let blco = BlcoEngine::new(
@@ -34,8 +40,11 @@ fn main() {
             profile.clone(),
         );
         let mm = MmCsfEngine::new(&t);
+        let (mut blco_vol, mut blco_tp) = (0.0f64, Vec::new());
         for mode in 0..t.order() {
             let m = measure(&blco, mode, &factors, t.dims[mode] as usize, threads, reps, &profile);
+            blco_vol += m.volume_gb();
+            blco_tp.push(m.model_tp_tbps());
             tbl.row(&[
                 name.to_string(),
                 "BLCO".into(),
@@ -45,8 +54,11 @@ fn main() {
                 format!("{:.2}", m.snap.coalesced_frac()),
             ]);
         }
+        let (mut mm_vol, mut mm_tp) = (0.0f64, Vec::new());
         for mode in 0..t.order() {
             let m = measure(&mm, mode, &factors, t.dims[mode] as usize, threads, reps, &profile);
+            mm_vol += m.volume_gb();
+            mm_tp.push(m.model_tp_tbps());
             tbl.row(&[
                 name.to_string(),
                 "MM-CSF".into(),
@@ -56,8 +68,13 @@ fn main() {
                 format!("{:.2}", m.snap.coalesced_frac()),
             ]);
         }
+        json.metric(&format!("{name}_blco_vol_gb"), blco_vol);
+        json.metric(&format!("{name}_blco_tp_tbps_geomean"), geomean(&blco_tp));
+        json.metric(&format!("{name}_mmcsf_vol_gb"), mm_vol);
+        json.metric(&format!("{name}_mmcsf_tp_tbps_geomean"), geomean(&mm_tp));
         println!();
     }
+    json.flush();
     println!(
         "(paper: MM-CSF lower Vol in most cases but lower TP and large \
          per-mode swings; BLCO higher Vol, higher + steadier TP)"

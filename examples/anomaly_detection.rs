@@ -114,7 +114,7 @@ fn main() {
     let anom = &scores[0].1;
     let mut window = vec![0.0f64; TIME as usize];
     window[anom[2] as usize] = 1.0;
-    let heat = ttv(&engine.eng.t, 2, &window, 4);
+    let heat = ttv(&engine.tensor(), 2, &window, 4);
     let mut top: Vec<(f64, Vec<u32>)> =
         (0..heat.nnz()).map(|e| (heat.vals[e], heat.coord(e))).collect();
     top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());

@@ -55,7 +55,7 @@ fn main() {
     println!(
         "\nstreaming through {} device queue(s), {} batches:",
         engine.eng.profile.queues,
-        engine.eng.t.batches.len()
+        engine.eng.num_batches()
     );
     for mode in 0..t.order() {
         engine.counters.reset();

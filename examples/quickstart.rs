@@ -21,7 +21,7 @@ fn main() {
     //    in-memory vs out-of-memory and the conflict-resolution strategy
     //    (§5.3) per target mode.
     let engine = MttkrpEngine::from_coo(&t, Profile::a100());
-    let b = &engine.eng.t;
+    let b = engine.tensor();
     println!(
         "BLCO: {} bits/index ({} in-block + {} key), {} block(s), {} batch(es), {:.1} MiB",
         b.spec.alto.total_bits,

@@ -98,11 +98,88 @@ impl Table {
 }
 
 /// `reps` default for benches, overridable via BLCO_BENCH_REPS.
+/// Smoke mode pins it to 1 unless explicitly overridden.
 pub fn bench_reps() -> usize {
     std::env::var("BLCO_BENCH_REPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(3)
+        .unwrap_or(if smoke() { 1 } else { 3 })
+}
+
+/// Reduced-size CI mode: `--smoke` on the bench binary's command line or
+/// `BLCO_BENCH_SMOKE=1` in the environment. Benches shrink their presets
+/// and sweeps to seconds-fast sizes; the numbers trace the perf
+/// *trajectory* (artifact `BENCH_smoke.json`), not the paper's figures.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BLCO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One bench binary's metrics record, flushed as a JSON line to the file
+/// named by `BLCO_BENCH_JSON` (append mode, so the bench-smoke CI job
+/// collects every figure into one stream; `tools/merge_bench_json.py`
+/// consolidates and validates it into `BENCH_smoke.json`). Without the
+/// env var, `flush()` is a no-op — interactive runs stay table-only.
+pub struct BenchJson {
+    figure: String,
+    metrics: Vec<(String, f64)>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchJson {
+    pub fn new(figure: &str) -> Self {
+        BenchJson { figure: figure.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record one named number. Non-finite values are serialized as
+    /// `null` (JSON has no NaN/inf) — the merge script rejects them, so a
+    /// poisoned metric fails the bench-smoke job instead of hiding.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Append this record as one JSON line to `$BLCO_BENCH_JSON`.
+    pub fn flush(self) {
+        let Ok(path) = std::env::var("BLCO_BENCH_JSON") else {
+            return;
+        };
+        let mut fields: Vec<String> = Vec::with_capacity(self.metrics.len());
+        for (name, v) in &self.metrics {
+            let val = if v.is_finite() {
+                // enough digits to round-trip an f64
+                format!("{v:e}")
+            } else {
+                "null".to_string()
+            };
+            fields.push(format!("\"{}\": {val}", json_escape(name)));
+        }
+        let line = format!(
+            "{{\"figure\": \"{}\", \"smoke\": {}, \"metrics\": {{{}}}}}\n",
+            json_escape(&self.figure),
+            smoke(),
+            fields.join(", ")
+        );
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .unwrap_or_else(|e| panic!("open {path}: {e}"));
+        f.write_all(line.as_bytes())
+            .unwrap_or_else(|e| panic!("append to {path}: {e}"));
+    }
 }
 
 /// Banner printed by every bench binary.
@@ -117,6 +194,18 @@ pub fn banner(figure: &str, what: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_escaping_and_number_format() {
+        assert_eq!(json_escape("plain_name"), "plain_name");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        // the number formatter must emit JSON-parseable tokens
+        for v in [0.0f64, 2.0, -1.5, 1e-12, 3.25e9] {
+            let s = format!("{v:e}");
+            assert!(s.parse::<f64>().is_ok(), "{s}");
+            assert!(!s.contains("NaN") && !s.contains("inf"));
+        }
+    }
 
     #[test]
     fn geomean_basics() {

@@ -176,7 +176,7 @@ pub fn cluster_mttkrp_scheduled(
     let devices = sched.devices;
     let queues = sched.queues.max(1);
     let links = sched.links.max(1);
-    let nbatches = eng.t.batches.len();
+    let nbatches = eng.num_batches();
     assert_eq!(
         sched.devices,
         eng.profile.devices.max(1),

@@ -12,6 +12,7 @@
 //! [`StreamSchedule`] across all its iterations instead of replanning
 //! `order × max_iters` times.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::coordinator::cluster::{cluster_mttkrp_scheduled, ClusterReport};
@@ -23,6 +24,7 @@ use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
 use crate::device::counters::Counters;
 use crate::device::profile::Profile;
 use crate::format::blco::{BlcoConfig, BlcoTensor};
+use crate::format::store::{BatchSource, BlcoStoreReader, CacheStats, StoreError};
 use crate::mttkrp::blco::{BlcoEngine, Resolution};
 use crate::mttkrp::dense::Matrix;
 use crate::mttkrp::Mttkrp;
@@ -93,10 +95,27 @@ impl MttkrpEngine {
     /// without rebuilding). Shape and Frobenius norm are recovered from
     /// the blocks, so the COO form does not need to stay alive.
     pub fn from_blco(t: Arc<BlcoTensor>, profile: Profile) -> Self {
-        let dims = t.dims().to_vec();
-        let norm_x = t.norm();
+        Self::from_source(BatchSource::Resident(t), profile)
+    }
+
+    /// Construct over a `.blco` container on disk — the host-out-of-core
+    /// tier: only header metadata (dims, per-block index, rebuilt batch
+    /// maps) is resident; block payloads load on demand through a
+    /// [`BlockCache`](crate::format::store::BlockCache) bounded by the
+    /// profile's `host_mem_bytes`, so tensors larger than host RAM stream
+    /// from disk. Routing, planning and results are identical to the
+    /// resident engine — bit for bit.
+    pub fn from_store(path: &Path, profile: Profile) -> Result<Self, StoreError> {
+        let reader = BlcoStoreReader::open_with_budget(path, profile.host_mem_bytes)?;
+        Ok(Self::from_source(BatchSource::OnDisk(reader), profile))
+    }
+
+    /// Construct over any [`BatchSource`].
+    pub fn from_source(src: BatchSource, profile: Profile) -> Self {
+        let dims = src.dims().to_vec();
+        let norm_x = src.norm();
         MttkrpEngine {
-            eng: BlcoEngine::from_arc(t, profile),
+            eng: BlcoEngine::from_source(src, profile),
             dims,
             norm_x,
             threads: default_threads(),
@@ -107,8 +126,29 @@ impl MttkrpEngine {
     }
 
     /// The shared tensor payload (cloning the `Arc`, never the data).
+    /// Panics for a disk-backed engine — use [`Self::try_tensor`] or
+    /// [`Self::source`] when the tier is not statically known.
     pub fn tensor(&self) -> Arc<BlcoTensor> {
-        Arc::clone(&self.eng.t)
+        Arc::clone(self.eng.resident().unwrap_or_else(|| {
+            panic!("tensor(): this engine is disk-backed (BatchSource::OnDisk)")
+        }))
+    }
+
+    /// The shared tensor payload, when it is resident.
+    pub fn try_tensor(&self) -> Option<Arc<BlcoTensor>> {
+        self.eng.resident().map(Arc::clone)
+    }
+
+    /// Where this engine's payload lives.
+    pub fn source(&self) -> &BatchSource {
+        &self.eng.src
+    }
+
+    /// Block-cache statistics of a disk-backed engine (`None` when the
+    /// payload is resident). `peak_resident_bytes <= budget_bytes` is the
+    /// host-out-of-core guarantee.
+    pub fn host_cache_stats(&self) -> Option<CacheStats> {
+        self.eng.src.reader().map(|r| r.cache_stats())
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
@@ -117,11 +157,7 @@ impl MttkrpEngine {
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {
-        self.eng = BlcoEngine {
-            t: self.eng.t.clone(),
-            profile: self.eng.profile.clone(),
-            resolution: r,
-        };
+        self.eng.resolution = r;
         self
     }
 
@@ -178,8 +214,8 @@ impl MttkrpEngine {
     /// The double-buffered batch staging window of the streaming pipeline:
     /// one batch computing while the next one lands.
     fn stream_buffer_bytes(&self) -> usize {
-        let max_batch = (0..self.eng.t.batches.len())
-            .map(|b| crate::coordinator::streamer::batch_bytes(&self.eng.t, b))
+        let max_batch = (0..self.eng.num_batches())
+            .map(|b| self.eng.src.batch_bytes(b))
             .max()
             .unwrap_or(0);
         2 * max_batch

@@ -18,14 +18,16 @@
 //! for the single-device pipeline and
 //! [`cluster_mttkrp_scheduled`](super::cluster::cluster_mttkrp_scheduled)
 //! for the sharded one; the original call-and-plan entry points survive as
-//! thin wrappers.
+//! thin wrappers. Planning reads batch metadata through the engine's
+//! [`BatchSource`](crate::format::store::BatchSource), so a plan built
+//! over a disk-resident container is byte-identical to one built over the
+//! resident tensor — schedules never require the payload in host RAM.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::streamer::batch_bytes;
 use crate::device::counters::Snapshot;
 use crate::device::model::{device_time, transfer_time};
 use crate::mttkrp::blco::BlcoEngine;
@@ -58,7 +60,7 @@ pub fn estimate_batch_cost(
     target: usize,
     rank: usize,
 ) -> f64 {
-    let cost = transfer_time(batch_bytes(&eng.t, batch), &eng.profile)
+    let cost = transfer_time(eng.src.batch_bytes(batch), &eng.profile)
         + estimate_kernel_cost(eng, batch, target, rank);
     debug_assert!(
         cost.is_finite(),
@@ -73,10 +75,9 @@ pub fn estimate_batch_cost(
 /// so schedule construction can combine it with the transfer times it has
 /// already computed instead of re-deriving them per batch.
 fn estimate_kernel_cost(eng: &BlcoEngine, batch: usize, target: usize, rank: usize) -> f64 {
-    let t = &eng.t;
     let p = &eng.profile;
-    let nnz = t.batches[batch].nnz as u64;
-    let order = t.order() as u64;
+    let nnz = eng.src.batches()[batch].nnz as u64;
+    let order = eng.src.order() as u64;
     let rank64 = rank as u64;
     let flushes = (nnz / 4).max(1) * rank64;
     let est = Snapshot {
@@ -84,7 +85,7 @@ fn estimate_kernel_cost(eng: &BlcoEngine, batch: usize, target: usize, rank: usi
         bytes_gathered: nnz * (order - 1) * rank64 * 8,
         bytes_written: flushes * 8,
         atomics: flushes,
-        atomic_fanout: t.dims()[target] * rank64,
+        atomic_fanout: eng.src.dims()[target] * rank64,
         launches: 1,
         ..Default::default()
     };
@@ -200,8 +201,9 @@ impl StreamSchedule {
         // transfers across the profile's independent host links
         let links = if devices == 1 { 1 } else { eng.profile.host_links().max(1) };
 
-        let nbatches = eng.t.batches.len();
-        let bytes: Vec<usize> = (0..nbatches).map(|b| batch_bytes(&eng.t, b)).collect();
+        let nbatches = eng.num_batches();
+        let bytes: Vec<usize> =
+            (0..nbatches).map(|b| eng.src.batch_bytes(b)).collect();
         let transfer_s: Vec<f64> =
             bytes.iter().map(|&b| transfer_time(b, &eng.profile)).collect();
         // same definition as `estimate_batch_cost`, reusing the transfer
@@ -381,7 +383,7 @@ mod tests {
         assert_eq!(a.queue_of, b.queue_of);
         assert_eq!(a.link_of, b.link_of);
         assert_eq!(a.bytes, b.bytes);
-        let n = eng.t.batches.len();
+        let n = eng.num_batches();
         assert_eq!(a.bytes.len(), n);
         assert_eq!(a.transfer_s.len(), n);
         assert_eq!(a.costs.len(), n);

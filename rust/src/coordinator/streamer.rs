@@ -14,17 +14,13 @@ use crate::format::blco::BlcoTensor;
 use crate::mttkrp::blco::BlcoEngine;
 use crate::mttkrp::dense::Matrix;
 
-/// Host→device bytes one batch occupies on the wire: its blocks' payload
-/// plus the work-group batching maps that ride along. Shared by the
-/// single-device pipeline below and the cluster streamer
-/// ([`super::cluster`]), so both charge the link identically.
+/// Host→device bytes one batch occupies on the wire. Thin delegate to
+/// [`BlcoTensor::batch_wire_bytes`] (the single source of truth); engines
+/// whose payload is not resident use
+/// [`BatchSource::batch_bytes`](crate::format::store::BatchSource::batch_bytes),
+/// which routes through the same accounting.
 pub fn batch_bytes(t: &BlcoTensor, b: usize) -> usize {
-    t.batches[b]
-        .blocks
-        .clone()
-        .map(|i| t.blocks[i].bytes())
-        .sum::<usize>()
-        + t.batches[b].wg_block.len() * 8
+    t.batch_wire_bytes(b)
 }
 
 /// Per-batch trace entry.
@@ -137,7 +133,7 @@ pub fn stream_mttkrp_fused(
     let profile: &Profile = &eng.profile;
     let target = sched.target;
     let queues = sched.queues.max(1);
-    let nbatches = eng.t.batches.len();
+    let nbatches = eng.num_batches();
     assert!(!factor_sets.is_empty(), "fused stream needs at least one job");
     assert_eq!(
         factor_sets.len(),
@@ -256,7 +252,7 @@ mod tests {
             let mut out = Matrix::zeros(t.dims[target] as usize, 8);
             let rep = stream_mttkrp(&eng, target, &factors, &mut out, 4, &Counters::new());
             assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
-            assert_eq!(rep.batches.len(), eng.t.batches.len());
+            assert_eq!(rep.batches.len(), eng.num_batches());
         }
     }
 

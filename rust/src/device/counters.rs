@@ -44,6 +44,16 @@ pub struct Counters {
     /// pathology); hierarchical resolution multiplies it by the number of
     /// factor-matrix copies.
     pub atomic_fanout: AtomicU64,
+    /// bytes read from disk by the host-out-of-core tier (block-cache
+    /// misses loading `.blco` payloads) — host-side traffic, excluded
+    /// from the device-volume accounting
+    pub bytes_disk: AtomicU64,
+    /// host block-cache hits (batch fetches served from resident blocks)
+    pub host_hits: AtomicU64,
+    /// host block-cache misses (each one is a disk read)
+    pub host_misses: AtomicU64,
+    /// blocks evicted from the host block cache to stay under budget
+    pub host_evictions: AtomicU64,
 }
 
 /// Plain-value snapshot of [`Counters`].
@@ -60,6 +70,10 @@ pub struct Snapshot {
     pub stash_hits: u64,
     pub launches: u64,
     pub atomic_fanout: u64,
+    pub bytes_disk: u64,
+    pub host_hits: u64,
+    pub host_misses: u64,
+    pub host_evictions: u64,
 }
 
 impl Counters {
@@ -81,6 +95,10 @@ impl Counters {
         self.stash_hits.fetch_add(d.stash_hits, Ordering::Relaxed);
         self.launches.fetch_add(d.launches, Ordering::Relaxed);
         self.atomic_fanout.fetch_max(d.atomic_fanout, Ordering::Relaxed);
+        self.bytes_disk.fetch_add(d.bytes_disk, Ordering::Relaxed);
+        self.host_hits.fetch_add(d.host_hits, Ordering::Relaxed);
+        self.host_misses.fetch_add(d.host_misses, Ordering::Relaxed);
+        self.host_evictions.fetch_add(d.host_evictions, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -96,6 +114,10 @@ impl Counters {
             stash_hits: self.stash_hits.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
             atomic_fanout: self.atomic_fanout.load(Ordering::Relaxed),
+            bytes_disk: self.bytes_disk.load(Ordering::Relaxed),
+            host_hits: self.host_hits.load(Ordering::Relaxed),
+            host_misses: self.host_misses.load(Ordering::Relaxed),
+            host_evictions: self.host_evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -111,13 +133,18 @@ impl Counters {
         self.stash_hits.store(0, Ordering::Relaxed);
         self.launches.store(0, Ordering::Relaxed);
         self.atomic_fanout.store(0, Ordering::Relaxed);
+        self.bytes_disk.store(0, Ordering::Relaxed);
+        self.host_hits.store(0, Ordering::Relaxed);
+        self.host_misses.store(0, Ordering::Relaxed);
+        self.host_evictions.store(0, Ordering::Relaxed);
     }
 }
 
 impl Snapshot {
     /// Total *global*-memory volume (the paper's Table 3 "Vol" column).
     /// Local/shared-memory traffic is excluded, matching Nsight's
-    /// l1tex-to-device accounting.
+    /// l1tex-to-device accounting; so is `bytes_disk` — the host
+    /// out-of-core tier reads disk, not device memory.
     pub fn volume_bytes(&self) -> u64 {
         self.bytes_streamed
             + self.bytes_gathered
@@ -152,6 +179,10 @@ impl std::ops::Add for Snapshot {
             stash_hits: self.stash_hits + o.stash_hits,
             launches: self.launches + o.launches,
             atomic_fanout: self.atomic_fanout.max(o.atomic_fanout),
+            bytes_disk: self.bytes_disk + o.bytes_disk,
+            host_hits: self.host_hits + o.host_hits,
+            host_misses: self.host_misses + o.host_misses,
+            host_evictions: self.host_evictions + o.host_evictions,
         }
     }
 }
@@ -203,6 +234,28 @@ mod tests {
     fn reset_clears() {
         let c = Counters::new();
         c.add(&Snapshot { launches: 7, ..Default::default() });
+        c.reset();
+        assert_eq!(c.snapshot(), Snapshot::default());
+    }
+
+    #[test]
+    fn host_tier_fields_accumulate_but_stay_out_of_volume() {
+        let c = Counters::new();
+        c.add(&Snapshot {
+            bytes_streamed: 100,
+            bytes_disk: 4096,
+            host_hits: 3,
+            host_misses: 2,
+            host_evictions: 1,
+            ..Default::default()
+        });
+        c.add(&Snapshot { host_hits: 1, ..Default::default() });
+        let s = c.snapshot();
+        assert_eq!(s.bytes_disk, 4096);
+        assert_eq!(s.host_hits, 4);
+        assert_eq!(s.host_misses, 2);
+        assert_eq!(s.host_evictions, 1);
+        assert_eq!(s.volume_bytes(), 100, "disk reads are not device volume");
         c.reset();
         assert_eq!(c.snapshot(), Snapshot::default());
     }

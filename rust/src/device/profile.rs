@@ -35,6 +35,11 @@ pub struct Profile {
     pub slices: usize,
     /// device memory budget (scaled 256× below the real part)
     pub dev_mem_bytes: usize,
+    /// host RAM budget (scaled 256× like `dev_mem_bytes`) — the
+    /// [`BlockCache`](crate::format::store::BlockCache) bound of the
+    /// host-out-of-core tier: a disk-resident tensor keeps at most this
+    /// many payload bytes in host memory while streaming
+    pub host_mem_bytes: usize,
     /// device memory bandwidth, GB/s (real value)
     pub hbm_gbps: f64,
     /// host↔device interconnect bandwidth, GB/s (real value)
@@ -66,6 +71,7 @@ impl Profile {
             sms: 108,
             slices: 7,
             dev_mem_bytes: 40 * (1 << 30) / 256,
+            host_mem_bytes: 512 * (1usize << 30) / 256,
             hbm_gbps: 1555.0,
             link_gbps: 25.0,
             atomic_ns: 20.0,
@@ -84,6 +90,7 @@ impl Profile {
             sms: 80,
             slices: 6,
             dev_mem_bytes: 32 * (1 << 30) / 256,
+            host_mem_bytes: 384 * (1usize << 30) / 256,
             hbm_gbps: 900.0,
             link_gbps: 12.0,
             atomic_ns: 30.0,
@@ -106,6 +113,7 @@ impl Profile {
             sms: 64,
             slices: 4,
             dev_mem_bytes: 28 * (1 << 30) / 256,
+            host_mem_bytes: 512 * (1usize << 30) / 256,
             hbm_gbps: 1100.0,
             link_gbps: 20.0,
             atomic_ns: 45.0,
@@ -125,6 +133,7 @@ impl Profile {
             sms: 8,
             slices: 2,
             dev_mem_bytes,
+            host_mem_bytes: dev_mem_bytes.saturating_mul(16).max(1 << 20),
             hbm_gbps: 100.0,
             link_gbps: 10.0,
             atomic_ns: 20.0,
@@ -171,6 +180,14 @@ impl Profile {
     /// building multi-GB tensors).
     pub fn with_memory(mut self, dev_mem_bytes: usize) -> Self {
         self.dev_mem_bytes = dev_mem_bytes;
+        self
+    }
+
+    /// Same part, different host-RAM budget — the block-cache bound of
+    /// the host-out-of-core tier (builder for tests/CLI runs that need a
+    /// tensor to exceed "host memory" without a multi-GB payload).
+    pub fn with_host_memory(mut self, host_mem_bytes: usize) -> Self {
+        self.host_mem_bytes = host_mem_bytes;
         self
     }
 
@@ -223,6 +240,9 @@ impl Profile {
         if self.dev_mem_bytes == 0 {
             return Err("dev_mem_bytes must be > 0".into());
         }
+        if self.host_mem_bytes == 0 {
+            return Err("host_mem_bytes must be > 0".into());
+        }
         if self.queues == 0 {
             return Err("queues must be >= 1".into());
         }
@@ -246,10 +266,21 @@ mod tests {
             assert!(p.sms >= p.slices);
             assert!(p.hbm_gbps > p.link_gbps);
             assert!(p.dev_mem_bytes > 1 << 20);
+            assert!(p.host_mem_bytes > p.dev_mem_bytes, "host RAM outsizes HBM");
             assert!(p.queues >= 1);
             assert_eq!(p.devices, 1, "presets are single-device by default");
             assert!(p.peer_gbps > p.link_gbps, "peer links outrun host links");
         }
+    }
+
+    #[test]
+    fn host_memory_builder_and_validation() {
+        let p = Profile::a100().with_host_memory(1 << 20);
+        assert_eq!(p.host_mem_bytes, 1 << 20);
+        assert!(p.validate().is_ok());
+        assert!(Profile::a100().with_host_memory(0).validate().is_err());
+        // tiny profiles keep a usable host tier even at tiny device sizes
+        assert!(Profile::tiny(1 << 16).host_mem_bytes >= 1 << 20);
     }
 
     #[test]

@@ -79,11 +79,13 @@ pub struct Batch {
     pub nnz: usize,
 }
 
-/// The BLCO tensor (Figure 6b).
+/// The BLCO tensor (Figure 6b). Blocks are individually `Arc`ed so the
+/// batch-fetch interface ([`crate::format::store::BatchSource`]) can hand
+/// out resident and disk-loaded blocks through one type without copying.
 #[derive(Clone, Debug)]
 pub struct BlcoTensor {
     pub spec: BlcoSpec,
-    pub blocks: Vec<Block>,
+    pub blocks: Vec<std::sync::Arc<Block>>,
     pub batches: Vec<Batch>,
     pub config: BlcoConfig,
     pub nnz: usize,
@@ -168,21 +170,21 @@ impl BlcoTensor {
         stages.mark("reencode");
 
         // 4. adaptive blocking: split at key boundaries and the nnz budget
-        let mut blocks: Vec<Block> = Vec::new();
+        let mut blocks: Vec<std::sync::Arc<Block>> = Vec::new();
         let mut start = 0usize;
         for i in 0..=nnz {
             let boundary = i == nnz
                 || keys[i] != keys[start]
                 || i - start >= config.max_block_nnz;
             if boundary && i > start {
-                blocks.push(Block {
+                blocks.push(std::sync::Arc::new(Block {
                     key: keys[start],
                     lidx: lidx[start..i].to_vec(),
                     vals: pairs[start..i]
                         .iter()
                         .map(|&(_, e)| t.vals[e as usize])
                         .collect(),
-                });
+                }));
                 start = i;
             }
         }
@@ -203,36 +205,12 @@ impl BlcoTensor {
         }
     }
 
-    fn build_batches(blocks: &[Block], config: &BlcoConfig) -> Vec<Batch> {
-        let mut batches = Vec::new();
-        let mut b = 0usize;
-        while b < blocks.len() {
-            let start = b;
-            let mut total = 0usize;
-            while b < blocks.len() && total + blocks[b].nnz() <= config.max_block_nnz
-            {
-                total += blocks[b].nnz();
-                b += 1;
-            }
-            if b == start {
-                // a single block larger than the budget cannot happen
-                // (stage 4 splits at the budget) but guard anyway
-                total = blocks[b].nnz();
-                b += 1;
-            }
-            let mut wg_block = Vec::new();
-            let mut wg_offset = Vec::new();
-            for (bi, blk) in blocks[start..b].iter().enumerate() {
-                let mut off = 0usize;
-                while off < blk.nnz() {
-                    wg_block.push((start + bi) as u32);
-                    wg_offset.push(off as u32);
-                    off += config.workgroup;
-                }
-            }
-            batches.push(Batch { blocks: start..b, wg_block, wg_offset, nnz: total });
-        }
-        batches
+    fn build_batches(
+        blocks: &[std::sync::Arc<Block>],
+        config: &BlcoConfig,
+    ) -> Vec<Batch> {
+        let nnzs: Vec<usize> = blocks.iter().map(|b| b.nnz()).collect();
+        build_batches_from_nnz(&nnzs, config)
     }
 
     #[inline]
@@ -259,6 +237,22 @@ impl BlcoTensor {
             .sqrt()
     }
 
+    /// Host→device wire bytes of batch `b`: its blocks' payload plus the
+    /// work-group maps that ride along. The single source of truth for
+    /// this accounting — the streamer's free function and the resident
+    /// [`BatchSource`](crate::format::store::BatchSource) arm both
+    /// delegate here (the on-disk arm computes the identical number from
+    /// header metadata, pinned by the tier-parity tests).
+    pub fn batch_wire_bytes(&self, b: usize) -> usize {
+        let batch = &self.batches[b];
+        batch
+            .blocks
+            .clone()
+            .map(|i| self.blocks[i].bytes())
+            .sum::<usize>()
+            + batch.wg_block.len() * 8
+    }
+
     /// Total bytes of the on-device representation: per-nnz payload plus
     /// per-block key metadata and batching maps.
     pub fn footprint_bytes(&self) -> usize {
@@ -282,6 +276,44 @@ impl BlcoTensor {
         }
         t
     }
+}
+
+/// Stage 5 as a pure function of the per-block nnz list: group consecutive
+/// blocks into launches of at most `max_block_nnz` total elements with
+/// explicit work-group → (block, offset) maps. The maps depend only on the
+/// block sizes and the config, which is why the on-disk container
+/// ([`crate::format::store`]) stores neither — the reader rebuilds batches
+/// bit-identical to the resident tensor's from the header's block index.
+pub fn build_batches_from_nnz(nnzs: &[usize], config: &BlcoConfig) -> Vec<Batch> {
+    assert!(config.workgroup > 0, "workgroup must be > 0");
+    let mut batches = Vec::new();
+    let mut b = 0usize;
+    while b < nnzs.len() {
+        let start = b;
+        let mut total = 0usize;
+        while b < nnzs.len() && total + nnzs[b] <= config.max_block_nnz {
+            total += nnzs[b];
+            b += 1;
+        }
+        if b == start {
+            // a single block larger than the budget cannot happen
+            // (stage 4 splits at the budget) but guard anyway
+            total = nnzs[b];
+            b += 1;
+        }
+        let mut wg_block = Vec::new();
+        let mut wg_offset = Vec::new();
+        for (bi, &nnz) in nnzs[start..b].iter().enumerate() {
+            let mut off = 0usize;
+            while off < nnz {
+                wg_block.push((start + bi) as u32);
+                wg_offset.push(off as u32);
+                off += config.workgroup;
+            }
+        }
+        batches.push(Batch { blocks: start..b, wg_block, wg_offset, nnz: total });
+    }
+    batches
 }
 
 #[cfg(test)]

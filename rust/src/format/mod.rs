@@ -1,9 +1,11 @@
 //! Sparse tensor formats: the paper's BLCO format plus every baseline its
 //! evaluation compares against, implemented from scratch — list-based
 //! (COO is [`crate::tensor::coo`], F-COO) and tree-based (CSF, B-CSF,
-//! MM-CSF).
+//! MM-CSF) — and the on-disk `.blco` container + host-out-of-core batch
+//! source ([`store`]).
 
 pub mod blco;
+pub mod store;
 pub mod csf;
 pub mod fcoo;
 pub mod hicoo;

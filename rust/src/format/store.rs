@@ -1,0 +1,1261 @@
+//! The on-disk `.blco` container and the host-out-of-core batch source.
+//!
+//! The paper's out-of-memory streaming makes *device* memory a non-issue;
+//! this module removes the remaining binding constraint — host RAM — by
+//! persisting a constructed [`BlcoTensor`] into a checksummed, versioned,
+//! little-endian container that the streaming coordinator can read back
+//! **block by block**. A [`BlcoStoreReader`] exposes every piece of
+//! metadata (dims, order, nnz, per-block keys/sizes, batch maps) from the
+//! header alone, and loads block payloads on demand through a
+//! bounded-memory LRU [`BlockCache`], so the resident working set is the
+//! cache budget — not the tensor size.
+//!
+//! # Container layout (version 1, everything little-endian)
+//!
+//! ```text
+//! [0..8)    magic  "BLCOSTOR"
+//! [8..12)   u32    version (currently 1)
+//! [12..20)  u64    header length H (bytes of the header blob)
+//! [20..20+H)       header blob:
+//!                    u32        order
+//!                    u64 × ord  dims
+//!                    u64        nnz
+//!                    f64        Frobenius norm of the values
+//!                    u64        max_block_nnz   (BlcoConfig)
+//!                    u32        workgroup       (BlcoConfig)
+//!                    u32        inblock_budget  (BlcoConfig)
+//!                    u64        number of blocks B
+//!                    B × { u64 key, u64 nnz, u32 payload crc32 }
+//! [20+H..24+H) u32  crc32 of the header blob
+//! [24+H..)         block payloads, in block order, back to back:
+//!                    nnz × u64  in-block indices (lidx)
+//!                    nnz × u64  value bits (f64::to_bits)
+//! ```
+//!
+//! Per-block payload offsets/lengths are derived (`nnz * 16` each, packed
+//! in order), so a truncated file is detected by a single size check at
+//! open. The [`BlcoSpec`] bit layout and the batch → work-group maps are
+//! pure functions of `(dims, inblock_budget)` and the per-block nnz list
+//! respectively, so both are rebuilt at open instead of being stored —
+//! the reader's batches are bit-identical to the resident tensor's.
+//!
+//! Every open-time failure is a structured [`StoreError`]; payload
+//! corruption discovered later (a crc mismatch on a lazily loaded block)
+//! surfaces as an error from [`BlcoStoreReader::block`]. The streaming
+//! executors treat that as fatal (they panic with the path and block id):
+//! a half-streamed MTTKRP has no useful partial answer.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::device::counters::{Counters, Snapshot};
+use crate::format::blco::{build_batches_from_nnz, Batch, BlcoConfig, Block, BlcoTensor};
+use crate::linear::encode::BlcoSpec;
+
+/// First 8 bytes of every `.blco` container.
+pub const STORE_MAGIC: [u8; 8] = *b"BLCOSTOR";
+
+/// Container version this build writes and reads.
+pub const STORE_VERSION: u32 = 1;
+
+/// Default [`BlockCache`] budget when the caller does not pass one
+/// (CLI `inspect`, ad-hoc opens). Engines pass `Profile::host_mem_bytes`.
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+/// Why a container could not be written, opened or read. Open-time
+/// variants carry the numbers needed to diagnose the file; all of them
+/// are values, never panics.
+#[derive(Debug)]
+pub enum StoreError {
+    /// underlying IO failure, with what we were doing at the time
+    Io { context: String, source: std::io::Error },
+    /// the first 8 bytes are not [`STORE_MAGIC`]
+    BadMagic { found: [u8; 8] },
+    /// a container written by an incompatible version of this layout
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// the file ends before the region the header promises
+    Truncated { what: String, needed: u64, available: u64 },
+    /// stored checksum does not match the bytes on disk
+    ChecksumMismatch { what: String, expected: u32, found: u32 },
+    /// internally inconsistent metadata (bad counts, trailing bytes, ...)
+    Malformed { what: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { context, source } => {
+                write!(f, "{context}: {source}")
+            }
+            StoreError::BadMagic { found } => write!(
+                f,
+                "not a .blco container: magic {found:02x?} != {:02x?}",
+                STORE_MAGIC
+            ),
+            StoreError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "unsupported container version {found} (this build reads \
+                 version {supported})"
+            ),
+            StoreError::Truncated { what, needed, available } => write!(
+                f,
+                "truncated container: {what} needs {needed} bytes, file has \
+                 {available}"
+            ),
+            StoreError::ChecksumMismatch { what, expected, found } => write!(
+                f,
+                "checksum mismatch in {what}: stored {expected:#010x}, \
+                 computed {found:#010x}"
+            ),
+            StoreError::Malformed { what } => {
+                write!(f, "malformed container: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+fn io_err(context: impl Into<String>) -> impl FnOnce(std::io::Error) -> StoreError {
+    let context = context.into();
+    move |source| StoreError::Io { context, source }
+}
+
+// ---------------------------------------------------------------- crc32
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ------------------------------------------------- little-endian helpers
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Sequential little-endian reader over a byte slice with
+/// truncation-checked takes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], StoreError> {
+        if self.pos + n > self.buf.len() {
+            return Err(StoreError::Truncated {
+                what: format!("header field {what}"),
+                needed: (self.pos + n) as u64,
+                available: self.buf.len() as u64,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, StoreError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+// ------------------------------------------------------------ the writer
+
+/// Summary of a written container (what `blco convert` prints).
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub path: PathBuf,
+    pub file_bytes: u64,
+    pub header_bytes: usize,
+    pub payload_bytes: usize,
+    pub blocks: usize,
+    pub batches: usize,
+    pub nnz: usize,
+}
+
+/// Writer namespace for the `.blco` container.
+pub struct BlcoStore;
+
+impl BlcoStore {
+    /// Serialize a constructed BLCO tensor into the container at `path`
+    /// (overwriting any existing file). The written payload is the exact
+    /// block content — `u64` indices and `f64` bit patterns — so a
+    /// read-back MTTKRP is bit-for-bit the resident one.
+    pub fn write(t: &BlcoTensor, path: &Path) -> Result<StoreSummary, StoreError> {
+        // one reusable serialization buffer: each block is serialized
+        // twice (pass 1 for the header checksums, pass 2 to stream the
+        // payload region out), so peak extra memory is O(one block), not
+        // O(tensor) — writing must not halve the size `convert` handles
+        let mut buf: Vec<u8> = Vec::new();
+        let fill = |buf: &mut Vec<u8>, blk: &Block| {
+            buf.clear();
+            buf.reserve(blk.nnz() * 16);
+            for &l in &blk.lidx {
+                buf.extend_from_slice(&l.to_le_bytes());
+            }
+            for &v in &blk.vals {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        };
+
+        // ---- header blob (pass 1 over the blocks)
+        let mut header = Vec::with_capacity(64 + t.blocks.len() * 20);
+        put_u32(&mut header, t.order() as u32);
+        for &d in t.dims() {
+            put_u64(&mut header, d);
+        }
+        put_u64(&mut header, t.nnz as u64);
+        put_f64(&mut header, t.norm());
+        put_u64(&mut header, t.config.max_block_nnz as u64);
+        put_u32(&mut header, t.config.workgroup as u32);
+        put_u32(&mut header, t.config.inblock_budget);
+        put_u64(&mut header, t.blocks.len() as u64);
+        for blk in &t.blocks {
+            fill(&mut buf, blk);
+            put_u64(&mut header, blk.key);
+            put_u64(&mut header, blk.nnz() as u64);
+            put_u32(&mut header, crc32(&buf));
+        }
+
+        // ---- file (pass 2 streams the payloads)
+        let file = File::create(path)
+            .map_err(io_err(format!("create {}", path.display())))?;
+        let mut w = std::io::BufWriter::new(file);
+        let ctx = || format!("write {}", path.display());
+        w.write_all(&STORE_MAGIC).map_err(io_err(ctx()))?;
+        w.write_all(&STORE_VERSION.to_le_bytes()).map_err(io_err(ctx()))?;
+        w.write_all(&(header.len() as u64).to_le_bytes()).map_err(io_err(ctx()))?;
+        w.write_all(&header).map_err(io_err(ctx()))?;
+        w.write_all(&crc32(&header).to_le_bytes()).map_err(io_err(ctx()))?;
+        let mut payload_bytes = 0usize;
+        for blk in &t.blocks {
+            fill(&mut buf, blk);
+            w.write_all(&buf).map_err(io_err(ctx()))?;
+            payload_bytes += buf.len();
+        }
+        w.flush().map_err(io_err(ctx()))?;
+
+        Ok(StoreSummary {
+            path: path.to_path_buf(),
+            file_bytes: (24 + header.len() + payload_bytes) as u64,
+            header_bytes: header.len(),
+            payload_bytes,
+            blocks: t.blocks.len(),
+            batches: t.batches.len(),
+            nnz: t.nnz,
+        })
+    }
+}
+
+// ------------------------------------------------------------- the cache
+
+/// Point-in-time statistics of a [`BlockCache`]. `peak_resident_bytes`
+/// never exceeding `budget_bytes` is the host-out-of-core acceptance
+/// observable the round-trip tests assert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// bytes read from disk (payloads of every miss)
+    pub disk_bytes: u64,
+    /// block payload bytes currently held
+    pub resident_bytes: usize,
+    /// high-water mark of host payload residency, *including* any single
+    /// over-budget block handed out uncached — so the invariant
+    /// `peak_resident_bytes <= budget_bytes` fails honestly when the
+    /// budget cannot bound residency, rather than passing vacuously
+    pub peak_resident_bytes: usize,
+    pub budget_bytes: usize,
+}
+
+struct CacheInner {
+    /// block id → (payload, last-touch tick)
+    map: HashMap<usize, (Arc<Block>, u64)>,
+    resident_bytes: usize,
+    tick: u64,
+}
+
+/// Bounded-memory LRU over loaded blocks: at most `budget` payload bytes
+/// stay resident; least-recently-used blocks are evicted to make room. A
+/// single block larger than the whole budget is returned to the caller
+/// but never inserted — the cache map stays under budget, and the
+/// over-budget hand-out is charged to `peak_resident_bytes` so the
+/// violation is observable.
+pub struct BlockCache {
+    budget: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    disk_bytes: AtomicU64,
+    peak: AtomicUsize,
+}
+
+impl BlockCache {
+    pub fn new(budget: usize) -> Self {
+        BlockCache {
+            budget,
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                resident_bytes: 0,
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            disk_bytes: AtomicU64::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Look up block `i`, refreshing its recency on a hit.
+    fn get(&self, i: usize) -> Option<Arc<Block>> {
+        let mut inner = self.inner.lock().expect("block cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&i) {
+            Some((b, last)) => {
+                *last = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(b))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly loaded block, evicting LRU entries until it fits.
+    /// Returns how many blocks were evicted.
+    fn insert(&self, i: usize, block: Arc<Block>) -> usize {
+        let bytes = block.bytes();
+        self.disk_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        if bytes > self.budget {
+            // over-budget single block: hand it out uncached — but charge
+            // it to the high-water mark, so `peak <= budget` assertions
+            // honestly FAIL when the budget cannot bound residency at all
+            // (raise the budget or shrink max_block_nnz), instead of
+            // passing vacuously while the caller holds the payload anyway
+            let inner = self.inner.lock().expect("block cache poisoned");
+            self.peak.fetch_max(inner.resident_bytes + bytes, Ordering::Relaxed);
+            return 0;
+        }
+        let mut inner = self.inner.lock().expect("block cache poisoned");
+        let mut evicted = 0usize;
+        while inner.resident_bytes + bytes > self.budget {
+            let lru = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last))| *last)
+                .map(|(&k, _)| k)
+                .expect("resident_bytes > 0 implies a resident block");
+            let (gone, _) = inner.map.remove(&lru).expect("lru key present");
+            inner.resident_bytes -= gone.bytes();
+            evicted += 1;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        // two threads can race a miss on the same block; replacing must
+        // not double-count the payload
+        if let Some((old, _)) = inner.map.insert(i, (block, tick)) {
+            inner.resident_bytes -= old.bytes();
+        }
+        inner.resident_bytes += bytes;
+        self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        self.peak.fetch_max(inner.resident_bytes, Ordering::Relaxed);
+        evicted
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("block cache poisoned");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            disk_bytes: self.disk_bytes.load(Ordering::Relaxed),
+            resident_bytes: inner.resident_bytes,
+            peak_resident_bytes: self.peak.load(Ordering::Relaxed),
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+// ------------------------------------------------------------ the reader
+
+/// Header-resident metadata of one stored block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockMeta {
+    pub key: u64,
+    pub nnz: usize,
+    /// absolute payload offset in the file
+    pub offset: u64,
+    /// payload length (`nnz * 16`)
+    pub bytes: usize,
+    pub crc: u32,
+}
+
+/// mmap-free reader over a `.blco` container: all metadata (dims, spec,
+/// per-block index, rebuilt batches) lives in memory from the header
+/// alone; block payloads load on demand through the bounded
+/// [`BlockCache`].
+pub struct BlcoStoreReader {
+    path: PathBuf,
+    file: Mutex<File>,
+    spec: BlcoSpec,
+    config: BlcoConfig,
+    nnz: usize,
+    norm: f64,
+    metas: Vec<BlockMeta>,
+    batches: Vec<Batch>,
+    cache: BlockCache,
+}
+
+impl BlcoStoreReader {
+    /// Open with the default cache budget ([`DEFAULT_CACHE_BYTES`]).
+    pub fn open(path: &Path) -> Result<Self, StoreError> {
+        Self::open_with_budget(path, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open, validating magic/version/header checksum/size, with an
+    /// explicit [`BlockCache`] budget in bytes (engines pass
+    /// `Profile::host_mem_bytes`).
+    pub fn open_with_budget(
+        path: &Path,
+        cache_budget: usize,
+    ) -> Result<Self, StoreError> {
+        let mut file = File::open(path)
+            .map_err(io_err(format!("open {}", path.display())))?;
+        let file_len = file
+            .metadata()
+            .map_err(io_err(format!("stat {}", path.display())))?
+            .len();
+
+        // ---- fixed preamble
+        let mut pre = [0u8; 20];
+        if file_len < 20 {
+            return Err(StoreError::Truncated {
+                what: "magic + version + header length".into(),
+                needed: 20,
+                available: file_len,
+            });
+        }
+        file.read_exact(&mut pre)
+            .map_err(io_err(format!("read preamble of {}", path.display())))?;
+        let magic: [u8; 8] = pre[0..8].try_into().unwrap();
+        if magic != STORE_MAGIC {
+            return Err(StoreError::BadMagic { found: magic });
+        }
+        let version = u32::from_le_bytes(pre[8..12].try_into().unwrap());
+        if version != STORE_VERSION {
+            return Err(StoreError::UnsupportedVersion {
+                found: version,
+                supported: STORE_VERSION,
+            });
+        }
+        let header_len = u64::from_le_bytes(pre[12..20].try_into().unwrap());
+        if header_len > file_len.saturating_sub(24) {
+            return Err(StoreError::Truncated {
+                what: "header blob + checksum".into(),
+                needed: 24 + header_len,
+                available: file_len,
+            });
+        }
+
+        // ---- header blob + its checksum
+        let mut header = vec![0u8; header_len as usize];
+        file.read_exact(&mut header)
+            .map_err(io_err(format!("read header of {}", path.display())))?;
+        let mut crc_buf = [0u8; 4];
+        file.read_exact(&mut crc_buf)
+            .map_err(io_err(format!("read header crc of {}", path.display())))?;
+        let stored_crc = u32::from_le_bytes(crc_buf);
+        let computed = crc32(&header);
+        if stored_crc != computed {
+            return Err(StoreError::ChecksumMismatch {
+                what: "header".into(),
+                expected: stored_crc,
+                found: computed,
+            });
+        }
+
+        // ---- parse
+        let mut c = Cursor::new(&header);
+        let order = c.u32("order")? as usize;
+        if order == 0 || order > 16 {
+            return Err(StoreError::Malformed {
+                what: format!("order {order} outside 1..=16"),
+            });
+        }
+        let mut dims = Vec::with_capacity(order);
+        for n in 0..order {
+            let d = c.u64(&format!("dims[{n}]"))?;
+            if d == 0 {
+                return Err(StoreError::Malformed {
+                    what: format!("dims[{n}] is zero"),
+                });
+            }
+            dims.push(d);
+        }
+        let nnz = c.u64("nnz")? as usize;
+        let norm = c.f64("norm")?;
+        let max_block_nnz = c.u64("max_block_nnz")? as usize;
+        let workgroup = c.u32("workgroup")? as usize;
+        let inblock_budget = c.u32("inblock_budget")?;
+        if max_block_nnz == 0 || workgroup == 0 {
+            return Err(StoreError::Malformed {
+                what: "max_block_nnz and workgroup must be > 0".into(),
+            });
+        }
+        let nblocks = c.u64("block count")? as usize;
+        // each index entry takes 20 header bytes; a count the header
+        // cannot physically hold is malformed (and must not drive a
+        // pre-allocation)
+        if nblocks > header.len() / 20 {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "block count {nblocks} exceeds what a {}-byte header can hold",
+                    header.len()
+                ),
+            });
+        }
+        let payload_base = 24 + header_len;
+        // hard ceiling for any single block: the payload region that
+        // actually exists on disk. Without it, a crafted header (the crc
+        // is attacker-computable) could declare a huge nnz whose
+        // `* 16` wraps in release builds and whose decode loop then
+        // aborts or indexes out of bounds — open must reject it instead.
+        let max_block_nnz_on_disk = file_len.saturating_sub(payload_base) / 16;
+        let mut metas = Vec::with_capacity(nblocks);
+        let mut offset = payload_base;
+        let mut total_nnz = 0usize;
+        for b in 0..nblocks {
+            let key = c.u64(&format!("block[{b}].key"))?;
+            let bnnz64 = c.u64(&format!("block[{b}].nnz"))?;
+            if bnnz64 == 0 {
+                return Err(StoreError::Malformed {
+                    what: format!("block[{b}] has zero non-zeros"),
+                });
+            }
+            if bnnz64 > max_block_nnz_on_disk {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "block[{b}] claims {bnnz64} non-zeros but the payload \
+                         region holds at most {max_block_nnz_on_disk}"
+                    ),
+                });
+            }
+            let bnnz = bnnz64 as usize;
+            let crc = c.u32(&format!("block[{b}].crc"))?;
+            let bytes = bnnz * 16; // cannot wrap: bnnz bounded by file size
+            metas.push(BlockMeta { key, nnz: bnnz, offset, bytes, crc });
+            offset = offset.checked_add(bytes as u64).ok_or_else(|| {
+                StoreError::Malformed {
+                    what: format!("payload offsets overflow at block {b}"),
+                }
+            })?;
+            total_nnz = total_nnz.checked_add(bnnz).ok_or_else(|| {
+                StoreError::Malformed {
+                    what: format!("nnz total overflows at block {b}"),
+                }
+            })?;
+        }
+        if c.pos != header.len() {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "{} trailing header bytes after the block index",
+                    header.len() - c.pos
+                ),
+            });
+        }
+        if total_nnz != nnz {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "block nnz sum {total_nnz} != header nnz {nnz}"
+                ),
+            });
+        }
+        if offset > file_len {
+            return Err(StoreError::Truncated {
+                what: "block payload region".into(),
+                needed: offset,
+                available: file_len,
+            });
+        }
+        if offset < file_len {
+            return Err(StoreError::Malformed {
+                what: format!("{} trailing bytes after the payload region", file_len - offset),
+            });
+        }
+
+        // ---- rebuild the derived structures: the bit layout is a pure
+        // function of (dims, budget), the batch maps of (block nnz list,
+        // config) — both bit-identical to the resident tensor's
+        let spec = BlcoSpec::with_budget(&dims, inblock_budget);
+        let config = BlcoConfig {
+            max_block_nnz,
+            workgroup,
+            inblock_budget,
+            ..BlcoConfig::default()
+        };
+        let nnzs: Vec<usize> = metas.iter().map(|m| m.nnz).collect();
+        let batches = build_batches_from_nnz(&nnzs, &config);
+
+        Ok(BlcoStoreReader {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+            spec,
+            config,
+            nnz,
+            norm,
+            metas,
+            batches,
+            cache: BlockCache::new(cache_budget),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn spec(&self) -> &BlcoSpec {
+        &self.spec
+    }
+
+    pub fn config(&self) -> &BlcoConfig {
+        &self.config
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        &self.spec.dims
+    }
+
+    pub fn order(&self) -> usize {
+        self.spec.order()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Frobenius norm recorded at write time (CP-ALS needs it without a
+    /// payload scan).
+    pub fn norm(&self) -> f64 {
+        self.norm
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn block_meta(&self, i: usize) -> &BlockMeta {
+        &self.metas[i]
+    }
+
+    /// Batch metadata rebuilt from the header (bit-identical to the
+    /// resident tensor's batching).
+    pub fn batches(&self) -> &[Batch] {
+        &self.batches
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Total on-device payload + metadata bytes, same accounting as
+    /// [`BlcoTensor::footprint_bytes`] so routing decisions are identical
+    /// across tiers.
+    pub fn footprint_bytes(&self) -> usize {
+        let payload: usize = self.metas.iter().map(|m| m.bytes).sum();
+        let keys = self.metas.len() * 8;
+        let maps: usize = self.batches.iter().map(|b| b.wg_block.len() * 8).sum();
+        payload + keys + maps
+    }
+
+    /// Read and decode block `i` straight from disk, verifying its
+    /// checksum — no cache interaction.
+    fn read_block(&self, i: usize) -> Result<Block, StoreError> {
+        let m = self.metas[i];
+        let mut raw = vec![0u8; m.bytes];
+        {
+            let mut f = self.file.lock().expect("store file poisoned");
+            f.seek(SeekFrom::Start(m.offset)).map_err(io_err(format!(
+                "seek to block {i} of {}",
+                self.path.display()
+            )))?;
+            f.read_exact(&mut raw).map_err(io_err(format!(
+                "read block {i} of {}",
+                self.path.display()
+            )))?;
+        }
+        let found = crc32(&raw);
+        if found != m.crc {
+            return Err(StoreError::ChecksumMismatch {
+                what: format!("block {i} payload"),
+                expected: m.crc,
+                found,
+            });
+        }
+        let mut lidx = Vec::with_capacity(m.nnz);
+        for w in 0..m.nnz {
+            lidx.push(u64::from_le_bytes(raw[w * 8..w * 8 + 8].try_into().unwrap()));
+        }
+        let vbase = m.nnz * 8;
+        let mut vals = Vec::with_capacity(m.nnz);
+        for w in 0..m.nnz {
+            vals.push(f64::from_bits(u64::from_le_bytes(
+                raw[vbase + w * 8..vbase + w * 8 + 8].try_into().unwrap(),
+            )));
+        }
+        Ok(Block { key: m.key, lidx, vals })
+    }
+
+    /// Load block `i`, through the cache. Cache hit/miss/eviction counts
+    /// and disk-read bytes are charged to `counters` (the host tier of
+    /// the traffic model); payload integrity is verified against the
+    /// header checksum on every disk read.
+    pub fn block(&self, i: usize, counters: &Counters) -> Result<Arc<Block>, StoreError> {
+        if let Some(b) = self.cache.get(i) {
+            counters.add(&Snapshot { host_hits: 1, ..Default::default() });
+            return Ok(b);
+        }
+        let m = self.metas[i];
+        let block = Arc::new(self.read_block(i)?);
+        let evicted = self.cache.insert(i, Arc::clone(&block));
+        counters.add(&Snapshot {
+            host_misses: 1,
+            host_evictions: evicted as u64,
+            bytes_disk: m.bytes as u64,
+            ..Default::default()
+        });
+        Ok(block)
+    }
+
+    /// Verify every block payload against its stored checksum without
+    /// touching the cache (CLI `inspect --verify`). Returns the payload
+    /// bytes scanned.
+    pub fn verify_payloads(&self) -> Result<usize, StoreError> {
+        let mut scanned = 0usize;
+        for i in 0..self.metas.len() {
+            self.read_block(i)?;
+            scanned += self.metas[i].bytes;
+        }
+        Ok(scanned)
+    }
+
+    /// Materialize the whole container as a resident [`BlcoTensor`]
+    /// (cache-bypassing full scan) — the resident twin the CLI's
+    /// `stream --from-store --check` compares bit-for-bit against, and an
+    /// escape hatch for callers that decide a tensor fits after all.
+    pub fn to_tensor(&self) -> Result<BlcoTensor, StoreError> {
+        let mut blocks = Vec::with_capacity(self.metas.len());
+        for i in 0..self.metas.len() {
+            blocks.push(Arc::new(self.read_block(i)?));
+        }
+        Ok(BlcoTensor {
+            spec: self.spec.clone(),
+            blocks,
+            batches: self.batches.clone(),
+            config: self.config,
+            nnz: self.nnz,
+            stages: Arc::new(crate::util::timer::Stages::new()),
+        })
+    }
+}
+
+impl std::fmt::Debug for BlcoStoreReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BlcoStoreReader")
+            .field("path", &self.path)
+            .field("dims", &self.spec.dims)
+            .field("nnz", &self.nnz)
+            .field("blocks", &self.metas.len())
+            .field("batches", &self.batches.len())
+            .finish()
+    }
+}
+
+// ------------------------------------------------------ the batch source
+
+/// The blocks backing one batch, borrowed from a resident tensor or
+/// freshly loaded from disk. Derefs to `[Arc<Block>]` indexed by
+/// `global_block_id - batch.blocks.start`.
+pub enum BatchBlocks<'a> {
+    Borrowed(&'a [Arc<Block>]),
+    Loaded(Vec<Arc<Block>>),
+}
+
+impl std::ops::Deref for BatchBlocks<'_> {
+    type Target = [Arc<Block>];
+
+    fn deref(&self) -> &[Arc<Block>] {
+        match self {
+            BatchBlocks::Borrowed(s) => s,
+            BatchBlocks::Loaded(v) => v,
+        }
+    }
+}
+
+/// Where a BLCO engine's block payload lives. Every streaming executor
+/// and kernel consumes batches through this interface, so nothing above
+/// it assumes the tensor is in host RAM:
+///
+/// * [`BatchSource::Resident`] — the whole [`BlcoTensor`] is resident
+///   (the original in-memory path); fetches borrow, zero copies;
+/// * [`BatchSource::OnDisk`] — only header metadata is resident; fetches
+///   load payloads through the reader's bounded [`BlockCache`], making
+///   host memory a budget rather than a requirement.
+// one value per engine, moved once at construction — the inline-size
+// asymmetry between the Arc and the reader (spec + index + cache) is
+// irrelevant, and boxing the reader would only add a pointer chase to
+// every batch fetch
+#[allow(clippy::large_enum_variant)]
+pub enum BatchSource {
+    Resident(Arc<BlcoTensor>),
+    OnDisk(BlcoStoreReader),
+}
+
+impl BatchSource {
+    pub fn spec(&self) -> &BlcoSpec {
+        match self {
+            BatchSource::Resident(t) => &t.spec,
+            BatchSource::OnDisk(r) => r.spec(),
+        }
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        match self {
+            BatchSource::Resident(t) => t.dims(),
+            BatchSource::OnDisk(r) => r.dims(),
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims().len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            BatchSource::Resident(t) => t.nnz,
+            BatchSource::OnDisk(r) => r.nnz(),
+        }
+    }
+
+    /// Work-group size the batch maps were built with.
+    pub fn workgroup(&self) -> usize {
+        match self {
+            BatchSource::Resident(t) => t.config.workgroup,
+            BatchSource::OnDisk(r) => r.config().workgroup,
+        }
+    }
+
+    pub fn batches(&self) -> &[Batch] {
+        match self {
+            BatchSource::Resident(t) => &t.batches,
+            BatchSource::OnDisk(r) => r.batches(),
+        }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches().len()
+    }
+
+    /// Host→device wire bytes of batch `b` (payload + work-group maps) —
+    /// identical across tiers, so schedules planned against either source
+    /// are interchangeable (pinned per batch by the tier-parity tests).
+    pub fn batch_bytes(&self, b: usize) -> usize {
+        match self {
+            BatchSource::Resident(t) => t.batch_wire_bytes(b),
+            BatchSource::OnDisk(r) => {
+                let batch = &r.batches()[b];
+                batch
+                    .blocks
+                    .clone()
+                    .map(|i| r.block_meta(i).bytes)
+                    .sum::<usize>()
+                    + batch.wg_block.len() * 8
+            }
+        }
+    }
+
+    /// Total on-device bytes (payload + key + map metadata), the same
+    /// number for both tiers of the same tensor.
+    pub fn footprint_bytes(&self) -> usize {
+        match self {
+            BatchSource::Resident(t) => t.footprint_bytes(),
+            BatchSource::OnDisk(r) => r.footprint_bytes(),
+        }
+    }
+
+    /// Frobenius norm of the stored values (header field on disk).
+    pub fn norm(&self) -> f64 {
+        match self {
+            BatchSource::Resident(t) => t.norm(),
+            BatchSource::OnDisk(r) => r.norm(),
+        }
+    }
+
+    pub fn is_on_disk(&self) -> bool {
+        matches!(self, BatchSource::OnDisk(_))
+    }
+
+    /// The resident payload, when there is one.
+    pub fn resident(&self) -> Option<&Arc<BlcoTensor>> {
+        match self {
+            BatchSource::Resident(t) => Some(t),
+            BatchSource::OnDisk(_) => None,
+        }
+    }
+
+    /// The disk reader, when the payload is out of core.
+    pub fn reader(&self) -> Option<&BlcoStoreReader> {
+        match self {
+            BatchSource::Resident(_) => None,
+            BatchSource::OnDisk(r) => Some(r),
+        }
+    }
+
+    /// The blocks of batch `b`: borrowed when resident, cache-loaded when
+    /// on disk. Disk corruption discovered here (crc mismatch, IO fault)
+    /// is fatal — a half-streamed MTTKRP has no useful partial result —
+    /// and panics with the path and block id.
+    pub fn fetch_batch(&self, b: usize, counters: &Counters) -> BatchBlocks<'_> {
+        match self {
+            BatchSource::Resident(t) => {
+                BatchBlocks::Borrowed(&t.blocks[t.batches[b].blocks.clone()])
+            }
+            BatchSource::OnDisk(r) => {
+                let range = r.batches()[b].blocks.clone();
+                let mut v = Vec::with_capacity(range.len());
+                for i in range {
+                    v.push(r.block(i, counters).unwrap_or_else(|e| {
+                        panic!(
+                            "loading BLCO block {i} from {}: {e}",
+                            r.path().display()
+                        )
+                    }));
+                }
+                BatchBlocks::Loaded(v)
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for BatchSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchSource::Resident(t) => f
+                .debug_struct("BatchSource::Resident")
+                .field("dims", &t.dims())
+                .field("nnz", &t.nnz)
+                .finish(),
+            BatchSource::OnDisk(r) => f
+                .debug_struct("BatchSource::OnDisk")
+                .field("path", &r.path)
+                .field("nnz", &r.nnz)
+                .finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::blco::BlcoConfig;
+    use crate::tensor::synth;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("blco_store_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn sample_tensor() -> BlcoTensor {
+        let t = synth::uniform(&[60, 50, 40], 6_000, 3);
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        BlcoTensor::from_coo_with(&t, cfg)
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn header_metadata_round_trips() {
+        let b = sample_tensor();
+        let p = tmpfile("header.blco");
+        let summary = BlcoStore::write(&b, &p).unwrap();
+        assert_eq!(summary.blocks, b.blocks.len());
+        assert_eq!(summary.batches, b.batches.len());
+        let r = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r.dims(), b.dims());
+        assert_eq!(r.order(), b.order());
+        assert_eq!(r.nnz(), b.nnz);
+        assert!((r.norm() - b.norm()).abs() < 1e-12);
+        assert_eq!(r.num_blocks(), b.blocks.len());
+        assert_eq!(r.footprint_bytes(), b.footprint_bytes());
+        // batches rebuilt bit-identically
+        assert_eq!(r.batches().len(), b.batches.len());
+        for (a, e) in r.batches().iter().zip(&b.batches) {
+            assert_eq!(a, e);
+        }
+        for (i, blk) in b.blocks.iter().enumerate() {
+            assert_eq!(r.block_meta(i).key, blk.key);
+            assert_eq!(r.block_meta(i).nnz, blk.nnz());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn blocks_round_trip_bit_for_bit() {
+        let b = sample_tensor();
+        let p = tmpfile("payload.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let r = BlcoStoreReader::open(&p).unwrap();
+        let c = Counters::new();
+        for (i, expect) in b.blocks.iter().enumerate() {
+            let got = r.block(i, &c).unwrap();
+            assert_eq!(got.key, expect.key);
+            assert_eq!(got.lidx, expect.lidx);
+            let gb: Vec<u64> = got.vals.iter().map(|v| v.to_bits()).collect();
+            let eb: Vec<u64> = expect.vals.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, eb, "block {i} values must be bit-identical");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cache_bounds_residency_and_counts() {
+        let b = sample_tensor();
+        assert!(b.blocks.len() >= 8, "need enough blocks to thrash");
+        let p = tmpfile("cache.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        // budget of ~3 blocks forces eviction on a full scan
+        let budget = 3 * 512 * 16;
+        let r = BlcoStoreReader::open_with_budget(&p, budget).unwrap();
+        let c = Counters::new();
+        for i in 0..b.blocks.len() {
+            r.block(i, &c).unwrap();
+        }
+        // second pass over the first blocks: they were evicted
+        for i in 0..3 {
+            r.block(i, &c).unwrap();
+        }
+        let s = r.cache_stats();
+        assert!(s.peak_resident_bytes <= budget, "peak {} > budget {budget}", s.peak_resident_bytes);
+        assert!(s.resident_bytes <= budget);
+        assert!(s.evictions > 0, "scan over budget must evict");
+        assert_eq!(s.misses as usize, b.blocks.len() + 3);
+        assert_eq!(s.disk_bytes, {
+            let mut total = 0u64;
+            for i in 0..b.blocks.len() {
+                total += (r.block_meta(i).bytes) as u64;
+            }
+            for i in 0..3 {
+                total += (r.block_meta(i).bytes) as u64;
+            }
+            total
+        });
+        // hot re-read of a just-inserted block hits
+        let before = r.cache_stats().hits;
+        r.block(2, &c).unwrap();
+        assert_eq!(r.cache_stats().hits, before + 1);
+        // counters carry the same story
+        let snap = c.snapshot();
+        assert_eq!(snap.host_hits, r.cache_stats().hits);
+        assert_eq!(snap.host_misses, r.cache_stats().misses);
+        assert_eq!(snap.bytes_disk, r.cache_stats().disk_bytes);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn batch_source_parity_between_tiers() {
+        let b = sample_tensor();
+        let p = tmpfile("source.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let resident = BatchSource::Resident(Arc::new(b));
+        let disk = BatchSource::OnDisk(BlcoStoreReader::open(&p).unwrap());
+        assert_eq!(resident.dims(), disk.dims());
+        assert_eq!(resident.nnz(), disk.nnz());
+        assert_eq!(resident.num_batches(), disk.num_batches());
+        assert_eq!(resident.footprint_bytes(), disk.footprint_bytes());
+        assert_eq!(resident.workgroup(), disk.workgroup());
+        assert!((resident.norm() - disk.norm()).abs() < 1e-12);
+        let c = Counters::new();
+        for bi in 0..resident.num_batches() {
+            assert_eq!(resident.batch_bytes(bi), disk.batch_bytes(bi), "batch {bi}");
+            let a = resident.fetch_batch(bi, &c);
+            let d = disk.fetch_batch(bi, &c);
+            assert_eq!(a.len(), d.len());
+            for (x, y) in a.iter().zip(d.iter()) {
+                assert_eq!(x.key, y.key);
+                assert_eq!(x.lidx, y.lidx);
+            }
+        }
+        assert!(resident.resident().is_some());
+        assert!(disk.reader().is_some());
+        assert!(disk.is_on_disk() && !resident.is_on_disk());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupted_magic_is_structured() {
+        let b = sample_tensor();
+        let p = tmpfile("magic.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        match BlcoStoreReader::open(&p) {
+            Err(StoreError::BadMagic { .. }) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_version_is_structured() {
+        let b = sample_tensor();
+        let p = tmpfile("version.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        match BlcoStoreReader::open(&p) {
+            Err(StoreError::UnsupportedVersion { found: 99, supported }) => {
+                assert_eq!(supported, STORE_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_structured() {
+        let b = sample_tensor();
+        let p = tmpfile("trunc.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // cut the payload region short
+        std::fs::write(&p, &bytes[..bytes.len() - 64]).unwrap();
+        match BlcoStoreReader::open(&p) {
+            Err(StoreError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // cut into the header
+        std::fs::write(&p, &bytes[..12]).unwrap();
+        assert!(matches!(
+            BlcoStoreReader::open(&p),
+            Err(StoreError::Truncated { .. })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupted_header_and_payload_checksums() {
+        let b = sample_tensor();
+        let p = tmpfile("crc.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // flip a dims byte inside the header
+        let mut bad = good.clone();
+        bad[24] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        match BlcoStoreReader::open(&p) {
+            Err(StoreError::ChecksumMismatch { what, .. }) => {
+                assert_eq!(what, "header");
+            }
+            other => panic!("expected header ChecksumMismatch, got {other:?}"),
+        }
+
+        // flip a byte in the last block's payload: open succeeds (header
+        // intact), the lazy load fails with a structured error
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        let r = BlcoStoreReader::open(&p).unwrap();
+        let last = r.num_blocks() - 1;
+        match r.block(last, &Counters::new()) {
+            Err(StoreError::ChecksumMismatch { what, .. }) => {
+                assert!(what.contains("block"), "{what}");
+            }
+            other => panic!("expected payload ChecksumMismatch, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn errors_render_readably() {
+        let e = StoreError::UnsupportedVersion { found: 7, supported: 1 };
+        assert!(e.to_string().contains("version 7"));
+        let e = StoreError::Truncated {
+            what: "payload".into(),
+            needed: 100,
+            available: 50,
+        };
+        assert!(e.to_string().contains("100"));
+    }
+}

@@ -43,4 +43,5 @@ pub mod util;
 
 pub use coordinator::engine::MttkrpEngine;
 pub use format::blco::BlcoTensor;
+pub use format::store::{BatchSource, BlcoStore, BlcoStoreReader};
 pub use tensor::coo::CooTensor;

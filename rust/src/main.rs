@@ -1,7 +1,11 @@
 //! `blco` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   convert   — build a BLCO tensor from a .tns file or preset, print stats
+//!   convert   — build a BLCO tensor from a .tns file, preset or synthetic
+//!               shape; print stats, optionally write a `.blco` container
+//!               (`--out`) and/or a `.tns` copy (`--tns-out`)
+//!   inspect   — dump a `.blco` container's header (dims, blocks, batches,
+//!               checksums); `--verify` scans every payload checksum
 //!   mttkrp    — run mode-n (or all-mode) MTTKRP on a preset/file
 //!   cpals     — run CP-ALS end to end, print the fit trace
 //!   stream    — force the out-of-memory streaming path and report overlap
@@ -11,10 +15,20 @@
 //!   datasets  — list the built-in scaled dataset presets
 //!   runtime   — run the AOT/PJRT path on the demo preset (needs artifacts)
 //!
+//! `stream`, `cpals` and `serve` accept `--from-store FILE.blco` to run
+//! host-out-of-core: block payloads stay on disk and stream through a
+//! cache bounded by the profile's host-memory budget (`--host-kib`
+//! overrides it). `stream --from-store --check` hard-asserts the disk
+//! path is bit-for-bit the resident path, that plans are reused, and
+//! that cache residency never exceeded the budget.
+//!
 //! Examples:
 //!   blco mttkrp --tensor nell2 --rank 32 --device a100
 //!   blco cpals --tensor uber --rank 16 --iters 10
 //!   blco stream --tensor amazon --rank 32 --device a100
+//!   blco convert --dims 60x50x40 --nnz 6000 --seed 7 --out /tmp/t.blco
+//!   blco inspect --store /tmp/t.blco --verify
+//!   blco stream --from-store /tmp/t.blco --rank 16 --host-kib 64 --check
 
 use anyhow::{bail, Context, Result};
 
@@ -39,6 +53,24 @@ fn load_tensor(args: &Args) -> Result<CooTensor> {
     if let Some(path) = args.get("input") {
         return io::read_tns(std::path::Path::new(path), None);
     }
+    if let Some(spec) = args.get("dims") {
+        // synthetic tensor: --dims 60x50x40 --nnz N [--seed S] [--theta θ]
+        let dims: Vec<u64> = spec
+            .split('x')
+            .map(|d| d.parse().with_context(|| format!("bad --dims {spec:?}")))
+            .collect::<Result<_>>()?;
+        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+            bail!("--dims needs non-zero extents like 60x50x40");
+        }
+        let nnz: usize = args.parse_or("nnz", 10_000);
+        let seed: u64 = args.parse_or("seed", 7);
+        let theta: f64 = args.parse_or("theta", 0.0);
+        return Ok(if theta > 0.0 {
+            synth::fiber_clustered(&dims, nnz, dims.len() - 1, theta, seed)
+        } else {
+            synth::uniform(&dims, nnz, seed)
+        });
+    }
     let name = args.get_or("tensor", "demo3");
     let preset = datasets::by_name(name)
         .with_context(|| format!("unknown preset {name:?} (see `blco datasets`)"))?;
@@ -51,6 +83,20 @@ fn profile(args: &Args) -> Result<Profile> {
     let mut p = Profile::by_name(name)
         .with_context(|| format!("unknown device {name:?}"))?;
     p.devices = args.parse_or::<usize>("devices", 1).max(1);
+    if let Some(m) = args.get("mem-kib") {
+        let kib: usize = m.parse().with_context(|| format!("bad --mem-kib {m:?}"))?;
+        if kib == 0 {
+            bail!("--mem-kib must be > 0");
+        }
+        p.dev_mem_bytes = kib << 10;
+    }
+    if let Some(h) = args.get("host-kib") {
+        let kib: usize = h.parse().with_context(|| format!("bad --host-kib {h:?}"))?;
+        if kib == 0 {
+            bail!("--host-kib must be > 0");
+        }
+        p.host_mem_bytes = kib << 10;
+    }
     match args.get("links") {
         None => {}
         Some("shared") => p.links = LinkTopology::Shared,
@@ -81,7 +127,13 @@ fn cmd_datasets() -> Result<()> {
 
 fn cmd_convert(args: &Args) -> Result<()> {
     let t = load_tensor(args)?;
-    let b = blco::format::blco::BlcoTensor::from_coo(&t);
+    let defaults = BlcoConfig::default();
+    let cfg = BlcoConfig {
+        max_block_nnz: args.parse_or("max-block-nnz", defaults.max_block_nnz),
+        workgroup: args.parse_or("workgroup", defaults.workgroup),
+        ..defaults
+    };
+    let b = blco::format::blco::BlcoTensor::from_coo_with(&t, cfg);
     println!("dims            {:?}", t.dims);
     println!("nnz             {}", t.nnz());
     println!("density         {:.3e}", t.density());
@@ -100,6 +152,81 @@ fn cmd_convert(args: &Args) -> Result<()> {
         println!(
             "mode {m}: len {}  fibers {} (avg {:.2} nnz, max {})",
             t.dims[m], fs.fibers, fs.avg_len, fs.max_len
+        );
+    }
+    if let Some(tns) = args.get("tns-out") {
+        io::write_tns(std::path::Path::new(tns), &t)?;
+        println!("wrote .tns       {tns}");
+    }
+    if let Some(out) = args.get("out") {
+        let path = std::path::Path::new(out);
+        let summary = blco::BlcoStore::write(&b, path)?;
+        println!(
+            "wrote container  {} ({:.1} MiB: {} B header + {:.1} MiB payload, \
+             {} blocks / {} batches)",
+            out,
+            summary.file_bytes as f64 / (1 << 20) as f64,
+            summary.header_bytes,
+            summary.payload_bytes as f64 / (1 << 20) as f64,
+            summary.blocks,
+            summary.batches,
+        );
+        // prove the header round-trips before anyone depends on the file
+        let r = blco::BlcoStoreReader::open(path)?;
+        if r.dims() != b.dims() || r.nnz() != b.nnz {
+            bail!("container re-open disagrees with the written tensor");
+        }
+        println!("reopen check     OK (dims/nnz/batches match)");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .get("store")
+        .or_else(|| args.positionals.first().map(|s| s.as_str()))
+        .with_context(|| "inspect needs --store FILE.blco (or a positional path)")?;
+    let r = blco::BlcoStoreReader::open(std::path::Path::new(path))?;
+    println!("container       {path}");
+    println!("version         {}", blco::format::store::STORE_VERSION);
+    println!("dims            {:?}", r.dims());
+    println!("order           {}", r.order());
+    println!("nnz             {}", r.nnz());
+    println!("norm            {:.6e}", r.norm());
+    println!("blocks          {}", r.num_blocks());
+    println!("batches         {}", r.batches().len());
+    println!(
+        "footprint       {:.1} MiB (streamed on-device bytes)",
+        r.footprint_bytes() as f64 / (1 << 20) as f64
+    );
+    let cfg = r.config();
+    println!(
+        "config          max_block_nnz {}  workgroup {}  in-block bits {}",
+        cfg.max_block_nnz, cfg.workgroup, cfg.inblock_budget
+    );
+    let show: usize = args.parse_or("blocks", 8);
+    if show > 0 {
+        let tbl = Table::new(&[8, 18, 10, 12, 12]);
+        tbl.header(&["block", "key", "nnz", "bytes", "crc32"]);
+        for i in 0..r.num_blocks().min(show) {
+            let m = r.block_meta(i);
+            tbl.row(&[
+                i.to_string(),
+                format!("{:#x}", m.key),
+                m.nnz.to_string(),
+                m.bytes.to_string(),
+                format!("{:#010x}", m.crc),
+            ]);
+        }
+        if r.num_blocks() > show {
+            println!("  ... {} more (pass --blocks N)", r.num_blocks() - show);
+        }
+    }
+    if args.flag("verify") {
+        let scanned = r.verify_payloads()?;
+        println!(
+            "verify          OK ({:.1} MiB of payload checksums)",
+            scanned as f64 / (1 << 20) as f64
         );
     }
     Ok(())
@@ -145,7 +272,6 @@ fn cmd_mttkrp(args: &Args) -> Result<()> {
 }
 
 fn cmd_cpals(args: &Args) -> Result<()> {
-    let t = load_tensor(args)?;
     let opts = CpAlsOptions {
         rank: args.parse_or("rank", 16),
         max_iters: args.parse_or("iters", 20),
@@ -153,7 +279,15 @@ fn cmd_cpals(args: &Args) -> Result<()> {
         threads: args.parse_or("threads", default_threads()),
         seed: args.parse_or("seed", 0xCA1),
     };
-    let engine = MttkrpEngine::from_coo(&t, profile(args)?).with_threads(opts.threads);
+    let engine = if let Some(store) = args.get("from-store") {
+        // host-out-of-core decomposition: the tensor streams from disk on
+        // every iteration, bounded by the block cache
+        MttkrpEngine::from_store(std::path::Path::new(store), profile(args)?)?
+            .with_threads(opts.threads)
+    } else {
+        let t = load_tensor(args)?;
+        MttkrpEngine::from_coo(&t, profile(args)?).with_threads(opts.threads)
+    };
     let rep = engine.cp_als(opts);
     println!("iterations      {}", rep.iterations);
     println!("mttkrp time     {:.3} s", rep.mttkrp_seconds);
@@ -185,16 +319,39 @@ fn cmd_cpals(args: &Args) -> Result<()> {
             rep.stream.overall_s,
         );
     }
+    if let Some(cache) = engine.host_cache_stats() {
+        println!(
+            "  host cache      {} hits / {} misses / {} evictions, \
+             {:.1} MiB from disk, peak {:.1} KiB of {:.1} KiB budget",
+            cache.hits,
+            cache.misses,
+            cache.evictions,
+            cache.disk_bytes as f64 / (1 << 20) as f64,
+            cache.peak_resident_bytes as f64 / 1024.0,
+            cache.budget_bytes as f64 / 1024.0,
+        );
+    }
     Ok(())
 }
 
 fn cmd_stream(args: &Args) -> Result<()> {
-    let t = load_tensor(args)?;
     let rank: usize = args.parse_or("rank", 32);
     let threads: usize = args.parse_or("threads", default_threads());
     let p = profile(args)?;
-    let engine = MttkrpEngine::from_coo_with(&t, p, BlcoConfig::default())
-        .with_threads(threads);
+    let engine = if let Some(store) = args.get("from-store") {
+        let path = std::path::Path::new(store);
+        let e = MttkrpEngine::from_store(path, p.clone())?.with_threads(threads);
+        println!(
+            "payload tier: DISK ({store}), block cache bounded at {:.1} KiB \
+             of host memory",
+            p.host_mem_bytes as f64 / 1024.0
+        );
+        e
+    } else {
+        let t = load_tensor(args)?;
+        MttkrpEngine::from_coo_with(&t, p, BlcoConfig::default()).with_threads(threads)
+    };
+    let dims = engine.dims.clone();
     println!(
         "working set {:.1} MiB vs device {:.1} MiB → {}",
         engine.working_set_bytes(rank) as f64 / (1 << 20) as f64,
@@ -202,14 +359,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
         if engine.is_oom(rank) { "OUT-OF-MEMORY" } else { "in-memory" }
     );
     // routing is mode-aware: short modes of an OOM tensor may still fit
-    for mode in 0..t.order() {
+    for mode in 0..dims.len() {
         println!(
             "  mode {mode}: working set {:.1} MiB → {}",
             engine.working_set_bytes_for(mode, rank) as f64 / (1 << 20) as f64,
             if engine.is_oom_for(mode, rank) { "streams" } else { "in-memory" }
         );
     }
-    let factors = random_factors(&t.dims, rank, 7);
+    let factors = random_factors(&dims, rank, 7);
     if engine.eng.profile.devices > 1 {
         println!(
             "cluster: {} devices, {} host link(s), peer {} GB/s",
@@ -217,10 +374,10 @@ fn cmd_stream(args: &Args) -> Result<()> {
             engine.eng.profile.host_links(),
             engine.eng.profile.peer_gbps,
         );
-        for target in 0..t.order() {
+        for target in 0..dims.len() {
             engine.counters.reset();
             let mut out =
-                blco::mttkrp::dense::Matrix::zeros(t.dims[target] as usize, rank);
+                blco::mttkrp::dense::Matrix::zeros(dims[target] as usize, rank);
             let rep = cluster_mttkrp(
                 &engine.eng,
                 target,
@@ -253,12 +410,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 );
             }
         }
+        if args.flag("check") {
+            check_store_parity(&engine, rank)?;
+        }
         return Ok(());
     }
-    for target in 0..t.order() {
+    for target in 0..dims.len() {
         engine.counters.reset();
         let mut out =
-            blco::mttkrp::dense::Matrix::zeros(t.dims[target] as usize, rank);
+            blco::mttkrp::dense::Matrix::zeros(dims[target] as usize, rank);
         let rep = blco::coordinator::streamer::stream_mttkrp(
             &engine.eng,
             target,
@@ -282,6 +442,84 @@ fn cmd_stream(args: &Args) -> Result<()> {
             throughput_tbps(vol, rep.compute_s),
         );
     }
+    if args.flag("check") {
+        check_store_parity(&engine, rank)?;
+    }
+    Ok(())
+}
+
+/// `stream --from-store --check`: hard CI assertions of the
+/// host-out-of-core tier — the disk-streamed result must be bit-for-bit
+/// the resident-path result on every mode, repeated streamed modes must
+/// reuse their cached plan instead of replanning, and the block cache
+/// must never have held more than its host budget.
+fn check_store_parity(engine: &MttkrpEngine, rank: usize) -> Result<()> {
+    use blco::mttkrp::Mttkrp;
+    let reader = engine
+        .source()
+        .reader()
+        .with_context(|| "--check needs --from-store (nothing to verify)")?;
+    // resident twin materialized from the very same container (a
+    // cache-bypassing full read, so cache stats stay honest)
+    let twin = MttkrpEngine::from_blco(
+        std::sync::Arc::new(reader.to_tensor()?),
+        engine.eng.profile.clone(),
+    );
+    let factors = random_factors(&engine.dims, rank, 7);
+    let mut streamed = Vec::new();
+    for mode in 0..engine.dims.len() {
+        let rows = engine.dims[mode] as usize;
+        let mut a = blco::mttkrp::dense::Matrix::zeros(rows, rank);
+        let mut b = blco::mttkrp::dense::Matrix::zeros(rows, rank);
+        // one thread on both tiers: a fully deterministic float-op order,
+        // so the two executions must agree to the BIT, not a tolerance
+        Mttkrp::mttkrp(engine, mode, &factors, &mut a, 1, &engine.counters);
+        Mttkrp::mttkrp(&twin, mode, &factors, &mut b, 1, &twin.counters);
+        let diverged =
+            a.data.iter().zip(&b.data).any(|(x, y)| x.to_bits() != y.to_bits());
+        if a.data.len() != b.data.len() || diverged {
+            bail!("mode {mode}: disk-streamed result diverges from the resident path");
+        }
+        if engine.is_oom_for(mode, rank) {
+            streamed.push(mode);
+        }
+    }
+    if let Some(&mode) = streamed.first() {
+        // a second pass over a streamed mode must hit the plan cache
+        let before = engine.schedule_stats();
+        let _ = engine.mttkrp(mode, &factors);
+        let after = engine.schedule_stats();
+        if after.hits <= before.hits || after.built != before.built {
+            bail!(
+                "expected schedule reuse on repeated mode {mode}: built \
+                 {}->{}, hits {}->{}",
+                before.built,
+                after.built,
+                before.hits,
+                after.hits
+            );
+        }
+    }
+    let cache = engine.host_cache_stats().expect("disk-backed engine has a cache");
+    if cache.peak_resident_bytes > cache.budget_bytes {
+        bail!(
+            "block cache exceeded its host budget: peak {} B > {} B",
+            cache.peak_resident_bytes,
+            cache.budget_bytes
+        );
+    }
+    if cache.misses == 0 {
+        bail!("expected disk reads through the block cache, saw none");
+    }
+    println!(
+        "check: OK (bit-for-bit vs resident on {} modes, {} streamed, plan \
+         reuse, cache peak {:.1} KiB <= budget {:.1} KiB, {} evictions)",
+        engine.dims.len(),
+        streamed.len(),
+        cache.peak_resident_bytes as f64 / 1024.0,
+        cache.budget_bytes as f64 / 1024.0,
+        cache.evictions,
+    );
     Ok(())
 }
 
@@ -340,6 +578,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &cold,
         BlcoConfig { max_block_nnz: 1 << 15, ..Default::default() },
     );
+    if let Some(store) = args.get("from-store") {
+        // third tenant target living on disk: jobs against it stream
+        // through the block cache instead of a resident payload
+        reg.register_store("disk", std::path::Path::new(store))?;
+        eprintln!("registered disk tensor from {store}");
+    }
     println!(
         "registry: {} tensors, {:.1} MiB resident vs {:.1} MiB device memory",
         reg.len(),
@@ -382,7 +626,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // registry sharing the same payload Arcs (fresh schedule caches)
     let mut reg_naive = TensorRegistry::new(reg_profile);
     for name in reg.names() {
-        reg_naive.register_shared(&name, reg.get(&name).unwrap().engine.tensor());
+        let engine = &reg.get(&name).unwrap().engine;
+        match engine.try_tensor() {
+            Some(t) => {
+                reg_naive.register_shared(&name, t);
+            }
+            None => {
+                let path = engine.source().reader().expect("disk entry").path();
+                reg_naive.register_store(&name, path)?;
+            }
+        }
     }
     let rep_n = serve(&reg_naive, &tenants, &jobs, &ServeOptions::naive(fleet, threads));
     print_service_report("naive FIFO", &tenants, &rep_n);
@@ -453,6 +706,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("datasets") => cmd_datasets(),
         Some("convert") => cmd_convert(&args),
+        Some("inspect") => cmd_inspect(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("cpals") => cmd_cpals(&args),
         Some("stream") => cmd_stream(&args),
@@ -463,12 +717,16 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: blco <datasets|convert|mttkrp|cpals|stream|serve|runtime> \
-                 [--tensor NAME | --input FILE] [--rank R] [--mode N] \
-                 [--device a100|v100|intel_d1] [--devices D] \
-                 [--links shared|dedicated|<n>] [--threads T]\n\
-                 serve: [--tenants N] [--jobs J] [--gap-us G] [--mem-kib M] \
-                 [--cpals-every K] [--seed S] [--check]"
+                "usage: blco <datasets|convert|inspect|mttkrp|cpals|stream|serve|runtime> \
+                 [--tensor NAME | --input FILE | --dims AxBxC --nnz N] \
+                 [--rank R] [--mode N] [--device a100|v100|intel_d1] \
+                 [--devices D] [--links shared|dedicated|<n>] [--threads T]\n\
+                 convert: [--out FILE.blco] [--tns-out FILE.tns] \
+                 [--max-block-nnz B] [--workgroup W]\n\
+                 inspect: --store FILE.blco [--blocks N] [--verify]\n\
+                 stream/cpals/serve: [--from-store FILE.blco] [--host-kib H]\n\
+                 stream: [--check]   serve: [--tenants N] [--jobs J] \
+                 [--gap-us G] [--mem-kib M] [--cpals-every K] [--seed S] [--check]"
             );
             std::process::exit(2);
         }

@@ -27,7 +27,9 @@ use super::dense::Matrix;
 use super::{check_shapes, Mttkrp, MAX_RANK};
 use crate::device::counters::{Counters, Snapshot};
 use crate::device::profile::Profile;
-use crate::format::blco::BlcoTensor;
+use crate::format::blco::{BlcoTensor, Block};
+use crate::format::store::{BatchSource, BlcoStoreReader};
+use crate::linear::encode::BlcoSpec;
 use crate::util::pool::parallel_dynamic;
 
 /// Conflict-resolution strategy (Sections 5.1, 5.2, 5.3).
@@ -51,7 +53,12 @@ pub fn choose_resolution(target_len: u64, p: &Profile) -> Resolution {
 }
 
 pub struct BlcoEngine {
-    pub t: Arc<BlcoTensor>,
+    /// where the block payload lives: resident in host RAM
+    /// ([`BatchSource::Resident`]) or on disk behind a bounded
+    /// [`BlockCache`](crate::format::store::BlockCache)
+    /// ([`BatchSource::OnDisk`]). Every kernel fetches batches through
+    /// this, so the engine never assumes the tensor is in memory.
+    pub src: BatchSource,
     pub profile: Profile,
     pub resolution: Resolution,
 }
@@ -69,10 +76,22 @@ impl BlcoEngine {
     /// jobs) reference one resident BLCO copy through the same `Arc`.
     /// Panics on an invalid profile like [`BlcoEngine::new`].
     pub fn from_arc(t: Arc<BlcoTensor>, profile: Profile) -> Self {
+        Self::from_source(BatchSource::Resident(t), profile)
+    }
+
+    /// Construct over a disk-resident container: only header metadata is
+    /// in memory, payloads load through the reader's bounded block cache.
+    pub fn from_store_reader(reader: BlcoStoreReader, profile: Profile) -> Self {
+        Self::from_source(BatchSource::OnDisk(reader), profile)
+    }
+
+    /// Construct over any [`BatchSource`]. Panics on an invalid profile
+    /// like [`BlcoEngine::new`].
+    pub fn from_source(src: BatchSource, profile: Profile) -> Self {
         if let Err(e) = profile.validate() {
             panic!("invalid profile {:?}: {e}", profile.name);
         }
-        BlcoEngine { t, profile, resolution: Resolution::Auto }
+        BlcoEngine { src, profile, resolution: Resolution::Auto }
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {
@@ -80,29 +99,59 @@ impl BlcoEngine {
         self
     }
 
+    /// The resident tensor payload, when there is one (`None` for a
+    /// disk-backed engine).
+    pub fn resident(&self) -> Option<&Arc<BlcoTensor>> {
+        self.src.resident()
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        self.src.dims()
+    }
+
+    pub fn order(&self) -> usize {
+        self.src.order()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.src.nnz()
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.src.num_batches()
+    }
+
     /// The same tensor on a different (e.g. cluster) profile, sharing the
     /// payload through its `Arc` — no copy. Used by the device-count
-    /// sweeps in the benches/examples. Panics on an invalid profile like
-    /// [`BlcoEngine::new`].
+    /// sweeps in the benches/examples. Requires a resident payload (a
+    /// disk reader owns a file handle and a cache that cannot be shared);
+    /// panics on an invalid profile like [`BlcoEngine::new`].
     pub fn share_with_profile(&self, profile: Profile) -> Self {
         if let Err(e) = profile.validate() {
             panic!("invalid profile {:?}: {e}", profile.name);
         }
-        BlcoEngine { t: Arc::clone(&self.t), profile, resolution: self.resolution }
+        let t = self.src.resident().unwrap_or_else(|| {
+            panic!("share_with_profile: engine is disk-backed; open a second reader instead")
+        });
+        BlcoEngine {
+            src: BatchSource::Resident(Arc::clone(t)),
+            profile,
+            resolution: self.resolution,
+        }
     }
 
     /// The strategy that will run for `target`.
     pub fn effective_resolution(&self, target: usize) -> Resolution {
         match self.resolution {
             Resolution::Auto => {
-                choose_resolution(self.t.dims()[target], &self.profile)
+                choose_resolution(self.src.dims()[target], &self.profile)
             }
             r => r,
         }
     }
 
     pub fn footprint_bytes(&self) -> usize {
-        self.t.footprint_bytes()
+        self.src.footprint_bytes()
     }
 }
 
@@ -126,11 +175,15 @@ impl Scratch {
     }
 }
 
-/// Process one work-group tile. Returns (segments, flushes are done inside).
+/// Process one work-group tile. The block arrives as a plain reference —
+/// borrowed from a resident tensor or freshly cache-loaded from disk —
+/// so the hot loop is identical across tiers (the bit-for-bit parity
+/// anchor of the container round-trip tests).
 #[allow(clippy::too_many_arguments)]
 fn process_tile(
-    t: &BlcoTensor,
-    block_id: usize,
+    spec: &BlcoSpec,
+    workgroup: usize,
+    blk: &Block,
     offset: usize,
     target: usize,
     factors: &[Matrix],
@@ -141,13 +194,11 @@ fn process_tile(
     scratch: &mut Scratch,
     tally: &mut Snapshot,
 ) {
-    let blk = &t.blocks[block_id];
-    let order_n = t.order();
-    let wg = t.config.workgroup;
+    let order_n = spec.order();
+    let wg = workgroup;
     let len = (blk.nnz() - offset).min(wg);
     let lidx = &blk.lidx[offset..offset + len];
     let vals = &blk.vals[offset..offset + len];
-    let spec = &t.spec;
     let bases = spec.bases(blk.key);
 
     // ---- processing phase: coalesced load + on-the-fly de-linearization.
@@ -255,9 +306,8 @@ impl Mttkrp for BlcoEngine {
         threads: usize,
         counters: &Counters,
     ) {
-        let t = &self.t;
-        let rank = check_shapes(t.dims(), target, factors, out);
-        let rows = t.dims()[target] as usize;
+        let rank = check_shapes(self.src.dims(), target, factors, out);
+        let rows = self.src.dims()[target] as usize;
         out.fill(0.0);
         let resolution = self.effective_resolution(target);
 
@@ -331,7 +381,9 @@ impl BlcoEngine {
     /// Run a single batch (one "kernel launch") of the register path,
     /// *accumulating* into `out` — the streaming coordinator's entry point:
     /// each batch is processed as its blocks arrive on a device queue, so
-    /// the output must not be zeroed here.
+    /// the output must not be zeroed here. The blocks come through
+    /// [`BatchSource::fetch_batch`]: borrowed when resident, loaded via
+    /// the bounded block cache when the payload lives on disk.
     pub fn mttkrp_batch(
         &self,
         batch_idx: usize,
@@ -341,18 +393,23 @@ impl BlcoEngine {
         threads: usize,
         counters: &Counters,
     ) {
-        let t = &self.t;
-        let rank = check_shapes(t.dims(), target, factors, out);
+        let rank = check_shapes(self.src.dims(), target, factors, out);
         let out_at = as_atomic(&mut out.data);
-        let batch = &t.batches[batch_idx];
+        let spec = self.src.spec();
+        let wg = self.src.workgroup();
+        let batch = &self.src.batches()[batch_idx];
+        let fetched = self.src.fetch_batch(batch_idx, counters);
+        let blocks: &[Arc<Block>] = &fetched;
+        let base = batch.blocks.start;
         let wgs = batch.wg_block.len();
         parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
-            let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+            let mut scratch = Scratch::new(spec.order(), wg);
             let mut tally = Snapshot::default();
             for w in lo..hi {
                 process_tile(
-                    t,
-                    batch.wg_block[w] as usize,
+                    spec,
+                    wg,
+                    &blocks[batch.wg_block[w] as usize - base],
                     batch.wg_offset[w] as usize,
                     target,
                     factors,
@@ -368,7 +425,7 @@ impl BlcoEngine {
         });
         counters.add(&Snapshot {
             launches: 1,
-            atomic_fanout: t.dims()[target] * rank as u64,
+            atomic_fanout: self.src.dims()[target] * rank as u64,
             ..Default::default()
         });
     }
@@ -385,16 +442,21 @@ impl BlcoEngine {
         threads: usize,
         counters: &Counters,
     ) {
-        let t = &self.t;
-        for batch in &t.batches {
+        let spec = self.src.spec();
+        let wg = self.src.workgroup();
+        for (bi, batch) in self.src.batches().iter().enumerate() {
+            let fetched = self.src.fetch_batch(bi, counters);
+            let blocks: &[Arc<Block>] = &fetched;
+            let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
             parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
-                let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+                let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
                 for w in lo..hi {
                     process_tile(
-                        t,
-                        batch.wg_block[w] as usize,
+                        spec,
+                        wg,
+                        &blocks[batch.wg_block[w] as usize - base],
                         batch.wg_offset[w] as usize,
                         target,
                         factors,
@@ -424,19 +486,24 @@ impl BlcoEngine {
         threads: usize,
         counters: &Counters,
     ) {
-        let t = &self.t;
         let slices = self.profile.slices.max(1);
-        for batch in &t.batches {
+        let spec = self.src.spec();
+        let wg = self.src.workgroup();
+        for (bi, batch) in self.src.batches().iter().enumerate() {
+            let fetched = self.src.fetch_batch(bi, counters);
+            let blocks: &[Arc<Block>] = &fetched;
+            let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
             parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
-                let mut scratch = Scratch::new(t.order(), t.config.workgroup);
+                let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
                 for w in lo..hi {
                     let copy = w % slices;
                     let dest = &shadows[copy * rows * rank..(copy + 1) * rows * rank];
                     process_tile(
-                        t,
-                        batch.wg_block[w] as usize,
+                        spec,
+                        wg,
+                        &blocks[batch.wg_block[w] as usize - base],
                         batch.wg_offset[w] as usize,
                         target,
                         factors,

@@ -7,12 +7,14 @@
 //! single-copy story of the paper lifted to a multi-tenant front end.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::coordinator::engine::MttkrpEngine;
 use crate::coordinator::schedule::ScheduleStats;
 use crate::device::profile::Profile;
 use crate::format::blco::{BlcoConfig, BlcoTensor};
+use crate::format::store::StoreError;
 use crate::tensor::coo::CooTensor;
 
 /// One registered tensor: its name and the engine that owns the shared
@@ -61,6 +63,25 @@ impl TensorRegistry {
         self.entries.get(name).expect("just inserted")
     }
 
+    /// Register a tensor straight from a `.blco` container on disk — the
+    /// admission path for working sets that exceed host memory: only
+    /// header metadata becomes resident, payloads stream through the
+    /// engine's block cache (bounded by the profile's `host_mem_bytes`).
+    /// Replaces any same-named entry. Structured [`StoreError`] on a bad
+    /// container, never a panic — the serving front end must survive a
+    /// hostile file.
+    pub fn register_store(
+        &mut self,
+        name: &str,
+        path: &Path,
+    ) -> Result<&TensorEntry, StoreError> {
+        assert!(!name.is_empty(), "tensor name must be non-empty");
+        let engine = MttkrpEngine::from_store(path, self.profile.clone())?;
+        let entry = TensorEntry { name: name.to_string(), engine };
+        self.entries.insert(name.to_string(), entry);
+        Ok(self.entries.get(name).expect("just inserted"))
+    }
+
     pub fn get(&self, name: &str) -> Option<&TensorEntry> {
         self.entries.get(name)
     }
@@ -83,11 +104,30 @@ impl TensorRegistry {
         &self.profile
     }
 
-    /// Total resident bytes across registered payloads — each counted
-    /// once per entry (sharing an `Arc` across *registries* is free;
-    /// within one registry each name owns one engine).
+    /// Total *host-resident* bytes across registered payloads — each
+    /// counted once per entry (sharing an `Arc` across *registries* is
+    /// free; within one registry each name owns one engine). Disk-backed
+    /// entries contribute only their block cache's current residency,
+    /// which is how the registry admits tensors whose working set exceeds
+    /// host memory without ever holding them.
     pub fn resident_bytes(&self) -> usize {
-        self.entries.values().map(|e| e.engine.eng.footprint_bytes()).sum()
+        self.entries
+            .values()
+            .map(|e| match e.engine.host_cache_stats() {
+                None => e.engine.eng.footprint_bytes(),
+                Some(cache) => cache.resident_bytes,
+            })
+            .sum()
+    }
+
+    /// Total payload bytes of the disk tier (full container footprints of
+    /// every disk-backed entry; 0 when everything is resident).
+    pub fn disk_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| e.engine.source().is_on_disk())
+            .map(|e| e.engine.eng.footprint_bytes())
+            .sum()
     }
 
     /// Aggregate schedule-cache activity across every registered tensor.

@@ -49,11 +49,28 @@ pub fn read_tns(path: &Path, dims: Option<&[u64]>) -> Result<CooTensor> {
             if idx == 0 {
                 bail!("{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
             }
+            // coordinates are stored as u32 planes; an index past that
+            // range must be a hard error, not a silent wrap
+            if idx - 1 > u32::MAX as u64 {
+                bail!(
+                    "{}:{}: mode-{m} index {idx} overflows the u32 coordinate range",
+                    path.display(),
+                    lineno + 1
+                );
+            }
             raw_coords[m].push((idx - 1) as u32);
         }
         let v: f64 = toks[n]
             .parse()
             .with_context(|| format!("{}:{}: bad value", path.display(), lineno + 1))?;
+        if !v.is_finite() {
+            bail!(
+                "{}:{}: non-finite value {v} (NaN/inf would poison every \
+                 norm and fit downstream)",
+                path.display(),
+                lineno + 1
+            );
+        }
         vals.push(v);
     }
 
@@ -67,8 +84,15 @@ pub fn read_tns(path: &Path, dims: Option<&[u64]>) -> Result<CooTensor> {
         .collect();
     let dims = match dims {
         Some(d) => {
+            // a shorter (or longer) dims list must error rather than
+            // silently truncating/padding the inferred order
             if d.len() != order {
-                bail!("explicit dims order {} != file order {}", d.len(), order);
+                bail!(
+                    "explicit dims have order {} but the file has {} indices \
+                     per non-zero",
+                    d.len(),
+                    order
+                );
             }
             for (n, (&given, &seen)) in d.iter().zip(&inferred).enumerate() {
                 if given < seen {
@@ -139,6 +163,48 @@ mod tests {
         let p = tmpfile("zerobased.tns");
         std::fs::write(&p, "0 1 1 1.0\n").unwrap();
         assert!(read_tns(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        let p = tmpfile("nonfinite.tns");
+        for bad in ["1 1 1 NaN\n", "1 1 1 inf\n", "2 2 2 -inf\n"] {
+            std::fs::write(&p, bad).unwrap();
+            let err = read_tns(&p, None).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{bad:?}: {err}");
+        }
+        // finite scientific notation still parses
+        std::fs::write(&p, "1 1 1 1e-3\n").unwrap();
+        assert_eq!(read_tns(&p, None).unwrap().vals, vec![1e-3]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_u32_overflowing_indices() {
+        let p = tmpfile("overflow.tns");
+        // 2^32 + 1 would wrap to index 0 under a silent `as u32`
+        std::fs::write(&p, "4294967297 1 1 1.0\n").unwrap();
+        let err = read_tns(&p, None).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+        // the largest representable index is fine
+        std::fs::write(&p, "4294967296 1 1 1.0\n").unwrap();
+        let t = read_tns(&p, None).unwrap();
+        assert_eq!(t.coords[0][0], u32::MAX);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_dims_order_mismatch_both_ways() {
+        let p = tmpfile("dimsorder.tns");
+        std::fs::write(&p, "1 2 3 1.0\n").unwrap();
+        // shorter than the inferred order: must error, not truncate
+        let err = read_tns(&p, Some(&[4, 4])).unwrap_err();
+        assert!(err.to_string().contains("order"), "{err}");
+        // longer: same
+        assert!(read_tns(&p, Some(&[4, 4, 4, 4])).is_err());
+        // exact order passes
+        assert_eq!(read_tns(&p, Some(&[4, 4, 4])).unwrap().dims, vec![4, 4, 4]);
         std::fs::remove_file(&p).ok();
     }
 

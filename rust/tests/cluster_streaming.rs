@@ -44,9 +44,9 @@ fn sharded_matches_oracle_all_modes_and_device_counts() {
                     "links {links:?} D={devices} mode {target}"
                 );
                 assert_eq!(rep.devices, devices);
-                assert_eq!(rep.batches.len(), eng.t.batches.len());
+                assert_eq!(rep.batches.len(), eng.num_batches());
                 // every batch placed exactly once
-                let mut seen = vec![false; eng.t.batches.len()];
+                let mut seen = vec![false; eng.num_batches()];
                 for tl in &rep.per_device {
                     for &b in &tl.batches {
                         assert!(!seen[b], "batch {b} on two devices");
@@ -132,7 +132,7 @@ fn greedy_meets_list_scheduling_bound_on_real_batches() {
     // LPT. (The 4/3·OPT bound cannot be checked without OPT itself;
     // the strict greedy-vs-round-robin win on skew is asserted above.)
     let (_, eng) = batched_engine(4, LinkTopology::Dedicated);
-    let costs: Vec<f64> = (0..eng.t.batches.len())
+    let costs: Vec<f64> = (0..eng.num_batches())
         .map(|b| estimate_batch_cost(&eng, b, 0, 16))
         .collect();
     assert!(costs.iter().all(|&c| c > 0.0));
@@ -200,7 +200,7 @@ fn four_devices_on_two_link_ports() {
         let rep = cluster_mttkrp(&eng, target, &factors, &mut out, 4, &Counters::new());
         assert!(out.max_abs_diff(&expect) < 1e-9, "mode {target}");
         assert_eq!(rep.devices, 4);
-        assert_eq!(rep.batches.len(), eng.t.batches.len());
+        assert_eq!(rep.batches.len(), eng.num_batches());
     }
     // two ports sit between the one-shared-link and four-dedicated-link
     // extremes on modelled streaming makespan

@@ -338,3 +338,63 @@ fn one_payload_serves_every_registry_and_cpals_jobs_route_through_it() {
     }
     assert!(o.duration_s > 0.0);
 }
+
+#[test]
+fn disk_backed_tensor_serves_jobs_identical_to_resident() {
+    // the same container-backed tensor registered next to its resident
+    // twin must serve every job with bit-identical results, while the
+    // block cache keeps host residency under its budget
+    let (reg, _hot, cold) = registry();
+    let cold_payload = reg.get("cold").unwrap().engine.tensor();
+    let path = {
+        let mut p = std::env::temp_dir();
+        p.push(format!("blco_serve_disk_{}.blco", std::process::id()));
+        p
+    };
+    blco::BlcoStore::write(&cold_payload, &path).unwrap();
+
+    let budget = 4 * 512 * 16;
+    let mut reg2 =
+        TensorRegistry::new(Profile::tiny(48 * 1024).with_host_memory(budget));
+    reg2.register_shared("resident", Arc::clone(&cold_payload));
+    reg2.register_store("disk", &path).unwrap();
+
+    // same trace against both names: fused streamed groups on each
+    let ten = tenants(&[1, 1]);
+    let mut jobs = Vec::new();
+    for (i, tensor) in ["resident", "disk", "resident", "disk"].into_iter().enumerate() {
+        for k in 0..3usize {
+            jobs.push(mttkrp_job(i * 3 + k, &format!("t{}", i % 2), tensor, 0, 8, 77, 0.0));
+        }
+    }
+    let rep = serve(&reg2, &ten, &jobs, &ServeOptions::batched(1, 1));
+    assert_eq!(rep.completed(), jobs.len());
+    assert_eq!(rep.rejected(), 0);
+
+    // every identical (seed, mode, rank) job must produce identical bits
+    // regardless of which tier served it
+    let mut reference: Option<Vec<u64>> = None;
+    for o in &rep.outcomes {
+        match o.result.as_ref().unwrap() {
+            JobResult::Mttkrp(m) => {
+                let bits: Vec<u64> = m.data.iter().map(|v| v.to_bits()).collect();
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(r) => assert_eq!(&bits, r, "job {} diverged", o.id),
+                }
+            }
+            JobResult::CpAls(_) => panic!("trace is MTTKRP-only"),
+        }
+    }
+    // oracle correctness of the shared answer
+    let expect = mttkrp_oracle(&cold, 0, &random_factors(&cold.dims, 8, 77));
+    if let JobResult::Mttkrp(m) = rep.outcomes[0].result.as_ref().unwrap() {
+        assert!(m.max_abs_diff(&expect) < 1e-9);
+    }
+
+    let stats = reg2.get("disk").unwrap().engine.host_cache_stats().unwrap();
+    assert!(stats.peak_resident_bytes <= budget, "cache broke its budget");
+    assert!(stats.misses > 0, "disk tier actually read from disk");
+    assert!(reg2.disk_bytes() > 0);
+    std::fs::remove_file(&path).ok();
+}

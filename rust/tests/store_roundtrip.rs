@@ -1,0 +1,313 @@
+//! Container round-trip: `.tns → CooTensor → BlcoTensor → BlcoStore →
+//! BlcoStoreReader → MTTKRP`, bit-for-bit equal to the resident path on
+//! every mode and every executor (in-memory register/hierarchical,
+//! single-device streamed, multi-device clustered, fused serving path),
+//! with the block cache's peak residency provably under the host budget.
+//! Plus the structured-error negative cases for corrupted containers.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use blco::coordinator::engine::{ExecPath, MttkrpEngine};
+use blco::coordinator::schedule::StreamSchedule;
+use blco::coordinator::streamer::{stream_mttkrp_fused, stream_mttkrp_scheduled};
+use blco::device::{Counters, Profile};
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::format::store::{BlcoStore, BlcoStoreReader, StoreError};
+use blco::mttkrp::blco::{BlcoEngine, Resolution};
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::mttkrp::Mttkrp;
+use blco::service::TensorRegistry;
+use blco::tensor::{io, synth};
+
+fn tmpfile(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("blco_rt_{}_{}", std::process::id(), name));
+    p
+}
+
+/// The full text → resident → container pipeline of this suite: write a
+/// synthetic tensor as `.tns`, read it back, build BLCO with small blocks
+/// (so streaming has a real pipeline), persist, reopen with `cache_budget`
+/// bytes of host memory for the block cache.
+fn build_container(
+    name: &str,
+    cache_budget: usize,
+) -> (PathBuf, BlcoTensor, BlcoStoreReader) {
+    let t = synth::fiber_clustered(&[60, 50, 40], 8_000, 2, 0.8, 3);
+    let tns = tmpfile(&format!("{name}.tns"));
+    io::write_tns(&tns, &t).unwrap();
+    let back = io::read_tns(&tns, None).unwrap();
+    std::fs::remove_file(&tns).ok();
+    let cfg = BlcoConfig {
+        max_block_nnz: 512,
+        workgroup: 64,
+        threads: 2,
+        ..Default::default()
+    };
+    let b = BlcoTensor::from_coo_with(&back, cfg);
+    assert!(b.batches.len() > 4, "need a real batch pipeline");
+    let path = tmpfile(&format!("{name}.blco"));
+    BlcoStore::write(&b, &path).unwrap();
+    let reader = BlcoStoreReader::open_with_budget(&path, cache_budget).unwrap();
+    (path, b, reader)
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+// a budget of ~4 small blocks: full passes must evict
+const TIGHT_BUDGET: usize = 4 * 512 * 16;
+
+#[test]
+fn in_memory_kernels_match_bit_for_bit_under_a_bounded_cache() {
+    let (path, b, reader) = build_container("inmem", TIGHT_BUDGET);
+    let dims = b.dims().to_vec();
+    let t = b.to_coo();
+    let factors = random_factors(&dims, 8, 5);
+    let mut resident = BlcoEngine::new(b, Profile::a100());
+    let mut disk = BlcoEngine::from_store_reader(reader, Profile::a100());
+    for res in [Resolution::Register, Resolution::Hierarchical, Resolution::Auto] {
+        resident.resolution = res;
+        disk.resolution = res;
+        for target in 0..dims.len() {
+            let mut a = Matrix::zeros(dims[target] as usize, 8);
+            let mut d = Matrix::zeros(dims[target] as usize, 8);
+            // single-threaded: a fully deterministic float-op order, so
+            // equality must hold to the bit, not to a tolerance
+            resident.mttkrp(target, &factors, &mut a, 1, &Counters::new());
+            disk.mttkrp(target, &factors, &mut d, 1, &Counters::new());
+            assert_eq!(bits(&a), bits(&d), "{res:?} mode {target}");
+            let expect = mttkrp_oracle(&t, target, &factors);
+            assert!(a.max_abs_diff(&expect) < 1e-9, "{res:?} mode {target}");
+        }
+    }
+    let stats = disk.src.reader().unwrap().cache_stats();
+    assert!(
+        stats.peak_resident_bytes <= TIGHT_BUDGET,
+        "peak {} > budget {TIGHT_BUDGET}",
+        stats.peak_resident_bytes
+    );
+    assert!(stats.evictions > 0, "the tight budget must force eviction");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn streamed_and_clustered_paths_match_bit_for_bit() {
+    let (path, b, _reader) = build_container("stream", TIGHT_BUDGET);
+    let dims = b.dims().to_vec();
+    let factors = random_factors(&dims, 8, 7);
+    // tiny device: every mode takes the out-of-memory path
+    for devices in [1usize, 2, 4] {
+        let prof = Profile::tiny(1 << 15).with_devices(devices);
+        let resident = MttkrpEngine::from_blco(
+            Arc::new(b.clone()),
+            prof.clone(),
+        )
+        .with_threads(1);
+        let disk = if devices == 1 {
+            MttkrpEngine::from_source(
+                blco::BatchSource::OnDisk(
+                    BlcoStoreReader::open_with_budget(&path, TIGHT_BUDGET).unwrap(),
+                ),
+                prof.clone(),
+            )
+            .with_threads(1)
+        } else {
+            MttkrpEngine::from_store(&path, prof.clone())
+                .unwrap()
+                .with_threads(1)
+        };
+        for target in 0..dims.len() {
+            assert!(resident.is_oom_for(target, 8), "tiny profile must stream");
+            let (a, pa) = resident.mttkrp(target, &factors);
+            let (d, pd) = disk.mttkrp(target, &factors);
+            match (devices, &pa, &pd) {
+                (1, ExecPath::Streamed(ra), ExecPath::Streamed(rd)) => {
+                    // same plan, same modelled clock, same wire bytes
+                    assert_eq!(ra.bytes, rd.bytes);
+                    assert_eq!(ra.transfer_s, rd.transfer_s);
+                    assert_eq!(ra.overall_s, rd.overall_s);
+                }
+                (_, ExecPath::Clustered(ra), ExecPath::Clustered(rd)) => {
+                    assert_eq!(ra.devices, devices);
+                    assert_eq!(ra.bytes, rd.bytes);
+                    assert_eq!(ra.merge_bytes, rd.merge_bytes);
+                    assert_eq!(ra.overall_s, rd.overall_s);
+                }
+                other => panic!("unexpected paths D={devices}: {other:?}"),
+            }
+            assert_eq!(bits(&a), bits(&d), "D={devices} mode {target}");
+        }
+        if let Some(stats) = disk.host_cache_stats() {
+            assert!(stats.peak_resident_bytes <= TIGHT_BUDGET);
+            assert!(stats.misses > 0, "streaming must read from disk");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fused_serving_path_matches_bit_for_bit_from_disk() {
+    let (path, b, reader) = build_container("fused", TIGHT_BUDGET);
+    let dims = b.dims().to_vec();
+    let rank = 8;
+    let seeds = [31u64, 37, 41];
+    let factor_sets: Vec<Vec<Matrix>> =
+        seeds.iter().map(|&s| random_factors(&dims, rank, s)).collect();
+    let refs: Vec<&[Matrix]> = factor_sets.iter().map(|f| f.as_slice()).collect();
+
+    let prof = Profile::tiny(1 << 15);
+    let resident = BlcoEngine::new(b, prof.clone());
+    let disk = BlcoEngine::from_store_reader(reader, prof);
+
+    let sched_r = StreamSchedule::single_device(&resident, 0, rank);
+    let sched_d = StreamSchedule::single_device(&disk, 0, rank);
+    assert_eq!(sched_r.bytes, sched_d.bytes, "plans agree across tiers");
+    assert_eq!(sched_r.transfer_s, sched_d.transfer_s);
+
+    let mut outs_r: Vec<Matrix> =
+        seeds.iter().map(|_| Matrix::zeros(dims[0] as usize, rank)).collect();
+    let mut outs_d: Vec<Matrix> =
+        seeds.iter().map(|_| Matrix::zeros(dims[0] as usize, rank)).collect();
+    let ra = stream_mttkrp_fused(&resident, &sched_r, &refs, &mut outs_r, 1, &Counters::new());
+    let rd = stream_mttkrp_fused(&disk, &sched_d, &refs, &mut outs_d, 1, &Counters::new());
+    assert_eq!(ra.bytes, rd.bytes, "tensor crosses the wire once per tier");
+    assert_eq!(ra.transfer_s, rd.transfer_s);
+    for (a, d) in outs_r.iter().zip(&outs_d) {
+        assert_eq!(bits(a), bits(d));
+    }
+    // one more single-job scheduled pass: the wrapper parity holds on disk
+    let mut solo = Matrix::zeros(dims[0] as usize, rank);
+    let rep = stream_mttkrp_scheduled(&disk, &sched_d, &refs[0], &mut solo, 1, &Counters::new());
+    assert_eq!(rep.bytes, ra.bytes);
+    assert_eq!(bits(&solo), bits(&outs_r[0]));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cpals_from_store_matches_resident_fit_trajectory() {
+    let (path, b, _reader) = build_container("cpals", TIGHT_BUDGET);
+    let prof = Profile::tiny(1 << 15);
+    let opts = blco::cpals::CpAlsOptions {
+        rank: 4,
+        max_iters: 4,
+        tol: 0.0,
+        threads: 1,
+        seed: 9,
+    };
+    let resident = MttkrpEngine::from_blco(Arc::new(b), prof.clone()).with_threads(1);
+    let disk = MttkrpEngine::from_store(&path, prof).unwrap().with_threads(1);
+    assert!((resident.norm_x - disk.norm_x).abs() < 1e-12, "header norm");
+    let ra = resident.cp_als(opts);
+    let rd = disk.cp_als(opts);
+    assert_eq!(ra.fits, rd.fits, "identical fit trajectory");
+    assert_eq!(ra.lambda, rd.lambda);
+    // one plan per (mode, rank), reused across iterations, on both tiers
+    assert_eq!(ra.schedule.built, rd.schedule.built);
+    assert_eq!(ra.schedule.hits, rd.schedule.hits);
+    assert!(rd.schedule.hits > 0);
+    let stats = disk.host_cache_stats().unwrap();
+    assert!(stats.peak_resident_bytes <= TIGHT_BUDGET);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn registry_admits_disk_tensor_and_bounds_residency() {
+    let (path, b, _reader) = build_container("registry", TIGHT_BUDGET);
+    // host budget smaller than the payload: the tensor does NOT fit in
+    // "host memory", yet the registry serves it
+    let payload = b.footprint_bytes();
+    let prof = Profile::tiny(1 << 15).with_host_memory(TIGHT_BUDGET);
+    assert!(payload > prof.host_mem_bytes, "working set must exceed host RAM");
+    let mut reg = TensorRegistry::new(prof);
+    reg.register_store("disk", &path).unwrap();
+    reg.register("ram", &b.to_coo(), BlcoConfig::default());
+
+    // disk-tier accounting: the container's full footprint is on disk,
+    // only (bounded) cache bytes are resident
+    assert_eq!(reg.disk_bytes(), payload);
+    let entry = &reg.get("disk").unwrap().engine;
+    let dims = entry.dims.clone();
+    let factors = random_factors(&dims, 8, 11);
+    for target in 0..dims.len() {
+        let (m, _) = entry.mttkrp(target, &factors);
+        let expect = mttkrp_oracle(&b.to_coo(), target, &factors);
+        assert!(m.max_abs_diff(&expect) < 1e-9, "mode {target}");
+    }
+    let stats = entry.host_cache_stats().unwrap();
+    assert!(stats.peak_resident_bytes <= TIGHT_BUDGET);
+    assert!(reg.resident_bytes() < payload + reg.get("ram").unwrap().engine.eng.footprint_bytes());
+
+    // a bad path is a structured error, not a panic
+    let err = reg
+        .register_store("nope", &tmpfile("missing.blco"))
+        .map(|_| ())
+        .unwrap_err();
+    assert!(matches!(err, StoreError::Io { .. }), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn negative_cases_return_structured_errors() {
+    let (path, _b, reader) = build_container("negative", TIGHT_BUDGET);
+    drop(reader);
+    let good = std::fs::read(&path).unwrap();
+
+    // corrupted magic
+    let mut bad = good.clone();
+    bad[3] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        BlcoStoreReader::open(&path),
+        Err(StoreError::BadMagic { .. })
+    ));
+
+    // wrong version
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&2u32.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    match BlcoStoreReader::open(&path) {
+        Err(StoreError::UnsupportedVersion { found: 2, .. }) => {}
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+
+    // truncated payload
+    std::fs::write(&path, &good[..good.len() - 100]).unwrap();
+    assert!(matches!(
+        BlcoStoreReader::open(&path),
+        Err(StoreError::Truncated { .. })
+    ));
+
+    // errors render as readable text through anyhow at the CLI boundary
+    let err = BlcoStoreReader::open(&path).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+
+    // hostile header: a block nnz far beyond the payload region, with the
+    // header checksum recomputed so only the semantic validation can
+    // catch it — open must return Malformed, never wrap/abort/panic
+    let mut bad = good.clone();
+    let header_len =
+        u64::from_le_bytes(bad[12..20].try_into().unwrap()) as usize;
+    // header blob layout: order u32, dims 3×u64, nnz u64, norm f64,
+    // max_block_nnz u64, workgroup u32, inblock_budget u32, nblocks u64,
+    // then per-block {key u64, nnz u64, crc u32}
+    let first_block_nnz_off = 20 + 4 + 24 + 8 + 8 + 8 + 4 + 4 + 8 + 8;
+    bad[first_block_nnz_off..first_block_nnz_off + 8]
+        .copy_from_slice(&(1u64 << 60).to_le_bytes());
+    let crc = blco::format::store::crc32(&bad[20..20 + header_len]);
+    bad[20 + header_len..24 + header_len].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    match BlcoStoreReader::open(&path) {
+        Err(StoreError::Malformed { what }) => {
+            assert!(what.contains("non-zeros"), "{what}");
+        }
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+
+    std::fs::write(&path, &good).unwrap();
+    assert!(BlcoStoreReader::open(&path).is_ok(), "pristine file still opens");
+    std::fs::remove_file(&path).ok();
+}

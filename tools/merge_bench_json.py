@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Consolidate bench JSONL records into one validated BENCH_smoke.json.
+
+Each bench binary (benches/fig*.rs) appends one JSON line per run to the
+file named by BLCO_BENCH_JSON when it is set:
+
+    {"figure": "fig10_oom_throughput", "smoke": true, "metrics": {...}}
+
+This script merges those lines into a single artifact and *fails* on any
+malformed record — a missing figure name, an empty metrics map, a
+non-finite/null metric, or a duplicate figure — so the bench-smoke CI job
+turns silent emission bugs into red builds instead of empty artifacts.
+
+Usage: merge_bench_json.py RECORDS.jsonl [-o BENCH_smoke.json]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"merge_bench_json: error: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("records", help="JSONL stream appended by the bench binaries")
+    ap.add_argument("-o", "--out", default="BENCH_smoke.json")
+    ap.add_argument(
+        "--expect",
+        type=int,
+        default=0,
+        help="fail unless at least this many figure records are present",
+    )
+    args = ap.parse_args()
+
+    try:
+        lines = open(args.records, encoding="utf-8").read().splitlines()
+    except OSError as e:
+        fail(f"cannot read {args.records}: {e}")
+
+    records = []
+    seen = set()
+    for lineno, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{args.records}:{lineno}: not valid JSON: {e}")
+        if not isinstance(rec, dict):
+            fail(f"{args.records}:{lineno}: record is not an object")
+        figure = rec.get("figure")
+        if not isinstance(figure, str) or not figure:
+            fail(f"{args.records}:{lineno}: missing/empty 'figure'")
+        if figure in seen:
+            fail(f"{args.records}:{lineno}: duplicate figure {figure!r}")
+        seen.add(figure)
+        metrics = rec.get("metrics")
+        if not isinstance(metrics, dict) or not metrics:
+            fail(f"{args.records}:{lineno}: {figure}: missing/empty 'metrics'")
+        for name, value in metrics.items():
+            if not isinstance(name, str) or not name:
+                fail(f"{args.records}:{lineno}: {figure}: bad metric name {name!r}")
+            # null marks a non-finite number the bench refused to serialize
+            if value is None:
+                fail(f"{args.records}:{lineno}: {figure}: metric {name!r} is non-finite")
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                fail(
+                    f"{args.records}:{lineno}: {figure}: metric {name!r} "
+                    f"is not a number: {value!r}"
+                )
+            if not math.isfinite(value):
+                fail(f"{args.records}:{lineno}: {figure}: metric {name!r} = {value}")
+        records.append(
+            {"figure": figure, "smoke": bool(rec.get("smoke", False)), "metrics": metrics}
+        )
+
+    if not records:
+        fail(f"{args.records}: no records — did the benches run with BLCO_BENCH_JSON set?")
+    if args.expect and len(records) < args.expect:
+        fail(f"expected >= {args.expect} figure records, found {len(records)}")
+
+    records.sort(key=lambda r: r["figure"])
+    out = {
+        "schema": 1,
+        "records": records,
+        "figures": [r["figure"] for r in records],
+        "metric_count": sum(len(r["metrics"]) for r in records),
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(
+        f"merge_bench_json: wrote {args.out} "
+        f"({len(records)} figures, {out['metric_count']} metrics)"
+    )
+
+
+if __name__ == "__main__":
+    main()
