@@ -1,11 +1,16 @@
 //! Ablation (DESIGN.md §8): the §5.3 adaptation heuristic. Sweep the
 //! target-mode length and compare register-based vs hierarchical conflict
-//! resolution vs the Auto heuristic, plus the idealized mode-sorted list
-//! engine (`genten`) as an upper bound on what global sorting (which BLCO
+//! resolution vs the Auto heuristic — both the `target_len` threshold and
+//! the certificate-driven policy from the static conflict analyzer
+//! (`blco::analysis`) — plus the idealized mode-sorted list engine
+//! (`genten`) as an upper bound on what global sorting (which BLCO
 //! deliberately avoids — it would be mode-specific) could buy.
 //!
 //!     cargo bench --bench ablation_conflict_resolution
 
+use std::sync::Arc;
+
+use blco::analysis::conflict::CertificateSet;
 use blco::bench::{banner, bench_reps, measure, smoke, BenchJson, Table};
 use blco::device::Profile;
 use blco::format::blco::BlcoTensor;
@@ -22,9 +27,10 @@ fn main() {
     let reps = bench_reps();
     let rank = 32;
 
-    let tbl = Table::new(&[10, 12, 12, 12, 12, 14]);
+    let tbl = Table::new(&[10, 12, 12, 12, 12, 12, 14, 14]);
     tbl.header(&[
-        "mode-len", "register", "hierarch", "auto", "sorted-list", "heuristic picks",
+        "mode-len", "register", "hierarch", "auto", "cert-auto", "sorted-list",
+        "heuristic picks", "cert picks",
     ]);
 
     let mut json = BenchJson::new("ablation_conflict_resolution");
@@ -47,17 +53,34 @@ fn main() {
         let auto = measure(&make(Resolution::Auto), 0, &factors, rows, threads, reps, &profile);
         let sorted = measure(&GenTenEngine::new(t.clone()), 0, &factors, rows, threads, reps, &profile);
 
+        // the certificate-driven Auto column: analyze once, attach, measure
         let auto_engine = make(Resolution::Auto);
+        let certs = Arc::new(CertificateSet::analyze(&auto_engine.src));
+        let cert_engine = auto_engine.with_certificates(Arc::clone(&certs));
+        let cert_auto = measure(&cert_engine, 0, &factors, rows, threads, reps, &profile);
+        let cert0 = certs.mode(0);
+
         json.metric(&format!("len{target_len}_register_ms"), reg.model_s * 1e3);
         json.metric(&format!("len{target_len}_hierarchical_ms"), hier.model_s * 1e3);
         json.metric(&format!("len{target_len}_auto_ms"), auto.model_s * 1e3);
+        json.metric(&format!("len{target_len}_cert_auto_ms"), cert_auto.model_s * 1e3);
+        json.metric(
+            &format!("len{target_len}_nosync_batches"),
+            cert0.no_sync_batches() as f64,
+        );
+        json.metric(
+            &format!("len{target_len}_conflict_pairs"),
+            cert0.conflict_pairs() as f64,
+        );
         tbl.row(&[
             target_len.to_string(),
             format!("{:.3}ms", reg.model_s * 1e3),
             format!("{:.3}ms", hier.model_s * 1e3),
             format!("{:.3}ms", auto.model_s * 1e3),
+            format!("{:.3}ms", cert_auto.model_s * 1e3),
             format!("{:.3}ms", sorted.model_s * 1e3),
-            format!("{:?}", auto_engine.effective_resolution(0)),
+            format!("{:?}", make(Resolution::Auto).effective_resolution(0)),
+            format!("{:?}", cert_engine.effective_resolution(0)),
         ]);
     }
     println!(

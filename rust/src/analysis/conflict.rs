@@ -1,0 +1,454 @@
+//! Static conflict analysis over BLCO metadata — no value reads.
+//!
+//! For one `(tensor, mode)` pair, every work-group's set of output rows is
+//! decodable from block keys + linearized indices alone
+//! ([`BlcoSpec::decode_mode`]): a work-group is a `workgroup`-sized window
+//! of one block's `lidx`, and its target coordinates are a shift/mask of
+//! each entry. From those row sets this module derives, per batch:
+//!
+//! * the **inter-work-group row-overlap graph** — an edge `(i, j)` for
+//!   every pair of work-groups that flush at least one common output row
+//!   (the exact pairs whose unsynchronized stores could race);
+//! * **conflict density** (edges over possible pairs) and the **max row
+//!   sharers** (most work-groups touching one row — the contention
+//!   hot-spot the §5.1 hierarchical path privatizes against);
+//! * a partition of the batch's work-groups into **conflict-free waves**
+//!   by greedy graph coloring. The coloring is *order-preserving*
+//!   (levelized): `wave(w) = 1 + max(wave of conflicting predecessors)`,
+//!   so for every edge `i < j`, `wave(i) < wave(j)`. Executing waves in
+//!   order with a barrier between them therefore replays each row's
+//!   flushes in work-group submission order — a waved run is bit-for-bit
+//!   the sequential run, not merely numerically close (float addition is
+//!   not associative; a smallest-available-color greedy coloring can
+//!   reorder a row's updates and change low-order bits).
+//!
+//! Each batch gets a [`SyncClass`] recommendation — `NoSync` when the
+//! overlap graph is empty, `Privatize` when one row is shared by most of
+//! the batch (or the graph is dense), `Atomic` for sparse conflicts — and
+//! the per-mode roll-up is a [`ConflictCertificate`]. Attached to a
+//! [`BlcoEngine`](crate::mttkrp::blco::BlcoEngine), the certificate
+//! replaces the §5.3 `target_len < SMs` threshold as the
+//! `Resolution::Auto` policy and marks `NoSync` batches for the
+//! streaming planner ([`StreamSchedule`](crate::coordinator::schedule::StreamSchedule)).
+//! Certificates are validated against a structural [`Fingerprint`] at
+//! attach time so a stale certificate can never silently certify the
+//! wrong tensor.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::device::counters::Counters;
+use crate::format::store::BatchSource;
+use crate::mttkrp::blco::Resolution;
+
+/// Per-batch synchronization requirement, proven from metadata.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncClass {
+    /// the row-overlap graph is empty: every work-group pair is
+    /// row-disjoint, flushes need no synchronization at all
+    NoSync,
+    /// hot-row contention (one row shared by most work-groups, or a dense
+    /// overlap graph): privatized shadow copies beat serialized atomics
+    Privatize,
+    /// sparse conflicts: occasional atomics are cheaper than privatizing
+    /// whole output copies
+    Atomic,
+}
+
+/// Per-(mode, block) conflict report: how the block's non-zeros project
+/// onto the target mode.
+#[derive(Clone, Debug)]
+pub struct BlockConflict {
+    /// global block index
+    pub block: usize,
+    pub nnz: usize,
+    /// distinct output rows the block touches
+    pub rows: usize,
+    /// largest fiber: non-zeros sharing one output row within the block
+    pub max_fiber_degree: usize,
+}
+
+/// One batch's certified conflict structure for one target mode.
+#[derive(Clone, Debug)]
+pub struct BatchCert {
+    /// batch index within the tensor
+    pub batch: usize,
+    /// work-groups in the batch
+    pub wgs: usize,
+    pub nnz: usize,
+    /// row-overlap graph: every pair `(i, j)` with `i < j` of work-groups
+    /// sharing at least one output row. Sorted, deduplicated.
+    pub edges: Vec<(u32, u32)>,
+    /// `edges.len() / C(wgs, 2)` (0 for single-work-group batches)
+    pub density: f64,
+    /// most work-groups flushing any single output row
+    pub max_row_sharers: usize,
+    /// order-preserving wave (color) of each work-group
+    pub wave_of: Vec<u32>,
+    /// number of waves (1 = the whole batch is one conflict-free wave)
+    pub waves: usize,
+    pub recommendation: SyncClass,
+}
+
+impl BatchCert {
+    /// Work-group ids grouped by wave, each group in submission order.
+    pub fn wave_members(&self) -> Vec<Vec<u32>> {
+        let mut members = vec![Vec::new(); self.waves];
+        for (w, &wave) in self.wave_of.iter().enumerate() {
+            members[wave as usize].push(w as u32);
+        }
+        members
+    }
+}
+
+/// Structural identity of the tensor a certificate was computed from.
+/// All fields are metadata the analysis actually depends on; equality is
+/// required at [`BlcoEngine::with_certificates`](crate::mttkrp::blco::BlcoEngine::with_certificates).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub dims: Vec<u64>,
+    pub nnz: usize,
+    pub workgroup: usize,
+    pub blocks: usize,
+    pub batches: usize,
+}
+
+impl Fingerprint {
+    pub fn of(src: &BatchSource) -> Self {
+        Fingerprint {
+            dims: src.dims().to_vec(),
+            nnz: src.nnz(),
+            workgroup: src.workgroup(),
+            blocks: src.batches().last().map_or(0, |b| b.blocks.end),
+            batches: src.num_batches(),
+        }
+    }
+}
+
+/// The per-`(tensor, mode)` certificate: block reports, per-batch wave
+/// partitions and recommendations.
+#[derive(Clone, Debug)]
+pub struct ConflictCertificate {
+    pub target: usize,
+    pub fingerprint: Fingerprint,
+    pub blocks: Vec<BlockConflict>,
+    pub batches: Vec<BatchCert>,
+}
+
+impl ConflictCertificate {
+    /// Batches whose overlap graph is empty (single-work-group batches
+    /// are `NoSync` by construction).
+    pub fn no_sync_batches(&self) -> usize {
+        self.batches
+            .iter()
+            .filter(|b| b.recommendation == SyncClass::NoSync)
+            .count()
+    }
+
+    /// Total row-overlap edges across all batches.
+    pub fn conflict_pairs(&self) -> usize {
+        self.batches.iter().map(|b| b.edges.len()).sum()
+    }
+
+    /// Deepest wave partition of any batch.
+    pub fn max_waves(&self) -> usize {
+        self.batches.iter().map(|b| b.waves).max().unwrap_or(0)
+    }
+
+    /// Largest `max_row_sharers` of any batch.
+    pub fn max_row_sharers(&self) -> usize {
+        self.batches.iter().map(|b| b.max_row_sharers).max().unwrap_or(0)
+    }
+
+    /// Batch counts by recommendation: `(no_sync, privatize, atomic)`.
+    pub fn sync_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for b in &self.batches {
+            match b.recommendation {
+                SyncClass::NoSync => c.0 += 1,
+                SyncClass::Privatize => c.1 += 1,
+                SyncClass::Atomic => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// The engine-level strategy this certificate recommends for
+    /// `Resolution::Auto`: an nnz-weighted vote between the conflicted
+    /// batches. `Privatize`-dominant work wants the hierarchical
+    /// shadow-copy path; otherwise register + atomics. `NoSync` batches
+    /// abstain — their flushes are uncontended under either strategy.
+    pub fn resolution(&self) -> Resolution {
+        let (mut privatize_nnz, mut atomic_nnz) = (0u64, 0u64);
+        for b in &self.batches {
+            match b.recommendation {
+                SyncClass::Privatize => privatize_nnz += b.nnz as u64,
+                SyncClass::Atomic => atomic_nnz += b.nnz as u64,
+                SyncClass::NoSync => {}
+            }
+        }
+        if privatize_nnz > atomic_nnz {
+            Resolution::Hierarchical
+        } else {
+            Resolution::Register
+        }
+    }
+}
+
+/// Analyze one target mode: decode every work-group's output-row set from
+/// metadata, build the per-batch overlap graphs and wave partitions.
+/// Batch fetches are charged to `counters` (host-side preprocessing I/O
+/// for a disk-backed source; free for a resident one).
+pub fn analyze_mode(
+    src: &BatchSource,
+    target: usize,
+    counters: &Counters,
+) -> ConflictCertificate {
+    let spec = src.spec();
+    assert!(target < spec.order(), "target {target} out of range");
+    let wg_size = src.workgroup();
+    let mut blocks_out = Vec::new();
+    let mut batches_out = Vec::with_capacity(src.num_batches());
+
+    for (bi, batch) in src.batches().iter().enumerate() {
+        let fetched = src.fetch_batch(bi, counters);
+        let base = batch.blocks.start;
+
+        // per-(mode, block) report: distinct rows + max fiber degree
+        for (k, blk) in fetched.iter().enumerate() {
+            let mut per_row: HashMap<u32, usize> = HashMap::new();
+            for &l in &blk.lidx {
+                *per_row.entry(spec.decode_mode(blk.key, l, target)).or_insert(0) += 1;
+            }
+            blocks_out.push(BlockConflict {
+                block: base + k,
+                nnz: blk.nnz(),
+                rows: per_row.len(),
+                max_fiber_degree: per_row.values().copied().max().unwrap_or(0),
+            });
+        }
+
+        // row → work-groups touching it. Work-groups are visited in
+        // submission order, so each row's list is ascending and dedup-free.
+        let wgs = batch.wg_block.len();
+        let mut row_wgs: HashMap<u32, Vec<u32>> = HashMap::new();
+        let mut seen = HashSet::new();
+        for w in 0..wgs {
+            let blk = &fetched[batch.wg_block[w] as usize - base];
+            let offset = batch.wg_offset[w] as usize;
+            let len = (blk.nnz() - offset).min(wg_size);
+            seen.clear();
+            for &l in &blk.lidx[offset..offset + len] {
+                let row = spec.decode_mode(blk.key, l, target);
+                if seen.insert(row) {
+                    row_wgs.entry(row).or_default().push(w as u32);
+                }
+            }
+        }
+
+        let mut edge_set: HashSet<(u32, u32)> = HashSet::new();
+        let mut max_row_sharers = 0usize;
+        for sharers in row_wgs.values() {
+            max_row_sharers = max_row_sharers.max(sharers.len());
+            for i in 0..sharers.len() {
+                for j in i + 1..sharers.len() {
+                    edge_set.insert((sharers[i], sharers[j]));
+                }
+            }
+        }
+        let mut edges: Vec<(u32, u32)> = edge_set.into_iter().collect();
+        edges.sort_unstable();
+
+        // order-preserving (levelized) greedy coloring: each work-group
+        // waits exactly one wave past its last conflicting predecessor,
+        // so wave(i) < wave(j) for every edge i < j — see the module doc
+        // for why this (and not smallest-available-color) preserves the
+        // sequential flush order bit for bit.
+        let mut preds: Vec<Vec<u32>> = vec![Vec::new(); wgs];
+        for &(i, j) in &edges {
+            preds[j as usize].push(i);
+        }
+        let mut wave_of = vec![0u32; wgs];
+        for w in 0..wgs {
+            let wave = preds[w].iter().map(|&p| wave_of[p as usize] + 1).max();
+            wave_of[w] = wave.unwrap_or(0);
+        }
+        let waves = wave_of.iter().max().map_or(0, |&m| m as usize + 1);
+
+        let pairs = wgs * wgs.saturating_sub(1) / 2;
+        let density =
+            if pairs == 0 { 0.0 } else { edges.len() as f64 / pairs as f64 };
+        let recommendation = if edges.is_empty() {
+            SyncClass::NoSync
+        } else if max_row_sharers * 2 > wgs || density > 0.5 {
+            SyncClass::Privatize
+        } else {
+            SyncClass::Atomic
+        };
+
+        batches_out.push(BatchCert {
+            batch: bi,
+            wgs,
+            nnz: batch.nnz,
+            edges,
+            density,
+            max_row_sharers,
+            wave_of,
+            waves,
+            recommendation,
+        });
+    }
+
+    ConflictCertificate {
+        target,
+        fingerprint: Fingerprint::of(src),
+        blocks: blocks_out,
+        batches: batches_out,
+    }
+}
+
+/// Certificates for every mode of one tensor — what
+/// [`BlcoEngine::with_certificates`](crate::mttkrp::blco::BlcoEngine::with_certificates)
+/// consumes.
+#[derive(Clone, Debug)]
+pub struct CertificateSet {
+    pub fingerprint: Fingerprint,
+    modes: Vec<ConflictCertificate>,
+}
+
+impl CertificateSet {
+    /// Analyze every mode, charging fetch I/O to a local scratch counter
+    /// block (analysis is host-side preprocessing, not device traffic).
+    pub fn analyze(src: &BatchSource) -> Self {
+        Self::analyze_with(src, &Counters::new())
+    }
+
+    /// Analyze every mode, charging fetch I/O to `counters`.
+    pub fn analyze_with(src: &BatchSource, counters: &Counters) -> Self {
+        let modes = (0..src.order())
+            .map(|m| analyze_mode(src, m, counters))
+            .collect();
+        CertificateSet { fingerprint: Fingerprint::of(src), modes }
+    }
+
+    /// The certificate for one target mode.
+    pub fn mode(&self, target: usize) -> &ConflictCertificate {
+        &self.modes[target]
+    }
+
+    pub fn num_modes(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Does this set describe `src`'s structure?
+    pub fn matches(&self, src: &BatchSource) -> bool {
+        self.fingerprint == Fingerprint::of(src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::blco::{BlcoConfig, BlcoTensor};
+    use crate::tensor::synth;
+
+    fn source(dims: &[u64], nnz: usize, seed: u64, cfg: BlcoConfig) -> BatchSource {
+        let t = synth::uniform(dims, nnz, seed);
+        BatchSource::Resident(std::sync::Arc::new(BlcoTensor::from_coo_with(
+            &t, cfg,
+        )))
+    }
+
+    #[test]
+    fn single_workgroup_batches_are_nosync() {
+        // workgroup ≥ batch nnz → one work-group per batch → no pairs
+        let cfg = BlcoConfig { max_block_nnz: 256, workgroup: 256, ..Default::default() };
+        let src = source(&[40, 30, 20], 2_000, 3, cfg);
+        let cert = analyze_mode(&src, 0, &Counters::new());
+        for b in &cert.batches {
+            assert!(b.wgs <= 1 || !b.edges.is_empty() || b.waves == 1);
+            if b.wgs == 1 {
+                assert_eq!(b.recommendation, SyncClass::NoSync);
+                assert_eq!(b.waves, 1);
+                assert_eq!(b.density, 0.0);
+            }
+        }
+        assert!(cert.no_sync_batches() > 0);
+    }
+
+    #[test]
+    fn waves_are_order_preserving_and_conflict_free() {
+        let cfg = BlcoConfig { max_block_nnz: 1024, workgroup: 32, ..Default::default() };
+        let src = source(&[20, 60, 50], 4_000, 7, cfg);
+        for target in 0..3 {
+            let cert = analyze_mode(&src, target, &Counters::new());
+            for b in &cert.batches {
+                for &(i, j) in &b.edges {
+                    assert!(i < j, "edges stored ascending");
+                    assert!(
+                        b.wave_of[i as usize] < b.wave_of[j as usize],
+                        "conflicting wg {i} must run a strictly earlier wave than {j}"
+                    );
+                }
+                assert_eq!(
+                    b.waves,
+                    b.wave_of.iter().map(|&w| w as usize + 1).max().unwrap_or(0)
+                );
+                let members = b.wave_members();
+                assert_eq!(
+                    members.iter().map(Vec::len).sum::<usize>(),
+                    b.wgs,
+                    "waves partition the work-groups"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn short_contended_mode_recommends_privatize() {
+        // 4 target rows across thousands of nnz: every work-group shares
+        // rows with most others → privatize, i.e. hierarchical engine-wide
+        let cfg = BlcoConfig { max_block_nnz: 4096, workgroup: 64, ..Default::default() };
+        let src = source(&[4, 300, 300], 8_000, 11, cfg);
+        let cert = analyze_mode(&src, 0, &Counters::new());
+        let multi: Vec<_> =
+            cert.batches.iter().filter(|b| b.wgs > 1).collect();
+        assert!(!multi.is_empty());
+        assert!(multi.iter().all(|b| b.recommendation == SyncClass::Privatize));
+        assert_eq!(cert.resolution(), Resolution::Hierarchical);
+        assert!(cert.max_row_sharers() > 1);
+    }
+
+    #[test]
+    fn block_reports_cover_every_block_and_count_fibers() {
+        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, ..Default::default() };
+        let src = source(&[30, 30, 30], 3_000, 13, cfg);
+        let nnz: usize = src.batches().iter().map(|b| b.nnz).sum();
+        let cert = analyze_mode(&src, 1, &Counters::new());
+        assert_eq!(
+            cert.blocks.len(),
+            src.batches().last().unwrap().blocks.end
+        );
+        assert_eq!(cert.blocks.iter().map(|b| b.nnz).sum::<usize>(), nnz);
+        for b in &cert.blocks {
+            assert!(b.rows >= 1 && b.max_fiber_degree >= 1);
+            assert!(b.max_fiber_degree <= b.nnz);
+            assert!(b.rows <= b.nnz);
+        }
+    }
+
+    #[test]
+    fn certificate_set_covers_all_modes_and_fingerprints() {
+        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, ..Default::default() };
+        let src = source(&[25, 35, 15], 2_500, 17, cfg);
+        let set = CertificateSet::analyze(&src);
+        assert_eq!(set.num_modes(), 3);
+        assert!(set.matches(&src));
+        for m in 0..3 {
+            assert_eq!(set.mode(m).target, m);
+            assert_eq!(set.mode(m).batches.len(), src.num_batches());
+        }
+        // a structurally different tensor must not match
+        let other = source(&[25, 35, 15], 2_400, 17, cfg);
+        assert!(!set.matches(&other));
+    }
+}

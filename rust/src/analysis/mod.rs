@@ -1,0 +1,32 @@
+//! Static conflict analysis + instrumented race checking for BLCO MTTKRP
+//! schedules.
+//!
+//! The paper's conflict resolution (Sections 5.1–5.3) is *opportunistic*:
+//! threads discover colliding output-row updates at run time and resolve
+//! them with atomics or privatized copies. But which work-groups can
+//! collide at all is a pure function of the BLCO metadata — block keys,
+//! linearized indices and the batch → work-group maps — none of which
+//! involves a tensor value. This module exploits that:
+//!
+//! * [`conflict`] computes, per `(tensor, mode)`, the exact
+//!   inter-work-group row-overlap graph of every batch, partitions each
+//!   batch's work-groups into conflict-free *waves* via an
+//!   order-preserving greedy coloring, and emits a
+//!   [`ConflictCertificate`](conflict::ConflictCertificate) whose
+//!   per-batch recommendation (`NoSync` | `Privatize` | `Atomic`)
+//!   replaces the §5.3 `target_len` threshold as the `Resolution::Auto`
+//!   policy.
+//! * [`racecheck`] is the verifier: a write-logging execution mode that
+//!   records every output-row flush as `(thread, batch, wave, wg, row)`
+//!   plus a lockset-style validator proving a certified schedule issues
+//!   zero unordered conflicting writes — the sanitizer the threaded
+//!   kernels of ROADMAP item 2 run under in CI.
+//!
+//! The two halves check each other: the race checker must observe exactly
+//! the conflicts the static analysis predicted (no more, no fewer), and a
+//! wave-ordered execution under a certificate must reproduce the
+//! sequential result bit for bit. `blco analyze --check` hard-asserts all
+//! of that on every mode.
+
+pub mod conflict;
+pub mod racecheck;

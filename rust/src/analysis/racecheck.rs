@@ -1,0 +1,420 @@
+//! Instrumented race checking: the dynamic verifier of the static
+//! certificates in [`conflict`](super::conflict).
+//!
+//! The BLCO kernels gain a write-logging execution mode: every output-row
+//! flush of [`process_tile`](crate::mttkrp::blco) — the single point all
+//! register and hierarchical flushes funnel through — can append a
+//! [`WriteRecord`] `(thread, batch, wave, wg, row)` to a shared
+//! [`WriteLog`]. `wave` is the record's *ordering class*: the certified
+//! wave for a wave-ordered run ([`run_waved`]), the constant 0 for a
+//! plain register run (nothing orders its flushes but atomics), or the
+//! shadow-copy index for a hierarchical run (copies are independent
+//! destinations).
+//!
+//! Two checks are built on the log:
+//!
+//! * [`validate`] — a lockset-style pass over a waved run's records. The
+//!   happens-before edges of that execution are exactly: batch order
+//!   (kernel launches serialize) and wave order (a barrier between
+//!   waves). Two writes to the same row are therefore ordered iff they
+//!   differ in batch or wave, or come from one work-group (program
+//!   order). Any same-`(batch, wave, row)` pair from two work-groups is
+//!   an unordered conflicting write — a race the certificate wrongly
+//!   certified away. A correct certificate yields zero.
+//! * [`racecheck`] — the end-to-end harness behind `blco analyze
+//!   --check`: runs the sequential register path with logging to observe
+//!   every real row overlap, diffs the observation against the
+//!   certificate's edges *in both directions* (a conflict the analysis
+//!   missed would be unsound; a predicted conflict never observed would
+//!   be imprecise — both are hard failures, since analysis and execution
+//!   decode rows from the same metadata), then executes the wave
+//!   schedule under [`validate`] and requires its output to be
+//!   bit-for-bit the sequential result (the order-preserving coloring's
+//!   guarantee — see the [`conflict`](super::conflict) module doc).
+//!
+//! [`run_waved`] is also the execution model for ROADMAP item 2's
+//! threaded kernels: within a wave every work-group owns its rows
+//! outright, so flushes are plain stores — the per-wave `atomics` tally
+//! is reclassified to the `nosync_flushes` counter and each barrier bumps
+//! `waves`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use super::conflict::ConflictCertificate;
+use crate::device::counters::{Counters, Snapshot};
+use crate::mttkrp::atomicf::as_atomic;
+use crate::mttkrp::blco::{process_tile, BlcoEngine, Scratch};
+use crate::mttkrp::check_shapes;
+use crate::mttkrp::dense::Matrix;
+use crate::util::pool::parallel_dynamic;
+
+/// One logged output-row flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteRecord {
+    /// logical thread that executed the flush
+    pub thread: u32,
+    /// batch (kernel launch) the work-group belonged to
+    pub batch: u32,
+    /// ordering class: wave index (waved run), 0 (register run), or
+    /// shadow-copy index (hierarchical run)
+    pub wave: u32,
+    /// work-group within the batch
+    pub wg: u32,
+    /// output row flushed
+    pub row: u32,
+}
+
+/// Shared, thread-safe flush log. Tiles append their rows in one locked
+/// batch per tile, so logging does not serialize the hot loop per flush.
+#[derive(Debug, Default)]
+pub struct WriteLog {
+    records: Mutex<Vec<WriteRecord>>,
+}
+
+impl WriteLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one tile's flushed rows under a single lock acquisition.
+    pub fn append_tile(&self, thread: u32, batch: u32, wave: u32, wg: u32, rows: &[u32]) {
+        let mut g = self.records.lock().expect("write log poisoned");
+        g.extend(
+            rows.iter().map(|&row| WriteRecord { thread, batch, wave, wg, row }),
+        );
+    }
+
+    /// Drain the log (leaves it empty).
+    pub fn take(&self) -> Vec<WriteRecord> {
+        std::mem::take(&mut *self.records.lock().expect("write log poisoned"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().expect("write log poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An unordered conflicting write pair found by [`validate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Race {
+    pub batch: u32,
+    pub wave: u32,
+    pub row: u32,
+    pub wg_a: u32,
+    pub wg_b: u32,
+}
+
+/// Lockset-style validation of a waved run's log: group records by
+/// `(batch, wave, row)` — the contexts between which no happens-before
+/// edge exists — and report every pair of distinct work-groups sharing a
+/// group. Sorted and deduplicated; empty iff the schedule was
+/// synchronization-free as certified.
+pub fn validate(records: &[WriteRecord]) -> Vec<Race> {
+    let mut slots: BTreeMap<(u32, u32, u32), BTreeSet<u32>> = BTreeMap::new();
+    for r in records {
+        slots.entry((r.batch, r.wave, r.row)).or_default().insert(r.wg);
+    }
+    let mut races = Vec::new();
+    for ((batch, wave, row), wgs) in &slots {
+        if wgs.len() < 2 {
+            continue;
+        }
+        let wgs: Vec<u32> = wgs.iter().copied().collect();
+        for i in 0..wgs.len() {
+            for j in i + 1..wgs.len() {
+                races.push(Race {
+                    batch: *batch,
+                    wave: *wave,
+                    row: *row,
+                    wg_a: wgs[i],
+                    wg_b: wgs[j],
+                });
+            }
+        }
+    }
+    races
+}
+
+/// The row-overlap pairs a log actually exhibited, per batch: every pair
+/// of work-groups that flushed one common row, ignoring ordering classes.
+/// On a sequential register-path log this is the ground truth the static
+/// edges must equal.
+pub fn observed_overlaps(records: &[WriteRecord]) -> BTreeMap<u32, BTreeSet<(u32, u32)>> {
+    let mut rows: BTreeMap<(u32, u32), BTreeSet<u32>> = BTreeMap::new();
+    for r in records {
+        rows.entry((r.batch, r.row)).or_default().insert(r.wg);
+    }
+    let mut out: BTreeMap<u32, BTreeSet<(u32, u32)>> = BTreeMap::new();
+    for ((batch, _row), wgs) in &rows {
+        if wgs.len() < 2 {
+            continue;
+        }
+        let wgs: Vec<u32> = wgs.iter().copied().collect();
+        let set = out.entry(*batch).or_default();
+        for i in 0..wgs.len() {
+            for j in i + 1..wgs.len() {
+                set.insert((wgs[i], wgs[j]));
+            }
+        }
+    }
+    out
+}
+
+/// Execute one MTTKRP under a certificate's wave schedule: batches in
+/// order, each batch's work-groups wave by wave with a barrier between
+/// waves, flushes as plain (serial) stores — the synchronization-free
+/// schedule the certificate promises is safe. Within a wave, work-groups
+/// are row-disjoint by construction, so unsynchronized stores from
+/// parallel threads never collide; across waves the barrier orders them.
+/// Flush work is charged to `nosync_flushes` instead of `atomics`, and
+/// every barrier bumps `waves`.
+///
+/// Accumulates into a zero-filled `out` and, with `log`, records every
+/// flush under its wave as ordering class — feed the log to [`validate`].
+pub fn run_waved(
+    eng: &BlcoEngine,
+    cert: &ConflictCertificate,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    threads: usize,
+    counters: &Counters,
+    log: Option<&WriteLog>,
+) {
+    assert!(
+        cert.fingerprint == super::conflict::Fingerprint::of(&eng.src),
+        "certificate does not describe this engine's tensor"
+    );
+    let target = cert.target;
+    let rank = check_shapes(eng.src.dims(), target, factors, out);
+    out.fill(0.0);
+    let dest = as_atomic(&mut out.data);
+    let spec = eng.src.spec();
+    let wg_size = eng.src.workgroup();
+
+    for (bi, batch) in eng.src.batches().iter().enumerate() {
+        let fetched = eng.src.fetch_batch(bi, counters);
+        let base = batch.blocks.start;
+        let bc = &cert.batches[bi];
+        for (wave, members) in bc.wave_members().iter().enumerate() {
+            parallel_dynamic(threads, members.len(), 1, |t, lo, hi| {
+                let mut scratch = Scratch::new(spec.order(), wg_size);
+                let mut tally = Snapshot::default();
+                for k in lo..hi {
+                    let w = members[k] as usize;
+                    let mut rows = Vec::new();
+                    process_tile(
+                        spec,
+                        wg_size,
+                        &fetched[batch.wg_block[w] as usize - base],
+                        batch.wg_offset[w] as usize,
+                        target,
+                        factors,
+                        rank,
+                        dest,
+                        rank,
+                        true, // wave members are row-disjoint: plain stores
+                        &mut scratch,
+                        &mut tally,
+                        log.map(|_| &mut rows),
+                    );
+                    if let Some(lg) = log {
+                        lg.append_tile(t as u32, bi as u32, wave as u32, w as u32, &rows);
+                    }
+                }
+                // certified waves issue no atomics: reclassify the flush
+                // tally as synchronization-free stores
+                tally.nosync_flushes = tally.atomics;
+                tally.atomics = 0;
+                counters.add(&tally);
+            });
+            counters.add(&Snapshot { waves: 1, ..Default::default() });
+        }
+        counters.add(&Snapshot { launches: 1, ..Default::default() });
+    }
+}
+
+/// What [`racecheck`] proved (or failed to prove) for one mode.
+#[derive(Clone, Debug)]
+pub struct RacecheckReport {
+    pub target: usize,
+    /// flush records logged by the waved run
+    pub records: usize,
+    /// unordered conflicting writes in the waved run — must be empty
+    pub races: Vec<Race>,
+    /// `(batch, wg_a, wg_b)` overlaps the sequential run exhibited that
+    /// the certificate's edges miss — must be empty (soundness)
+    pub missed_static: Vec<(u32, u32, u32)>,
+    /// `(batch, wg_a, wg_b)` certificate edges the sequential run never
+    /// exhibited — must be empty (exactness)
+    pub stale_static: Vec<(u32, u32, u32)>,
+    /// waved output equals the sequential output, bit for bit
+    pub bit_identical: bool,
+    /// deepest wave partition executed
+    pub max_waves: usize,
+}
+
+impl RacecheckReport {
+    /// All four obligations hold.
+    pub fn ok(&self) -> bool {
+        self.races.is_empty()
+            && self.missed_static.is_empty()
+            && self.stale_static.is_empty()
+            && self.bit_identical
+    }
+}
+
+/// Verify one mode's certificate against real executions (see the module
+/// doc for the three phases). All traffic is charged to a local scratch
+/// counter block: verification is a harness, not a workload.
+pub fn racecheck(
+    eng: &BlcoEngine,
+    cert: &ConflictCertificate,
+    factors: &[Matrix],
+    threads: usize,
+) -> RacecheckReport {
+    let target = cert.target;
+    let rank = factors[0].cols;
+    let rows = eng.src.dims()[target] as usize;
+    let counters = Counters::new();
+
+    // phase 1: sequential register run, fully logged — the ground-truth
+    // row-overlap observation and the bit-exact reference output
+    let seq_log = WriteLog::new();
+    let mut seq = Matrix::zeros(rows, rank);
+    eng.mttkrp_logged(target, factors, &mut seq, 1, &counters, &seq_log);
+    let observed = observed_overlaps(&seq_log.take());
+
+    // phase 2: static edges vs observed overlaps, both directions
+    let mut missed_static = Vec::new();
+    let mut stale_static = Vec::new();
+    for (bi, bc) in cert.batches.iter().enumerate() {
+        let static_edges: BTreeSet<(u32, u32)> = bc.edges.iter().copied().collect();
+        let empty = BTreeSet::new();
+        let dynamic = observed.get(&(bi as u32)).unwrap_or(&empty);
+        for &(i, j) in dynamic.difference(&static_edges) {
+            missed_static.push((bi as u32, i, j));
+        }
+        for &(i, j) in static_edges.difference(dynamic) {
+            stale_static.push((bi as u32, i, j));
+        }
+    }
+
+    // phase 3: execute the certified wave schedule, validate its log,
+    // compare its output against the sequential reference bit for bit
+    let wav_log = WriteLog::new();
+    let mut waved = Matrix::zeros(rows, rank);
+    run_waved(eng, cert, factors, &mut waved, threads, &counters, Some(&wav_log));
+    let records = wav_log.len();
+    let races = validate(&wav_log.take());
+    let bit_identical = seq.data.len() == waved.data.len()
+        && seq
+            .data
+            .iter()
+            .zip(&waved.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+
+    RacecheckReport {
+        target,
+        records,
+        races,
+        missed_static,
+        stale_static,
+        bit_identical,
+        max_waves: cert.max_waves(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::conflict::CertificateSet;
+    use crate::device::Profile;
+    use crate::format::blco::{BlcoConfig, BlcoTensor};
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    fn engine(dims: &[u64], nnz: usize, seed: u64, cfg: BlcoConfig) -> BlcoEngine {
+        let t = synth::uniform(dims, nnz, seed);
+        BlcoEngine::new(BlcoTensor::from_coo_with(&t, cfg), Profile::a100())
+    }
+
+    #[test]
+    fn validate_flags_same_slot_pairs_only() {
+        let mk = |batch, wave, wg, row| WriteRecord { thread: 0, batch, wave, wg, row };
+        // ordered: different wave / different batch / same wg / other row
+        assert!(validate(&[mk(0, 0, 1, 9), mk(0, 1, 2, 9)]).is_empty());
+        assert!(validate(&[mk(0, 0, 1, 9), mk(1, 0, 2, 9)]).is_empty());
+        assert!(validate(&[mk(0, 0, 1, 9), mk(0, 0, 1, 9)]).is_empty());
+        assert!(validate(&[mk(0, 0, 1, 9), mk(0, 0, 2, 8)]).is_empty());
+        // unordered: same (batch, wave, row), distinct wgs
+        let races = validate(&[mk(0, 2, 1, 9), mk(0, 2, 4, 9), mk(0, 2, 7, 9)]);
+        assert_eq!(races.len(), 3, "all pairs of the 3-sharer slot");
+        assert_eq!(
+            races[0],
+            Race { batch: 0, wave: 2, row: 9, wg_a: 1, wg_b: 4 }
+        );
+    }
+
+    #[test]
+    fn racecheck_passes_on_certified_schedules() {
+        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 32, ..Default::default() };
+        let eng = engine(&[40, 25, 30], 3_000, 5, cfg);
+        let set = CertificateSet::analyze(&eng.src);
+        let factors = random_factors(eng.src.dims(), 8, 7);
+        for m in 0..3 {
+            let rep = racecheck(&eng, set.mode(m), &factors, 4);
+            assert!(rep.races.is_empty(), "mode {m}: {:?}", rep.races);
+            assert!(rep.missed_static.is_empty(), "mode {m} missed");
+            assert!(rep.stale_static.is_empty(), "mode {m} stale");
+            assert!(rep.bit_identical, "mode {m} diverged");
+            assert!(rep.ok());
+            assert!(rep.records > 0);
+        }
+    }
+
+    #[test]
+    fn waved_run_matches_oracle_and_counts_waves() {
+        let cfg = BlcoConfig { max_block_nnz: 1024, workgroup: 64, ..Default::default() };
+        let t = synth::uniform(&[30, 40, 20], 4_000, 9);
+        let eng = BlcoEngine::new(BlcoTensor::from_coo_with(&t, cfg), Profile::a100());
+        let set = CertificateSet::analyze(&eng.src);
+        let factors = random_factors(&t.dims, 8, 11);
+        let c = Counters::new();
+        let mut out = Matrix::zeros(30, 8);
+        run_waved(&eng, set.mode(0), &factors, &mut out, 4, &c, None);
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        assert!(out.max_abs_diff(&expect) < 1e-9);
+        let s = c.snapshot();
+        assert_eq!(s.atomics, 0, "certified waves issue no atomics");
+        assert!(s.nosync_flushes > 0);
+        assert!(s.waves as usize >= eng.src.num_batches());
+    }
+
+    #[test]
+    fn sequential_logged_run_is_bitwise_the_plain_run() {
+        use crate::mttkrp::blco::Resolution;
+        use crate::mttkrp::Mttkrp;
+        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, ..Default::default() };
+        let eng = engine(&[25, 35, 45], 2_500, 13, cfg)
+            .with_resolution(Resolution::Register);
+        let factors = random_factors(eng.src.dims(), 4, 15);
+        let (c1, c2) = (Counters::new(), Counters::new());
+        let log = WriteLog::new();
+        let mut logged = Matrix::zeros(25, 4);
+        eng.mttkrp_logged(0, &factors, &mut logged, 1, &c1, &log);
+        let mut plain = Matrix::zeros(25, 4);
+        eng.mttkrp(0, &factors, &mut plain, 1, &c2);
+        assert!(logged
+            .data
+            .iter()
+            .zip(&plain.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // every flush the counters saw is in the log
+        assert_eq!(log.len() as u64 * 4, c1.snapshot().atomics);
+    }
+}

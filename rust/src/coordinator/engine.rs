@@ -15,6 +15,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::analysis::conflict::CertificateSet;
 use crate::coordinator::cluster::{cluster_mttkrp_scheduled, ClusterReport};
 use crate::coordinator::schedule::{
     Placement, ScheduleCache, ScheduleStats, StreamSchedule,
@@ -159,6 +160,24 @@ impl MttkrpEngine {
     pub fn with_resolution(mut self, r: Resolution) -> Self {
         self.eng.resolution = r;
         self
+    }
+
+    /// Run the static conflict analysis ([`crate::analysis::conflict`])
+    /// over every mode and attach the resulting certificates:
+    /// `Resolution::Auto` then routes through the certified per-mode
+    /// strategy and streaming plans mark `NoSync` batches. Analysis I/O is
+    /// charged to a local scratch block, not this engine's counters —
+    /// preprocessing is not workload traffic.
+    pub fn with_conflict_analysis(mut self) -> Self {
+        let scratch = Counters::new();
+        let set = Arc::new(CertificateSet::analyze_with(&self.eng.src, &scratch));
+        self.eng = self.eng.with_certificates(set);
+        self
+    }
+
+    /// The attached conflict certificates, if analysis ran.
+    pub fn certificates(&self) -> Option<&Arc<CertificateSet>> {
+        self.eng.certs.as_ref()
     }
 
     /// Enable/disable schedule memoization (on by default). With caching
@@ -593,6 +612,38 @@ mod tests {
         // doubling memory at least keeps (and here grows) the capacity
         let roomy = MttkrpEngine::from_blco(engine.tensor(), Profile::tiny(96 * 1024));
         assert!(roomy.fused_jobs_capacity(0, rank) > cap);
+    }
+
+    #[test]
+    fn conflict_analysis_attaches_certificates_and_keeps_answers() {
+        let t = synth::uniform(&[150, 130, 170], 8_000, 12);
+        let plain = MttkrpEngine::from_coo(&t, Profile::a100());
+        assert!(plain.certificates().is_none());
+        let analyzed =
+            MttkrpEngine::from_coo(&t, Profile::a100()).with_conflict_analysis();
+        let certs = analyzed.certificates().expect("analysis attached");
+        assert_eq!(certs.num_modes(), 3);
+        // analysis is preprocessing: the engine's own counters stay clean
+        assert_eq!(analyzed.counters.snapshot().volume_bytes(), 0);
+        // the certificate only changes *which* strategy Auto picks, never
+        // the kernel: output is bitwise the pre-analyzer path pinned to
+        // that same strategy
+        let factors = random_factors(&t.dims, 8, 13);
+        // single-threaded: atomic-add order (and hence low-order bits) is
+        // only deterministic when work-groups run in sequence
+        let analyzed = analyzed.with_threads(1);
+        for m in 0..3 {
+            let res = analyzed.eng.effective_resolution(m);
+            let pinned = MttkrpEngine::from_blco(plain.tensor(), Profile::a100())
+                .with_resolution(res)
+                .with_threads(1);
+            let (a, _) = analyzed.mttkrp(m, &factors);
+            let (b, _) = pinned.mttkrp(m, &factors);
+            assert!(
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mode {m}: certificate routing changed the answer"
+            );
+        }
     }
 
     #[test]

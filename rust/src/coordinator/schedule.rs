@@ -28,6 +28,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::analysis::conflict::SyncClass;
 use crate::device::counters::Snapshot;
 use crate::device::model::{device_time, transfer_time};
 use crate::mttkrp::blco::BlcoEngine;
@@ -80,11 +81,19 @@ fn estimate_kernel_cost(eng: &BlcoEngine, batch: usize, target: usize, rank: usi
     let order = eng.src.order() as u64;
     let rank64 = rank as u64;
     let flushes = (nnz / 4).max(1) * rank64;
+    // a batch certified NoSync ([`crate::analysis::conflict`]) issues its
+    // flushes as plain stores — the model drops its atomic serialization
+    // term entirely. Without an attached certificate the estimate is
+    // unchanged.
+    let no_sync = eng
+        .certificate_for(target)
+        .is_some_and(|c| c.batches[batch].recommendation == SyncClass::NoSync);
     let est = Snapshot {
         bytes_streamed: nnz * 16,
         bytes_gathered: nnz * (order - 1) * rank64 * 8,
         bytes_written: flushes * 8,
-        atomics: flushes,
+        atomics: if no_sync { 0 } else { flushes },
+        nosync_flushes: if no_sync { flushes } else { 0 },
         atomic_fanout: eng.src.dims()[target] * rank64,
         launches: 1,
         ..Default::default()
@@ -164,6 +173,10 @@ pub struct StreamSchedule {
     pub queue_of: Vec<usize>,
     /// batch → host link its transfer serializes on (`device % links`)
     pub link_of: Vec<usize>,
+    /// batch → certified synchronization requirement for this target
+    /// ([`crate::analysis::conflict`]); conservatively all
+    /// [`SyncClass::Atomic`] when the engine carries no certificates
+    pub sync: Vec<SyncClass>,
 }
 
 impl StreamSchedule {
@@ -227,6 +240,11 @@ impl StreamSchedule {
             link_of[b] = d % links;
         }
 
+        let sync = match eng.certificate_for(target) {
+            Some(cert) => cert.batches.iter().map(|b| b.recommendation).collect(),
+            None => vec![SyncClass::Atomic; nbatches],
+        };
+
         StreamSchedule {
             target,
             rank,
@@ -240,6 +258,7 @@ impl StreamSchedule {
             assign,
             queue_of,
             link_of,
+            sync,
         }
     }
 
@@ -426,6 +445,34 @@ mod tests {
             cache.stats().delta_since(stats),
             ScheduleStats { built: 1, hits: 0 }
         );
+    }
+
+    #[test]
+    fn certificates_mark_sync_classes_and_cheapen_nosync_batches() {
+        let eng = engine(1);
+        // uncertified plan: conservative Atomic everywhere
+        let plain = StreamSchedule::single_device(&eng, 0, 8);
+        assert!(plain.sync.iter().all(|&s| s == SyncClass::Atomic));
+
+        let set = std::sync::Arc::new(
+            crate::analysis::conflict::CertificateSet::analyze(&eng.src),
+        );
+        let cert_eng = eng.share_with_profile(eng.profile.clone()).with_certificates(set);
+        let certified = StreamSchedule::single_device(&cert_eng, 0, 8);
+        assert_eq!(certified.sync.len(), cert_eng.num_batches());
+        for (b, &s) in certified.sync.iter().enumerate() {
+            assert_eq!(
+                s,
+                cert_eng.certificate_for(0).unwrap().batches[b].recommendation
+            );
+            // NoSync batches drop the atomic-serialization cost term;
+            // everything else is modelled identically
+            if s == SyncClass::NoSync {
+                assert!(certified.costs[b] <= plain.costs[b]);
+            } else {
+                assert_eq!(certified.costs[b], plain.costs[b]);
+            }
+        }
     }
 
     #[cfg(debug_assertions)]

@@ -54,6 +54,13 @@ pub struct Counters {
     pub host_misses: AtomicU64,
     /// blocks evicted from the host block cache to stay under budget
     pub host_evictions: AtomicU64,
+    /// wave barriers executed by a certified synchronization-free schedule
+    /// ([`crate::analysis::racecheck::run_waved`])
+    pub waves: AtomicU64,
+    /// scalar output updates flushed as *plain stores* under a conflict
+    /// certificate — work that would have been `atomics` without the
+    /// static proof ([`crate::analysis::conflict`])
+    pub nosync_flushes: AtomicU64,
 }
 
 /// Plain-value snapshot of [`Counters`].
@@ -74,6 +81,8 @@ pub struct Snapshot {
     pub host_hits: u64,
     pub host_misses: u64,
     pub host_evictions: u64,
+    pub waves: u64,
+    pub nosync_flushes: u64,
 }
 
 impl Counters {
@@ -99,6 +108,8 @@ impl Counters {
         self.host_hits.fetch_add(d.host_hits, Ordering::Relaxed);
         self.host_misses.fetch_add(d.host_misses, Ordering::Relaxed);
         self.host_evictions.fetch_add(d.host_evictions, Ordering::Relaxed);
+        self.waves.fetch_add(d.waves, Ordering::Relaxed);
+        self.nosync_flushes.fetch_add(d.nosync_flushes, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -118,6 +129,8 @@ impl Counters {
             host_hits: self.host_hits.load(Ordering::Relaxed),
             host_misses: self.host_misses.load(Ordering::Relaxed),
             host_evictions: self.host_evictions.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            nosync_flushes: self.nosync_flushes.load(Ordering::Relaxed),
         }
     }
 
@@ -137,6 +150,8 @@ impl Counters {
         self.host_hits.store(0, Ordering::Relaxed);
         self.host_misses.store(0, Ordering::Relaxed);
         self.host_evictions.store(0, Ordering::Relaxed);
+        self.waves.store(0, Ordering::Relaxed);
+        self.nosync_flushes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -183,6 +198,8 @@ impl std::ops::Add for Snapshot {
             host_hits: self.host_hits + o.host_hits,
             host_misses: self.host_misses + o.host_misses,
             host_evictions: self.host_evictions + o.host_evictions,
+            waves: self.waves + o.waves,
+            nosync_flushes: self.nosync_flushes + o.nosync_flushes,
         }
     }
 }
@@ -267,5 +284,20 @@ mod tests {
         let s = a + b;
         assert_eq!(s.segments, 5);
         assert_eq!(s.stash_hits, 1);
+    }
+
+    #[test]
+    fn wave_fields_accumulate_and_stay_out_of_volume() {
+        let c = Counters::new();
+        c.add(&Snapshot { waves: 2, nosync_flushes: 40, ..Default::default() });
+        c.add(&Snapshot { waves: 1, nosync_flushes: 8, ..Default::default() });
+        let s = c.snapshot();
+        assert_eq!(s.waves, 3);
+        assert_eq!(s.nosync_flushes, 48);
+        assert_eq!(s.volume_bytes(), 0, "flush counts are ops, not bytes");
+        let sum = s + Snapshot { waves: 1, ..Default::default() };
+        assert_eq!(sum.waves, 4);
+        c.reset();
+        assert_eq!(c.snapshot(), Snapshot::default());
     }
 }

@@ -9,7 +9,9 @@
 //!   register conflict resolution ([`mttkrp`]), the out-of-memory streaming
 //!   orchestrator and its multi-device sharded generalization
 //!   ([`coordinator`]), simulated accelerator profiles
-//!   ([`device`]) and a full CP-ALS driver ([`cpals`]). Baseline formats the
+//!   ([`device`]), a full CP-ALS driver ([`cpals`]) and a static conflict
+//!   analyzer + instrumented race checker certifying synchronization-free
+//!   schedules ([`analysis`]). Baseline formats the
 //!   paper compares against (COO, F-COO, CSF, B-CSF, MM-CSF) are implemented
 //!   from scratch in [`format`].
 //! * **L2/L1 (build time, `python/`)** — the per-block MTTKRP compute graph
@@ -28,6 +30,7 @@
 // `-D warnings`, which keeps all correctness lints fatal).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod cpals;
@@ -41,6 +44,7 @@ pub mod service;
 pub mod tensor;
 pub mod util;
 
+pub use analysis::conflict::{CertificateSet, ConflictCertificate, SyncClass};
 pub use coordinator::engine::MttkrpEngine;
 pub use format::blco::BlcoTensor;
 pub use format::store::{BatchSource, BlcoStore, BlcoStoreReader};

@@ -25,6 +25,8 @@ use std::sync::Arc;
 use super::atomicf::{as_atomic, atomic_add_row, serial_add_row};
 use super::dense::Matrix;
 use super::{check_shapes, Mttkrp, MAX_RANK};
+use crate::analysis::conflict::{CertificateSet, ConflictCertificate};
+use crate::analysis::racecheck::WriteLog;
 use crate::device::counters::{Counters, Snapshot};
 use crate::device::profile::Profile;
 use crate::format::blco::{BlcoTensor, Block};
@@ -61,6 +63,12 @@ pub struct BlcoEngine {
     pub src: BatchSource,
     pub profile: Profile,
     pub resolution: Resolution,
+    /// per-mode conflict certificates ([`crate::analysis::conflict`]).
+    /// When present, `Resolution::Auto` routes through
+    /// [`ConflictCertificate::resolution`] instead of the §5.3
+    /// `target_len` heuristic, and the streaming planner reads per-batch
+    /// [`SyncClass`](crate::analysis::conflict::SyncClass) marks from it.
+    pub certs: Option<Arc<CertificateSet>>,
 }
 
 impl BlcoEngine {
@@ -91,12 +99,35 @@ impl BlcoEngine {
         if let Err(e) = profile.validate() {
             panic!("invalid profile {:?}: {e}", profile.name);
         }
-        BlcoEngine { src, profile, resolution: Resolution::Auto }
+        BlcoEngine { src, profile, resolution: Resolution::Auto, certs: None }
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {
         self.resolution = r;
         self
+    }
+
+    /// Attach statically computed conflict certificates (usually via
+    /// [`CertificateSet::analyze`]). Panics when the certificates'
+    /// fingerprint does not describe this engine's tensor — a stale
+    /// certificate must never certify the wrong structure.
+    pub fn with_certificates(mut self, certs: Arc<CertificateSet>) -> Self {
+        assert!(
+            certs.matches(&self.src),
+            "certificate fingerprint mismatch: {:?} vs tensor dims {:?} / \
+             nnz {} / {} batches",
+            certs.fingerprint,
+            self.src.dims(),
+            self.src.nnz(),
+            self.src.num_batches(),
+        );
+        self.certs = Some(certs);
+        self
+    }
+
+    /// The attached certificate for `target`, if analysis ran.
+    pub fn certificate_for(&self, target: usize) -> Option<&ConflictCertificate> {
+        self.certs.as_deref().map(|c| c.mode(target))
     }
 
     /// The resident tensor payload, when there is one (`None` for a
@@ -137,15 +168,21 @@ impl BlcoEngine {
             src: BatchSource::Resident(Arc::clone(t)),
             profile,
             resolution: self.resolution,
+            // certificates are structural, not profile-dependent: the
+            // shared payload has the same blocks and batches
+            certs: self.certs.clone(),
         }
     }
 
-    /// The strategy that will run for `target`.
+    /// The strategy that will run for `target`: explicit settings win;
+    /// `Auto` consults the attached [`ConflictCertificate`] when analysis
+    /// ran, falling back to the §5.3 `target_len` heuristic.
     pub fn effective_resolution(&self, target: usize) -> Resolution {
         match self.resolution {
-            Resolution::Auto => {
-                choose_resolution(self.src.dims()[target], &self.profile)
-            }
+            Resolution::Auto => match self.certificate_for(target) {
+                Some(cert) => cert.resolution(),
+                None => choose_resolution(self.src.dims()[target], &self.profile),
+            },
             r => r,
         }
     }
@@ -156,7 +193,7 @@ impl BlcoEngine {
 }
 
 /// Per-work-group scratch, reused across the tiles a thread processes.
-struct Scratch {
+pub(crate) struct Scratch {
     /// decoded global coordinates, mode-major: coords[n][i]
     coords: Vec<Vec<u32>>,
     /// tile-local permutation (the §5.1.1 reorder)
@@ -166,7 +203,7 @@ struct Scratch {
 }
 
 impl Scratch {
-    fn new(order_n: usize, wg: usize) -> Self {
+    pub(crate) fn new(order_n: usize, wg: usize) -> Self {
         Scratch {
             coords: vec![vec![0u32; wg]; order_n],
             order: vec![0u32; wg],
@@ -179,8 +216,14 @@ impl Scratch {
 /// borrowed from a resident tensor or freshly cache-loaded from disk —
 /// so the hot loop is identical across tiers (the bit-for-bit parity
 /// anchor of the container round-trip tests).
+///
+/// `writes` is the race checker's instrumentation point
+/// ([`crate::analysis::racecheck`]): when present, every flushed output
+/// row is pushed in flush order. The tile is sorted by target row, so a
+/// row appears at most once per tile. `None` compiles down to the
+/// uninstrumented hot loop.
 #[allow(clippy::too_many_arguments)]
-fn process_tile(
+pub(crate) fn process_tile(
     spec: &BlcoSpec,
     workgroup: usize,
     blk: &Block,
@@ -193,6 +236,7 @@ fn process_tile(
     serial: bool,
     scratch: &mut Scratch,
     tally: &mut Snapshot,
+    mut writes: Option<&mut Vec<u32>>,
 ) {
     let order_n = spec.order();
     let wg = workgroup;
@@ -250,6 +294,9 @@ fn process_tile(
             } else {
                 atomic_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
             }
+            if let Some(w) = writes.as_deref_mut() {
+                w.push(cur_row);
+            }
             tally.atomics += rank as u64;
             tally.bytes_written += rank as u64 * 8;
             tally.segments += 1;
@@ -282,6 +329,9 @@ fn process_tile(
             serial_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
         } else {
             atomic_add_row(dest, cur_row as usize * dest_rank_stride, &reg[..rank]);
+        }
+        if let Some(w) = writes.as_deref_mut() {
+            w.push(cur_row);
         }
         tally.atomics += rank as u64;
         tally.bytes_written += rank as u64 * 8;
@@ -320,58 +370,14 @@ impl Mttkrp for BlcoEngine {
             }
             Resolution::Register => {
                 let out_at = as_atomic(&mut out.data);
-                self.run(target, factors, rank, out_at, rank, threads, counters);
+                self.run(target, factors, rank, out_at, rank, threads, counters, None);
                 counters.add(&Snapshot {
                     atomic_fanout: (rows * rank) as u64,
                     ..Default::default()
                 });
             }
             Resolution::Hierarchical => {
-                // shadow output copies, one per device slice (§5.1.2 step 6)
-                let slices = self.profile.slices.max(1);
-                let mut shadows = vec![0.0f64; slices * rows * rank];
-                {
-                    let sh_at = as_atomic(&mut shadows);
-                    // destination of a work-group = shadow (wg % slices);
-                    // encode by offsetting the row stride region
-                    self.run_hier(
-                        target, factors, rank, sh_at, rows, threads, counters,
-                    );
-                }
-                // final merge (§5.1.2 step 7): parallel over rows, plain
-                // adds. The merge *accumulates* into `out` (matching
-                // `mttkrp_batch` semantics) rather than storing, so prior
-                // contents are never silently dropped if a caller ever
-                // reuses this path without the zero-fill above.
-                let out_data = as_atomic(&mut out.data);
-                parallel_dynamic(threads, rows, 256, |_, lo, hi| {
-                    let mut written = 0u64;
-                    for r in lo..hi {
-                        for k in 0..rank {
-                            let mut acc = 0.0;
-                            for s in 0..slices {
-                                acc += shadows[(s * rows + r) * rank + k];
-                            }
-                            // rows are owned by one chunk: a plain
-                            // load+store through the atomic view is sound
-                            let slot = &out_data[r * rank + k];
-                            let prev = f64::from_bits(slot.load(Ordering::Relaxed));
-                            slot.store((prev + acc).to_bits(), Ordering::Relaxed);
-                            written += 8;
-                        }
-                    }
-                    counters.add(&Snapshot {
-                        // reads: `slices` shadow values + the prior output
-                        // value the accumulate folds in
-                        bytes_streamed: written * (slices as u64 + 1),
-                        bytes_written: written,
-                        ..Default::default()
-                    });
-                });
-                counters.add(&Snapshot {
-                    atomic_fanout: (rows * rank * slices) as u64,
-                    ..Default::default()
-                });
+                self.hier_full(target, factors, rank, out, threads, counters, None);
             }
         }
     }
@@ -419,6 +425,7 @@ impl BlcoEngine {
                     threads <= 1,
                     &mut scratch,
                     &mut tally,
+                    None,
                 );
             }
             counters.add(&tally);
@@ -430,7 +437,111 @@ impl BlcoEngine {
         });
     }
 
-    /// Register path: every work-group flushes straight into `dest`.
+    /// The register path with every flush logged ([`WriteLog`]) — the race
+    /// checker's observation run. Semantics are otherwise exactly
+    /// [`Mttkrp::mttkrp`] under `Resolution::Register`: the output is
+    /// overwritten, not accumulated.
+    pub fn mttkrp_logged(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+        log: &WriteLog,
+    ) {
+        let rank = check_shapes(self.src.dims(), target, factors, out);
+        let rows = self.src.dims()[target] as usize;
+        out.fill(0.0);
+        let out_at = as_atomic(&mut out.data);
+        self.run(target, factors, rank, out_at, rank, threads, counters, Some(log));
+        counters.add(&Snapshot {
+            atomic_fanout: (rows * rank) as u64,
+            ..Default::default()
+        });
+    }
+
+    /// The hierarchical path with every shadow flush logged, each record's
+    /// ordering class being the shadow-copy index (independent
+    /// destinations never conflict across copies).
+    pub fn mttkrp_logged_hier(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+        log: &WriteLog,
+    ) {
+        let rank = check_shapes(self.src.dims(), target, factors, out);
+        out.fill(0.0);
+        self.hier_full(target, factors, rank, out, threads, counters, Some(log));
+    }
+
+    /// Full hierarchical execution (§5.1.2 steps 6–7): shadow copies, the
+    /// `run_hier` sweep, and the final parallel merge — shared by the
+    /// plain `Mttkrp` dispatch (`log = None`) and [`mttkrp_logged_hier`].
+    /// Accumulates into `out` (callers zero-fill).
+    #[allow(clippy::too_many_arguments)]
+    fn hier_full(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+        log: Option<&WriteLog>,
+    ) {
+        let rows = self.src.dims()[target] as usize;
+        // shadow output copies, one per device slice (§5.1.2 step 6)
+        let slices = self.profile.slices.max(1);
+        let mut shadows = vec![0.0f64; slices * rows * rank];
+        {
+            let sh_at = as_atomic(&mut shadows);
+            // destination of a work-group = shadow (wg % slices);
+            // encode by offsetting the row stride region
+            self.run_hier(target, factors, rank, sh_at, rows, threads, counters, log);
+        }
+        // final merge (§5.1.2 step 7): parallel over rows, plain
+        // adds. The merge *accumulates* into `out` (matching
+        // `mttkrp_batch` semantics) rather than storing, so prior
+        // contents are never silently dropped if a caller ever
+        // reuses this path without the zero-fill above.
+        let out_data = as_atomic(&mut out.data);
+        parallel_dynamic(threads, rows, 256, |_, lo, hi| {
+            let mut written = 0u64;
+            for r in lo..hi {
+                for k in 0..rank {
+                    let mut acc = 0.0;
+                    for s in 0..slices {
+                        acc += shadows[(s * rows + r) * rank + k];
+                    }
+                    // rows are owned by one chunk: a plain
+                    // load+store through the atomic view is sound
+                    let slot = &out_data[r * rank + k];
+                    let prev = f64::from_bits(slot.load(Ordering::Relaxed));
+                    slot.store((prev + acc).to_bits(), Ordering::Relaxed);
+                    written += 8;
+                }
+            }
+            counters.add(&Snapshot {
+                // reads: `slices` shadow values + the prior output
+                // value the accumulate folds in
+                bytes_streamed: written * (slices as u64 + 1),
+                bytes_written: written,
+                ..Default::default()
+            });
+        });
+        counters.add(&Snapshot {
+            atomic_fanout: (rows * rank * slices) as u64,
+            ..Default::default()
+        });
+    }
+
+    /// Register path: every work-group flushes straight into `dest`. With
+    /// `log`, each tile's flushed rows are recorded under ordering class 0
+    /// (a register run has no barrier structure beyond batch order).
     #[allow(clippy::too_many_arguments)]
     fn run(
         &self,
@@ -441,6 +552,7 @@ impl BlcoEngine {
         stride: usize,
         threads: usize,
         counters: &Counters,
+        log: Option<&WriteLog>,
     ) {
         let spec = self.src.spec();
         let wg = self.src.workgroup();
@@ -449,10 +561,12 @@ impl BlcoEngine {
             let blocks: &[Arc<Block>] = &fetched;
             let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
-            parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+            parallel_dynamic(threads, wgs, 4, |t, lo, hi| {
                 let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
+                let mut rows = Vec::new();
                 for w in lo..hi {
+                    rows.clear();
                     process_tile(
                         spec,
                         wg,
@@ -466,7 +580,11 @@ impl BlcoEngine {
                         threads <= 1,
                         &mut scratch,
                         &mut tally,
+                        log.map(|_| &mut rows),
                     );
+                    if let Some(lg) = log {
+                        lg.append_tile(t as u32, bi as u32, 0, w as u32, &rows);
+                    }
                 }
                 counters.add(&tally);
             });
@@ -475,6 +593,7 @@ impl BlcoEngine {
     }
 
     /// Hierarchical path: work-group w flushes into shadow copy (w % slices).
+    /// With `log`, the shadow-copy index is the record's ordering class.
     #[allow(clippy::too_many_arguments)]
     fn run_hier(
         &self,
@@ -485,6 +604,7 @@ impl BlcoEngine {
         rows: usize,
         threads: usize,
         counters: &Counters,
+        log: Option<&WriteLog>,
     ) {
         let slices = self.profile.slices.max(1);
         let spec = self.src.spec();
@@ -494,12 +614,14 @@ impl BlcoEngine {
             let blocks: &[Arc<Block>] = &fetched;
             let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
-            parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+            parallel_dynamic(threads, wgs, 4, |t, lo, hi| {
                 let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
+                let mut wrows = Vec::new();
                 for w in lo..hi {
                     let copy = w % slices;
                     let dest = &shadows[copy * rows * rank..(copy + 1) * rows * rank];
+                    wrows.clear();
                     process_tile(
                         spec,
                         wg,
@@ -513,7 +635,11 @@ impl BlcoEngine {
                         threads <= 1,
                         &mut scratch,
                         &mut tally,
+                        log.map(|_| &mut wrows),
                     );
+                    if let Some(lg) = log {
+                        lg.append_tile(t as u32, bi as u32, copy as u32, w as u32, &wrows);
+                    }
                 }
                 counters.add(&tally);
             });
@@ -673,6 +799,63 @@ mod tests {
             eng.mttkrp(0, &factors, &mut out, 4, &Counters::new());
             assert!(out.max_abs_diff(&expect) < 1e-9, "{res:?}: not idempotent");
         }
+    }
+
+    #[test]
+    fn auto_never_leaks_past_resolution() {
+        // the `unreachable!` Auto arm in `mttkrp` is guarded by this:
+        // `effective_resolution` must return a concrete strategy for every
+        // mode, certificates attached or not
+        let dims = [24u64, 500, 300];
+        let t = synth::uniform(&dims, 4_000, 33);
+        let eng = engine(&t, Resolution::Auto);
+        for m in 0..3 {
+            assert_ne!(eng.effective_resolution(m), Resolution::Auto, "mode {m}");
+        }
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&eng.src));
+        let eng = eng.with_certificates(set);
+        for m in 0..3 {
+            assert_ne!(eng.effective_resolution(m), Resolution::Auto, "mode {m} (cert)");
+        }
+    }
+
+    #[test]
+    fn auto_routes_through_certificate_bit_for_bit() {
+        // with certificates attached, Auto must dispatch to the certified
+        // strategy and produce output bitwise identical to an engine pinned
+        // to that same strategy explicitly — the certificate changes the
+        // policy, never the kernel
+        let dims = [150u64, 130, 170];
+        let t = synth::uniform(&dims, 10_000, 35);
+        let factors = random_factors(&dims, 8, 37);
+        let plain = engine(&t, Resolution::Auto);
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&plain.src));
+        let certified = engine(&t, Resolution::Auto).with_certificates(set);
+        for m in 0..3 {
+            let res = certified.effective_resolution(m);
+            assert_ne!(res, Resolution::Auto);
+            let pinned = engine(&t, res);
+            let rows = dims[m] as usize;
+            let (mut a, mut b) = (Matrix::zeros(rows, 8), Matrix::zeros(rows, 8));
+            // single-threaded: atomic-add order (and hence low-order bits)
+            // is only deterministic when work-groups run in sequence
+            certified.mttkrp(m, &factors, &mut a, 1, &Counters::new());
+            pinned.mttkrp(m, &factors, &mut b, 1, &Counters::new());
+            assert!(
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mode {m}: certified Auto diverged from pinned {res:?}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "certificate fingerprint mismatch")]
+    fn stale_certificates_are_rejected() {
+        let t1 = synth::uniform(&[40u64, 40, 40], 3_000, 41);
+        let t2 = synth::uniform(&[40u64, 40, 40], 4_000, 43);
+        let e1 = engine(&t1, Resolution::Auto);
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&e1.src));
+        let _ = engine(&t2, Resolution::Auto).with_certificates(set);
     }
 
     #[test]

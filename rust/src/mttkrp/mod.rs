@@ -11,6 +11,12 @@
 //!   (Smith & Karypis; Nisa et al.);
 //! * [`blco`] — the paper's unified mode-agnostic algorithm with
 //!   register-based and hierarchical conflict resolution (Section 5).
+//!
+//! The BLCO engine's `Resolution::Auto` dispatch can additionally consult
+//! statically computed conflict certificates ([`crate::analysis`]), and
+//! its kernels expose a write-logging mode the race checker
+//! ([`crate::analysis::racecheck`]) uses to verify those certificates
+//! against real executions.
 
 pub mod atomicf;
 pub mod blco;

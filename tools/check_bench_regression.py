@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Gate a bench-smoke run against a committed perf baseline.
+
+Compares two BENCH json artifacts in the merge_bench_json.py schema
+(`{"schema": 1, "records": [{"figure", "smoke", "metrics": {...}}, ...]}`)
+and exits non-zero when any pinned metric regresses by more than
+--max-regress-pct (default 15%).
+
+The baseline's metric *names* are the pin set: every figure and metric in
+the baseline must be present in the candidate run, so a bench that stops
+emitting a metric fails the gate rather than silently shrinking coverage.
+Metrics present only in the candidate are reported but never fail — new
+metrics land first, get pinned when the baseline is refreshed.
+
+A baseline value of null pins presence only (no numeric comparison). That
+is how a provisional baseline is committed before trustworthy numbers
+exist for the CI runner class; refresh it from a real run with:
+
+    check_bench_regression.py BENCH_PR6.json BENCH_smoke.json --write-baseline
+
+The improvement direction is inferred from the metric name:
+
+  * ``_ms`` / ``_s`` / ``_vol_gb`` / ``_pct``  — lower is better
+  * ``_speedup`` / ``_tbps`` / ``_tp_tbps_geomean`` / ``_over_best``
+    — higher is better (regression = drop)
+  * counts (``_batches``, ``_pairs``, ``_plans_built``, ``_iters``, ...)
+    — structural, compared exactly (any change fails; these encode
+    schedule/analysis decisions, not timing noise)
+
+Usage: check_bench_regression.py BASELINE.json CANDIDATE.json
+           [--max-regress-pct 15] [--write-baseline]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+LOWER_IS_BETTER = ("_ms", "_s", "_vol_gb", "_pct", "_makespan_s", "_wall_ms")
+HIGHER_IS_BETTER = ("_speedup", "_tbps", "_over_best")
+EXACT = ("_batches", "_pairs", "_plans_built", "_iters", "_count")
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_regression: error: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def direction(name: str) -> str:
+    """'lower', 'higher', or 'exact' for a metric name."""
+    if name.endswith(EXACT):
+        return "exact"
+    if name.endswith(HIGHER_IS_BETTER):
+        return "higher"
+    if name.endswith(LOWER_IS_BETTER):
+        return "lower"
+    # unknown shapes are treated as timing-like so a rename cannot turn a
+    # real regression into a free pass
+    return "lower"
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    if doc.get("schema") != 1:
+        fail(f"{path}: unsupported schema {doc.get('schema')!r}")
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        fail(f"{path}: no records")
+    by_figure = {}
+    for rec in records:
+        figure = rec.get("figure")
+        metrics = rec.get("metrics")
+        if not isinstance(figure, str) or not isinstance(metrics, dict):
+            fail(f"{path}: malformed record {rec!r}")
+        if figure in by_figure:
+            fail(f"{path}: duplicate figure {figure!r}")
+        by_figure[figure] = metrics
+    return by_figure
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="pinned baseline (e.g. BENCH_PR6.json)")
+    ap.add_argument("candidate", help="fresh smoke artifact (BENCH_smoke.json)")
+    ap.add_argument(
+        "--max-regress-pct",
+        type=float,
+        default=15.0,
+        help="fail when a pinned metric regresses by more than this (default 15)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="on success, overwrite BASELINE with CANDIDATE's numbers "
+        "(restricted to the pinned metric set)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cand = load(args.candidate)
+
+    failures = []
+    compared = presence_only = 0
+
+    for figure, metrics in sorted(base.items()):
+        if figure not in cand:
+            failures.append(f"{figure}: figure missing from candidate run")
+            continue
+        got = cand[figure]
+        for name, pinned in sorted(metrics.items()):
+            if name not in got:
+                failures.append(f"{figure}.{name}: metric missing from candidate run")
+                continue
+            value = got[name]
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                failures.append(f"{figure}.{name}: candidate value {value!r} not numeric")
+                continue
+            if pinned is None:
+                presence_only += 1
+                continue  # provisional pin: presence is the whole contract
+            if not isinstance(pinned, (int, float)) or isinstance(pinned, bool):
+                fail(f"{args.baseline}: {figure}.{name}: bad pinned value {pinned!r}")
+            compared += 1
+            d = direction(name)
+            if d == "exact":
+                if value != pinned:
+                    failures.append(
+                        f"{figure}.{name}: structural metric changed "
+                        f"{pinned} -> {value}"
+                    )
+                continue
+            if pinned == 0 or not math.isfinite(pinned):
+                continue  # nothing sensible to scale against
+            delta_pct = (value - pinned) / abs(pinned) * 100.0
+            regress_pct = delta_pct if d == "lower" else -delta_pct
+            if regress_pct > args.max_regress_pct:
+                worse = "slower" if d == "lower" else "lower"
+                failures.append(
+                    f"{figure}.{name}: {pinned:.6g} -> {value:.6g} "
+                    f"({regress_pct:+.1f}% {worse}, limit {args.max_regress_pct:.0f}%)"
+                )
+
+    new_metrics = sum(
+        1
+        for figure, metrics in cand.items()
+        for name in metrics
+        if name not in base.get(figure, {})
+    )
+
+    if failures:
+        print(
+            f"check_bench_regression: {len(failures)} failure(s) vs {args.baseline}:",
+            file=sys.stderr,
+        )
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+
+    print(
+        f"check_bench_regression: OK — {compared} metrics within "
+        f"{args.max_regress_pct:.0f}%, {presence_only} provisional pins "
+        f"present, {new_metrics} unpinned candidate metrics"
+    )
+
+    if args.write_baseline:
+        refreshed = {
+            figure: {name: cand[figure][name] for name in metrics}
+            for figure, metrics in base.items()
+        }
+        records = [
+            {"figure": figure, "smoke": True, "metrics": metrics}
+            for figure, metrics in sorted(refreshed.items())
+        ]
+        out = {
+            "schema": 1,
+            "records": records,
+            "figures": [r["figure"] for r in records],
+            "metric_count": sum(len(r["metrics"]) for r in records),
+        }
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench_regression: refreshed {args.baseline}")
+
+
+if __name__ == "__main__":
+    main()
