@@ -32,22 +32,25 @@
 //!   bit-for-bit the sequential result (the order-preserving coloring's
 //!   guarantee — see the [`conflict`](super::conflict) module doc).
 //!
-//! [`run_waved`] is also the execution model for ROADMAP item 2's
-//! threaded kernels: within a wave every work-group owns its rows
-//! outright, so flushes are plain stores — the per-wave `atomics` tally
-//! is reclassified to the `nosync_flushes` counter and each barrier bumps
+//! [`run_waved`] is no longer just test scaffolding: it wraps the
+//! *production* certified kernel
+//! (`BlcoEngine::run_batch_certified`) — the path a certified engine's
+//! `Mttkrp::mttkrp` and the streaming `mttkrp_batch` dispatch to at any
+//! thread count. Within a wave every work-group owns its rows outright,
+//! so flushes are plain stores — the per-wave `atomics` tally is
+//! reclassified to the `nosync_flushes` counter and each barrier bumps
 //! `waves`.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 use super::conflict::ConflictCertificate;
-use crate::device::counters::{Counters, Snapshot};
+use crate::device::counters::Counters;
 use crate::mttkrp::atomicf::as_atomic;
-use crate::mttkrp::blco::{process_tile, BlcoEngine, Scratch};
+use crate::mttkrp::blco::BlcoEngine;
 use crate::mttkrp::check_shapes;
 use crate::mttkrp::dense::Matrix;
-use crate::util::pool::parallel_dynamic;
+use crate::util::pool::ExecBackend;
 
 /// One logged output-row flush.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -174,8 +177,15 @@ pub fn observed_overlaps(records: &[WriteRecord]) -> BTreeMap<u32, BTreeSet<(u32
 /// Flush work is charged to `nosync_flushes` instead of `atomics`, and
 /// every barrier bumps `waves`.
 ///
-/// Accumulates into a zero-filled `out` and, with `log`, records every
-/// flush under its wave as ordering class — feed the log to [`validate`].
+/// This used to be the race checker's private scaffold; it is now the
+/// *production* certified kernel
+/// ([`BlcoEngine::run_batch_certified`](crate::mttkrp::blco::BlcoEngine)
+/// — what a certified engine's `Mttkrp::mttkrp`/`mttkrp_batch` dispatch
+/// to), and this wrapper only adds the fingerprint check, the zero-fill
+/// and the instrumentation entry point the harness wants.
+///
+/// Overwrites `out` and, with `log`, records every flush under its wave
+/// as ordering class — feed the log to [`validate`].
 pub fn run_waved(
     eng: &BlcoEngine,
     cert: &ConflictCertificate,
@@ -193,49 +203,17 @@ pub fn run_waved(
     let rank = check_shapes(eng.src.dims(), target, factors, out);
     out.fill(0.0);
     let dest = as_atomic(&mut out.data);
-    let spec = eng.src.spec();
-    let wg_size = eng.src.workgroup();
-
-    for (bi, batch) in eng.src.batches().iter().enumerate() {
-        let fetched = eng.src.fetch_batch(bi, counters);
-        let base = batch.blocks.start;
-        let bc = &cert.batches[bi];
-        for (wave, members) in bc.wave_members().iter().enumerate() {
-            parallel_dynamic(threads, members.len(), 1, |t, lo, hi| {
-                let mut scratch = Scratch::new(spec.order(), wg_size);
-                let mut tally = Snapshot::default();
-                for k in lo..hi {
-                    let w = members[k] as usize;
-                    let mut rows = Vec::new();
-                    process_tile(
-                        spec,
-                        wg_size,
-                        &fetched[batch.wg_block[w] as usize - base],
-                        batch.wg_offset[w] as usize,
-                        target,
-                        factors,
-                        rank,
-                        dest,
-                        rank,
-                        true, // wave members are row-disjoint: plain stores
-                        &mut scratch,
-                        &mut tally,
-                        log.map(|_| &mut rows),
-                    );
-                    if let Some(lg) = log {
-                        lg.append_tile(t as u32, bi as u32, wave as u32, w as u32, &rows);
-                    }
-                }
-                // certified waves issue no atomics: reclassify the flush
-                // tally as synchronization-free stores
-                tally.nosync_flushes = tally.atomics;
-                tally.atomics = 0;
-                counters.add(&tally);
-            });
-            counters.add(&Snapshot { waves: 1, ..Default::default() });
-        }
-        counters.add(&Snapshot { launches: 1, ..Default::default() });
-    }
+    eng.run_certified(
+        cert,
+        target,
+        factors,
+        rank,
+        dest,
+        rank,
+        ExecBackend::from_threads(threads),
+        counters,
+        log,
+    );
 }
 
 /// What [`racecheck`] proved (or failed to prove) for one mode.

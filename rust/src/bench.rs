@@ -122,6 +122,10 @@ pub fn smoke() -> bool {
 /// env var, `flush()` is a no-op — interactive runs stay table-only.
 pub struct BenchJson {
     figure: String,
+    /// worker count the bench's kernels ran with (the `ExecBackend`
+    /// thread count), recorded so perf history is comparable across
+    /// differently-parallel CI legs
+    threads: usize,
     metrics: Vec<(String, f64)>,
 }
 
@@ -140,7 +144,18 @@ fn json_escape(s: &str) -> String {
 
 impl BenchJson {
     pub fn new(figure: &str) -> Self {
-        BenchJson { figure: figure.to_string(), metrics: Vec::new() }
+        BenchJson {
+            figure: figure.to_string(),
+            threads: crate::util::pool::default_threads(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Override the recorded worker count (benches that pin their own
+    /// thread count rather than following `BLCO_THREADS`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Record one named number. Non-finite values are serialized as
@@ -166,9 +181,10 @@ impl BenchJson {
             fields.push(format!("\"{}\": {val}", json_escape(name)));
         }
         let line = format!(
-            "{{\"figure\": \"{}\", \"smoke\": {}, \"metrics\": {{{}}}}}\n",
+            "{{\"figure\": \"{}\", \"smoke\": {}, \"threads\": {}, \"metrics\": {{{}}}}}\n",
             json_escape(&self.figure),
             smoke(),
+            self.threads,
             fields.join(", ")
         );
         use std::io::Write;

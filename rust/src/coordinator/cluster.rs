@@ -36,6 +36,7 @@ use crate::coordinator::streamer::BatchTrace;
 use crate::device::counters::{Counters, Snapshot};
 use crate::device::model::device_time;
 use crate::device::profile::Profile;
+use crate::format::store::run_with_prefetch;
 use crate::mttkrp::blco::BlcoEngine;
 use crate::mttkrp::dense::Matrix;
 
@@ -207,48 +208,54 @@ pub fn cluster_mttkrp_scheduled(
     let mut timelines = vec![DeviceTimeline::default(); devices];
     let mut traces = Vec::with_capacity(nbatches);
 
-    for b in 0..nbatches {
-        let d = sched.assign[b];
-        let bytes = sched.bytes[b];
-        let tr = sched.transfer_s[b];
+    // batches are visited in global submission order regardless of the
+    // device they land on, so a single one-batch-lookahead prefetcher
+    // (real disk I/O hidden behind real kernels) serves every device
+    run_with_prefetch(&eng.src, eng.src.is_on_disk(), counters, |notify| {
+        for b in 0..nbatches {
+            notify(b);
+            let d = sched.assign[b];
+            let bytes = sched.bytes[b];
+            let tr = sched.transfer_s[b];
 
-        // real computation with exact per-batch counters
-        let batch_counters = Counters::new();
-        let w0 = std::time::Instant::now();
-        if d == 0 {
-            eng.mttkrp_batch(b, target, factors, out, threads, &batch_counters);
-        } else {
-            eng.mttkrp_batch(
-                b, target, factors, &mut partials[d - 1], threads, &batch_counters,
-            );
+            // real computation with exact per-batch counters
+            let batch_counters = Counters::new();
+            let w0 = std::time::Instant::now();
+            if d == 0 {
+                eng.mttkrp_batch(b, target, factors, out, threads, &batch_counters);
+            } else {
+                eng.mttkrp_batch(
+                    b, target, factors, &mut partials[d - 1], threads, &batch_counters,
+                );
+            }
+            let wall_s = w0.elapsed().as_secs_f64();
+            let snap = batch_counters.snapshot();
+            counters.add(&snap);
+            let compute_s = device_time(&snap, profile).total();
+
+            // pipeline clock: the transfer waits for this device's host link
+            // (`device % links` — devices round-robin over the independent
+            // links) and its queue reservation; the kernel waits for the data
+            // and the device's compute engine
+            let li = sched.link_of[b];
+            let q = sched.queue_of[b];
+            let start = link_free[li].max(queue_free[d][q]);
+            let landed = start + tr;
+            link_free[li] = landed;
+            let compute_start = landed.max(device_free[d]);
+            device_free[d] = compute_start + compute_s;
+            queue_free[d][q] = device_free[d];
+
+            let tl = &mut timelines[d];
+            tl.batches.push(b);
+            tl.bytes += bytes;
+            tl.transfer_s += tr;
+            tl.compute_s += compute_s;
+            tl.finish_s = device_free[d];
+
+            traces.push(BatchTrace { bytes, transfer_s: tr, compute_s, wall_s });
         }
-        let wall_s = w0.elapsed().as_secs_f64();
-        let snap = batch_counters.snapshot();
-        counters.add(&snap);
-        let compute_s = device_time(&snap, profile).total();
-
-        // pipeline clock: the transfer waits for this device's host link
-        // (`device % links` — devices round-robin over the independent
-        // links) and its queue reservation; the kernel waits for the data
-        // and the device's compute engine
-        let li = sched.link_of[b];
-        let q = sched.queue_of[b];
-        let start = link_free[li].max(queue_free[d][q]);
-        let landed = start + tr;
-        link_free[li] = landed;
-        let compute_start = landed.max(device_free[d]);
-        device_free[d] = compute_start + compute_s;
-        queue_free[d][q] = device_free[d];
-
-        let tl = &mut timelines[d];
-        tl.batches.push(b);
-        tl.bytes += bytes;
-        tl.transfer_s += tr;
-        tl.compute_s += compute_s;
-        tl.finish_s = device_free[d];
-
-        traces.push(BatchTrace { bytes, transfer_s: tr, compute_s, wall_s });
-    }
+    });
 
     let stream_s = device_free
         .iter()

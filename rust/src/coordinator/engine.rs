@@ -30,7 +30,7 @@ use crate::mttkrp::blco::{BlcoEngine, Resolution};
 use crate::mttkrp::dense::Matrix;
 use crate::mttkrp::Mttkrp;
 use crate::tensor::coo::CooTensor;
-use crate::util::pool::default_threads;
+use crate::util::pool::{default_threads, ExecBackend};
 
 /// Which path a given MTTKRP took.
 #[derive(Clone, Debug)]
@@ -155,6 +155,22 @@ impl MttkrpEngine {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Pin the execution backend explicitly (equivalent to
+    /// [`Self::with_threads`] with the backend's worker count — the
+    /// engine stores one number and every kernel derives its backend
+    /// from it, so there is exactly one sequential/threaded decision).
+    pub fn with_backend(self, backend: ExecBackend) -> Self {
+        self.with_threads(backend.threads())
+    }
+
+    /// The [`ExecBackend`] this engine's kernels, streaming executors and
+    /// CP-ALS sweeps run with. Certified kernel paths are bit-for-bit
+    /// identical across every backend; see
+    /// [`crate::analysis::conflict`].
+    pub fn backend(&self) -> ExecBackend {
+        ExecBackend::from_threads(self.threads)
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {

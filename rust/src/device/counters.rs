@@ -179,6 +179,57 @@ impl Snapshot {
     }
 }
 
+/// One [`Counters`] block per worker thread. Threaded kernels hand shard
+/// `t` to worker `t` so the hot loop never contends on shared atomics;
+/// [`ShardedCounters::merge`] folds the shards back into the totals a
+/// sequential run over the same work would have produced — every field is
+/// a sum except `atomic_fanout`, whose max semantics ([`Counters::add`])
+/// are preserved shard-wise. Because each kernel charges counters per
+/// work item (not per thread), the merged totals are invariant under the
+/// thread count and the work-to-shard assignment.
+#[derive(Debug, Default)]
+pub struct ShardedCounters {
+    shards: Vec<Counters>,
+}
+
+impl ShardedCounters {
+    pub fn new(nthreads: usize) -> Self {
+        ShardedCounters {
+            shards: (0..nthreads.max(1)).map(|_| Counters::new()).collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The counter block worker `t` charges into (`t % shards` so a
+    /// caller with more workers than shards still lands somewhere).
+    pub fn shard(&self, t: usize) -> &Counters {
+        &self.shards[t % self.shards.len()]
+    }
+
+    /// Fold every shard into one snapshot — bit-equal to the totals of a
+    /// 1-shard (sequential) run over the same work.
+    pub fn merge(&self) -> Snapshot {
+        self.shards
+            .iter()
+            .map(Counters::snapshot)
+            .fold(Snapshot::default(), |acc, s| acc + s)
+    }
+
+    /// Merge and flush into a shared [`Counters`] block.
+    pub fn merge_into(&self, dest: &Counters) {
+        dest.add(&self.merge());
+    }
+
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.reset();
+        }
+    }
+}
+
 impl std::ops::Add for Snapshot {
     type Output = Snapshot;
     fn add(self, o: Snapshot) -> Snapshot {
@@ -284,6 +335,84 @@ mod tests {
         let s = a + b;
         assert_eq!(s.segments, 5);
         assert_eq!(s.stash_hits, 1);
+    }
+
+    /// Deterministic pseudo-random per-item delta exercising every field,
+    /// including the wave (`waves`/`nosync_flushes`) and host-cache
+    /// (`bytes_disk`/`host_*`) counters.
+    fn item_delta(i: u64) -> Snapshot {
+        let mut x = i.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(0x243f6a88);
+        let mut next = || {
+            x ^= x >> 33;
+            x = x.wrapping_mul(0xff51afd7ed558ccd);
+            x ^= x >> 29;
+            x % 97
+        };
+        Snapshot {
+            bytes_streamed: next(),
+            bytes_gathered: next(),
+            bytes_scattered: next(),
+            bytes_serial: next(),
+            bytes_local: next(),
+            bytes_written: next(),
+            atomics: next(),
+            segments: next(),
+            stash_hits: next(),
+            launches: next(),
+            atomic_fanout: next(),
+            bytes_disk: next(),
+            host_hits: next(),
+            host_misses: next(),
+            host_evictions: next(),
+            waves: next(),
+            nosync_flushes: next(),
+        }
+    }
+
+    #[test]
+    fn sharded_merge_reproduces_sequential_totals() {
+        // property: for any thread count and any work-to-shard split, the
+        // merged shard totals equal the sequential single-counter run over
+        // the same per-item deltas — sums everywhere, max for
+        // atomic_fanout
+        const ITEMS: u64 = 1000;
+        let seq = Counters::new();
+        for i in 0..ITEMS {
+            seq.add(&item_delta(i));
+        }
+        let expect = seq.snapshot();
+
+        for nthreads in [1usize, 2, 4, 8] {
+            let sharded = ShardedCounters::new(nthreads);
+            assert_eq!(sharded.num_shards(), nthreads);
+            std::thread::scope(|s| {
+                for t in 0..nthreads {
+                    let sharded = &sharded;
+                    s.spawn(move || {
+                        // strided assignment: a different work split than
+                        // the sequential loop, same item set
+                        let mut i = t as u64;
+                        while i < ITEMS {
+                            sharded.shard(t).add(&item_delta(i));
+                            i += nthreads as u64;
+                        }
+                    });
+                }
+            });
+            let merged = sharded.merge();
+            assert_eq!(
+                merged, expect,
+                "merged totals must match sequential at {nthreads} threads"
+            );
+
+            // merge_into flushes the same totals into a shared block
+            let dest = Counters::new();
+            sharded.merge_into(&dest);
+            assert_eq!(dest.snapshot(), expect);
+
+            sharded.reset();
+            assert_eq!(sharded.merge(), Snapshot::default());
+        }
     }
 
     #[test]

@@ -305,6 +305,13 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// demand lookups that found a block staged by the prefetcher — the
+    /// direct measure of I/O successfully hidden behind compute
+    pub prefetch_hits: u64,
+    /// prefetched blocks evicted before any demand touch (prefetch I/O
+    /// that bought nothing; a high count means the budget is too small
+    /// to hold the working set plus one batch of lookahead)
+    pub prefetch_wasted: u64,
     /// bytes read from disk (payloads of every miss)
     pub disk_bytes: u64,
     /// block payload bytes currently held
@@ -317,9 +324,19 @@ pub struct CacheStats {
     pub budget_bytes: usize,
 }
 
+struct CacheEntry {
+    block: Arc<Block>,
+    /// last-touch tick (LRU recency)
+    last: u64,
+    /// staged by the prefetcher and not yet demanded: the first demand
+    /// `get` clears this and counts a prefetch hit; eviction while still
+    /// set counts a wasted prefetch
+    prefetched: bool,
+}
+
 struct CacheInner {
-    /// block id → (payload, last-touch tick)
-    map: HashMap<usize, (Arc<Block>, u64)>,
+    /// block id → cache entry
+    map: HashMap<usize, CacheEntry>,
     resident_bytes: usize,
     tick: u64,
 }
@@ -336,6 +353,8 @@ pub struct BlockCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetch_wasted: AtomicU64,
     disk_bytes: AtomicU64,
     peak: AtomicUsize,
 }
@@ -352,6 +371,8 @@ impl BlockCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
+            prefetch_wasted: AtomicU64::new(0),
             disk_bytes: AtomicU64::new(0),
             peak: AtomicUsize::new(0),
         }
@@ -361,16 +382,26 @@ impl BlockCache {
         self.budget
     }
 
+    /// Whether block `i` is resident, without touching recency or stats —
+    /// the prefetcher's peek must not perturb what it is measuring.
+    fn contains(&self, i: usize) -> bool {
+        self.inner.lock().expect("block cache poisoned").map.contains_key(&i)
+    }
+
     /// Look up block `i`, refreshing its recency on a hit.
     fn get(&self, i: usize) -> Option<Arc<Block>> {
         let mut inner = self.inner.lock().expect("block cache poisoned");
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(&i) {
-            Some((b, last)) => {
-                *last = tick;
+            Some(e) => {
+                e.last = tick;
+                if e.prefetched {
+                    e.prefetched = false;
+                    self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                }
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(Arc::clone(b))
+                Some(Arc::clone(&e.block))
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -381,7 +412,7 @@ impl BlockCache {
 
     /// Insert a freshly loaded block, evicting LRU entries until it fits.
     /// Returns how many blocks were evicted.
-    fn insert(&self, i: usize, block: Arc<Block>) -> usize {
+    fn insert(&self, i: usize, block: Arc<Block>, prefetched: bool) -> usize {
         let bytes = block.bytes();
         self.disk_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         if bytes > self.budget {
@@ -400,24 +431,35 @@ impl BlockCache {
             let lru = inner
                 .map
                 .iter()
-                .min_by_key(|(_, (_, last))| *last)
+                .min_by_key(|(_, e)| e.last)
                 .map(|(&k, _)| k)
                 .expect("resident_bytes > 0 implies a resident block");
-            let (gone, _) = inner.map.remove(&lru).expect("lru key present");
-            inner.resident_bytes -= gone.bytes();
+            let gone = inner.map.remove(&lru).expect("lru key present");
+            inner.resident_bytes -= gone.block.bytes();
+            if gone.prefetched {
+                self.prefetch_wasted.fetch_add(1, Ordering::Relaxed);
+            }
             evicted += 1;
         }
         inner.tick += 1;
         let tick = inner.tick;
         // two threads can race a miss on the same block; replacing must
         // not double-count the payload
-        if let Some((old, _)) = inner.map.insert(i, (block, tick)) {
-            inner.resident_bytes -= old.bytes();
+        if let Some(old) = inner.map.insert(i, CacheEntry { block, last: tick, prefetched }) {
+            inner.resident_bytes -= old.block.bytes();
         }
         inner.resident_bytes += bytes;
         self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
         self.peak.fetch_max(inner.resident_bytes, Ordering::Relaxed);
         evicted
+    }
+
+    /// Stage a block loaded by the prefetcher: counted as a miss (the
+    /// payload did come off disk) and flagged so the first demand `get`
+    /// reports a prefetch hit, and an eviction-before-use reports waste.
+    fn stage_prefetched(&self, i: usize, block: Arc<Block>) -> usize {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.insert(i, block, true)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -426,6 +468,8 @@ impl BlockCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_wasted: self.prefetch_wasted.load(Ordering::Relaxed),
             disk_bytes: self.disk_bytes.load(Ordering::Relaxed),
             resident_bytes: inner.resident_bytes,
             peak_resident_bytes: self.peak.load(Ordering::Relaxed),
@@ -774,7 +818,7 @@ impl BlcoStoreReader {
         }
         let m = self.metas[i];
         let block = Arc::new(self.read_block(i)?);
-        let evicted = self.cache.insert(i, Arc::clone(&block));
+        let evicted = self.cache.insert(i, Arc::clone(&block), false);
         counters.add(&Snapshot {
             host_misses: 1,
             host_evictions: evicted as u64,
@@ -782,6 +826,43 @@ impl BlcoStoreReader {
             ..Default::default()
         });
         Ok(block)
+    }
+
+    /// Advisory load of block `i` into the cache ahead of demand. A block
+    /// already resident is left untouched (no recency or stat
+    /// perturbation); a fresh load is charged exactly like a demand miss
+    /// (it is the same disk I/O, just earlier) and flagged so
+    /// [`CacheStats::prefetch_hits`] / [`CacheStats::prefetch_wasted`]
+    /// attribute its fate.
+    pub fn prefetch_block(&self, i: usize, counters: &Counters) -> Result<(), StoreError> {
+        if self.cache.contains(i) {
+            return Ok(());
+        }
+        let m = self.metas[i];
+        let block = Arc::new(self.read_block(i)?);
+        let evicted = self.cache.stage_prefetched(i, block);
+        counters.add(&Snapshot {
+            host_misses: 1,
+            host_evictions: evicted as u64,
+            bytes_disk: m.bytes as u64,
+            ..Default::default()
+        });
+        Ok(())
+    }
+
+    /// Prefetch every block of batch `b`. Errors are advisory — the
+    /// demand path will retry the same block and surface the failure as
+    /// fatal there — so a prefetch fault only warns and stops early.
+    pub fn prefetch_batch(&self, b: usize, counters: &Counters) {
+        for i in self.batches[b].blocks.clone() {
+            if let Err(e) = self.prefetch_block(i, counters) {
+                eprintln!(
+                    "warning: prefetch of block {i} from {} failed: {e}",
+                    self.path.display()
+                );
+                return;
+            }
+        }
     }
 
     /// Verify every block payload against its stored checksum without
@@ -994,6 +1075,73 @@ impl BatchSource {
     }
 }
 
+// ------------------------------------------------- prefetch orchestration
+
+/// Run a batch-ordered compute loop with a background thread pulling the
+/// *next* batch's blocks off disk while the current one computes.
+///
+/// `body` receives a `notify` callback and must call `notify(b)` when it
+/// starts computing batch `b`; the prefetcher stays at most **one batch
+/// ahead** of the notified cursor, so lookahead residency is bounded by
+/// one batch of payload on top of the demand working set (the
+/// [`BlockCache`] budget still caps everything that is actually kept).
+///
+/// Batch 0 is prefetched synchronously before the background thread
+/// starts: the first compute batch always finds its blocks staged when
+/// the budget can hold them at all, which makes `prefetch_hits > 0`
+/// deterministic rather than a race.
+///
+/// For a resident source, a zero-batch tensor, or `enabled == false`,
+/// this degenerates to calling `body` with a no-op callback — callers
+/// wrap their loop unconditionally and the resident path pays nothing.
+/// If `body` panics, a drop guard parks the cursor so the prefetcher
+/// exits instead of spinning, and the panic propagates.
+pub fn run_with_prefetch<R>(
+    src: &BatchSource,
+    enabled: bool,
+    counters: &Counters,
+    body: impl FnOnce(&dyn Fn(usize)) -> R,
+) -> R {
+    let reader = match src.reader() {
+        Some(r) if enabled && src.num_batches() > 0 => r,
+        _ => return body(&|_| {}),
+    };
+    let nbatches = src.num_batches();
+    reader.prefetch_batch(0, counters);
+    if nbatches == 1 {
+        return body(&|_| {});
+    }
+    // index of the batch the compute loop is currently on; usize::MAX
+    // parks the prefetcher (set on completion or panic of `body`)
+    let cursor = AtomicUsize::new(0);
+    struct Park<'a>(&'a AtomicUsize);
+    impl Drop for Park<'_> {
+        fn drop(&mut self) {
+            self.0.store(usize::MAX, Ordering::Release);
+        }
+    }
+    std::thread::scope(|s| {
+        let cursor = &cursor;
+        s.spawn(move || {
+            for b in 1..nbatches {
+                loop {
+                    let cur = cursor.load(Ordering::Acquire);
+                    if cur == usize::MAX {
+                        return;
+                    }
+                    if b <= cur + 1 {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                reader.prefetch_batch(b, counters);
+            }
+        });
+        let _park = Park(cursor);
+        body(&|b| cursor.store(b, Ordering::Release))
+    })
+}
+
 impl std::fmt::Debug for BatchSource {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -1126,6 +1274,110 @@ mod tests {
         assert_eq!(snap.host_hits, r.cache_stats().hits);
         assert_eq!(snap.host_misses, r.cache_stats().misses);
         assert_eq!(snap.bytes_disk, r.cache_stats().disk_bytes);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn prefetch_stages_blocks_and_counts_hits() {
+        let b = sample_tensor();
+        let p = tmpfile("prefetch_hits.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        // budget big enough that nothing prefetched is ever evicted
+        let r = BlcoStoreReader::open(&p).unwrap();
+        let c = Counters::new();
+        let nblocks = r.batches()[0].blocks.len();
+        r.prefetch_batch(0, &c);
+        let staged = r.cache_stats();
+        assert_eq!(staged.misses as usize, nblocks, "each staged block is a miss");
+        assert_eq!(staged.hits, 0);
+        assert_eq!(staged.prefetch_hits, 0, "no demand touch yet");
+        // re-prefetching resident blocks must not perturb any stat
+        r.prefetch_batch(0, &c);
+        assert_eq!(r.cache_stats(), staged);
+        // first demand pass: every lookup is a hit, and a prefetch hit
+        for i in r.batches()[0].blocks.clone() {
+            r.block(i, &c).unwrap();
+        }
+        let after = r.cache_stats();
+        assert_eq!(after.misses as usize, nblocks);
+        assert_eq!(after.hits as usize, nblocks);
+        assert_eq!(after.prefetch_hits as usize, nblocks);
+        assert_eq!(after.prefetch_wasted, 0);
+        // second demand pass: plain hits, prefetch_hits stays flat
+        for i in r.batches()[0].blocks.clone() {
+            r.block(i, &c).unwrap();
+        }
+        assert_eq!(r.cache_stats().prefetch_hits as usize, nblocks);
+        // counters saw the prefetch I/O as host misses + disk bytes
+        let snap = c.snapshot();
+        assert_eq!(snap.host_misses as usize, nblocks);
+        assert_eq!(snap.bytes_disk, after.disk_bytes);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn prefetch_evicted_before_use_counts_as_wasted() {
+        let b = sample_tensor();
+        assert!(b.blocks.len() >= 8, "need enough blocks to thrash");
+        let p = tmpfile("prefetch_waste.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        // budget of ~3 blocks: prefetch 3, then demand the rest so every
+        // staged block is evicted before any demand touch
+        let budget = 3 * 512 * 16;
+        let r = BlcoStoreReader::open_with_budget(&p, budget).unwrap();
+        let c = Counters::new();
+        for i in 0..3 {
+            r.prefetch_block(i, &c).unwrap();
+        }
+        for i in 3..b.blocks.len() {
+            r.block(i, &c).unwrap();
+        }
+        let s = r.cache_stats();
+        assert_eq!(s.prefetch_wasted, 3, "all staged blocks evicted unused");
+        assert_eq!(s.prefetch_hits, 0);
+        assert!(s.peak_resident_bytes <= budget);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn run_with_prefetch_overlaps_and_stays_in_budget() {
+        let b = sample_tensor();
+        let p = tmpfile("prefetch_run.blco");
+        BlcoStore::write(&b, &p).unwrap();
+        // budget of two max-size batches: lookahead never forces the
+        // current batch out, so prefetch hits are deterministic
+        let probe = BatchSource::OnDisk(BlcoStoreReader::open(&p).unwrap());
+        let max_batch: usize = (0..probe.num_batches())
+            .map(|bi| probe.batch_bytes(bi))
+            .max()
+            .unwrap();
+        let src =
+            BatchSource::OnDisk(BlcoStoreReader::open_with_budget(&p, 2 * max_batch).unwrap());
+        let c = Counters::new();
+        let fetched = run_with_prefetch(&src, true, &c, |notify| {
+            let mut n = 0usize;
+            for bi in 0..src.num_batches() {
+                notify(bi);
+                n += src.fetch_batch(bi, &c).len();
+            }
+            n
+        });
+        assert_eq!(fetched, b.blocks.len());
+        let s = src.reader().unwrap().cache_stats();
+        assert!(s.prefetch_hits > 0, "overlap must produce prefetch hits: {s:?}");
+        assert!(
+            s.peak_resident_bytes <= s.budget_bytes,
+            "peak {} > budget {}",
+            s.peak_resident_bytes,
+            s.budget_bytes
+        );
+        // the resident tier is a strict no-op: body runs, nothing else
+        let resident = BatchSource::Resident(Arc::new(b));
+        let out = run_with_prefetch(&resident, true, &c, |notify| {
+            notify(0);
+            42usize
+        });
+        assert_eq!(out, 42);
         std::fs::remove_file(&p).ok();
     }
 

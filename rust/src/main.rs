@@ -327,11 +327,14 @@ fn cmd_cpals(args: &Args) -> Result<()> {
     }
     if let Some(cache) = engine.host_cache_stats() {
         println!(
-            "  host cache      {} hits / {} misses / {} evictions, \
-             {:.1} MiB from disk, peak {:.1} KiB of {:.1} KiB budget",
+            "  host cache      {} hits / {} misses / {} evictions \
+             (prefetch: {} hits, {} wasted), {:.1} MiB from disk, \
+             peak {:.1} KiB of {:.1} KiB budget",
             cache.hits,
             cache.misses,
             cache.evictions,
+            cache.prefetch_hits,
+            cache.prefetch_wasted,
             cache.disk_bytes as f64 / (1 << 20) as f64,
             cache.peak_resident_bytes as f64 / 1024.0,
             cache.budget_bytes as f64 / 1024.0,
@@ -456,15 +459,19 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
 /// `stream --from-store --check`: hard CI assertions of the
 /// host-out-of-core tier — the disk-streamed result must be bit-for-bit
-/// the resident-path result on every mode, repeated streamed modes must
-/// reuse their cached plan instead of replanning, and the block cache
-/// must never have held more than its host budget.
+/// the resident-path result on every mode (and, through the conflict
+/// certificates, at every thread count), repeated streamed modes must
+/// reuse their cached plan instead of replanning, the block cache must
+/// never have held more than its host budget, and when the budget can
+/// hold a batch of lookahead the prefetcher must have hidden disk I/O
+/// behind compute.
 fn check_store_parity(engine: &MttkrpEngine, rank: usize) -> Result<()> {
     use blco::mttkrp::Mttkrp;
     let reader = engine
         .source()
         .reader()
         .with_context(|| "--check needs --from-store (nothing to verify)")?;
+    let store_path = reader.path().to_path_buf();
     // resident twin materialized from the very same container (a
     // cache-bypassing full read, so cache stats stay honest)
     let twin = MttkrpEngine::from_blco(
@@ -488,6 +495,47 @@ fn check_store_parity(engine: &MttkrpEngine, rank: usize) -> Result<()> {
         }
         if engine.is_oom_for(mode, rank) {
             streamed.push(mode);
+        }
+    }
+    // certified tier: with conflict certificates attached, BOTH tiers must
+    // reproduce the sequential bits at every thread count — the waved /
+    // copy-ownership schedules replay each row's flushes in a fixed order,
+    // so parallelism cannot perturb even the last ulp
+    let certified_disk =
+        MttkrpEngine::from_store(&store_path, engine.eng.profile.clone())?
+            .with_conflict_analysis();
+    let certified_res =
+        MttkrpEngine::from_blco(twin.tensor(), engine.eng.profile.clone())
+            .with_conflict_analysis();
+    let scratch = blco::device::Counters::new();
+    for mode in 0..engine.dims.len() {
+        let rows = engine.dims[mode] as usize;
+        let res = certified_disk.eng.effective_resolution(mode);
+        // reference: the pre-analyzer kernel pinned to the certified
+        // strategy, one thread (the sequential float-op order)
+        let pinned = MttkrpEngine::from_blco(twin.tensor(), engine.eng.profile.clone())
+            .with_resolution(res);
+        let mut want = blco::mttkrp::dense::Matrix::zeros(rows, rank);
+        Mttkrp::mttkrp(&pinned, mode, &factors, &mut want, 1, &scratch);
+        for nt in [1usize, 2, 4, 8] {
+            let mut d = blco::mttkrp::dense::Matrix::zeros(rows, rank);
+            let mut r = blco::mttkrp::dense::Matrix::zeros(rows, rank);
+            Mttkrp::mttkrp(&certified_disk, mode, &factors, &mut d, nt, &scratch);
+            Mttkrp::mttkrp(&certified_res, mode, &factors, &mut r, nt, &scratch);
+            for (tier, got) in [("disk", &d), ("resident", &r)] {
+                let ok = got.data.len() == want.data.len()
+                    && got
+                        .data
+                        .iter()
+                        .zip(&want.data)
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+                if !ok {
+                    bail!(
+                        "mode {mode}: certified {tier} run at {nt} threads \
+                         diverges from the sequential {res:?} bits"
+                    );
+                }
+            }
         }
     }
     if let Some(&mode) = streamed.first() {
@@ -517,14 +565,36 @@ fn check_store_parity(engine: &MttkrpEngine, rank: usize) -> Result<()> {
     if cache.misses == 0 {
         bail!("expected disk reads through the block cache, saw none");
     }
+    // prefetch observable: when the budget can hold the current batch plus
+    // one batch of lookahead and something actually streamed, the prefetch
+    // thread must have staged blocks that demand fetches then hit (a
+    // tighter budget makes hits a race with eviction, so only the peak
+    // bound is asserted there)
+    let max_batch = (0..engine.source().num_batches())
+        .map(|b| engine.source().batch_bytes(b))
+        .max()
+        .unwrap_or(0);
+    if !streamed.is_empty() && cache.budget_bytes >= 2 * max_batch
+        && cache.prefetch_hits == 0
+    {
+        bail!(
+            "expected prefetch hits with budget {} B >= 2 x max batch {} B, \
+             saw none",
+            cache.budget_bytes,
+            max_batch
+        );
+    }
     println!(
-        "check: OK (bit-for-bit vs resident on {} modes, {} streamed, plan \
-         reuse, cache peak {:.1} KiB <= budget {:.1} KiB, {} evictions)",
+        "check: OK (bit-for-bit vs resident on {} modes + certified parity \
+         at 1/2/4/8 threads, {} streamed, plan reuse, cache peak {:.1} KiB \
+         <= budget {:.1} KiB, {} evictions, prefetch {} hits / {} wasted)",
         engine.dims.len(),
         streamed.len(),
         cache.peak_resident_bytes as f64 / 1024.0,
         cache.budget_bytes as f64 / 1024.0,
         cache.evictions,
+        cache.prefetch_hits,
+        cache.prefetch_wasted,
     );
     Ok(())
 }

@@ -18,6 +18,27 @@
 //!
 //! The §5.3 heuristic picks hierarchical when the target mode is shorter
 //! than the device's SM/subslice count, register-based otherwise.
+//!
+//! # Parallel execution
+//!
+//! Every kernel consumes an [`ExecBackend`] (derived from the caller's
+//! thread count). With a [`ConflictCertificate`] attached, the register
+//! path executes each batch under its certified wave schedule
+//! ([`BlcoEngine::run_batch_certified`] — the production promotion of the
+//! race checker's `run_waved` scaffold): work-groups within a wave are
+//! row-disjoint by construction, so flushes are *plain stores* at any
+//! thread count, and the order-preserving coloring replays each row's
+//! flushes in submission order — the threaded result is **bit-for-bit**
+//! the sequential one. The hierarchical path stays deterministic by
+//! *copy ownership*: the worker handling shadow copy `c` processes
+//! exactly the work-groups `w ≡ c (mod slices)` in ascending order, so
+//! every shadow slot has a single writer and a fixed flush order, and the
+//! final merge walks copies in fixed order per row. Uncertified threaded
+//! register runs fall back to CAS atomics (correct, but with
+//! thread-count-dependent low-order bits) — attaching certificates is
+//! what buys determinism. [`BatchStrategy`] exposes the per-batch
+//! NoSync/Privatize/Atomic choices individually for the measured
+//! ablation in `benches/ablation_conflict_resolution.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -25,14 +46,14 @@ use std::sync::Arc;
 use super::atomicf::{as_atomic, atomic_add_row, serial_add_row};
 use super::dense::Matrix;
 use super::{check_shapes, Mttkrp, MAX_RANK};
-use crate::analysis::conflict::{CertificateSet, ConflictCertificate};
+use crate::analysis::conflict::{BatchCert, CertificateSet, ConflictCertificate};
 use crate::analysis::racecheck::WriteLog;
-use crate::device::counters::{Counters, Snapshot};
+use crate::device::counters::{Counters, ShardedCounters, Snapshot};
 use crate::device::profile::Profile;
 use crate::format::blco::{BlcoTensor, Block};
 use crate::format::store::{BatchSource, BlcoStoreReader};
 use crate::linear::encode::BlcoSpec;
-use crate::util::pool::parallel_dynamic;
+use crate::util::pool::ExecBackend;
 
 /// Conflict-resolution strategy (Sections 5.1, 5.2, 5.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +73,28 @@ pub fn choose_resolution(target_len: u64, p: &Profile) -> Resolution {
     } else {
         Resolution::Register
     }
+}
+
+/// One concrete synchronization strategy, forced for *every* batch — the
+/// axes of the measured conflict-resolution ablation
+/// (`benches/ablation_conflict_resolution.rs`). Production dispatch never
+/// forces a strategy: a certified engine executes its wave schedule
+/// (plain stores, bit-deterministic), an uncertified one uses CAS
+/// atomics, and `Privatize`-dominant certificates route `Auto` to the
+/// hierarchical engine. [`BlcoEngine::mttkrp_forced`] exists so each
+/// strategy's real wall-clock cost can be measured in isolation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchStrategy {
+    /// certified wave schedule, plain stores (requires attached
+    /// certificates); bit-for-bit the sequential result
+    NoSync,
+    /// per-thread private output copies merged by a pairwise tree
+    /// reduction; oracle-equal but not bit-stable (the dynamic
+    /// work-group→thread assignment reassociates float adds)
+    Privatize,
+    /// CAS loop ([`super::atomicf::atomic_add`]) on every flush, even
+    /// single-threaded; oracle-equal, order-nondeterministic when threaded
+    Atomic,
 }
 
 pub struct BlcoEngine {
@@ -370,7 +413,24 @@ impl Mttkrp for BlcoEngine {
             }
             Resolution::Register => {
                 let out_at = as_atomic(&mut out.data);
-                self.run(target, factors, rank, out_at, rank, threads, counters, None);
+                // a certified engine executes the wave schedule: plain
+                // stores at any thread count, bit-for-bit the sequential
+                // register path (the certificate's guarantee, cashed in)
+                match self.certificate_for(target) {
+                    Some(cert) => {
+                        let backend = ExecBackend::from_threads(threads);
+                        self.run_certified(
+                            cert, target, factors, rank, out_at, rank, backend,
+                            counters, None,
+                        );
+                    }
+                    None => {
+                        self.run(
+                            target, factors, rank, out_at, rank, threads, counters,
+                            None,
+                        );
+                    }
+                }
                 counters.add(&Snapshot {
                     atomic_fanout: (rows * rank) as u64,
                     ..Default::default()
@@ -401,6 +461,29 @@ impl BlcoEngine {
     ) {
         let rank = check_shapes(self.src.dims(), target, factors, out);
         let out_at = as_atomic(&mut out.data);
+        let backend = ExecBackend::from_threads(threads);
+        // certified streaming: this batch runs its wave schedule with
+        // plain stores — the streamed threaded result stays bit-for-bit
+        // the sequential (and resident) one
+        if let Some(cert) = self.certificate_for(target) {
+            self.run_batch_certified(
+                batch_idx,
+                &cert.batches[batch_idx],
+                target,
+                factors,
+                rank,
+                out_at,
+                rank,
+                backend,
+                counters,
+                None,
+            );
+            counters.add(&Snapshot {
+                atomic_fanout: self.src.dims()[target] * rank as u64,
+                ..Default::default()
+            });
+            return;
+        }
         let spec = self.src.spec();
         let wg = self.src.workgroup();
         let batch = &self.src.batches()[batch_idx];
@@ -408,7 +491,8 @@ impl BlcoEngine {
         let blocks: &[Arc<Block>] = &fetched;
         let base = batch.blocks.start;
         let wgs = batch.wg_block.len();
-        parallel_dynamic(threads, wgs, 4, |_, lo, hi| {
+        let shards = ShardedCounters::new(backend.threads());
+        backend.dynamic(wgs, 4, |t, lo, hi| {
             let mut scratch = Scratch::new(spec.order(), wg);
             let mut tally = Snapshot::default();
             for w in lo..hi {
@@ -422,14 +506,15 @@ impl BlcoEngine {
                     rank,
                     out_at,
                     rank,
-                    threads <= 1,
+                    backend.is_sequential(),
                     &mut scratch,
                     &mut tally,
                     None,
                 );
             }
-            counters.add(&tally);
+            shards.shard(t).add(&tally);
         });
+        shards.merge_into(counters);
         counters.add(&Snapshot {
             launches: 1,
             atomic_fanout: self.src.dims()[target] * rank as u64,
@@ -509,7 +594,8 @@ impl BlcoEngine {
         // contents are never silently dropped if a caller ever
         // reuses this path without the zero-fill above.
         let out_data = as_atomic(&mut out.data);
-        parallel_dynamic(threads, rows, 256, |_, lo, hi| {
+        let backend = ExecBackend::from_threads(threads);
+        backend.dynamic(rows, 256, |_, lo, hi| {
             let mut written = 0u64;
             for r in lo..hi {
                 for k in 0..rank {
@@ -554,6 +640,7 @@ impl BlcoEngine {
         counters: &Counters,
         log: Option<&WriteLog>,
     ) {
+        let backend = ExecBackend::from_threads(threads);
         let spec = self.src.spec();
         let wg = self.src.workgroup();
         for (bi, batch) in self.src.batches().iter().enumerate() {
@@ -561,7 +648,8 @@ impl BlcoEngine {
             let blocks: &[Arc<Block>] = &fetched;
             let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
-            parallel_dynamic(threads, wgs, 4, |t, lo, hi| {
+            let shards = ShardedCounters::new(backend.threads());
+            backend.dynamic(wgs, 4, |t, lo, hi| {
                 let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
                 let mut rows = Vec::new();
@@ -577,7 +665,7 @@ impl BlcoEngine {
                         rank,
                         dest,
                         stride,
-                        threads <= 1,
+                        backend.is_sequential(),
                         &mut scratch,
                         &mut tally,
                         log.map(|_| &mut rows),
@@ -586,14 +674,132 @@ impl BlcoEngine {
                         lg.append_tile(t as u32, bi as u32, 0, w as u32, &rows);
                     }
                 }
-                counters.add(&tally);
+                shards.shard(t).add(&tally);
             });
+            shards.merge_into(counters);
             counters.add(&Snapshot { launches: 1, ..Default::default() });
+        }
+    }
+
+    /// Execute one batch under its certified wave schedule — the
+    /// production promotion of the race checker's waved scaffold
+    /// ([`crate::analysis::racecheck::run_waved`] is now a thin wrapper
+    /// over this). Waves run in order with a barrier between them; within
+    /// a wave every work-group owns its output rows outright (the
+    /// certificate's row-overlap graph has no intra-wave edge), so
+    /// flushes are plain stores at any thread count and the
+    /// order-preserving coloring replays each row's flush sequence in
+    /// submission order: the result is bit-for-bit the sequential one.
+    /// Flush work is charged to `nosync_flushes` instead of `atomics`,
+    /// each barrier bumps `waves`, and the batch counts one launch.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_batch_certified(
+        &self,
+        batch_idx: usize,
+        bc: &BatchCert,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        dest: &[AtomicU64],
+        stride: usize,
+        backend: ExecBackend,
+        counters: &Counters,
+        log: Option<&WriteLog>,
+    ) {
+        let spec = self.src.spec();
+        let wg_size = self.src.workgroup();
+        let batch = &self.src.batches()[batch_idx];
+        let fetched = self.src.fetch_batch(batch_idx, counters);
+        let base = batch.blocks.start;
+        let shards = ShardedCounters::new(backend.threads());
+        for (wave, members) in bc.wave_members().iter().enumerate() {
+            backend.dynamic(members.len(), 1, |t, lo, hi| {
+                let mut scratch = Scratch::new(spec.order(), wg_size);
+                let mut tally = Snapshot::default();
+                let mut rows = Vec::new();
+                for k in lo..hi {
+                    let w = members[k] as usize;
+                    rows.clear();
+                    process_tile(
+                        spec,
+                        wg_size,
+                        &fetched[batch.wg_block[w] as usize - base],
+                        batch.wg_offset[w] as usize,
+                        target,
+                        factors,
+                        rank,
+                        dest,
+                        stride,
+                        true, // wave members are row-disjoint: plain stores
+                        &mut scratch,
+                        &mut tally,
+                        log.map(|_| &mut rows),
+                    );
+                    if let Some(lg) = log {
+                        lg.append_tile(
+                            t as u32,
+                            batch_idx as u32,
+                            wave as u32,
+                            w as u32,
+                            &rows,
+                        );
+                    }
+                }
+                // certified waves issue no atomics: reclassify the flush
+                // tally as synchronization-free stores
+                tally.nosync_flushes = tally.atomics;
+                tally.atomics = 0;
+                shards.shard(t).add(&tally);
+            });
+            counters.add(&Snapshot { waves: 1, ..Default::default() });
+        }
+        shards.merge_into(counters);
+        counters.add(&Snapshot { launches: 1, ..Default::default() });
+    }
+
+    /// The full certified register path: every batch through
+    /// [`run_batch_certified`](Self::run_batch_certified), batches in
+    /// order (kernel launches serialize).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_certified(
+        &self,
+        cert: &ConflictCertificate,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        dest: &[AtomicU64],
+        stride: usize,
+        backend: ExecBackend,
+        counters: &Counters,
+        log: Option<&WriteLog>,
+    ) {
+        debug_assert_eq!(cert.target, target, "certificate is for another mode");
+        for bi in 0..self.src.num_batches() {
+            self.run_batch_certified(
+                bi,
+                &cert.batches[bi],
+                target,
+                factors,
+                rank,
+                dest,
+                stride,
+                backend,
+                counters,
+                log,
+            );
         }
     }
 
     /// Hierarchical path: work-group w flushes into shadow copy (w % slices).
     /// With `log`, the shadow-copy index is the record's ordering class.
+    ///
+    /// Threading is by *copy ownership*: the worker holding copy `c`
+    /// processes the work-groups `w ≡ c (mod slices)` in ascending order
+    /// with plain stores. One writer per shadow copy means no
+    /// synchronization, and the per-(copy, row) flush order equals the
+    /// sequential sweep's — the threaded hierarchical result is
+    /// bit-for-bit the sequential one at any thread count (parallelism
+    /// is bounded by `slices`, the paper's shadow-copy count).
     #[allow(clippy::too_many_arguments)]
     fn run_hier(
         &self,
@@ -606,6 +812,7 @@ impl BlcoEngine {
         counters: &Counters,
         log: Option<&WriteLog>,
     ) {
+        let backend = ExecBackend::from_threads(threads);
         let slices = self.profile.slices.max(1);
         let spec = self.src.spec();
         let wg = self.src.workgroup();
@@ -614,14 +821,125 @@ impl BlcoEngine {
             let blocks: &[Arc<Block>] = &fetched;
             let base = batch.blocks.start;
             let wgs = batch.wg_block.len();
-            parallel_dynamic(threads, wgs, 4, |t, lo, hi| {
+            let shards = ShardedCounters::new(backend.threads());
+            backend.dynamic(slices, 1, |t, lo, hi| {
                 let mut scratch = Scratch::new(spec.order(), wg);
                 let mut tally = Snapshot::default();
                 let mut wrows = Vec::new();
-                for w in lo..hi {
-                    let copy = w % slices;
+                for copy in lo..hi {
                     let dest = &shadows[copy * rows * rank..(copy + 1) * rows * rank];
-                    wrows.clear();
+                    let mut w = copy;
+                    while w < wgs {
+                        wrows.clear();
+                        process_tile(
+                            spec,
+                            wg,
+                            &blocks[batch.wg_block[w] as usize - base],
+                            batch.wg_offset[w] as usize,
+                            target,
+                            factors,
+                            rank,
+                            dest,
+                            rank,
+                            true, // single owner per copy: plain stores
+                            &mut scratch,
+                            &mut tally,
+                            log.map(|_| &mut wrows),
+                        );
+                        if let Some(lg) = log {
+                            lg.append_tile(
+                                t as u32,
+                                bi as u32,
+                                copy as u32,
+                                w as u32,
+                                &wrows,
+                            );
+                        }
+                        w += slices;
+                    }
+                }
+                shards.shard(t).add(&tally);
+            });
+            shards.merge_into(counters);
+            counters.add(&Snapshot { launches: 1, ..Default::default() });
+        }
+    }
+
+    /// Run with one [`BatchStrategy`] forced for every batch — the
+    /// measured conflict-resolution ablation's entry point. Overwrites
+    /// `out` like [`Mttkrp::mttkrp`]. `NoSync` panics without attached
+    /// certificates (there is nothing to prove the schedule safe);
+    /// `Privatize` and `Atomic` run on any engine.
+    pub fn mttkrp_forced(
+        &self,
+        strategy: BatchStrategy,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+        threads: usize,
+        counters: &Counters,
+    ) {
+        let rank = check_shapes(self.src.dims(), target, factors, out);
+        let rows = self.src.dims()[target] as usize;
+        out.fill(0.0);
+        let backend = ExecBackend::from_threads(threads);
+        match strategy {
+            BatchStrategy::NoSync => {
+                let cert = self.certificate_for(target).unwrap_or_else(|| {
+                    panic!("BatchStrategy::NoSync requires attached certificates")
+                });
+                let out_at = as_atomic(&mut out.data);
+                self.run_certified(
+                    cert, target, factors, rank, out_at, rank, backend, counters,
+                    None,
+                );
+                counters.add(&Snapshot {
+                    atomic_fanout: (rows * rank) as u64,
+                    ..Default::default()
+                });
+            }
+            BatchStrategy::Atomic => {
+                let out_at = as_atomic(&mut out.data);
+                self.run_forced_atomic(
+                    target, factors, rank, out_at, backend, counters,
+                );
+                counters.add(&Snapshot {
+                    atomic_fanout: (rows * rank) as u64,
+                    ..Default::default()
+                });
+            }
+            BatchStrategy::Privatize => {
+                self.run_forced_privatize(
+                    target, factors, rank, out, backend, counters,
+                );
+            }
+        }
+    }
+
+    /// Forced-`Atomic` ablation leg: every flush takes the CAS loop, even
+    /// sequentially — what the register path costs with no certificate
+    /// and no luck.
+    fn run_forced_atomic(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        dest: &[AtomicU64],
+        backend: ExecBackend,
+        counters: &Counters,
+    ) {
+        let spec = self.src.spec();
+        let wg = self.src.workgroup();
+        for (bi, batch) in self.src.batches().iter().enumerate() {
+            let fetched = self.src.fetch_batch(bi, counters);
+            let blocks: &[Arc<Block>] = &fetched;
+            let base = batch.blocks.start;
+            let wgs = batch.wg_block.len();
+            let shards = ShardedCounters::new(backend.threads());
+            backend.dynamic(wgs, 4, |t, lo, hi| {
+                let mut scratch = Scratch::new(spec.order(), wg);
+                let mut tally = Snapshot::default();
+                for w in lo..hi {
                     process_tile(
                         spec,
                         wg,
@@ -632,19 +950,118 @@ impl BlcoEngine {
                         rank,
                         dest,
                         rank,
-                        threads <= 1,
+                        false, // forced: CAS on every flush
                         &mut scratch,
                         &mut tally,
-                        log.map(|_| &mut wrows),
+                        None,
                     );
-                    if let Some(lg) = log {
-                        lg.append_tile(t as u32, bi as u32, copy as u32, w as u32, &wrows);
-                    }
                 }
-                counters.add(&tally);
+                shards.shard(t).add(&tally);
             });
+            shards.merge_into(counters);
             counters.add(&Snapshot { launches: 1, ..Default::default() });
         }
+    }
+
+    /// Forced-`Privatize` ablation leg: one private output copy per
+    /// worker thread (plain stores, no contention), then a pairwise tree
+    /// reduction merges the copies and accumulates into `out`. Pays
+    /// `threads × rows × rank` of buffer traffic whether or not the
+    /// batches conflicted — the cost the certificate lets NoSync batches
+    /// skip.
+    fn run_forced_privatize(
+        &self,
+        target: usize,
+        factors: &[Matrix],
+        rank: usize,
+        out: &mut Matrix,
+        backend: ExecBackend,
+        counters: &Counters,
+    ) {
+        let rows = self.src.dims()[target] as usize;
+        let nt = backend.threads();
+        let copy_len = rows * rank;
+        let mut partials = vec![0.0f64; nt * copy_len];
+        let spec = self.src.spec();
+        let wg = self.src.workgroup();
+        let at = as_atomic(&mut partials);
+        for (bi, batch) in self.src.batches().iter().enumerate() {
+            let fetched = self.src.fetch_batch(bi, counters);
+            let blocks: &[Arc<Block>] = &fetched;
+            let base = batch.blocks.start;
+            let wgs = batch.wg_block.len();
+            let shards = ShardedCounters::new(nt);
+            backend.dynamic(wgs, 4, |t, lo, hi| {
+                // worker t owns private copy t: plain stores
+                let dest = &at[(t % nt) * copy_len..(t % nt + 1) * copy_len];
+                let mut scratch = Scratch::new(spec.order(), wg);
+                let mut tally = Snapshot::default();
+                for w in lo..hi {
+                    process_tile(
+                        spec,
+                        wg,
+                        &blocks[batch.wg_block[w] as usize - base],
+                        batch.wg_offset[w] as usize,
+                        target,
+                        factors,
+                        rank,
+                        dest,
+                        rank,
+                        true,
+                        &mut scratch,
+                        &mut tally,
+                        None,
+                    );
+                }
+                shards.shard(t).add(&tally);
+            });
+            shards.merge_into(counters);
+            counters.add(&Snapshot { launches: 1, ..Default::default() });
+        }
+        // pairwise tree reduction: copy (b + stride) folds into copy b,
+        // stride doubling. Element destinations are owned by exactly one
+        // chunk, so plain loads/stores through the atomic view are sound.
+        let mut pairs = 0u64;
+        let mut stride = 1usize;
+        while stride < nt {
+            for b0 in (0..nt).step_by(2 * stride) {
+                let peer = b0 + stride;
+                if peer >= nt {
+                    continue;
+                }
+                pairs += 1;
+                backend.dynamic(copy_len, 1024, |_, lo, hi| {
+                    for i in lo..hi {
+                        let src = f64::from_bits(
+                            at[peer * copy_len + i].load(Ordering::Relaxed),
+                        );
+                        let d = &at[b0 * copy_len + i];
+                        let cur = f64::from_bits(d.load(Ordering::Relaxed));
+                        d.store((cur + src).to_bits(), Ordering::Relaxed);
+                    }
+                });
+            }
+            stride *= 2;
+        }
+        // accumulate the reduced copy into the (zero-filled) output
+        let out_at = as_atomic(&mut out.data);
+        backend.dynamic(copy_len, 1024, |_, lo, hi| {
+            for i in lo..hi {
+                let src = f64::from_bits(at[i].load(Ordering::Relaxed));
+                let d = &out_at[i];
+                let cur = f64::from_bits(d.load(Ordering::Relaxed));
+                d.store((cur + src).to_bits(), Ordering::Relaxed);
+            }
+        });
+        counters.add(&Snapshot {
+            // tree rounds read two copies and write one, the final
+            // accumulate reads copy 0 + the prior output and writes out
+            bytes_streamed: (pairs * 2 + 2) * copy_len as u64 * 8,
+            bytes_written: (pairs + 1) * copy_len as u64 * 8,
+            launches: pairs + 1,
+            atomic_fanout: (nt * copy_len) as u64,
+            ..Default::default()
+        });
     }
 }
 
@@ -856,6 +1273,127 @@ mod tests {
         let e1 = engine(&t1, Resolution::Auto);
         let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&e1.src));
         let _ = engine(&t2, Resolution::Auto).with_certificates(set);
+    }
+
+    fn bitwise_eq(a: &Matrix, b: &Matrix) -> bool {
+        a.data.len() == b.data.len()
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn certified_register_is_bitwise_across_thread_counts() {
+        // the tentpole invariant: with certificates attached, the waved
+        // register path produces bit-identical output at every thread
+        // count — the order-preserving coloring replays each row's flush
+        // sequence in submission order no matter how waves are split
+        let dims = [150u64, 130, 170];
+        let t = synth::uniform(&dims, 10_000, 51);
+        let factors = random_factors(&dims, 8, 53);
+        let plain = engine(&t, Resolution::Register);
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&plain.src));
+        let eng = engine(&t, Resolution::Register).with_certificates(set);
+        for m in 0..3 {
+            let rows = dims[m] as usize;
+            let mut reference = Matrix::zeros(rows, 8);
+            eng.mttkrp(m, &factors, &mut reference, 1, &Counters::new());
+            // the certified 1-thread run is bitwise the uncertified
+            // sequential register path (same per-row flush order)
+            let mut seq = Matrix::zeros(rows, 8);
+            plain.mttkrp(m, &factors, &mut seq, 1, &Counters::new());
+            assert!(bitwise_eq(&reference, &seq), "mode {m}: waved@1 != sequential");
+            for threads in [2usize, 4, 8] {
+                let mut out = Matrix::zeros(rows, 8);
+                eng.mttkrp(m, &factors, &mut out, threads, &Counters::new());
+                assert!(
+                    bitwise_eq(&reference, &out),
+                    "mode {m}: certified run diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_is_bitwise_across_thread_counts() {
+        // copy ownership: one writer per shadow copy, fixed per-copy
+        // sweep order, fixed merge order → deterministic at any thread
+        // count, certificates or not
+        let dims = [16u64, 200, 150];
+        let t = synth::uniform(&dims, 8_000, 55);
+        let factors = random_factors(&dims, 8, 57);
+        let eng = engine(&t, Resolution::Hierarchical);
+        for m in 0..3 {
+            let rows = dims[m] as usize;
+            let mut reference = Matrix::zeros(rows, 8);
+            eng.mttkrp(m, &factors, &mut reference, 1, &Counters::new());
+            for threads in [2usize, 4, 8] {
+                let mut out = Matrix::zeros(rows, 8);
+                eng.mttkrp(m, &factors, &mut out, threads, &Counters::new());
+                assert!(
+                    bitwise_eq(&reference, &out),
+                    "mode {m}: hierarchical diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn certified_threaded_counts_waves_not_atomics() {
+        let dims = [150u64, 130, 170];
+        let t = synth::uniform(&dims, 8_000, 59);
+        let factors = random_factors(&dims, 8, 61);
+        let eng = engine(&t, Resolution::Register);
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&eng.src));
+        let eng = eng.with_certificates(set);
+        let c = Counters::new();
+        let mut out = Matrix::zeros(150, 8);
+        eng.mttkrp(0, &factors, &mut out, 4, &c);
+        let s = c.snapshot();
+        assert_eq!(s.atomics, 0, "certified flushes are plain stores");
+        assert!(s.nosync_flushes > 0);
+        assert!(s.waves as usize >= eng.src.num_batches());
+        assert_eq!(s.launches as usize, eng.src.num_batches());
+    }
+
+    #[test]
+    fn forced_strategies_match_oracle() {
+        let dims = [64u64, 90, 110];
+        let t = synth::uniform(&dims, 6_000, 63);
+        let factors = random_factors(&dims, 8, 65);
+        let eng = engine(&t, Resolution::Register);
+        let set = Arc::new(crate::analysis::conflict::CertificateSet::analyze(&eng.src));
+        let eng = eng.with_certificates(set);
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        for strategy in
+            [BatchStrategy::NoSync, BatchStrategy::Privatize, BatchStrategy::Atomic]
+        {
+            for threads in [1usize, 4] {
+                let mut out = Matrix::zeros(64, 8);
+                out.fill(1e30); // forced paths must overwrite too
+                eng.mttkrp_forced(strategy, 0, &factors, &mut out, threads, &Counters::new());
+                assert!(
+                    out.max_abs_diff(&expect) < 1e-9,
+                    "{strategy:?} at {threads} threads"
+                );
+            }
+        }
+        // the forced NoSync leg is the certified production path itself
+        let (mut a, mut b) = (Matrix::zeros(64, 8), Matrix::zeros(64, 8));
+        eng.mttkrp_forced(BatchStrategy::NoSync, 0, &factors, &mut a, 4, &Counters::new());
+        eng.mttkrp(0, &factors, &mut b, 4, &Counters::new());
+        assert!(bitwise_eq(&a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "requires attached certificates")]
+    fn forced_nosync_requires_certificates() {
+        let dims = [30u64, 30, 30];
+        let t = synth::uniform(&dims, 1_000, 67);
+        let eng = engine(&t, Resolution::Register);
+        let factors = random_factors(&dims, 4, 69);
+        let mut out = Matrix::zeros(30, 4);
+        eng.mttkrp_forced(
+            BatchStrategy::NoSync, 0, &factors, &mut out, 2, &Counters::new(),
+        );
     }
 
     #[test]

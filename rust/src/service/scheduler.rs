@@ -26,7 +26,7 @@ use crate::device::model::device_time;
 use crate::mttkrp::dense::Matrix;
 use crate::mttkrp::oracle::random_factors;
 use crate::mttkrp::Mttkrp;
-use crate::util::pool::default_threads;
+use crate::util::pool::{default_threads, ExecBackend};
 
 use super::admission::{admit_job, AdmissionError, Route};
 use super::registry::TensorRegistry;
@@ -44,7 +44,8 @@ pub struct ServeOptions {
     pub max_batch: usize,
     /// weighted round-robin across tenants; `false` = global FIFO
     pub fair: bool,
-    /// CPU threads for the real kernels
+    /// worker count of the [`ExecBackend`] every real kernel in the run
+    /// uses (certified paths stay bit-for-bit across any value)
     pub threads: usize,
 }
 
@@ -69,6 +70,12 @@ impl ServeOptions {
     /// The one-job-at-a-time ablation baseline: no fusion, global FIFO.
     pub fn naive(devices: usize, threads: usize) -> Self {
         ServeOptions { devices, threads, batching: false, fair: false, ..Default::default() }
+    }
+
+    /// The execution backend this policy runs kernels with — one
+    /// sequential/threaded decision for the whole serving run.
+    pub fn backend(&self) -> ExecBackend {
+        ExecBackend::from_threads(self.threads)
     }
 }
 
@@ -248,7 +255,7 @@ pub fn serve(
 ) -> ServiceReport {
     let wall0 = std::time::Instant::now();
     let devices = opts.devices.max(1);
-    let threads = opts.threads.max(1);
+    let threads = opts.backend().threads();
     let sched_before = reg.schedule_stats();
     let counters = Counters::new();
 

@@ -5,16 +5,114 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use: `BLCO_THREADS` env or available
-/// parallelism (min 1).
+/// parallelism (min 1). Malformed values (`0`, `abc`, negative) are
+/// rejected with a stderr warning instead of being silently ignored.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("BLCO_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
+    match std::env::var("BLCO_THREADS") {
+        Ok(v) => match parse_thread_count(&v) {
+            Ok(n) => n,
+            Err(reason) => {
+                eprintln!(
+                    "warning: ignoring BLCO_THREADS={v:?} ({reason}); \
+                     falling back to available parallelism"
+                );
+                hardware_threads()
             }
+        },
+        Err(_) => hardware_threads(),
+    }
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Validate a thread-count string: a positive integer, nothing else.
+/// Returns a human-readable rejection reason on failure.
+pub fn parse_thread_count(v: &str) -> Result<usize, &'static str> {
+    match v.trim().parse::<usize>() {
+        Ok(0) => Err("thread count must be >= 1"),
+        Ok(n) => Ok(n),
+        Err(_) => Err("not a positive integer"),
+    }
+}
+
+/// How an execution path runs its data-parallel loops. Every kernel and
+/// executor consumes one of these instead of a bare thread count, so the
+/// sequential/threaded decision is made once (CLI `--threads`, the
+/// `BLCO_THREADS` env, or a caller's explicit choice) and flows through
+/// the whole stack unchanged.
+///
+/// The invariant the backend preserves: for any `ExecBackend`, certified
+/// kernel paths produce **bit-for-bit** the sequential result — waved
+/// schedules replay each row's flushes in submission order (see
+/// [`crate::analysis::conflict`]), and the hierarchical merge walks its
+/// shadow copies in a fixed order per row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// one thread, plain loops — the reference semantics
+    Sequential,
+    /// `nthreads` workers over [`parallel_chunks`]/[`parallel_dynamic`]
+    Threaded {
+        /// worker count (>= 2; 0/1 normalize to `Sequential`)
+        nthreads: usize,
+    },
+}
+
+impl ExecBackend {
+    /// Normalize a bare thread count: `0` and `1` mean [`Sequential`],
+    /// anything larger is [`Threaded`].
+    ///
+    /// [`Sequential`]: ExecBackend::Sequential
+    /// [`Threaded`]: ExecBackend::Threaded
+    pub fn from_threads(threads: usize) -> Self {
+        if threads <= 1 {
+            ExecBackend::Sequential
+        } else {
+            ExecBackend::Threaded { nthreads: threads }
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+
+    /// The backend picked by the environment ([`default_threads`]).
+    pub fn from_env() -> Self {
+        Self::from_threads(default_threads())
+    }
+
+    /// The worker count this backend runs with (always >= 1).
+    pub fn threads(&self) -> usize {
+        match self {
+            ExecBackend::Sequential => 1,
+            ExecBackend::Threaded { nthreads } => (*nthreads).max(1),
+        }
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.threads() == 1
+    }
+
+    /// Run `f(thread_id, lo, hi)` over contiguous slices of `0..len`
+    /// (static partition, see [`parallel_chunks`]).
+    pub fn chunks<F>(&self, len: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        parallel_chunks(self.threads(), len, f);
+    }
+
+    /// Run `f(thread_id, lo, hi)` with dynamic chunk grabbing (see
+    /// [`parallel_dynamic`]).
+    pub fn dynamic<F>(&self, len: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        parallel_dynamic(self.threads(), len, chunk, f);
+    }
+}
+
+impl Default for ExecBackend {
+    fn default() -> Self {
+        Self::from_env()
+    }
 }
 
 /// Run `f(thread_id, lo, hi)` over `nthreads` contiguous slices of `0..len`.
@@ -112,5 +210,52 @@ mod tests {
     #[test]
     fn default_threads_at_least_one() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_count_parsing_rejects_malformed_values() {
+        // the validator default_threads() uses for BLCO_THREADS: malformed
+        // values are rejected (warn + fall back), never silently ignored
+        assert_eq!(parse_thread_count("1"), Ok(1));
+        assert_eq!(parse_thread_count("8"), Ok(8));
+        assert_eq!(parse_thread_count(" 4 "), Ok(4));
+        assert!(parse_thread_count("0").is_err(), "zero threads is invalid");
+        assert!(parse_thread_count("abc").is_err());
+        assert!(parse_thread_count("-2").is_err());
+        assert!(parse_thread_count("").is_err());
+        assert!(parse_thread_count("4.5").is_err());
+    }
+
+    #[test]
+    fn backend_normalizes_thread_counts() {
+        assert_eq!(ExecBackend::from_threads(0), ExecBackend::Sequential);
+        assert_eq!(ExecBackend::from_threads(1), ExecBackend::Sequential);
+        assert_eq!(
+            ExecBackend::from_threads(4),
+            ExecBackend::Threaded { nthreads: 4 }
+        );
+        assert_eq!(ExecBackend::Sequential.threads(), 1);
+        assert_eq!(ExecBackend::Threaded { nthreads: 6 }.threads(), 6);
+        assert!(ExecBackend::Sequential.is_sequential());
+        assert!(!ExecBackend::from_threads(2).is_sequential());
+        assert!(ExecBackend::from_env().threads() >= 1);
+    }
+
+    #[test]
+    fn backend_loops_cover_exactly() {
+        for be in [ExecBackend::Sequential, ExecBackend::from_threads(4)] {
+            let sum = AtomicU64::new(0);
+            be.chunks(100, |_, lo, hi| {
+                for i in lo..hi {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), (0..100u64).sum());
+            let hits = AtomicU64::new(0);
+            be.dynamic(1000, 16, |_, lo, hi| {
+                hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        }
     }
 }

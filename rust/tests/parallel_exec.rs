@@ -1,0 +1,125 @@
+//! The parallel-execution invariant: a certified engine produces the
+//! SAME BITS at every thread count — resident or disk-backed, for every
+//! mode and every conflict resolution. The certificate's wave schedule
+//! replays each row's flushes in submission order and the hierarchical
+//! path assigns each shadow copy to exactly one worker, so threading
+//! never reassociates a float add. CP-ALS inherits the invariant
+//! end-to-end: whole fit trajectories are bit-identical across thread
+//! counts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use blco::coordinator::engine::MttkrpEngine;
+use blco::cpals::CpAlsOptions;
+use blco::device::Profile;
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::format::store::BlcoStore;
+use blco::mttkrp::blco::Resolution;
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::random_factors;
+use blco::tensor::synth;
+
+const RANK: usize = 8;
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn tmpfile(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("blco_pexec_{}_{}", std::process::id(), name));
+    p
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// A tensor whose BLCO form has a real multi-batch, multi-group schedule
+/// (small blocks, small work-groups), persisted so the disk axis streams
+/// through the block cache.
+fn build(name: &str) -> (Arc<BlcoTensor>, PathBuf) {
+    let t = synth::fiber_clustered(&[60, 50, 40], 8_000, 2, 0.8, 3);
+    let cfg = BlcoConfig {
+        max_block_nnz: 512,
+        workgroup: 64,
+        threads: 2,
+        ..Default::default()
+    };
+    let b = BlcoTensor::from_coo_with(&t, cfg);
+    assert!(b.batches.len() > 4, "need a real batch pipeline");
+    let path = tmpfile(&format!("{name}.blco"));
+    BlcoStore::write(&b, &path).unwrap();
+    (Arc::new(b), path)
+}
+
+#[test]
+fn certified_kernels_are_bitwise_across_thread_counts_resident_and_store() {
+    let (b, path) = build("matrix");
+    let dims = b.dims().to_vec();
+    let factors = random_factors(&dims, RANK, 5);
+    let profile = Profile::a100();
+
+    for res in [Resolution::Register, Resolution::Hierarchical, Resolution::Auto]
+    {
+        // the sequential certified run is the reference everyone must hit
+        let seq = MttkrpEngine::from_blco(Arc::clone(&b), profile.clone())
+            .with_resolution(res)
+            .with_conflict_analysis()
+            .with_threads(1);
+        for target in 0..dims.len() {
+            let (want, _) = seq.mttkrp(target, &factors);
+            let want = bits(&want);
+            for nt in THREADS {
+                let resident =
+                    MttkrpEngine::from_blco(Arc::clone(&b), profile.clone())
+                        .with_resolution(res)
+                        .with_conflict_analysis()
+                        .with_threads(nt);
+                let (got, _) = resident.mttkrp(target, &factors);
+                assert_eq!(
+                    bits(&got),
+                    want,
+                    "resident {res:?} mode {target} at {nt} threads"
+                );
+
+                let disk = MttkrpEngine::from_store(&path, profile.clone())
+                    .unwrap()
+                    .with_resolution(res)
+                    .with_conflict_analysis()
+                    .with_threads(nt);
+                let (got, _) = disk.mttkrp(target, &factors);
+                assert_eq!(
+                    bits(&got),
+                    want,
+                    "from-store {res:?} mode {target} at {nt} threads"
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cpals_fit_trajectory_is_bitwise_across_thread_counts() {
+    let (b, path) = build("cpals");
+    let profile = Profile::a100();
+    let run = |nt: usize| {
+        let engine = MttkrpEngine::from_blco(Arc::clone(&b), profile.clone())
+            .with_conflict_analysis()
+            .with_threads(nt);
+        let opts =
+            CpAlsOptions { rank: 6, max_iters: 4, tol: 0.0, threads: nt, seed: 7 };
+        engine.cp_als(opts)
+    };
+    let want = run(1);
+    let want_fits: Vec<u64> = want.fits.iter().map(|f| f.to_bits()).collect();
+    assert!(!want_fits.is_empty(), "tol = 0 must run every iteration");
+    for nt in [2usize, 4, 8] {
+        let got = run(nt);
+        let got_fits: Vec<u64> = got.fits.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(
+            got_fits, want_fits,
+            "CP-ALS fit trajectory diverged at {nt} threads"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}

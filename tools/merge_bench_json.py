@@ -75,8 +75,16 @@ def main() -> None:
                 )
             if not math.isfinite(value):
                 fail(f"{args.records}:{lineno}: {figure}: metric {name!r} = {value}")
+        threads = rec.get("threads", 1)
+        if isinstance(threads, bool) or not isinstance(threads, int) or threads < 1:
+            fail(f"{args.records}:{lineno}: {figure}: bad 'threads' {threads!r}")
         records.append(
-            {"figure": figure, "smoke": bool(rec.get("smoke", False)), "metrics": metrics}
+            {
+                "figure": figure,
+                "smoke": bool(rec.get("smoke", False)),
+                "threads": threads,
+                "metrics": metrics,
+            }
         )
 
     if not records:
