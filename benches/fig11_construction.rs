@@ -13,8 +13,10 @@ use blco::format::mmcsf::MmCsf;
 use blco::linear::alto::Encoding;
 use blco::mttkrp::blco::BlcoEngine;
 use blco::mttkrp::oracle::random_factors;
-use blco::tensor::datasets;
-use blco::util::pool::default_threads;
+use blco::tensor::coo::CooTensor;
+use blco::tensor::ooc::{build_uniform, BuildOptions};
+use blco::tensor::{datasets, io, synth};
+use blco::util::pool::{default_threads, ExecBackend};
 use std::time::Instant;
 
 /// ALTO construction = linearize + sort (no re-encode/block/batch).
@@ -101,5 +103,98 @@ fn main() {
         "\n(paper: BLCO up to 13.6x cheaper to build than MM-CSF; ~12 \
          all-mode iterations to amortize on the A100)"
     );
+
+    ooc_leg(&mut json);
     json.flush();
+}
+
+/// The pre-PR8 `.tns` parser, kept verbatim as a throughput baseline: one
+/// heap `String` per line plus a `Vec<&str>` token collect per line — the
+/// allocation pattern the reusable-buffer parser replaces.
+fn parse_tns_lines_baseline(path: &std::path::Path) -> CooTensor {
+    use std::io::BufRead;
+    let r = std::io::BufReader::new(std::fs::File::open(path).unwrap());
+    let mut coords: Vec<Vec<u32>> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    let mut maxima: Vec<u64> = Vec::new();
+    for line in r.lines() {
+        let line = line.unwrap();
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') || s.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = s.split_whitespace().collect();
+        let order = toks.len() - 1;
+        if coords.is_empty() {
+            coords = vec![Vec::new(); order];
+            maxima = vec![0u64; order];
+        }
+        for (n, tok) in toks[..order].iter().enumerate() {
+            let idx: u64 = tok.parse().unwrap();
+            maxima[n] = maxima[n].max(idx);
+            coords[n].push((idx - 1) as u32);
+        }
+        vals.push(toks[order].parse().unwrap());
+    }
+    CooTensor { dims: maxima, coords, vals }
+}
+
+/// PR8 leg: `.tns` parse throughput (per-line-alloc baseline vs the
+/// reusable-buffer chunked parser) and the external-memory build under a
+/// tight budget.
+fn ooc_leg(json: &mut BenchJson) {
+    let dims = [4000u64, 3000, 2000]; // sparse: generator dedup stays off
+    let nnz = if smoke() { 60_000 } else { 1_000_000 };
+    let seed = 11;
+    let t = synth::uniform(&dims, nnz, seed);
+    let mut tns = std::env::temp_dir();
+    tns.push(format!("blco_fig11_{}.tns", std::process::id()));
+    io::write_tns(&tns, &t).unwrap();
+
+    let w = Instant::now();
+    let legacy = parse_tns_lines_baseline(&tns);
+    let lines_s = w.elapsed().as_secs_f64();
+    let w = Instant::now();
+    let fresh = io::read_tns(&tns, None).unwrap();
+    let chunked_s = w.elapsed().as_secs_f64();
+    assert_eq!(legacy.vals, fresh.vals, "parser baseline disagrees");
+    let lines_tput = nnz as f64 / lines_s.max(1e-9) / 1e6;
+    let chunked_tput = nnz as f64 / chunked_s.max(1e-9) / 1e6;
+
+    let budget = 4usize << 20;
+    let mut out = std::env::temp_dir();
+    out.push(format!("blco_fig11_{}.blco", std::process::id()));
+    let opts = BuildOptions {
+        // the default 2^19-nnz open block alone would outgrow the 4 MiB
+        // budget; cap it so the budget governs the whole pipeline
+        config: blco::format::blco::BlcoConfig {
+            max_block_nnz: 1 << 15,
+            ..Default::default()
+        },
+        backend: ExecBackend::from_threads(default_threads()),
+        mem_budget_bytes: Some(budget),
+        ..Default::default()
+    };
+    let (_, stats) = build_uniform(&dims, nnz, seed, &out, &opts).unwrap();
+    assert!(stats.peak_bytes <= budget, "bench build blew its budget");
+
+    println!("\nout-of-core construction ({nnz} nnz, {budget} B budget):");
+    println!(
+        "  .tns parse   {lines_tput:.2} -> {chunked_tput:.2} Mnnz/s \
+         ({:+.0}% vs per-line allocs)",
+        (chunked_tput / lines_tput.max(1e-9) - 1.0) * 100.0
+    );
+    println!(
+        "  streamed     {:.2} Mnnz/s, peak {:.1} KiB, {} runs x {} nnz",
+        stats.mnnz_per_s(),
+        stats.peak_bytes as f64 / 1024.0,
+        stats.runs,
+        stats.chunk_nnz
+    );
+    json.metric("tns_parse_lines_mnnz_per_s", lines_tput);
+    json.metric("tns_parse_chunked_mnnz_per_s", chunked_tput);
+    json.metric("ooc_build_mnnz_per_s", stats.mnnz_per_s());
+    json.metric("ooc_build_peak_bytes", stats.peak_bytes as f64);
+    std::fs::remove_file(&tns).ok();
+    std::fs::remove_file(&out).ok();
 }

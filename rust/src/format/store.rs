@@ -221,6 +221,55 @@ pub struct StoreSummary {
     pub nnz: usize,
 }
 
+/// Per-block header-index entry: `(key, nnz, payload crc32)`. The single
+/// currency both writers ([`BlcoStore::write`] and [`BlcoStoreWriter`])
+/// serialize the block index from, so their headers are byte-identical by
+/// construction.
+pub type BlockMeta = (u64, u64, u32);
+
+/// Serialize one block's payload — `nnz × u64` in-block indices then
+/// `nnz × u64` value bits, all little-endian — into the reusable `buf`.
+fn serialize_block_payload(buf: &mut Vec<u8>, lidx: &[u64], vals: &[f64]) {
+    debug_assert_eq!(lidx.len(), vals.len());
+    buf.clear();
+    buf.reserve(lidx.len() * 16);
+    for &l in lidx {
+        buf.extend_from_slice(&l.to_le_bytes());
+    }
+    for &v in vals {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Build the version-1 header blob from streamed metadata alone. Both
+/// writers call this, which is what guarantees the out-of-core path's
+/// container is bit-for-bit the in-memory one (given equal blocks).
+fn build_header_blob(
+    dims: &[u64],
+    nnz: u64,
+    norm: f64,
+    config: &BlcoConfig,
+    metas: &[BlockMeta],
+) -> Vec<u8> {
+    let mut header = Vec::with_capacity(64 + metas.len() * 20);
+    put_u32(&mut header, dims.len() as u32);
+    for &d in dims {
+        put_u64(&mut header, d);
+    }
+    put_u64(&mut header, nnz);
+    put_f64(&mut header, norm);
+    put_u64(&mut header, config.max_block_nnz as u64);
+    put_u32(&mut header, config.workgroup as u32);
+    put_u32(&mut header, config.inblock_budget);
+    put_u64(&mut header, metas.len() as u64);
+    for &(key, bnnz, crc) in metas {
+        put_u64(&mut header, key);
+        put_u64(&mut header, bnnz);
+        put_u32(&mut header, crc);
+    }
+    header
+}
+
 /// Writer namespace for the `.blco` container.
 pub struct BlcoStore;
 
@@ -235,35 +284,18 @@ impl BlcoStore {
         // payload region out), so peak extra memory is O(one block), not
         // O(tensor) — writing must not halve the size `convert` handles
         let mut buf: Vec<u8> = Vec::new();
-        let fill = |buf: &mut Vec<u8>, blk: &Block| {
-            buf.clear();
-            buf.reserve(blk.nnz() * 16);
-            for &l in &blk.lidx {
-                buf.extend_from_slice(&l.to_le_bytes());
-            }
-            for &v in &blk.vals {
-                buf.extend_from_slice(&v.to_bits().to_le_bytes());
-            }
-        };
 
         // ---- header blob (pass 1 over the blocks)
-        let mut header = Vec::with_capacity(64 + t.blocks.len() * 20);
-        put_u32(&mut header, t.order() as u32);
-        for &d in t.dims() {
-            put_u64(&mut header, d);
-        }
-        put_u64(&mut header, t.nnz as u64);
-        put_f64(&mut header, t.norm());
-        put_u64(&mut header, t.config.max_block_nnz as u64);
-        put_u32(&mut header, t.config.workgroup as u32);
-        put_u32(&mut header, t.config.inblock_budget);
-        put_u64(&mut header, t.blocks.len() as u64);
-        for blk in &t.blocks {
-            fill(&mut buf, blk);
-            put_u64(&mut header, blk.key);
-            put_u64(&mut header, blk.nnz() as u64);
-            put_u32(&mut header, crc32(&buf));
-        }
+        let metas: Vec<BlockMeta> = t
+            .blocks
+            .iter()
+            .map(|blk| {
+                serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
+                (blk.key, blk.nnz() as u64, crc32(&buf))
+            })
+            .collect();
+        let header =
+            build_header_blob(t.dims(), t.nnz as u64, t.norm(), &t.config, &metas);
 
         // ---- file (pass 2 streams the payloads)
         let file = File::create(path)
@@ -277,7 +309,7 @@ impl BlcoStore {
         w.write_all(&crc32(&header).to_le_bytes()).map_err(io_err(ctx()))?;
         let mut payload_bytes = 0usize;
         for blk in &t.blocks {
-            fill(&mut buf, blk);
+            serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
             w.write_all(&buf).map_err(io_err(ctx()))?;
             payload_bytes += buf.len();
         }
@@ -292,6 +324,175 @@ impl BlcoStore {
             batches: t.batches.len(),
             nnz: t.nnz,
         })
+    }
+}
+
+// -------------------------------------------------- the incremental writer
+
+/// Incremental `.blco` writer for block streams whose header (nnz, norm,
+/// block index) is unknown until the last block: the out-of-core builder
+/// ([`crate::tensor::ooc`]) emits merged blocks one at a time and never
+/// holds the tensor.
+///
+/// The container's header *precedes* the payload region, so payloads are
+/// staged in a sibling temp file (`<path>.payload.tmp`, same directory ⇒
+/// same filesystem) and copied behind the finished header at
+/// [`finish`](Self::finish). Peak memory is one serialized block; the
+/// transient disk cost is one extra copy of the payload region. Dropping
+/// the writer without `finish` removes the temp file and never touches
+/// `path`.
+///
+/// Norm accounting mirrors [`BlcoTensor::norm`] bit for bit: values are
+/// squared and summed in block-emission order, then rooted once at
+/// finish, so a streamed build writes the exact header bytes the
+/// in-memory `from_coo` → [`BlcoStore::write`] path would.
+pub struct BlcoStoreWriter {
+    path: PathBuf,
+    tmp_path: PathBuf,
+    payload: Option<std::io::BufWriter<File>>,
+    dims: Vec<u64>,
+    config: BlcoConfig,
+    metas: Vec<BlockMeta>,
+    nnz: u64,
+    sumsq: f64,
+    buf: Vec<u8>,
+    payload_bytes: usize,
+}
+
+impl BlcoStoreWriter {
+    /// Start a container at `path` for a tensor over `dims`. Asserts the
+    /// same config invariants as `BlcoTensor::from_coo_with`.
+    pub fn create(
+        path: &Path,
+        dims: &[u64],
+        config: BlcoConfig,
+    ) -> Result<Self, StoreError> {
+        assert!(config.workgroup > 0, "BlcoConfig.workgroup must be > 0");
+        assert!(config.max_block_nnz > 0, "BlcoConfig.max_block_nnz must be > 0");
+        assert!(!dims.is_empty() && dims.iter().all(|&d| d > 0), "bad dims");
+        let tmp_path = PathBuf::from(format!("{}.payload.tmp", path.display()));
+        let file = File::create(&tmp_path)
+            .map_err(io_err(format!("create {}", tmp_path.display())))?;
+        Ok(BlcoStoreWriter {
+            path: path.to_path_buf(),
+            tmp_path,
+            payload: Some(std::io::BufWriter::new(file)),
+            dims: dims.to_vec(),
+            config,
+            metas: Vec::new(),
+            nnz: 0,
+            sumsq: 0.0,
+            buf: Vec::new(),
+            payload_bytes: 0,
+        })
+    }
+
+    /// Append one finished block (non-empty, `≤ max_block_nnz`, keys
+    /// non-decreasing across calls — the merge emits them in ALTO order).
+    pub fn add_block(
+        &mut self,
+        key: u64,
+        lidx: &[u64],
+        vals: &[f64],
+    ) -> Result<(), StoreError> {
+        assert_eq!(lidx.len(), vals.len(), "ragged block");
+        assert!(!vals.is_empty(), "empty block");
+        assert!(vals.len() <= self.config.max_block_nnz, "block over budget");
+        serialize_block_payload(&mut self.buf, lidx, vals);
+        self.metas.push((key, vals.len() as u64, crc32(&self.buf)));
+        self.nnz += vals.len() as u64;
+        for &v in vals {
+            self.sumsq += v * v;
+        }
+        self.payload_bytes += self.buf.len();
+        let w = self.payload.as_mut().expect("writer already finished");
+        w.write_all(&self.buf)
+            .map_err(io_err(format!("write {}", self.tmp_path.display())))
+    }
+
+    /// Blocks written so far.
+    pub fn blocks(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Bytes of writer-held state (block index + serialization buffer) —
+    /// feeds the out-of-core builder's peak-memory accounting.
+    pub fn held_bytes(&self) -> usize {
+        self.metas.capacity() * std::mem::size_of::<BlockMeta>()
+            + self.buf.capacity()
+    }
+
+    /// Write the header in front of the staged payloads and produce the
+    /// final container. Consumes the writer; the temp file is removed.
+    pub fn finish(mut self) -> Result<StoreSummary, StoreError> {
+        // flush + close the payload stage before reading it back
+        let mut w = self.payload.take().expect("writer already finished");
+        w.flush()
+            .map_err(io_err(format!("flush {}", self.tmp_path.display())))?;
+        drop(w);
+
+        let norm = self.sumsq.sqrt();
+        let header = build_header_blob(
+            &self.dims,
+            self.nnz,
+            norm,
+            &self.config,
+            &self.metas,
+        );
+        let batches = build_batches_from_nnz(
+            &self.metas.iter().map(|&(_, n, _)| n as usize).collect::<Vec<_>>(),
+            &self.config,
+        );
+
+        let file = File::create(&self.path)
+            .map_err(io_err(format!("create {}", self.path.display())))?;
+        let mut out = std::io::BufWriter::new(file);
+        let ctx = || format!("write {}", self.path.display());
+        out.write_all(&STORE_MAGIC).map_err(io_err(ctx()))?;
+        out.write_all(&STORE_VERSION.to_le_bytes()).map_err(io_err(ctx()))?;
+        out.write_all(&(header.len() as u64).to_le_bytes())
+            .map_err(io_err(ctx()))?;
+        out.write_all(&header).map_err(io_err(ctx()))?;
+        out.write_all(&crc32(&header).to_le_bytes()).map_err(io_err(ctx()))?;
+        let mut stage = File::open(&self.tmp_path)
+            .map_err(io_err(format!("open {}", self.tmp_path.display())))?;
+        let copied = std::io::copy(&mut stage, &mut out).map_err(io_err(
+            format!(
+                "copy {} -> {}",
+                self.tmp_path.display(),
+                self.path.display()
+            ),
+        ))?;
+        if copied != self.payload_bytes as u64 {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "payload stage holds {copied} bytes, wrote {}",
+                    self.payload_bytes
+                ),
+            });
+        }
+        out.flush().map_err(io_err(ctx()))?;
+        drop(stage);
+
+        Ok(StoreSummary {
+            path: self.path.clone(),
+            file_bytes: (24 + header.len() + self.payload_bytes) as u64,
+            header_bytes: header.len(),
+            payload_bytes: self.payload_bytes,
+            blocks: self.metas.len(),
+            batches: batches.len(),
+            nnz: self.nnz as usize,
+        })
+        // Drop::drop removes the temp file
+    }
+}
+
+impl Drop for BlcoStoreWriter {
+    fn drop(&mut self) {
+        // close the stage handle first (no-op if finish already took it),
+        // then clean up; an aborted build must not leak temp payloads
+        self.payload.take();
+        std::fs::remove_file(&self.tmp_path).ok();
     }
 }
 
@@ -1180,6 +1381,49 @@ mod tests {
             ..Default::default()
         };
         BlcoTensor::from_coo_with(&t, cfg)
+    }
+
+    #[test]
+    fn incremental_writer_matches_batch_writer_bitwise() {
+        // feeding the in-memory tensor's blocks through BlcoStoreWriter
+        // must produce the exact file BlcoStore::write does — the shared
+        // header/payload serializers are what the out-of-core build's
+        // bit-parity guarantee stands on
+        let b = sample_tensor();
+        let p1 = tmpfile("batch.blco");
+        let p2 = tmpfile("incremental.blco");
+        let s1 = BlcoStore::write(&b, &p1).unwrap();
+        let mut w = BlcoStoreWriter::create(&p2, b.dims(), b.config).unwrap();
+        for blk in &b.blocks {
+            w.add_block(blk.key, &blk.lidx, &blk.vals).unwrap();
+        }
+        let s2 = w.finish().unwrap();
+        assert_eq!(s1.file_bytes, s2.file_bytes);
+        assert_eq!(s1.blocks, s2.blocks);
+        assert_eq!(s1.batches, s2.batches);
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        // the payload stage must be gone after finish
+        assert!(!PathBuf::from(format!("{}.payload.tmp", p2.display())).exists());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn incremental_writer_drop_cleans_stage_and_leaves_target_alone() {
+        let p = tmpfile("aborted.blco");
+        std::fs::write(&p, b"pre-existing").unwrap();
+        let stage = PathBuf::from(format!("{}.payload.tmp", p.display()));
+        {
+            let mut w =
+                BlcoStoreWriter::create(&p, &[8, 8], BlcoConfig::default())
+                    .unwrap();
+            w.add_block(0, &[1, 2], &[1.0, 2.0]).unwrap();
+            assert!(stage.exists());
+            // dropped without finish
+        }
+        assert!(!stage.exists(), "aborted writer leaked its payload stage");
+        assert_eq!(std::fs::read(&p).unwrap(), b"pre-existing");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

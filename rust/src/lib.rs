@@ -47,5 +47,6 @@ pub mod util;
 pub use analysis::conflict::{CertificateSet, ConflictCertificate, SyncClass};
 pub use coordinator::engine::MttkrpEngine;
 pub use format::blco::BlcoTensor;
-pub use format::store::{BatchSource, BlcoStore, BlcoStoreReader};
+pub use format::store::{BatchSource, BlcoStore, BlcoStoreReader, BlcoStoreWriter};
 pub use tensor::coo::CooTensor;
+pub use tensor::ooc::{BuildOptions, BuildStats};

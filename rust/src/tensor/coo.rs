@@ -149,6 +149,68 @@ impl CooTensor {
     }
 }
 
+/// A bounded slice of a COO stream: non-zeros `base .. base + len` of some
+/// larger (possibly disk-resident) tensor, mode-major like [`CooTensor`].
+/// This is the unit the chunked `.tns` parser
+/// ([`crate::tensor::io::TnsChunks`]), the streamed synthetic generator
+/// ([`crate::tensor::synth::UniformChunks`]) and the external-memory
+/// builder ([`crate::tensor::ooc`]) exchange, so construction never holds
+/// more than one chunk of coordinates at a time.
+#[derive(Clone, Debug)]
+pub struct CooChunk {
+    /// global index of this chunk's first non-zero (source order)
+    pub base: u64,
+    /// mode-major coordinate planes, 0-based
+    pub coords: Vec<Vec<u32>>,
+    pub vals: Vec<f64>,
+}
+
+impl CooChunk {
+    /// Empty chunk starting at global non-zero `base`, with capacity for
+    /// `cap` entries per plane (pre-reserved so `push` never reallocates
+    /// below the chunk budget — the builder's memory accounting relies on
+    /// the capacity being fixed).
+    pub fn with_capacity(order: usize, cap: usize, base: u64) -> Self {
+        CooChunk {
+            base,
+            coords: vec![Vec::with_capacity(cap); order],
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.coords.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Append one non-zero (coordinates already 0-based and validated).
+    #[inline]
+    pub fn push(&mut self, coord: &[u32], val: f64) {
+        debug_assert_eq!(coord.len(), self.order());
+        for (plane, &c) in self.coords.iter_mut().zip(coord) {
+            plane.push(c);
+        }
+        self.vals.push(val);
+    }
+
+    /// Allocated bytes of the coordinate planes and values (by capacity,
+    /// which is what actually sits in RAM).
+    pub fn alloc_bytes(&self) -> usize {
+        self.coords.iter().map(|p| p.capacity() * 4).sum::<usize>()
+            + self.vals.capacity() * 8
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

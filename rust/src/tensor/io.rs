@@ -3,85 +3,215 @@
 //! ship in, so converted real tensors drop straight into the pipeline.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::coo::CooTensor;
+use super::coo::{CooChunk, CooTensor};
+
+/// Chunk size [`read_tns`] collects through (large enough that the
+/// per-chunk bookkeeping vanishes, small enough that reallocation waste
+/// stays bounded while the planes grow).
+const READ_TNS_CHUNK: usize = 1 << 20;
+
+/// Streaming `.tns` parser: yields bounded-size [`CooChunk`]s through one
+/// reusable line buffer, so peak parser memory is one chunk — not the
+/// file. All validation (1-based indices, u32 overflow, non-finite
+/// values, ragged rows, explicit-dims checks) lives here; [`read_tns`] is
+/// a thin collect-all wrapper over this type.
+///
+/// When `dims` is passed to [`TnsChunks::open`], every index is
+/// bounds-checked against it as it streams by (the out-of-core builder
+/// encodes straight from chunks, so it cannot defer validation to a final
+/// `CooTensor::validate`). Without `dims`, per-mode maxima are tracked and
+/// exposed via [`TnsChunks::inferred_dims`] for a two-pass build.
+pub struct TnsChunks {
+    reader: BufReader<std::fs::File>,
+    path: PathBuf,
+    dims: Option<Vec<u64>>,
+    /// reusable line buffer — the whole point of the chunked core is that
+    /// parsing allocates nothing per line
+    line: String,
+    lineno: usize,
+    order: Option<usize>,
+    /// running per-mode max index + 1 (candidate inferred dims)
+    maxima: Vec<u64>,
+    /// non-zeros emitted so far (the next chunk's `base`)
+    entries: u64,
+}
+
+impl TnsChunks {
+    /// Open `path` for chunked parsing. `dims`, when given, must match the
+    /// file's order and bound every index (checked as lines stream by).
+    pub fn open(path: &Path, dims: Option<&[u64]>) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Ok(TnsChunks {
+            reader: BufReader::new(file),
+            path: path.to_path_buf(),
+            dims: dims.map(|d| d.to_vec()),
+            line: String::new(),
+            lineno: 0,
+            order: None,
+            maxima: Vec::new(),
+            entries: 0,
+        })
+    }
+
+    /// Parse up to `chunk_nnz` non-zeros into the next chunk. Returns
+    /// `Ok(None)` at end of file. Comment (`#`) and blank lines are
+    /// skipped and never count against the chunk budget.
+    pub fn next_chunk(&mut self, chunk_nnz: usize) -> Result<Option<CooChunk>> {
+        assert!(chunk_nnz > 0, "chunk_nnz must be > 0");
+        let mut chunk: Option<CooChunk> = None;
+        loop {
+            if chunk.as_ref().is_some_and(|c| c.len() >= chunk_nnz) {
+                break;
+            }
+            self.line.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.line)
+                .with_context(|| format!("read {}", self.path.display()))?;
+            if n == 0 {
+                break; // EOF
+            }
+            self.lineno += 1;
+            let line = self.line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            // one counting pass over the tokens (no Vec<&str> per line),
+            // then a parsing pass that writes straight into the planes
+            let ntok = line.split_whitespace().count();
+            if ntok < 2 {
+                bail!("{}:{}: too few fields", self.path.display(), self.lineno);
+            }
+            let n_idx = ntok - 1;
+            match self.order {
+                None => {
+                    if let Some(d) = &self.dims {
+                        // a shorter (or longer) dims list must error rather
+                        // than silently truncating/padding the file's order
+                        if d.len() != n_idx {
+                            bail!(
+                                "explicit dims have order {} but the file has \
+                                 {} indices per non-zero",
+                                d.len(),
+                                n_idx
+                            );
+                        }
+                    }
+                    self.order = Some(n_idx);
+                    self.maxima = vec![1; n_idx];
+                }
+                Some(o) if o != n_idx => {
+                    bail!(
+                        "{}:{}: {} indices, expected {}",
+                        self.path.display(),
+                        self.lineno,
+                        n_idx,
+                        o
+                    )
+                }
+                _ => {}
+            }
+            let chunk = chunk.get_or_insert_with(|| {
+                CooChunk::with_capacity(n_idx, chunk_nnz, self.entries)
+            });
+            let mut toks = line.split_whitespace();
+            for m in 0..n_idx {
+                let tok = toks.next().expect("counted above");
+                let idx: u64 = tok.parse().with_context(|| {
+                    format!("{}:{}: bad index", self.path.display(), self.lineno)
+                })?;
+                if idx == 0 {
+                    bail!(
+                        "{}:{}: .tns indices are 1-based",
+                        self.path.display(),
+                        self.lineno
+                    );
+                }
+                // coordinates are stored as u32 planes; an index past that
+                // range must be a hard error, not a silent wrap
+                if idx - 1 > u32::MAX as u64 {
+                    bail!(
+                        "{}:{}: mode-{m} index {idx} overflows the u32 \
+                         coordinate range",
+                        self.path.display(),
+                        self.lineno
+                    );
+                }
+                if let Some(d) = &self.dims {
+                    if idx > d[m] {
+                        bail!("mode {m}: dim {} < max index {idx}", d[m]);
+                    }
+                }
+                self.maxima[m] = self.maxima[m].max(idx);
+                chunk.coords[m].push((idx - 1) as u32);
+            }
+            let tok = toks.next().expect("counted above");
+            let v: f64 = tok.parse().with_context(|| {
+                format!("{}:{}: bad value", self.path.display(), self.lineno)
+            })?;
+            if !v.is_finite() {
+                bail!(
+                    "{}:{}: non-finite value {v} (NaN/inf would poison every \
+                     norm and fit downstream)",
+                    self.path.display(),
+                    self.lineno
+                );
+            }
+            chunk.vals.push(v);
+            self.entries += 1;
+        }
+        Ok(chunk)
+    }
+
+    /// The file's order, once at least one non-zero has been parsed.
+    pub fn order(&self) -> Option<usize> {
+        self.order
+    }
+
+    /// Per-mode `max index` seen so far (the inferred dims after a full
+    /// pass). Empty until the first non-zero.
+    pub fn inferred_dims(&self) -> &[u64] {
+        &self.maxima
+    }
+
+    /// Non-zeros parsed so far.
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+}
 
 /// Read a `.tns` file. Mode lengths are inferred as the per-mode maxima
 /// unless `dims` is given (required if any trailing mode is longer than its
-/// max index suggests).
+/// max index suggests). Thin collect-all wrapper over [`TnsChunks`]; use
+/// that (or [`crate::tensor::ooc`]) when the file should not be
+/// materialized at once.
 pub fn read_tns(path: &Path, dims: Option<&[u64]>) -> Result<CooTensor> {
-    let file = std::fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?;
-    let reader = BufReader::new(file);
-
-    let mut order: Option<usize> = None;
+    // dims are validated here (end-of-parse, like the historical reader)
+    // rather than streamed through TnsChunks, so the chunk core stays a
+    // pure parser and error precedence is unchanged
+    let mut chunks = TnsChunks::open(path, None)?;
     let mut raw_coords: Vec<Vec<u32>> = Vec::new();
     let mut vals: Vec<f64> = Vec::new();
-
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+    while let Some(c) = chunks.next_chunk(READ_TNS_CHUNK)? {
+        if raw_coords.is_empty() {
+            raw_coords = vec![Vec::new(); c.order()];
         }
-        let toks: Vec<&str> = line.split_whitespace().collect();
-        if toks.len() < 2 {
-            bail!("{}:{}: too few fields", path.display(), lineno + 1);
+        for (plane, part) in raw_coords.iter_mut().zip(&c.coords) {
+            plane.extend_from_slice(part);
         }
-        let n = toks.len() - 1;
-        match order {
-            None => {
-                order = Some(n);
-                raw_coords = vec![Vec::new(); n];
-            }
-            Some(o) if o != n => {
-                bail!("{}:{}: {} indices, expected {}", path.display(), lineno + 1, n, o)
-            }
-            _ => {}
-        }
-        for (m, tok) in toks[..n].iter().enumerate() {
-            let idx: u64 = tok
-                .parse()
-                .with_context(|| format!("{}:{}: bad index", path.display(), lineno + 1))?;
-            if idx == 0 {
-                bail!("{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
-            }
-            // coordinates are stored as u32 planes; an index past that
-            // range must be a hard error, not a silent wrap
-            if idx - 1 > u32::MAX as u64 {
-                bail!(
-                    "{}:{}: mode-{m} index {idx} overflows the u32 coordinate range",
-                    path.display(),
-                    lineno + 1
-                );
-            }
-            raw_coords[m].push((idx - 1) as u32);
-        }
-        let v: f64 = toks[n]
-            .parse()
-            .with_context(|| format!("{}:{}: bad value", path.display(), lineno + 1))?;
-        if !v.is_finite() {
-            bail!(
-                "{}:{}: non-finite value {v} (NaN/inf would poison every \
-                 norm and fit downstream)",
-                path.display(),
-                lineno + 1
-            );
-        }
-        vals.push(v);
+        vals.extend_from_slice(&c.vals);
     }
 
-    let order = order.unwrap_or(0);
+    let order = chunks.order().unwrap_or(0);
     if order == 0 {
         bail!("{}: no non-zero entries", path.display());
     }
-    let inferred: Vec<u64> = raw_coords
-        .iter()
-        .map(|p| p.iter().map(|&c| c as u64 + 1).max().unwrap_or(1))
-        .collect();
+    let inferred: Vec<u64> = chunks.inferred_dims().to_vec();
     let dims = match dims {
         Some(d) => {
             // a shorter (or longer) dims list must error rather than
@@ -120,6 +250,9 @@ pub fn write_tns(path: &Path, t: &CooTensor) -> Result<()> {
         }
         writeln!(w, "{}", t.vals[e])?;
     }
+    // a BufWriter dropped without flush swallows write errors — a full
+    // disk would report Ok(()) on a truncated file
+    w.flush().with_context(|| format!("flush {}", path.display()))?;
     Ok(())
 }
 
@@ -216,5 +349,68 @@ mod tests {
         std::fs::write(&p, "5 1 1 1.0\n").unwrap();
         assert!(read_tns(&p, Some(&[2, 2, 2])).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_parse_matches_collect_all() {
+        let t = crate::tensor::synth::uniform(&[40, 30, 20], 3_000, 5);
+        let p = tmpfile("chunked.tns");
+        write_tns(&p, &t).unwrap();
+        let whole = read_tns(&p, None).unwrap();
+        for chunk_nnz in [1usize, 7, 256, 100_000] {
+            let mut chunks = TnsChunks::open(&p, None).unwrap();
+            let mut planes: Vec<Vec<u32>> = vec![Vec::new(); 3];
+            let mut vals = Vec::new();
+            let mut expect_base = 0u64;
+            while let Some(c) = chunks.next_chunk(chunk_nnz).unwrap() {
+                assert_eq!(c.base, expect_base);
+                assert!(c.len() <= chunk_nnz);
+                expect_base += c.len() as u64;
+                for (plane, part) in planes.iter_mut().zip(&c.coords) {
+                    plane.extend_from_slice(part);
+                }
+                vals.extend_from_slice(&c.vals);
+            }
+            assert_eq!(chunks.entries(), whole.nnz() as u64);
+            assert_eq!(chunks.inferred_dims(), &whole.dims[..]);
+            assert_eq!(planes, whole.coords);
+            assert_eq!(vals, whole.vals);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_parse_bounds_checks_explicit_dims() {
+        let p = tmpfile("chunked_dims.tns");
+        std::fs::write(&p, "1 1 1 1.0\n5 1 1 2.0\n").unwrap();
+        // in-bounds explicit dims stream through
+        let mut ok = TnsChunks::open(&p, Some(&[5, 2, 2])).unwrap();
+        assert_eq!(ok.next_chunk(16).unwrap().unwrap().len(), 2);
+        // the second entry exceeds mode 0 and must fail *mid-stream*
+        let mut bad = TnsChunks::open(&p, Some(&[4, 2, 2])).unwrap();
+        let err = bad.next_chunk(16).unwrap_err();
+        assert!(err.to_string().contains("dim 4 < max index 5"), "{err}");
+        // order mismatch fails on the first data line
+        assert!(TnsChunks::open(&p, Some(&[4, 2]))
+            .unwrap()
+            .next_chunk(16)
+            .is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn write_tns_surfaces_flush_errors() {
+        // /dev/full accepts the open and buffered writes, then fails the
+        // flush with ENOSPC — exactly the swallowed-error regression:
+        // before the explicit flush, this returned Ok(()) on a file that
+        // holds none of the data
+        if !Path::new("/dev/full").exists() {
+            return; // not available in this environment
+        }
+        let mut t = CooTensor::new(&[4, 4]);
+        t.push(&[1, 2], 1.0);
+        let err = write_tns(Path::new("/dev/full"), &t).unwrap_err();
+        assert!(err.to_string().contains("/dev/full"), "{err}");
     }
 }

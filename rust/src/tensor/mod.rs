@@ -6,5 +6,6 @@
 pub mod coo;
 pub mod datasets;
 pub mod io;
+pub mod ooc;
 pub mod stats;
 pub mod synth;

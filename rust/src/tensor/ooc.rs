@@ -1,0 +1,616 @@
+//! External-memory BLCO construction: build a `.blco` container from a
+//! non-zero stream whose total size never has to fit in RAM (ROADMAP
+//! item 1 — the regime the paper's out-of-memory claim and AMPED's
+//! billion-nnz tensors live in).
+//!
+//! # Pipeline
+//!
+//! ```text
+//! .tns file ──TnsChunks──┐
+//!                        ├─► chunk ─► ALTO-linearize ─► par_sort ─► run_i  (spill)
+//! synthetic ─UniformChunks┘             (ExecBackend)      (psort)   on disk
+//!
+//! run_0 ┐
+//! run_1 ├─► k-way heap merge on (alto line, source index) ─► blocks ─► BlcoStoreWriter
+//! run_k ┘        (bounded per-run read window)                 │
+//!                                                              └─► header (norm, crcs,
+//!                                                                   block index) at finish
+//! ```
+//!
+//! # Bit-for-bit parity with the in-memory path
+//!
+//! `BlcoTensor::from_coo` sorts `(alto_line, source_index)` pairs, then
+//! re-encodes and blocks them. The chunked path sorts each chunk by
+//! `(line, local_index)` — within one chunk, local order *is* global
+//! order — and the merge heap orders run heads by `(line, global_index)`,
+//! so the merged stream is exactly the total order the in-memory sort
+//! produces, duplicates included (duplicate coordinates stay separate
+//! adjacent entries ordered by source position, exactly as `from_coo`
+//! leaves them). Spill records therefore carry the *raw* 128-bit ALTO
+//! line: `BlcoSpec::reencode_alto` is a bit permutation, not monotone, so
+//! merging on re-encoded keys would break the order. Block boundaries
+//! (key change or `max_block_nnz`) and the norm accumulation order are
+//! replicated exactly, and [`BlcoStoreWriter`] shares the header/payload
+//! serializers with `BlcoStore::write` — so the differential suite can
+//! assert whole-file byte equality, not just semantic equality.
+//!
+//! # Memory model
+//!
+//! Peak memory is accounted in [`BuildStats::peak_bytes`] and asserted
+//! against the budget by callers (`convert --build-mem-kib`, the tests):
+//!
+//! * **spill phase** — one chunk of coordinates/values
+//!   (`chunk_nnz × (4·order + 8)` bytes) + its `(u128, u32)` sort pairs
+//!   (`chunk_nnz × 32`) + a fixed spill write buffer;
+//! * **merge phase** — one bounded read window per run + the heap + one
+//!   open block (`≤ max_block_nnz × 32` including its serialization
+//!   buffer) + the writer's growing block index.
+//!
+//! The chunk size is derived from the budget (half the budget to the
+//! spill phase working set); the merge read windows get what the budget
+//! leaves after the open block, clamped to `[2 KiB, 256 KiB]` per run. A
+//! tensor is thus buildable as long as the budget covers one block plus
+//! ~2 KiB per run — with the default 256 MiB budget and 64 MiB chunks
+//! that is thousands of runs, i.e. hundreds of billions of non-zeros.
+
+use std::collections::BinaryHeap;
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::format::blco::BlcoConfig;
+use crate::format::store::{BlcoStoreWriter, StoreSummary};
+use crate::linear::encode::BlcoSpec;
+use crate::tensor::coo::CooChunk;
+use crate::tensor::io::TnsChunks;
+use crate::tensor::synth::UniformChunks;
+use crate::util::pool::ExecBackend;
+use crate::util::psort::par_sort_pairs;
+
+/// Default construction budget when the caller does not pass one.
+pub const DEFAULT_BUILD_BUDGET: usize = 256 << 20;
+
+/// One spill record: 16 B raw ALTO line + 8 B global source index + 8 B
+/// value bits, little-endian.
+const RECORD_BYTES: usize = 32;
+
+/// Fixed I/O buffer charged to both phases (spill BufWriter, payload copy).
+const FIXED_IO_BYTES: usize = 64 << 10;
+
+/// Per-run merge read window bounds.
+const RUN_BUF_MIN: usize = 2 << 10;
+const RUN_BUF_MAX: usize = 256 << 10;
+
+/// Knobs for an external-memory build.
+#[derive(Clone, Debug)]
+pub struct BuildOptions {
+    pub config: BlcoConfig,
+    /// thread pool for per-chunk linearize + sort (PR-7 ExecBackend)
+    pub backend: ExecBackend,
+    /// peak-memory budget in bytes; `None` → [`DEFAULT_BUILD_BUDGET`]
+    pub mem_budget_bytes: Option<usize>,
+    /// explicit chunk size override (tests sweep this); normally derived
+    /// from the budget
+    pub chunk_nnz: Option<usize>,
+    /// where sorted runs are spilled; `None` → the output's directory
+    pub tmp_dir: Option<PathBuf>,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            config: BlcoConfig::default(),
+            backend: ExecBackend::from_env(),
+            mem_budget_bytes: None,
+            chunk_nnz: None,
+            tmp_dir: None,
+        }
+    }
+}
+
+impl BuildOptions {
+    fn budget(&self) -> usize {
+        self.mem_budget_bytes.unwrap_or(DEFAULT_BUILD_BUDGET)
+    }
+}
+
+/// What an external-memory build did and what it held while doing it.
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    /// non-zeros streamed through the pipeline
+    pub entries: u64,
+    /// chunks parsed/generated (== sorted runs spilled)
+    pub chunks: usize,
+    pub runs: usize,
+    /// chunk size actually used
+    pub chunk_nnz: usize,
+    /// blocks emitted to the container
+    pub blocks: usize,
+    /// bytes written to (and read back from) the spill runs
+    pub spill_bytes: u64,
+    /// per-run merge read window actually used
+    pub run_buf_bytes: usize,
+    /// high-water mark of accounted construction memory
+    pub peak_bytes: usize,
+    /// the budget the build was asked to stay under
+    pub budget_bytes: usize,
+    /// bytes held by the chunk source itself (the synthetic generator's
+    /// dedup set in the dense regime; 0 for sparse shapes and .tns input)
+    pub source_bytes: usize,
+    /// dims-inference pre-pass seconds (0 when dims were known)
+    pub infer_s: f64,
+    /// parse/generate + sort + spill seconds
+    pub spill_s: f64,
+    /// merge + container-write seconds
+    pub merge_s: f64,
+}
+
+impl BuildStats {
+    fn charge(&mut self, bytes: usize) {
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+
+    /// Throughput in millions of non-zeros per second (whole build).
+    pub fn mnnz_per_s(&self) -> f64 {
+        self.entries as f64 / (self.infer_s + self.spill_s + self.merge_s).max(1e-9) / 1e6
+    }
+}
+
+// ------------------------------------------------------------- spill runs
+
+static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One sorted on-disk run; the file is removed on drop.
+struct RunFile {
+    path: PathBuf,
+    entries: u64,
+}
+
+impl Drop for RunFile {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+fn run_path(tmp_dir: &Path) -> PathBuf {
+    tmp_dir.join(format!(
+        "blco_ooc_{}_{}.run",
+        std::process::id(),
+        RUN_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Buffered reader over one run, with a bounded read window.
+struct RunReader {
+    file: File,
+    path: PathBuf,
+    buf: Vec<u8>,
+    pos: usize,
+    len: usize,
+    /// records not yet returned (buffered or still on disk)
+    remaining: u64,
+}
+
+impl RunReader {
+    fn open(run: &RunFile, window: usize) -> Result<Self> {
+        let file = File::open(&run.path)
+            .with_context(|| format!("open run {}", run.path.display()))?;
+        Ok(RunReader {
+            file,
+            path: run.path.clone(),
+            buf: vec![0u8; window],
+            pos: 0,
+            len: 0,
+            remaining: run.entries,
+        })
+    }
+
+    fn next(&mut self) -> Result<Option<(u128, u64, u64)>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        if self.pos == self.len {
+            let want = self
+                .buf
+                .len()
+                .min((self.remaining as usize).saturating_mul(RECORD_BYTES));
+            self.file
+                .read_exact(&mut self.buf[..want])
+                .with_context(|| format!("read run {}", self.path.display()))?;
+            self.pos = 0;
+            self.len = want;
+        }
+        let rec = &self.buf[self.pos..self.pos + RECORD_BYTES];
+        let line = u128::from_le_bytes(rec[0..16].try_into().unwrap());
+        let gidx = u64::from_le_bytes(rec[16..24].try_into().unwrap());
+        let vbits = u64::from_le_bytes(rec[24..32].try_into().unwrap());
+        self.pos += RECORD_BYTES;
+        self.remaining -= 1;
+        Ok(Some((line, gidx, vbits)))
+    }
+}
+
+/// Merge-heap entry. Field order matters: the derived `Ord` compares
+/// `(line, gidx)` first, which is exactly the in-memory sort's
+/// `(alto_line, source_index)` tuple order (`gidx` is globally unique, so
+/// `vbits`/`run` never decide).
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct HeapItem {
+    line: u128,
+    gidx: u64,
+    vbits: u64,
+    run: usize,
+}
+
+// ------------------------------------------------------------ the builder
+
+/// Derive the chunk size from the budget: the spill-phase working set
+/// (chunk planes + values + sort pairs) gets half the budget.
+fn resolve_chunk_nnz(order: usize, opts: &BuildOptions) -> Result<usize> {
+    if let Some(n) = opts.chunk_nnz {
+        if n == 0 {
+            bail!("chunk_nnz must be > 0");
+        }
+        return Ok(n);
+    }
+    let per_entry = 4 * order + 8 + 32; // planes + vals + (u128, u32) pairs
+    let avail = (opts.budget() / 2).saturating_sub(FIXED_IO_BYTES);
+    let n = avail / per_entry;
+    if n == 0 {
+        bail!(
+            "construction budget {} B cannot hold a single order-{order} \
+             non-zero's working set (~{per_entry} B + {FIXED_IO_BYTES} B of \
+             I/O buffers); raise --build-mem-kib",
+            opts.budget()
+        );
+    }
+    Ok(n)
+}
+
+/// Stream chunks from `next`, spill sorted runs, k-way merge them into a
+/// `.blco` container at `out`. The workhorse behind [`build_from_tns`]
+/// and [`build_uniform`].
+fn build_from_chunk_source(
+    mut next: impl FnMut(&mut BuildStats) -> Result<Option<CooChunk>>,
+    dims: &[u64],
+    out: &Path,
+    opts: &BuildOptions,
+    stats: &mut BuildStats,
+) -> Result<StoreSummary> {
+    let config = opts.config;
+    let budget = opts.budget();
+    stats.budget_bytes = budget;
+    let open_block_bytes = 32 * config.max_block_nnz; // lidx+vals+serialize buf
+    if open_block_bytes + FIXED_IO_BYTES > budget {
+        bail!(
+            "construction budget {budget} B cannot hold one open block \
+             (max_block_nnz {} needs ~{open_block_bytes} B); lower \
+             --max-block-nnz or raise --build-mem-kib",
+            config.max_block_nnz
+        );
+    }
+    let spec = BlcoSpec::with_budget(dims, config.inblock_budget);
+    let tmp_dir = match &opts.tmp_dir {
+        Some(d) => d.clone(),
+        None => {
+            let parent = out.parent().unwrap_or(Path::new("."));
+            if parent.as_os_str().is_empty() {
+                PathBuf::from(".")
+            } else {
+                parent.to_path_buf()
+            }
+        }
+    };
+
+    // ---- phase 1: chunk -> linearize -> sort -> spill ------------------
+    let w = Instant::now();
+    let nt = opts.backend.threads();
+    let mut runs: Vec<RunFile> = Vec::new();
+    let mut pairs: Vec<(u128, u32)> = Vec::new();
+    while let Some(chunk) = next(stats)? {
+        let len = chunk.len();
+        if len == 0 {
+            continue;
+        }
+        stats.chunks += 1;
+        stats.entries += len as u64;
+        debug_assert!(chunk.len() <= u32::MAX as usize, "chunk too large");
+
+        // linearize (parallel over the chunk, like from_coo's stage 1)
+        pairs.clear();
+        pairs.resize(len, (0, 0));
+        {
+            let planes = &chunk.coords;
+            let spec_ref = &spec;
+            let base = pairs.as_mut_ptr() as usize;
+            opts.backend.chunks(len, |_, lo, hi| {
+                let ptr = base as *mut (u128, u32);
+                let mut coord = vec![0u32; planes.len()];
+                for e in lo..hi {
+                    for (n, p) in planes.iter().enumerate() {
+                        coord[n] = p[e];
+                    }
+                    // SAFETY: each e is written by exactly one thread
+                    unsafe {
+                        *ptr.add(e) = (spec_ref.alto.encode(&coord), e as u32)
+                    };
+                }
+            });
+        }
+
+        // sort by (line, local index); local order == global order within
+        // a chunk, so the merge's (line, gidx) order is the global sort
+        par_sort_pairs(&mut pairs, nt, spec.alto.total_bits);
+
+        // spill the sorted run
+        let run = RunFile { path: run_path(&tmp_dir), entries: len as u64 };
+        let file = File::create(&run.path)
+            .with_context(|| format!("create run {}", run.path.display()))?;
+        let mut spill = std::io::BufWriter::with_capacity(FIXED_IO_BYTES, file);
+        let mut rec = [0u8; RECORD_BYTES];
+        for &(line, local) in &pairs {
+            rec[0..16].copy_from_slice(&line.to_le_bytes());
+            rec[16..24]
+                .copy_from_slice(&(chunk.base + local as u64).to_le_bytes());
+            rec[24..32].copy_from_slice(
+                &chunk.vals[local as usize].to_bits().to_le_bytes(),
+            );
+            spill
+                .write_all(&rec)
+                .with_context(|| format!("write run {}", run.path.display()))?;
+        }
+        // spilled runs are read back by the merge: a swallowed flush error
+        // here would corrupt the build, not just lose a file
+        spill
+            .flush()
+            .with_context(|| format!("flush run {}", run.path.display()))?;
+        stats.spill_bytes += (len * RECORD_BYTES) as u64;
+        stats.charge(
+            chunk.alloc_bytes()
+                + pairs.capacity() * std::mem::size_of::<(u128, u32)>()
+                + FIXED_IO_BYTES
+                + stats.source_bytes,
+        );
+        runs.push(run);
+    }
+    drop(pairs);
+    stats.runs = runs.len();
+    stats.spill_s = w.elapsed().as_secs_f64();
+
+    // ---- phase 2: k-way merge -> blocks -> container -------------------
+    let w = Instant::now();
+    let heap_bytes = runs.len() * std::mem::size_of::<HeapItem>();
+    let run_buf = if runs.is_empty() {
+        0
+    } else {
+        let avail = budget
+            .saturating_sub(open_block_bytes + FIXED_IO_BYTES + heap_bytes)
+            / 8
+            * 7; // keep headroom for the writer's block index
+        (avail / runs.len()).clamp(RUN_BUF_MIN, RUN_BUF_MAX) / RECORD_BYTES
+            * RECORD_BYTES
+    };
+    stats.run_buf_bytes = run_buf;
+
+    let mut readers = runs
+        .iter()
+        .map(|r| RunReader::open(r, run_buf))
+        .collect::<Result<Vec<_>>>()?;
+    let mut heap: BinaryHeap<std::cmp::Reverse<HeapItem>> =
+        BinaryHeap::with_capacity(readers.len());
+    for (i, r) in readers.iter_mut().enumerate() {
+        if let Some((line, gidx, vbits)) = r.next()? {
+            heap.push(std::cmp::Reverse(HeapItem { line, gidx, vbits, run: i }));
+        }
+    }
+
+    let mut writer = BlcoStoreWriter::create(out, dims, config)?;
+    let mut cur_key = 0u64;
+    let mut lidx: Vec<u64> = Vec::with_capacity(config.max_block_nnz);
+    let mut vals: Vec<f64> = Vec::with_capacity(config.max_block_nnz);
+    // the open block's lidx + vals vectors; the writer's serialization
+    // buffer (the other half of `open_block_bytes`) is counted through
+    // `held_bytes()`, so it isn't charged twice
+    let block_vec_bytes = 16 * config.max_block_nnz;
+    while let Some(std::cmp::Reverse(item)) = heap.pop() {
+        // same boundary rule as from_coo stage 4: key change or budget
+        let (key, l) = spec.reencode_alto(item.line);
+        if !lidx.is_empty()
+            && (key != cur_key || lidx.len() >= config.max_block_nnz)
+        {
+            writer.add_block(cur_key, &lidx, &vals)?;
+            stats.charge(
+                readers.len() * run_buf
+                    + heap_bytes
+                    + block_vec_bytes
+                    + writer.held_bytes()
+                    + FIXED_IO_BYTES
+                    + stats.source_bytes,
+            );
+            lidx.clear();
+            vals.clear();
+        }
+        cur_key = key;
+        lidx.push(l);
+        vals.push(f64::from_bits(item.vbits));
+        let run = item.run;
+        if let Some((line, gidx, vbits)) = readers[run].next()? {
+            heap.push(std::cmp::Reverse(HeapItem { line, gidx, vbits, run }));
+        }
+    }
+    if !lidx.is_empty() {
+        writer.add_block(cur_key, &lidx, &vals)?;
+    }
+    stats.charge(
+        readers.len() * run_buf
+            + heap_bytes
+            + block_vec_bytes
+            + writer.held_bytes()
+            + FIXED_IO_BYTES
+            + stats.source_bytes,
+    );
+    stats.blocks = writer.blocks();
+    let summary = writer.finish()?;
+    stats.merge_s = w.elapsed().as_secs_f64();
+    Ok(summary)
+}
+
+/// Build a `.blco` container from a `.tns` file without materializing it.
+/// When `dims` is `None`, a streaming inference pre-pass discovers the
+/// order and per-mode maxima first (two passes over the file, still one
+/// chunk of memory).
+pub fn build_from_tns(
+    tns: &Path,
+    dims: Option<&[u64]>,
+    out: &Path,
+    opts: &BuildOptions,
+) -> Result<(StoreSummary, BuildStats)> {
+    let mut stats = BuildStats::default();
+    let dims: Vec<u64> = match dims {
+        Some(d) => d.to_vec(),
+        None => {
+            let w = Instant::now();
+            let mut scan = TnsChunks::open(tns, None)?;
+            // order is unknown until the first line; 64 B/entry covers the
+            // chunk working set up to order 14
+            let infer_chunk =
+                ((opts.budget() / 2).saturating_sub(FIXED_IO_BYTES) / 64).max(1);
+            while let Some(c) = scan.next_chunk(infer_chunk)? {
+                stats.charge(c.alloc_bytes());
+            }
+            if scan.order().is_none() {
+                bail!("{}: no non-zero entries", tns.display());
+            }
+            stats.infer_s = w.elapsed().as_secs_f64();
+            scan.inferred_dims().to_vec()
+        }
+    };
+    let chunk_nnz = resolve_chunk_nnz(dims.len(), opts)?;
+    stats.chunk_nnz = chunk_nnz;
+    let mut chunks = TnsChunks::open(tns, Some(&dims))?;
+    let summary = build_from_chunk_source(
+        |_stats| chunks.next_chunk(chunk_nnz),
+        &dims,
+        out,
+        opts,
+        &mut stats,
+    )?;
+    if stats.entries == 0 {
+        bail!("{}: no non-zero entries", tns.display());
+    }
+    Ok((summary, stats))
+}
+
+/// Build a `.blco` container straight from the seeded uniform generator —
+/// no `.tns` or `CooTensor` intermediate. Entry-for-entry identical to
+/// `synth::uniform(dims, nnz, seed)` (same RNG stream), so the container
+/// is bit-for-bit what `convert` without `--stream` writes.
+pub fn build_uniform(
+    dims: &[u64],
+    nnz: usize,
+    seed: u64,
+    out: &Path,
+    opts: &BuildOptions,
+) -> Result<(StoreSummary, BuildStats)> {
+    let mut stats = BuildStats::default();
+    let chunk_nnz = resolve_chunk_nnz(dims.len(), opts)?;
+    stats.chunk_nnz = chunk_nnz;
+    let mut gen = UniformChunks::new(dims, nnz, seed);
+    let summary = build_from_chunk_source(
+        |stats| {
+            let c = gen.next_chunk(chunk_nnz);
+            // the dense-regime dedup set is real construction memory
+            stats.source_bytes = gen.dedup_bytes();
+            Ok(c)
+        },
+        dims,
+        out,
+        opts,
+        &mut stats,
+    )?;
+    Ok((summary, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::blco::BlcoTensor;
+    use crate::format::store::BlcoStore;
+    use crate::tensor::synth;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("blco_ooc_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn uniform_stream_matches_in_memory_bitwise() {
+        let dims = [64u64, 48, 32];
+        let nnz = 5_000;
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let p_mem = tmpfile("mem.blco");
+        let p_ooc = tmpfile("ooc.blco");
+        let t = synth::uniform(&dims, nnz, 11);
+        BlcoStore::write(&BlcoTensor::from_coo_with(&t, cfg), &p_mem).unwrap();
+        let opts = BuildOptions {
+            config: cfg,
+            chunk_nnz: Some(700),
+            ..Default::default()
+        };
+        let (summary, stats) =
+            build_uniform(&dims, nnz, 11, &p_ooc, &opts).unwrap();
+        assert_eq!(summary.nnz, t.nnz());
+        assert!(stats.runs > 1, "expected multiple runs, got {}", stats.runs);
+        assert_eq!(
+            std::fs::read(&p_mem).unwrap(),
+            std::fs::read(&p_ooc).unwrap()
+        );
+        std::fs::remove_file(&p_mem).ok();
+        std::fs::remove_file(&p_ooc).ok();
+    }
+
+    #[test]
+    fn run_files_are_cleaned_up() {
+        let dims = [32u64, 32, 32];
+        let tmp = tmpfile("runs_dir");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("t.blco");
+        let opts = BuildOptions {
+            chunk_nnz: Some(200),
+            tmp_dir: Some(tmp.clone()),
+            ..Default::default()
+        };
+        build_uniform(&dims, 1_000, 3, &out, &opts).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&tmp)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().is_some_and(|x| x == "run")
+                    || e.path().to_string_lossy().ends_with(".tmp")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "leftover temp files: {leftovers:?}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn budget_too_small_errors_cleanly() {
+        let opts = BuildOptions {
+            mem_budget_bytes: Some(1 << 10),
+            ..Default::default()
+        };
+        let err = build_uniform(&[8, 8], 100, 1, &tmpfile("tiny.blco"), &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+}

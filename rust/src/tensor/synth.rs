@@ -9,32 +9,102 @@
 
 use std::collections::HashSet;
 
-use super::coo::CooTensor;
+use super::coo::{CooChunk, CooTensor};
 use crate::util::prng::Rng;
+
+/// Chunked uniform generator: the streaming form of [`uniform`], yielding
+/// bounded [`CooChunk`]s for the out-of-core builder so a synthetic tensor
+/// can go straight to sorted runs without a `.tns` (or full `CooTensor`)
+/// intermediate.
+///
+/// [`uniform`] itself is a collect-all wrapper over this type, so the
+/// streamed and in-memory generators draw the *same* RNG sequence and
+/// produce identical entries by construction — which is what lets
+/// `convert --stream` promise a bit-for-bit identical container.
+///
+/// Note the dedup regime: when requested density exceeds `1e-4`, every
+/// drawn coordinate is remembered in a hash set (exactly like
+/// [`uniform`]), so generator memory is O(nnz) no matter the chunk size.
+/// [`UniformChunks::dedup_bytes`] exposes that cost for the builder's
+/// peak-memory accounting; truly out-of-core synthetic builds should use
+/// sparse shapes (density ≤ 1e-4), where the set is never allocated.
+pub struct UniformChunks {
+    dims: Vec<u64>,
+    nnz: usize,
+    rng: Rng,
+    seen: Option<HashSet<u128>>,
+    coord: Vec<u32>,
+    produced: usize,
+    attempts: usize,
+}
+
+impl UniformChunks {
+    pub fn new(dims: &[u64], nnz: usize, seed: u64) -> Self {
+        let cells: f64 = dims.iter().map(|&d| d as f64).product();
+        // only worth it when collisions are likely — same rule as uniform()
+        let dedupe = (nnz as f64) / cells > 1e-4;
+        UniformChunks {
+            dims: dims.to_vec(),
+            nnz,
+            rng: Rng::new(seed),
+            seen: dedupe.then(|| HashSet::with_capacity(nnz * 2)),
+            coord: vec![0u32; dims.len()],
+            produced: 0,
+            attempts: 0,
+        }
+    }
+
+    /// Generate up to `chunk_nnz` more non-zeros; `None` once the request
+    /// is met (or the attempt budget is spent on a near-full shape).
+    pub fn next_chunk(&mut self, chunk_nnz: usize) -> Option<CooChunk> {
+        assert!(chunk_nnz > 0, "chunk_nnz must be > 0");
+        let cap = chunk_nnz.min(self.nnz.saturating_sub(self.produced));
+        if cap == 0 || self.attempts >= self.nnz * 4 {
+            return None;
+        }
+        let mut chunk =
+            CooChunk::with_capacity(self.dims.len(), cap, self.produced as u64);
+        while chunk.len() < cap && self.attempts < self.nnz * 4 {
+            self.attempts += 1;
+            for (n, &d) in self.dims.iter().enumerate() {
+                self.coord[n] = self.rng.below(d) as u32;
+            }
+            if let Some(seen) = &mut self.seen {
+                let key = pack_coord(&self.coord, &self.dims);
+                if !seen.insert(key) {
+                    continue;
+                }
+            }
+            chunk.push(&self.coord, self.rng.normal());
+        }
+        self.produced += chunk.len();
+        if chunk.is_empty() {
+            None
+        } else {
+            Some(chunk)
+        }
+    }
+
+    /// Approximate bytes held by the dedup set (0 in the sparse regime).
+    pub fn dedup_bytes(&self) -> usize {
+        // hashbrown's raw table: one u128 slot + control byte per bucket,
+        // buckets ≈ capacity / 0.875 — 20 B/slot is a fair ceiling
+        self.seen.as_ref().map_or(0, |s| s.capacity() * 20)
+    }
+}
 
 /// Uniform random tensor: coordinates i.i.d. uniform per mode, values
 /// standard normal. Duplicates are merged, so the resulting nnz can be
-/// slightly below the request on dense shapes.
+/// slightly below the request on dense shapes. Collect-all wrapper over
+/// [`UniformChunks`] — the streamed generator is the source of truth.
 pub fn uniform(dims: &[u64], nnz: usize, seed: u64) -> CooTensor {
-    let mut rng = Rng::new(seed);
+    let mut chunks = UniformChunks::new(dims, nnz, seed);
     let mut t = CooTensor::with_capacity(dims, nnz);
-    let mut seen = HashSet::with_capacity(nnz * 2);
-    let cells: f64 = dims.iter().map(|&d| d as f64).product();
-    let dedupe = (nnz as f64) / cells > 1e-4; // only worth it when collisions are likely
-    let mut coord = vec![0u32; dims.len()];
-    let mut attempts = 0usize;
-    while t.nnz() < nnz && attempts < nnz * 4 {
-        attempts += 1;
-        for (n, &d) in dims.iter().enumerate() {
-            coord[n] = rng.below(d) as u32;
+    while let Some(c) = chunks.next_chunk(nnz.max(1)) {
+        for (plane, part) in t.coords.iter_mut().zip(&c.coords) {
+            plane.extend_from_slice(part);
         }
-        if dedupe {
-            let key = pack_coord(&coord, dims);
-            if !seen.insert(key) {
-                continue;
-            }
-        }
-        t.push(&coord, rng.normal());
+        t.vals.extend_from_slice(&c.vals);
     }
     t
 }
@@ -122,6 +192,33 @@ mod tests {
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), t.nnz());
+    }
+
+    #[test]
+    fn chunked_uniform_matches_collect_all() {
+        // both regimes: dense enough to dedupe, sparse enough not to —
+        // and chunk sizes that do and don't divide the request
+        for (dims, nnz) in
+            [(&[30u64, 20, 10][..], 2_000usize), (&[4000, 3000, 2000][..], 3_000)]
+        {
+            let whole = uniform(dims, nnz, 42);
+            for chunk_nnz in [1usize, 17, 512, 1 << 20] {
+                let mut gen = UniformChunks::new(dims, nnz, 42);
+                let mut planes: Vec<Vec<u32>> = vec![Vec::new(); dims.len()];
+                let mut vals = Vec::new();
+                let mut base = 0u64;
+                while let Some(c) = gen.next_chunk(chunk_nnz) {
+                    assert_eq!(c.base, base);
+                    base += c.len() as u64;
+                    for (plane, part) in planes.iter_mut().zip(&c.coords) {
+                        plane.extend_from_slice(part);
+                    }
+                    vals.extend_from_slice(&c.vals);
+                }
+                assert_eq!(planes, whole.coords, "chunk_nnz {chunk_nnz}");
+                assert_eq!(vals, whole.vals, "chunk_nnz {chunk_nnz}");
+            }
+        }
     }
 
     #[test]

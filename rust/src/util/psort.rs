@@ -9,6 +9,18 @@ use super::pool::parallel_dynamic;
 const PAR_THRESHOLD: usize = 1 << 16;
 
 /// Sort pairs ascending by key (then payload), in parallel.
+///
+/// # Key-width contract
+///
+/// `key_bits` is a *balance hint*, not a precondition: buckets are drawn
+/// from the top byte of the declared key range, so keys within
+/// `[0, 2^key_bits)` spread across all 256 buckets. Keys *above* that
+/// range are still sorted correctly — they all funnel into the last
+/// bucket (`min(k >> shift, 255)` keeps bucket assignment monotone in the
+/// key) and get ordered by the per-bucket sort; they only cost balance,
+/// never correctness. An earlier version masked the shifted key to its
+/// low byte instead, which wrapped out-of-range keys into arbitrary
+/// earlier buckets and silently returned unsorted output.
 pub fn par_sort_pairs(data: &mut [(u128, u32)], threads: usize, key_bits: u32) {
     let n = data.len();
     if n < PAR_THRESHOLD || threads <= 1 {
@@ -16,9 +28,10 @@ pub fn par_sort_pairs(data: &mut [(u128, u32)], threads: usize, key_bits: u32) {
         return;
     }
     // bucket by the top byte of the *used* key range so buckets are
-    // balanced even when key_bits << 128
+    // balanced even when key_bits << 128; saturate (don't mask) so a key
+    // wider than key_bits lands in the last bucket instead of wrapping
     let shift = key_bits.saturating_sub(8);
-    let bucket_of = |k: u128| -> usize { ((k >> shift) & 0xFF) as usize };
+    let bucket_of = |k: u128| -> usize { (k >> shift).min(0xFF) as usize };
 
     // counting pass
     let mut counts = [0usize; 256];
@@ -106,6 +119,26 @@ mod tests {
         let mut a = random_pairs(1000, 20, 3);
         let mut b = a.clone();
         par_sort_pairs(&mut a, 8, 20);
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn keys_above_declared_width_still_sort() {
+        // Regression: a key at key_bits + 1 bits used to be bucketed by
+        // `(k >> shift) & 0xFF`, wrapping it into bucket 0 — it sorted
+        // *within* bucket 0 but stayed ahead of every larger-bucket key,
+        // so the output was silently unsorted. The saturating bucket maps
+        // it to the last bucket and the global order survives.
+        let n = 200_000;
+        let bits = 20u32;
+        let mut a = random_pairs(n, bits, 9);
+        // two keys one bit above the declared width, plus one max-width key
+        a[0].0 = 1u128 << (bits + 1);
+        a[1].0 = (1u128 << (bits + 1)) | 3;
+        a[2].0 = u128::MAX;
+        let mut b = a.clone();
+        par_sort_pairs(&mut a, 8, bits);
         b.sort_unstable();
         assert_eq!(a, b);
     }

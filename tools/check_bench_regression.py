@@ -37,7 +37,10 @@ import math
 import sys
 
 LOWER_IS_BETTER = ("_ms", "_s", "_vol_gb", "_pct", "_makespan_s", "_wall_ms")
-HIGHER_IS_BETTER = ("_speedup", "_tbps", "_over_best")
+# "_per_s" must be matched before LOWER_IS_BETTER's bare "_s": throughput
+# metrics like ooc_build_mnnz_per_s are higher-is-better, and the suffix
+# ordering in direction() is what keeps them from being misread as timings
+HIGHER_IS_BETTER = ("_per_s", "_speedup", "_tbps", "_over_best")
 EXACT = ("_batches", "_pairs", "_plans_built", "_iters", "_count")
 
 
