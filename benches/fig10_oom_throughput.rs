@@ -10,19 +10,39 @@
 //! the bench minutes-fast; set 1 for the full presets).
 
 use blco::bench::{banner, smoke, BenchJson, Table};
-use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::MttkrpEngine;
-use blco::coordinator::streamer::stream_mttkrp;
+use blco::coordinator::streamer::StreamReport;
 use blco::cpals::CpAlsOptions;
 use blco::device::model::throughput_tbps;
 use blco::device::{Counters, LinkTopology, Profile};
 use blco::format::blco::{BlcoConfig, BlcoTensor};
-use blco::format::store::{BlcoStore, BlcoStoreReader};
+use blco::format::store::{BlcoStore, BlcoStoreReader, Codec};
 use blco::mttkrp::blco::BlcoEngine;
 use blco::mttkrp::dense::Matrix;
 use blco::mttkrp::oracle::random_factors;
 use blco::tensor::{datasets, synth};
 use blco::util::pool::default_threads;
+use blco::StreamRequest;
+
+/// Single-device streamed MTTKRP through the request front door.
+fn stream(
+    eng: &BlcoEngine,
+    mode: usize,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    threads: usize,
+    counters: &Counters,
+) -> StreamReport {
+    StreamRequest::new(eng, mode)
+        .job(factors)
+        .devices(1)
+        .threads(threads)
+        .counters(counters)
+        .run(std::slice::from_mut(out))
+        .expect("valid stream request")
+        .into_streamed()
+        .expect("one device streams")
+}
 
 fn main() {
     banner("Figure 10", "OOM streaming throughput, overall vs in-memory (a100)");
@@ -66,7 +86,7 @@ fn main() {
             let counters = Counters::new();
             let mut out = Matrix::zeros(t.dims[mode] as usize, rank);
             let factors = random_factors(&t.dims, rank, 1);
-            let rep = stream_mttkrp(&eng, mode, &factors, &mut out, threads, &counters);
+            let rep = stream(&eng, mode, &factors, &mut out, threads, &counters);
             let vol = counters.snapshot().volume_bytes();
             if mode == 0 {
                 mode0 = (rep.overall_s, vol, rep.transfer_s);
@@ -116,8 +136,14 @@ fn main() {
                 let ceng = eng.share_with_profile(prof.clone());
                 let counters = Counters::new();
                 let mut out = Matrix::zeros(t.dims[0] as usize, rank);
-                let rep =
-                    cluster_mttkrp(&ceng, 0, &factors, &mut out, threads, &counters);
+                let rep = StreamRequest::new(&ceng, 0)
+                    .job(&factors)
+                    .threads(threads)
+                    .counters(&counters)
+                    .run(std::slice::from_mut(&mut out))
+                    .expect("valid cluster request")
+                    .into_clustered()
+                    .expect("multi-device profile shards");
                 let vol = counters.snapshot().volume_bytes();
                 json.metric(
                     &format!(
@@ -231,7 +257,23 @@ fn main() {
         .join(format!("blco_fig10_prefetch_{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("create bench temp dir");
     let path = dir.join("tensor.blco");
-    BlcoStore::write(&b, &path).expect("write store");
+    // container v2 with per-block delta+varint compression: the disk
+    // leg measures what compression buys the out-of-memory tier
+    let summary =
+        BlcoStore::write_with(&b, &path, Codec::DeltaVarint).expect("write store");
+    {
+        let reader = BlcoStoreReader::open(&path).expect("open store");
+        json.metric("store_compress_ratio", reader.compression_ratio());
+        json.metric("store_read_amp", reader.read_amplification());
+        json.metric("oom_disk_bytes_compressed", summary.stored_bytes as f64);
+        println!(
+            "container v2: {} raw MiB -> {} stored MiB ({:.2}x), read amp {:.2}",
+            reader.raw_payload_bytes() / (1 << 20),
+            reader.stored_payload_bytes() / (1 << 20),
+            reader.compression_ratio(),
+            reader.read_amplification(),
+        );
+    }
     let probe = BlcoEngine::from_store_reader(
         BlcoStoreReader::open(&path).expect("open store"),
         profile.clone(),
@@ -250,7 +292,7 @@ fn main() {
     let factors = random_factors(&t.dims, rank, 1);
     let counters = Counters::new();
     let mut out = Matrix::zeros(t.dims[0] as usize, rank);
-    let rep = stream_mttkrp(&eng, 0, &factors, &mut out, threads, &counters);
+    let rep = stream(&eng, 0, &factors, &mut out, threads, &counters);
     let cache = eng.src.reader().expect("disk engine has a reader").cache_stats();
     std::fs::remove_dir_all(&dir).ok();
     assert!(

@@ -8,9 +8,7 @@
 //! Defaults to a fast down-scaled Amazon-like tensor; pass `amazon`,
 //! `patents` or `reddit` for the full Figure-10 presets (slower to build).
 
-use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::{ExecPath, MttkrpEngine};
-use blco::coordinator::streamer::stream_mttkrp;
 use blco::cpals::CpAlsOptions;
 use blco::device::model::throughput_tbps;
 use blco::device::{LinkTopology, Profile};
@@ -19,6 +17,7 @@ use blco::mttkrp::dense::Matrix;
 use blco::mttkrp::oracle::random_factors;
 use blco::tensor::{coo::CooTensor, datasets, synth};
 use blco::util::pool::default_threads;
+use blco::{StreamOutcome, StreamRequest};
 
 fn build(name: &str) -> (String, CooTensor, BlcoConfig, Profile) {
     if let Some(p) = datasets::by_name(name) {
@@ -60,14 +59,15 @@ fn main() {
     for mode in 0..t.order() {
         engine.counters.reset();
         let mut out = Matrix::zeros(t.dims[mode] as usize, rank);
-        let rep = stream_mttkrp(
-            &engine.eng,
-            mode,
-            &factors,
-            &mut out,
-            threads,
-            &engine.counters,
-        );
+        let rep = StreamRequest::new(&engine.eng, mode)
+            .job(&factors)
+            .devices(1)
+            .threads(threads)
+            .counters(&engine.counters)
+            .run(std::slice::from_mut(&mut out))
+            .expect("valid stream request")
+            .into_streamed()
+            .expect("one device streams");
         let vol = engine.counters.snapshot().volume_bytes();
         println!(
             "mode {mode}: {:>5.1} MiB shipped | overall {:.2} TB/s, in-memory {:.2} TB/s \
@@ -98,22 +98,41 @@ fn main() {
             let eng = engine.eng.share_with_profile(prof.clone());
             let counters = blco::device::Counters::new();
             let mut out = Matrix::zeros(t.dims[0] as usize, rank);
-            let rep = cluster_mttkrp(&eng, 0, &factors, &mut out, threads, &counters);
+            // one request either way: d = 1 routes to the single-device
+            // pipeline, d > 1 to the sharded cluster path
+            let outcome = StreamRequest::new(&eng, 0)
+                .job(&factors)
+                .threads(threads)
+                .counters(&counters)
+                .run(std::slice::from_mut(&mut out))
+                .expect("valid request");
             let vol = counters.snapshot().volume_bytes();
+            let (overall, stream_s, merge_s, imbalance, occupancy) = match &outcome {
+                StreamOutcome::Streamed(r) => {
+                    (r.overall_s, r.overall_s, 0.0, 1.0, r.overlap_efficiency())
+                }
+                StreamOutcome::Clustered(r) => (
+                    r.overall_s,
+                    r.stream_s,
+                    r.merge_s,
+                    r.imbalance(),
+                    r.link_occupancy(&prof),
+                ),
+            };
             if d == 1 {
-                base = rep.overall_s;
+                base = overall;
             }
             println!(
                 "  {:>9} links, {d} device(s): overall {:.2} TB/s \
                  ({:.2}x vs 1 dev) | stream {:.1} ms + merge {:.1} ms | \
                  imbalance {:.3} | link busy {:.0}%",
                 format!("{links:?}").to_lowercase(),
-                throughput_tbps(vol, rep.overall_s),
-                base / rep.overall_s.max(1e-12),
-                rep.stream_s * 1e3,
-                rep.merge_s * 1e3,
-                rep.imbalance(),
-                rep.link_occupancy(&prof) * 100.0,
+                throughput_tbps(vol, overall),
+                base / overall.max(1e-12),
+                stream_s * 1e3,
+                merge_s * 1e3,
+                imbalance,
+                occupancy * 100.0,
             );
         }
     }

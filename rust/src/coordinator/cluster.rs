@@ -131,6 +131,14 @@ impl ClusterReport {
 /// placement. The real computation accumulates into per-device partials
 /// merged by a tree reduction, so `out` ends exactly as the single-device
 /// path leaves it.
+///
+/// Deprecated wrapper over the sharded body
+/// [`StreamRequest`](super::request::StreamRequest) dispatches to; parity
+/// is pinned bit-for-bit by `coordinator::request`'s tests.
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).job(factors).run(..)"
+)]
 pub fn cluster_mttkrp(
     eng: &BlcoEngine,
     target: usize,
@@ -139,15 +147,16 @@ pub fn cluster_mttkrp(
     threads: usize,
     counters: &Counters,
 ) -> ClusterReport {
-    cluster_mttkrp_with(eng, target, factors, out, threads, counters, Placement::Greedy)
+    let sched =
+        StreamSchedule::build(eng, target, factors[0].cols, Placement::Greedy);
+    cluster_scheduled_impl(eng, &sched, factors, out, threads, counters)
 }
 
 /// [`cluster_mttkrp`] with an explicit placement policy.
-///
-/// Thin wrapper: plans a fresh [`StreamSchedule`] and runs
-/// [`cluster_mttkrp_scheduled`]. The CP-ALS loop goes through
-/// [`MttkrpEngine`](super::engine::MttkrpEngine)'s schedule cache instead,
-/// which reuses one plan per `(target, rank)` across iterations.
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).job(factors).placement(p).run(..)"
+)]
 pub fn cluster_mttkrp_with(
     eng: &BlcoEngine,
     target: usize,
@@ -158,13 +167,32 @@ pub fn cluster_mttkrp_with(
     placement: Placement,
 ) -> ClusterReport {
     let sched = StreamSchedule::build(eng, target, factors[0].cols, placement);
-    cluster_mttkrp_scheduled(eng, &sched, factors, out, threads, counters)
+    cluster_scheduled_impl(eng, &sched, factors, out, threads, counters)
 }
 
-/// Sharded streaming with a prebuilt plan: placement, per-batch transfer
-/// times and the queue/link skeleton all come from `sched`; only the
-/// kernels (and their exact counters) and the tree merge run here.
+/// Sharded streaming with a prebuilt plan.
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).job(factors).schedule(&sched).run(..)"
+)]
 pub fn cluster_mttkrp_scheduled(
+    eng: &BlcoEngine,
+    sched: &StreamSchedule,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    threads: usize,
+    counters: &Counters,
+) -> ClusterReport {
+    cluster_scheduled_impl(eng, sched, factors, out, threads, counters)
+}
+
+/// The sharded pipeline body every entry point resolves to —
+/// [`StreamRequest::run`](super::request::StreamRequest::run) with a
+/// multi-device count, the deprecated free-function wrappers above, and
+/// the facade's clustered route. Placement, per-batch transfer times and
+/// the queue/link skeleton all come from `sched`; only the kernels (and
+/// their exact counters) and the tree merge run here.
+pub(crate) fn cluster_scheduled_impl(
     eng: &BlcoEngine,
     sched: &StreamSchedule,
     factors: &[Matrix],

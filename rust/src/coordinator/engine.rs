@@ -16,16 +16,20 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::analysis::conflict::CertificateSet;
-use crate::coordinator::cluster::{cluster_mttkrp_scheduled, ClusterReport};
+use crate::coordinator::cluster::{cluster_scheduled_impl, ClusterReport};
 use crate::coordinator::schedule::{
     Placement, ScheduleCache, ScheduleStats, StreamSchedule,
 };
-use crate::coordinator::streamer::{stream_mttkrp_scheduled, StreamReport};
+use crate::coordinator::streamer::{stream_fused_impl, StreamReport};
 use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
 use crate::device::counters::Counters;
 use crate::device::profile::Profile;
+use crate::error::BlcoError;
 use crate::format::blco::{BlcoConfig, BlcoTensor};
-use crate::format::store::{BatchSource, BlcoStoreReader, CacheStats, StoreError};
+use crate::format::store::{
+    AppendSummary, BatchSource, BlcoStoreReader, BlcoStoreWriter, CacheStats, Codec,
+    StoreError,
+};
 use crate::mttkrp::blco::{BlcoEngine, Resolution};
 use crate::mttkrp::dense::Matrix;
 use crate::mttkrp::Mttkrp;
@@ -111,19 +115,95 @@ impl MttkrpEngine {
         Ok(Self::from_source(BatchSource::OnDisk(reader), profile))
     }
 
-    /// Construct over any [`BatchSource`].
+    /// Construct over any [`BatchSource`]. Panics on an invalid profile;
+    /// see [`try_from_source`](Self::try_from_source).
     pub fn from_source(src: BatchSource, profile: Profile) -> Self {
+        Self::try_from_source(src, profile).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`from_source`](Self::from_source), reporting an invalid profile
+    /// as [`BlcoError::InvalidProfile`] instead of panicking.
+    pub fn try_from_source(
+        src: BatchSource,
+        profile: Profile,
+    ) -> Result<Self, BlcoError> {
         let dims = src.dims().to_vec();
         let norm_x = src.norm();
-        MttkrpEngine {
-            eng: BlcoEngine::from_source(src, profile),
+        Ok(MttkrpEngine {
+            eng: BlcoEngine::try_from_source(src, profile)?,
             dims,
             norm_x,
             threads: default_threads(),
             counters: Counters::new(),
             schedules: ScheduleCache::new(),
             cache_schedules: true,
-        }
+        })
+    }
+
+    /// Append new non-zeros to this engine's **disk-backed** container as
+    /// an LSM-style delta segment, then reload: the reader reopens over
+    /// the grown file, the [`ScheduleCache`] is cleared (batch count,
+    /// bytes and costs all changed), any attached conflict certificates
+    /// are dropped (their fingerprint no longer describes the tensor),
+    /// and `dims`/`norm_x` refresh from the new header. Returns
+    /// [`BlcoError::InvalidRequest`] for a resident engine — appending is
+    /// a container-lifecycle operation, not a tensor edit.
+    pub fn append_from_coo(
+        &mut self,
+        t: &CooTensor,
+        codec: Option<Codec>,
+    ) -> Result<AppendSummary, BlcoError> {
+        let path = match self.eng.src.reader() {
+            Some(r) => r.path().to_path_buf(),
+            None => {
+                return Err(BlcoError::InvalidRequest {
+                    what: "append_from_coo requires a disk-backed engine \
+                           (BatchSource::OnDisk); resident tensors are \
+                           immutable shared payloads"
+                        .into(),
+                })
+            }
+        };
+        let summary = BlcoStoreWriter::append(&path, t, codec)?;
+        self.reload_store(&path)?;
+        Ok(summary)
+    }
+
+    /// Fold the container's pending delta segments into a fresh base
+    /// (see [`crate::tensor::ooc::compact`]) and reload. The compacted
+    /// file is bit-for-bit what a from-scratch rebuild of the same
+    /// non-zeros writes; schedules and certificates are invalidated like
+    /// [`append_from_coo`](Self::append_from_coo) — block boundaries
+    /// move when deltas merge into the base.
+    pub fn compact(&mut self) -> Result<crate::format::store::StoreSummary, BlcoError> {
+        let path = match self.eng.src.reader() {
+            Some(r) => r.path().to_path_buf(),
+            None => {
+                return Err(BlcoError::InvalidRequest {
+                    what: "compact requires a disk-backed engine \
+                           (BatchSource::OnDisk)"
+                        .into(),
+                })
+            }
+        };
+        let (summary, _stats) =
+            crate::tensor::ooc::compact(&path, None, self.backend(), None)
+                .map_err(|e| BlcoError::Build { what: format!("{e:#}") })?;
+        self.reload_store(&path)?;
+        Ok(summary)
+    }
+
+    /// Reopen the container at `path` and drop every structure derived
+    /// from the old block/batch layout.
+    fn reload_store(&mut self, path: &Path) -> Result<(), StoreError> {
+        let reader =
+            BlcoStoreReader::open_with_budget(path, self.eng.profile.host_mem_bytes)?;
+        self.eng.src = BatchSource::OnDisk(reader);
+        self.eng.certs = None;
+        self.schedules.clear();
+        self.dims = self.eng.src.dims().to_vec();
+        self.norm_x = self.eng.src.norm();
+        Ok(())
     }
 
     /// The shared tensor payload (cloning the `Arc`, never the data).
@@ -328,13 +408,18 @@ impl MttkrpEngine {
         if self.is_oom_for(target, rank) {
             let sched = self.schedule(target, rank);
             if self.eng.profile.devices > 1 {
-                let rep = cluster_mttkrp_scheduled(
+                let rep = cluster_scheduled_impl(
                     &self.eng, &sched, factors, out, threads, counters,
                 );
                 ExecPath::Clustered(rep)
             } else {
-                let rep = stream_mttkrp_scheduled(
-                    &self.eng, &sched, factors, out, threads, counters,
+                let rep = stream_fused_impl(
+                    &self.eng,
+                    &sched,
+                    &[factors],
+                    std::slice::from_mut(out),
+                    threads,
+                    counters,
                 );
                 ExecPath::Streamed(rep)
             }
@@ -663,11 +748,117 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "invalid profile")]
     fn engine_rejects_invalid_profile() {
         let t = synth::uniform(&[20, 20, 20], 500, 1);
         let mut p = Profile::a100();
         p.link_gbps = 0.0;
-        let _ = MttkrpEngine::from_coo(&t, p);
+        let b = Arc::new(BlcoTensor::from_coo(&t));
+        match MttkrpEngine::try_from_source(BatchSource::Resident(b), p) {
+            Err(BlcoError::InvalidProfile { reason, .. }) => {
+                assert!(reason.contains("link_gbps"), "{reason}");
+            }
+            Ok(_) => panic!("expected InvalidProfile"),
+            Err(other) => panic!("expected InvalidProfile, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn append_reloads_and_invalidates_derived_state() {
+        let t = synth::uniform(&[50, 40, 30], 6_000, 2);
+        let delta = synth::uniform(&[50, 40, 30], 1_000, 8);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        let p = {
+            let mut p = std::env::temp_dir();
+            p.push(format!("blco_eng_append_{}.blco", std::process::id()));
+            p
+        };
+        crate::format::store::BlcoStore::write_with(
+            &BlcoTensor::from_coo_with(&t, cfg),
+            &p,
+            Codec::DeltaVarint,
+        )
+        .unwrap();
+        let mut engine = MttkrpEngine::from_store(&p, Profile::tiny(32 * 1024))
+            .unwrap()
+            .with_conflict_analysis();
+        assert!(engine.certificates().is_some());
+        let factors = random_factors(&t.dims, 8, 5);
+        let (_before, _) = engine.mttkrp(0, &factors);
+        assert_eq!(engine.schedule_stats().built, 1);
+        let old_norm = engine.norm_x;
+
+        let s = engine.append_from_coo(&delta, None).unwrap();
+        assert_eq!(s.appended_nnz, delta.nnz());
+        assert_eq!(s.segments, 1);
+        // derived state is gone: certificates dropped, schedules cleared
+        assert!(engine.certificates().is_none(), "stale certs must drop");
+        assert_eq!(engine.source().nnz(), t.nnz() + delta.nnz());
+        assert!(engine.norm_x > old_norm);
+        // the same (target, rank) replans instead of hitting a stale plan
+        let (after, _) = engine.mttkrp(0, &factors);
+        let stats = engine.schedule_stats();
+        assert_eq!(stats.built, 2, "append must invalidate the plan");
+        assert_eq!(stats.hits, 0);
+
+        // the streamed answer over base+delta equals the oracle over the
+        // concatenated tensor (duplicates accumulate)
+        let mut both = t.clone();
+        for e in 0..delta.nnz() {
+            both.push(&delta.coord(e), delta.vals[e]);
+        }
+        let expect = mttkrp_oracle(&both, 0, &factors);
+        assert!(after.max_abs_diff(&expect) < 1e-9);
+
+        // compaction folds the delta; the result is the from-scratch
+        // container, so the streamed answer is bitwise what an engine over
+        // a scratch rebuild computes (block boundaries moved, so only
+        // 1e-9 closeness is guaranteed vs the pre-compaction answer)
+        let summary = engine.compact().unwrap();
+        assert_eq!(summary.nnz, both.nnz());
+        assert_eq!(engine.source().reader().unwrap().segments(), 0);
+        let (compacted, _) = engine.mttkrp(0, &factors);
+        assert!(compacted.max_abs_diff(&expect) < 1e-9);
+        let p2 = {
+            let mut p2 = std::env::temp_dir();
+            p2.push(format!("blco_eng_scratch_{}.blco", std::process::id()));
+            p2
+        };
+        crate::format::store::BlcoStore::write_with(
+            &BlcoTensor::from_coo_with(&both, cfg),
+            &p2,
+            Codec::DeltaVarint,
+        )
+        .unwrap();
+        assert_eq!(
+            std::fs::read(&p).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "compacted container must be bit-for-bit the scratch rebuild"
+        );
+        let scratch = MttkrpEngine::from_store(&p2, Profile::tiny(32 * 1024))
+            .unwrap()
+            .with_threads(engine.threads);
+        let (reference, _) = scratch.mttkrp(0, &factors);
+        assert!(
+            compacted
+                .data
+                .iter()
+                .zip(&reference.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "compacted streamed answer must match the scratch container's bits"
+        );
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn append_rejects_resident_engines() {
+        let t = synth::uniform(&[20, 20, 20], 500, 1);
+        let mut engine = MttkrpEngine::from_coo(&t, Profile::a100());
+        let delta = synth::uniform(&[20, 20, 20], 50, 2);
+        assert!(matches!(
+            engine.append_from_coo(&delta, None),
+            Err(BlcoError::InvalidRequest { .. })
+        ));
+        assert!(matches!(engine.compact(), Err(BlcoError::InvalidRequest { .. })));
     }
 }

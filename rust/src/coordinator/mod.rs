@@ -3,10 +3,12 @@
 //! sharded generalization with load-balanced batch placement and a
 //! tree-merged output ([`cluster`]), the streaming schedule subsystem
 //! that reifies and memoizes the per-`(target, rank)` plan both executors
-//! consume ([`schedule`]), and the high-level [`engine::MttkrpEngine`]
-//! facade that picks the in-memory, streamed or clustered path per
-//! *target mode* × device, exposes CP-ALS, and (optionally) routes
-//! per-block compute through the AOT-compiled PJRT executable.
+//! consume ([`schedule`]), the [`request::StreamRequest`] builder — the
+//! one public entry point both executors now sit behind — and the
+//! high-level [`engine::MttkrpEngine`] facade that picks the in-memory,
+//! streamed or clustered path per *target mode* × device, exposes CP-ALS,
+//! and (optionally) routes per-block compute through the AOT-compiled
+//! PJRT executable.
 //!
 //! # Pipeline model
 //!
@@ -34,5 +36,6 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod request;
 pub mod schedule;
 pub mod streamer;

@@ -1,0 +1,589 @@
+//! The one front door for streamed MTTKRP execution.
+//!
+//! Historically the coordinator grew six free functions — `stream_mttkrp`,
+//! `stream_mttkrp_scheduled`, `stream_mttkrp_fused`, `cluster_mttkrp`,
+//! `cluster_mttkrp_with`, `cluster_mttkrp_scheduled` — one per
+//! (planning × fusion × device-count) corner. [`StreamRequest`] collapses
+//! them into a builder with a single [`run`](StreamRequest::run) entry
+//! point:
+//!
+//! ```no_run
+//! # use blco::coordinator::request::StreamRequest;
+//! # use blco::mttkrp::blco::BlcoEngine;
+//! # use blco::mttkrp::dense::Matrix;
+//! # fn demo(eng: &BlcoEngine, factors: &[Matrix], out: &mut Matrix) {
+//! let outcome = StreamRequest::new(eng, 0)
+//!     .job(factors)
+//!     .threads(4)
+//!     .run(std::slice::from_mut(out))
+//!     .expect("valid request");
+//! println!("streamed {} bytes", outcome.bytes());
+//! # }
+//! ```
+//!
+//! Routing is by resolved device count: `1` runs the single-device
+//! pipelined streamer (any number of fused jobs ships the tensor over the
+//! host link once), `eng.profile.devices` runs the sharded cluster
+//! streamer with a tree-merged output (single job only). A prebuilt
+//! [`StreamSchedule`] short-circuits planning — the CP-ALS loop goes
+//! through [`MttkrpEngine`](super::engine::MttkrpEngine)'s schedule cache,
+//! which hands its memoized plan to a request per iteration.
+//!
+//! Malformed combinations return [`BlcoError::InvalidRequest`] instead of
+//! panicking; the six legacy names survive as `#[deprecated]` wrappers
+//! whose operation order is pinned bit-for-bit against `run()` by this
+//! module's tests.
+
+use crate::coordinator::cluster::{cluster_scheduled_impl, ClusterReport};
+use crate::coordinator::schedule::{Placement, StreamSchedule};
+use crate::coordinator::streamer::{stream_fused_impl, StreamReport};
+use crate::device::counters::Counters;
+use crate::error::BlcoError;
+use crate::mttkrp::blco::BlcoEngine;
+use crate::mttkrp::dense::Matrix;
+use crate::util::pool::{default_threads, ExecBackend};
+
+/// What a [`StreamRequest`] ran and how it went: the single-device
+/// pipeline returns a [`StreamReport`], the sharded cluster path a
+/// [`ClusterReport`]. Common scalar accessors cover callers that only
+/// care about the modelled clock and traffic.
+#[derive(Clone, Debug)]
+pub enum StreamOutcome {
+    /// single-device pipelined streaming (possibly a fused job group)
+    Streamed(StreamReport),
+    /// multi-device sharded streaming with a tree-merged output
+    Clustered(ClusterReport),
+}
+
+impl StreamOutcome {
+    /// The streamed report, if the request ran single-device.
+    pub fn streamed(&self) -> Option<&StreamReport> {
+        match self {
+            StreamOutcome::Streamed(r) => Some(r),
+            StreamOutcome::Clustered(_) => None,
+        }
+    }
+
+    /// The cluster report, if the request ran sharded.
+    pub fn clustered(&self) -> Option<&ClusterReport> {
+        match self {
+            StreamOutcome::Streamed(_) => None,
+            StreamOutcome::Clustered(r) => Some(r),
+        }
+    }
+
+    /// Owning form of [`streamed`](Self::streamed).
+    pub fn into_streamed(self) -> Option<StreamReport> {
+        match self {
+            StreamOutcome::Streamed(r) => Some(r),
+            StreamOutcome::Clustered(_) => None,
+        }
+    }
+
+    /// Owning form of [`clustered`](Self::clustered).
+    pub fn into_clustered(self) -> Option<ClusterReport> {
+        match self {
+            StreamOutcome::Streamed(_) => None,
+            StreamOutcome::Clustered(r) => Some(r),
+        }
+    }
+
+    /// Pipeline-simulated end-to-end seconds (cluster: including merge).
+    pub fn overall_s(&self) -> f64 {
+        match self {
+            StreamOutcome::Streamed(r) => r.overall_s,
+            StreamOutcome::Clustered(r) => r.overall_s,
+        }
+    }
+
+    /// Total host→device bytes shipped over the interconnect.
+    pub fn bytes(&self) -> usize {
+        match self {
+            StreamOutcome::Streamed(r) => r.bytes,
+            StreamOutcome::Clustered(r) => r.bytes,
+        }
+    }
+}
+
+/// Builder for one streamed MTTKRP execution over a [`BlcoEngine`].
+///
+/// Construct with [`new`](Self::new), add at least one job, then call
+/// [`run`](Self::run). Every knob the six legacy free functions spread
+/// over their signatures is a builder method here:
+///
+/// | legacy function               | equivalent request                            |
+/// |-------------------------------|-----------------------------------------------|
+/// | `stream_mttkrp`               | `.job(f)` *(devices resolve to 1)*            |
+/// | `stream_mttkrp_scheduled`     | `.job(f).schedule(&s)`                        |
+/// | `stream_mttkrp_fused`         | `.fused(&jobs).schedule(&s)`                  |
+/// | `cluster_mttkrp`              | `.job(f)` *(multi-device profile)*            |
+/// | `cluster_mttkrp_with`         | `.job(f).placement(p)`                        |
+/// | `cluster_mttkrp_scheduled`    | `.job(f).schedule(&s)` *(multi-device plan)*  |
+///
+/// The resolved device count decides the path: a prebuilt schedule's
+/// `devices`, else an explicit [`devices`](Self::devices) override, else
+/// `eng.profile.devices`. Only `1` (single-device pipeline) and the
+/// profile's own count (sharded cluster) are runnable; anything else —
+/// like fusing several jobs across devices — is
+/// [`BlcoError::InvalidRequest`].
+pub struct StreamRequest<'a> {
+    eng: &'a BlcoEngine,
+    target: usize,
+    jobs: Vec<&'a [Matrix]>,
+    schedule: Option<&'a StreamSchedule>,
+    devices: Option<usize>,
+    threads: usize,
+    counters: Option<&'a Counters>,
+    placement: Placement,
+}
+
+impl<'a> StreamRequest<'a> {
+    /// Start a request for a mode-`target` MTTKRP of `eng`'s tensor.
+    /// Threads default to [`default_threads`]; placement to
+    /// [`Placement::Greedy`].
+    pub fn new(eng: &'a BlcoEngine, target: usize) -> Self {
+        StreamRequest {
+            eng,
+            target,
+            jobs: Vec::new(),
+            schedule: None,
+            devices: None,
+            threads: default_threads(),
+            counters: None,
+            placement: Placement::Greedy,
+        }
+    }
+
+    /// Append one MTTKRP job (a full factor set; `factors[target]` is
+    /// ignored like everywhere else). Call repeatedly — or use
+    /// [`fused`](Self::fused) — to build a fused group that ships every
+    /// BLCO batch over the host link once and runs each job's kernel on
+    /// it while resident.
+    pub fn job(mut self, factors: &'a [Matrix]) -> Self {
+        self.jobs.push(factors);
+        self
+    }
+
+    /// Append a whole fused job group at once; `jobs[j]` and `outs[j]`
+    /// of [`run`](Self::run) correspond.
+    pub fn fused(mut self, jobs: &[&'a [Matrix]]) -> Self {
+        self.jobs.extend_from_slice(jobs);
+        self
+    }
+
+    /// Use a prebuilt plan instead of planning inside `run()`. The
+    /// schedule's `(target, rank, devices)` must match the request.
+    pub fn schedule(mut self, sched: &'a StreamSchedule) -> Self {
+        self.schedule = Some(sched);
+        self
+    }
+
+    /// Override the device count: `1` forces the single-device pipeline
+    /// even on a cluster profile (the legacy `stream_mttkrp` behaviour);
+    /// the profile's own count forces the sharded path.
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = Some(devices);
+        self
+    }
+
+    /// CPU threads for the real per-batch kernels.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// [`threads`](Self::threads) from an execution backend.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.threads = backend.threads();
+        self
+    }
+
+    /// Accumulate exact per-batch counters (and merge traffic on the
+    /// cluster path) into `counters`.
+    pub fn counters(mut self, counters: &'a Counters) -> Self {
+        self.counters = Some(counters);
+        self
+    }
+
+    /// Placement policy when `run()` plans a multi-device schedule
+    /// itself; ignored when a prebuilt schedule is supplied.
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Execute the request, writing job `j`'s MTTKRP into `outs[j]`.
+    ///
+    /// Validates the whole combination up front — jobs present, one
+    /// output per job, consistent rank, output shapes, target in range,
+    /// schedule compatibility, a runnable device count — and returns
+    /// [`BlcoError::InvalidRequest`] (or the planner's
+    /// [`BlcoError::InvalidProfile`]) instead of panicking. Operation
+    /// order inside each path is identical to the legacy free functions,
+    /// so results match them bit-for-bit.
+    pub fn run(self, outs: &mut [Matrix]) -> Result<StreamOutcome, BlcoError> {
+        let dims = self.eng.dims();
+        if self.jobs.is_empty() {
+            return Err(BlcoError::InvalidRequest {
+                what: "no jobs: add at least one factor set with .job() or .fused()"
+                    .into(),
+            });
+        }
+        if self.target >= dims.len() {
+            return Err(BlcoError::InvalidRequest {
+                what: format!(
+                    "target mode {} out of range for an order-{} tensor",
+                    self.target,
+                    dims.len()
+                ),
+            });
+        }
+        if outs.len() != self.jobs.len() {
+            return Err(BlcoError::InvalidRequest {
+                what: format!(
+                    "one output per job: {} jobs but {} outputs",
+                    self.jobs.len(),
+                    outs.len()
+                ),
+            });
+        }
+        for (j, factors) in self.jobs.iter().enumerate() {
+            if factors.len() != dims.len() {
+                return Err(BlcoError::InvalidRequest {
+                    what: format!(
+                        "job {j}: {} factor matrices for an order-{} tensor",
+                        factors.len(),
+                        dims.len()
+                    ),
+                });
+            }
+        }
+        let rank = self.jobs[0][0].cols;
+        for (j, factors) in self.jobs.iter().enumerate() {
+            if factors[0].cols != rank {
+                return Err(BlcoError::InvalidRequest {
+                    what: format!(
+                        "fused jobs must share one rank: job 0 has {rank}, job {j} \
+                         has {}",
+                        factors[0].cols
+                    ),
+                });
+            }
+        }
+        let nrows = dims[self.target] as usize;
+        for (j, out) in outs.iter().enumerate() {
+            if out.rows != nrows || out.cols != rank {
+                return Err(BlcoError::InvalidRequest {
+                    what: format!(
+                        "output {j} is {}x{}, the mode-{} MTTKRP needs {nrows}x{rank}",
+                        out.rows, out.cols, self.target
+                    ),
+                });
+            }
+        }
+
+        let profile_devices = self.eng.profile.devices.max(1);
+        let devices = self.devices.unwrap_or(match self.schedule {
+            Some(s) => s.devices,
+            None => profile_devices,
+        });
+        if devices != 1 && devices != profile_devices {
+            return Err(BlcoError::InvalidRequest {
+                what: format!(
+                    "devices must be 1 (single-device pipeline) or the profile's \
+                     own count {profile_devices}, got {devices}"
+                ),
+            });
+        }
+        if devices > 1 && self.jobs.len() > 1 {
+            return Err(BlcoError::InvalidRequest {
+                what: format!(
+                    "fused job groups ({} jobs) only run on the single-device \
+                     pipeline; the {devices}-device sharded path takes one job",
+                    self.jobs.len()
+                ),
+            });
+        }
+        if let Some(s) = self.schedule {
+            if s.target != self.target || s.rank != rank || s.devices != devices {
+                return Err(BlcoError::InvalidRequest {
+                    what: format!(
+                        "schedule was planned for (target {}, rank {}, {} devices), \
+                         the request is (target {}, rank {rank}, {devices} devices)",
+                        s.target, s.rank, s.devices, self.target
+                    ),
+                });
+            }
+        }
+
+        let local_counters;
+        let counters = match self.counters {
+            Some(c) => c,
+            None => {
+                local_counters = Counters::new();
+                &local_counters
+            }
+        };
+
+        if devices == 1 {
+            let report = match self.schedule {
+                Some(s) => stream_fused_impl(
+                    self.eng, s, &self.jobs, outs, self.threads, counters,
+                ),
+                None => {
+                    let s =
+                        StreamSchedule::try_single_device(self.eng, self.target, rank)?;
+                    stream_fused_impl(
+                        self.eng, &s, &self.jobs, outs, self.threads, counters,
+                    )
+                }
+            };
+            Ok(StreamOutcome::Streamed(report))
+        } else {
+            let factors = self.jobs[0];
+            let out = &mut outs[0];
+            let report = match self.schedule {
+                Some(s) => cluster_scheduled_impl(
+                    self.eng, s, factors, out, self.threads, counters,
+                ),
+                None => {
+                    let s = StreamSchedule::try_build(
+                        self.eng,
+                        self.target,
+                        rank,
+                        self.placement,
+                    )?;
+                    cluster_scheduled_impl(
+                        self.eng, &s, factors, out, self.threads, counters,
+                    )
+                }
+            };
+            Ok(StreamOutcome::Clustered(report))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::Profile;
+    use crate::format::blco::{BlcoConfig, BlcoTensor};
+    use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
+    use crate::tensor::synth;
+
+    fn engine(devices: usize) -> (crate::tensor::coo::CooTensor, BlcoEngine) {
+        let t = synth::uniform(&[60, 50, 40], 8_000, 3);
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let b = BlcoTensor::from_coo_with(&t, cfg);
+        let mut p = Profile::tiny(1 << 16);
+        p.devices = devices;
+        let eng = BlcoEngine::new(b, p);
+        (t, eng)
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn request_matches_the_deprecated_wrappers_bitwise() {
+        use crate::coordinator::cluster::cluster_mttkrp;
+        use crate::coordinator::streamer::{stream_mttkrp, stream_mttkrp_fused};
+
+        // single-device path vs stream_mttkrp
+        let (t, eng) = engine(1);
+        let factors = random_factors(&t.dims, 8, 5);
+        let mut old = Matrix::zeros(t.dims[1] as usize, 8);
+        let mut new = Matrix::zeros(t.dims[1] as usize, 8);
+        let ra = stream_mttkrp(&eng, 1, &factors, &mut old, 4, &Counters::new());
+        let outcome = StreamRequest::new(&eng, 1)
+            .job(&factors)
+            .threads(4)
+            .run(std::slice::from_mut(&mut new))
+            .unwrap();
+        let rb = outcome.streamed().unwrap();
+        assert_eq!(old.data, new.data, "bit-for-bit vs stream_mttkrp");
+        assert_eq!(ra.bytes, rb.bytes);
+        assert_eq!(ra.transfer_s, rb.transfer_s);
+        assert_eq!(ra.overall_s, rb.overall_s, "same modelled clock");
+
+        // fused path vs stream_mttkrp_fused under one prebuilt schedule
+        let sets: Vec<Vec<Matrix>> =
+            [31u64, 37].iter().map(|&s| random_factors(&t.dims, 8, s)).collect();
+        let refs: Vec<&[Matrix]> = sets.iter().map(|f| f.as_slice()).collect();
+        let sched = StreamSchedule::single_device(&eng, 0, 8);
+        let mut old2: Vec<Matrix> =
+            (0..2).map(|_| Matrix::zeros(t.dims[0] as usize, 8)).collect();
+        let mut new2: Vec<Matrix> =
+            (0..2).map(|_| Matrix::zeros(t.dims[0] as usize, 8)).collect();
+        let rf =
+            stream_mttkrp_fused(&eng, &sched, &refs, &mut old2, 4, &Counters::new());
+        let of = StreamRequest::new(&eng, 0)
+            .fused(&refs)
+            .schedule(&sched)
+            .threads(4)
+            .run(&mut new2)
+            .unwrap();
+        for (o, n) in old2.iter().zip(&new2) {
+            assert_eq!(o.data, n.data, "fused bit-for-bit");
+        }
+        assert_eq!(rf.overall_s, of.overall_s());
+        assert_eq!(rf.bytes, of.bytes());
+
+        // sharded path vs cluster_mttkrp on a 3-device profile
+        let (t, eng) = engine(3);
+        let factors = random_factors(&t.dims, 8, 11);
+        let mut old = Matrix::zeros(t.dims[2] as usize, 8);
+        let mut new = Matrix::zeros(t.dims[2] as usize, 8);
+        let rc = cluster_mttkrp(&eng, 2, &factors, &mut old, 4, &Counters::new());
+        let oc = StreamRequest::new(&eng, 2)
+            .job(&factors)
+            .threads(4)
+            .run(std::slice::from_mut(&mut new))
+            .unwrap();
+        let rn = oc.clustered().unwrap();
+        assert_eq!(old.data, new.data, "bit-for-bit vs cluster_mttkrp");
+        assert_eq!(rc.bytes, rn.bytes);
+        assert_eq!(rc.merge_bytes, rn.merge_bytes);
+        assert_eq!(rc.overall_s, rn.overall_s, "same modelled clock");
+        assert_eq!(rn.devices, 3);
+    }
+
+    #[test]
+    fn results_match_the_oracle_on_both_paths() {
+        for devices in [1usize, 2] {
+            let (t, eng) = engine(devices);
+            let factors = random_factors(&t.dims, 8, 7);
+            for target in 0..3 {
+                let expect = mttkrp_oracle(&t, target, &factors);
+                let mut out = Matrix::zeros(t.dims[target] as usize, 8);
+                let cnt = Counters::new();
+                let outcome = StreamRequest::new(&eng, target)
+                    .job(&factors)
+                    .threads(4)
+                    .counters(&cnt)
+                    .run(std::slice::from_mut(&mut out))
+                    .unwrap();
+                assert!(
+                    out.max_abs_diff(&expect) < 1e-9,
+                    "devices {devices} target {target}"
+                );
+                assert!(outcome.bytes() >= t.nnz() * 16);
+                assert!(cnt.snapshot().launches > 0, "counters were threaded");
+                match devices {
+                    1 => assert!(outcome.streamed().is_some()),
+                    _ => assert!(outcome.clustered().is_some()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn devices_override_forces_the_single_device_pipeline() {
+        // a cluster profile can still run the legacy single-device path
+        let (t, eng) = engine(4);
+        let factors = random_factors(&t.dims, 8, 13);
+        let expect = mttkrp_oracle(&t, 0, &factors);
+        let mut out = Matrix::zeros(t.dims[0] as usize, 8);
+        let outcome = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .devices(1)
+            .threads(4)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap();
+        assert!(outcome.streamed().is_some(), "forced single-device");
+        assert!(out.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn malformed_requests_are_structured_errors() {
+        let (t, eng) = engine(2);
+        let factors = random_factors(&t.dims, 8, 17);
+        let other = random_factors(&t.dims, 4, 17);
+        let mut out = Matrix::zeros(t.dims[0] as usize, 8);
+
+        // no jobs
+        let e = StreamRequest::new(&eng, 0)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap_err();
+        assert!(matches!(&e, BlcoError::InvalidRequest { what } if what.contains("job")));
+
+        // target out of range
+        let e = StreamRequest::new(&eng, 9)
+            .job(&factors)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("target"))
+        );
+
+        // output count mismatch
+        let e = StreamRequest::new(&eng, 0).job(&factors).run(&mut []).unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("output"))
+        );
+
+        // fused ranks disagree
+        let mut outs =
+            vec![Matrix::zeros(t.dims[0] as usize, 8), Matrix::zeros(t.dims[0] as usize, 4)];
+        let e = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .job(&other)
+            .devices(1)
+            .run(&mut outs)
+            .unwrap_err();
+        assert!(matches!(&e, BlcoError::InvalidRequest { what } if what.contains("rank")));
+
+        // fused group on the sharded path
+        let mut outs =
+            vec![Matrix::zeros(t.dims[0] as usize, 8), Matrix::zeros(t.dims[0] as usize, 8)];
+        let e = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .job(&factors)
+            .run(&mut outs)
+            .unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("fused"))
+        );
+
+        // device count neither 1 nor the profile's
+        let e = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .devices(3)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("devices"))
+        );
+
+        // schedule planned for a different shape
+        let sched = StreamSchedule::single_device(&eng, 1, 8);
+        let e = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .schedule(&sched)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("schedule"))
+        );
+
+        // wrong output shape
+        let mut bad = Matrix::zeros(3, 8);
+        let e = StreamRequest::new(&eng, 0)
+            .job(&factors)
+            .devices(1)
+            .run(std::slice::from_mut(&mut bad))
+            .unwrap_err();
+        assert!(
+            matches!(&e, BlcoError::InvalidRequest { what } if what.contains("output"))
+        );
+
+        // errors render readably through the crate error type
+        let e = StreamRequest::new(&eng, 0)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap_err();
+        assert!(e.to_string().contains("invalid stream request"));
+    }
+}

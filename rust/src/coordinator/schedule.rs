@@ -31,6 +31,7 @@ use std::sync::{Arc, Mutex};
 use crate::analysis::conflict::SyncClass;
 use crate::device::counters::Snapshot;
 use crate::device::model::{device_time, transfer_time};
+use crate::error::BlcoError;
 use crate::mttkrp::blco::BlcoEngine;
 
 /// Batch → device placement policy.
@@ -181,32 +182,57 @@ pub struct StreamSchedule {
 
 impl StreamSchedule {
     /// Plan a sharded streamed MTTKRP across the profile's declared
-    /// device count.
+    /// device count. Panics on an invalid profile; see
+    /// [`try_build`](Self::try_build) for the `Result` form.
     pub fn build(
         eng: &BlcoEngine,
         target: usize,
         rank: usize,
         placement: Placement,
     ) -> Self {
-        Self::build_for_devices(eng, target, rank, placement, eng.profile.devices.max(1))
+        Self::try_build(eng, target, rank, placement).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`build`](Self::build), reporting an invalid profile as
+    /// [`BlcoError::InvalidProfile`] instead of panicking.
+    pub fn try_build(
+        eng: &BlcoEngine,
+        target: usize,
+        rank: usize,
+        placement: Placement,
+    ) -> Result<Self, BlcoError> {
+        Self::try_build_for_devices(eng, target, rank, placement, eng.profile.devices.max(1))
     }
 
     /// Plan for the single-device pipeline regardless of what the profile
     /// declares — what the plain
     /// [`stream_mttkrp`](super::streamer::stream_mttkrp) wrapper uses.
+    /// Panics on an invalid profile.
     pub fn single_device(eng: &BlcoEngine, target: usize, rank: usize) -> Self {
-        Self::build_for_devices(eng, target, rank, Placement::Greedy, 1)
+        Self::try_single_device(eng, target, rank).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    fn build_for_devices(
+    /// [`single_device`](Self::single_device) as a `Result`.
+    pub fn try_single_device(
+        eng: &BlcoEngine,
+        target: usize,
+        rank: usize,
+    ) -> Result<Self, BlcoError> {
+        Self::try_build_for_devices(eng, target, rank, Placement::Greedy, 1)
+    }
+
+    fn try_build_for_devices(
         eng: &BlcoEngine,
         target: usize,
         rank: usize,
         placement: Placement,
         devices: usize,
-    ) -> Self {
-        if let Err(e) = eng.profile.validate() {
-            panic!("invalid profile {:?}: {e}", eng.profile.name);
+    ) -> Result<Self, BlcoError> {
+        if let Err(reason) = eng.profile.validate() {
+            return Err(BlcoError::InvalidProfile {
+                profile: eng.profile.name.to_string(),
+                reason,
+            });
         }
         let devices = devices.max(1);
         let queues = eng.profile.queues.max(1);
@@ -245,7 +271,7 @@ impl StreamSchedule {
             None => vec![SyncClass::Atomic; nbatches],
         };
 
-        StreamSchedule {
+        Ok(StreamSchedule {
             target,
             rank,
             placement,
@@ -259,7 +285,7 @@ impl StreamSchedule {
             queue_of,
             link_of,
             sync,
-        }
+        })
     }
 
     /// Modelled makespan of this plan (heaviest device's total cost).
@@ -345,6 +371,15 @@ impl ScheduleCache {
             built: self.built.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
         }
+    }
+
+    /// Drop every memoized plan. Called when the underlying container
+    /// changes shape (an appended delta segment re-batches the tensor, so
+    /// every cached cost/assignment is stale); the build/hit counters keep
+    /// counting across the clear — they track planning work done, not
+    /// current contents.
+    pub fn clear(&self) {
+        self.map.lock().expect("schedule cache poisoned").clear();
     }
 
     /// Number of distinct plans currently memoized.
@@ -487,10 +522,29 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "invalid profile")]
     fn schedule_build_revalidates_the_profile() {
         let mut eng = engine(1);
         eng.profile.hbm_gbps = f64::NAN;
-        let _ = StreamSchedule::single_device(&eng, 0, 8);
+        match StreamSchedule::try_single_device(&eng, 0, 8) {
+            Err(BlcoError::InvalidProfile { reason, .. }) => {
+                assert!(reason.contains("hbm_gbps"), "{reason}");
+            }
+            other => panic!("expected InvalidProfile, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_clear_drops_plans_but_keeps_counters() {
+        let eng = engine(1);
+        let cache = ScheduleCache::new();
+        let _ = cache.get_or_build(&eng, 0, 8, Placement::Greedy);
+        let _ = cache.get_or_build(&eng, 1, 8, Placement::Greedy);
+        assert_eq!(cache.len(), 2);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().built, 2, "counters survive the clear");
+        // the next request rebuilds
+        let _ = cache.get_or_build(&eng, 0, 8, Placement::Greedy);
+        assert_eq!(cache.stats(), ScheduleStats { built: 3, hits: 0 });
     }
 }

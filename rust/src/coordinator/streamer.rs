@@ -70,11 +70,16 @@ impl StreamReport {
 /// in-memory path (BLCO's opportunistic conflict resolution makes blocks
 /// independent, Section 4.2).
 ///
-/// Thin wrapper: plans a fresh single-device [`StreamSchedule`] and runs
-/// [`stream_mttkrp_scheduled`]. Callers issuing the same `(target, rank)`
-/// repeatedly (the CP-ALS loop) should go through
-/// [`MttkrpEngine`](super::engine::MttkrpEngine), whose schedule cache
-/// amortizes the planning.
+/// Deprecated wrapper: plans a fresh single-device [`StreamSchedule`] and
+/// runs the pipeline body [`StreamRequest`] dispatches to, so
+/// `StreamRequest::new(eng, target).job(factors).devices(1)` reproduces it
+/// bit-for-bit (pinned by `coordinator::request`'s tests).
+///
+/// [`StreamRequest`]: super::request::StreamRequest
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).job(factors).devices(1).run(..)"
+)]
 pub fn stream_mttkrp(
     eng: &BlcoEngine,
     target: usize,
@@ -84,16 +89,27 @@ pub fn stream_mttkrp(
     counters: &Counters,
 ) -> StreamReport {
     let sched = StreamSchedule::single_device(eng, target, factors[0].cols);
-    stream_mttkrp_scheduled(eng, &sched, factors, out, threads, counters)
+    stream_fused_impl(
+        eng,
+        &sched,
+        &[factors],
+        std::slice::from_mut(out),
+        threads,
+        counters,
+    )
 }
 
 /// Stream with a prebuilt plan: per-batch wire bytes, transfer times and
 /// the queue skeleton all come from `sched`; only the kernels themselves
 /// (and their exact counters) run here.
 ///
-/// Thin wrapper over [`stream_mttkrp_fused`] with a single job — identical
-/// operation order, so prebuilt-plan parity with [`stream_mttkrp`] holds
-/// bit-for-bit.
+/// Deprecated wrapper over the same single-job body
+/// [`StreamRequest`](super::request::StreamRequest) runs, so prebuilt-plan
+/// parity holds bit-for-bit.
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).job(factors).schedule(&sched).run(..)"
+)]
 pub fn stream_mttkrp_scheduled(
     eng: &BlcoEngine,
     sched: &StreamSchedule,
@@ -102,7 +118,7 @@ pub fn stream_mttkrp_scheduled(
     threads: usize,
     counters: &Counters,
 ) -> StreamReport {
-    stream_mttkrp_fused(
+    stream_fused_impl(
         eng,
         sched,
         &[factors],
@@ -119,11 +135,30 @@ pub fn stream_mttkrp_scheduled(
 /// fused group of `k` jobs pays the Figure-10 interconnect cost once
 /// instead of `k` times. `factor_sets[j]` and `outs[j]` are job `j`'s
 /// factors and output; all jobs must match the schedule's rank.
-///
-/// The pipeline clock is the single-device streamer's — one serialized
-/// link, one serialized compute engine, queue reservations from the plan —
-/// with each batch's compute slot holding the *sum* of the group's kernels.
+#[deprecated(
+    note = "use coordinator::request::StreamRequest — \
+            StreamRequest::new(eng, target).fused(&jobs).run(..)"
+)]
 pub fn stream_mttkrp_fused(
+    eng: &BlcoEngine,
+    sched: &StreamSchedule,
+    factor_sets: &[&[Matrix]],
+    outs: &mut [Matrix],
+    threads: usize,
+    counters: &Counters,
+) -> StreamReport {
+    stream_fused_impl(eng, sched, factor_sets, outs, threads, counters)
+}
+
+/// The single-device pipeline body every entry point resolves to —
+/// [`StreamRequest::run`](super::request::StreamRequest::run) with
+/// `devices == 1`, the deprecated free-function wrappers above, and the
+/// facade's streamed route.
+///
+/// The pipeline clock: one serialized link, one serialized compute
+/// engine, queue reservations from the plan — with each batch's compute
+/// slot holding the *sum* of the fused group's kernels.
+pub(crate) fn stream_fused_impl(
     eng: &BlcoEngine,
     sched: &StreamSchedule,
     factor_sets: &[&[Matrix]],
@@ -145,8 +180,8 @@ pub fn stream_mttkrp_fused(
     );
     assert_eq!(
         sched.devices, 1,
-        "single-device streamer given a {}-device schedule (use \
-         cluster_mttkrp_scheduled, or plan with StreamSchedule::single_device)",
+        "single-device streamer given a {}-device schedule (route through \
+         StreamRequest, or plan with StreamSchedule::single_device)",
         sched.devices
     );
     assert_eq!(
@@ -231,9 +266,25 @@ pub fn stream_volume(counters: &Counters) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::StreamRequest;
     use crate::format::blco::{BlcoConfig, BlcoTensor};
     use crate::mttkrp::oracle::{mttkrp_oracle, random_factors};
     use crate::tensor::synth;
+
+    fn stream(
+        eng: &BlcoEngine,
+        target: usize,
+        factors: &[Matrix],
+        out: &mut Matrix,
+    ) -> StreamReport {
+        StreamRequest::new(eng, target)
+            .job(factors)
+            .threads(4)
+            .run(std::slice::from_mut(out))
+            .unwrap()
+            .into_streamed()
+            .unwrap()
+    }
 
     fn small_batched_engine() -> (crate::tensor::coo::CooTensor, BlcoEngine) {
         let t = synth::uniform(&[60, 50, 40], 8_000, 3);
@@ -257,7 +308,7 @@ mod tests {
         for target in 0..3 {
             let expect = mttkrp_oracle(&t, target, &factors);
             let mut out = Matrix::zeros(t.dims[target] as usize, 8);
-            let rep = stream_mttkrp(&eng, target, &factors, &mut out, 4, &Counters::new());
+            let rep = stream(&eng, target, &factors, &mut out);
             assert!(out.max_abs_diff(&expect) < 1e-9, "target {target}");
             assert_eq!(rep.batches.len(), eng.num_batches());
         }
@@ -268,7 +319,7 @@ mod tests {
         let (t, eng) = small_batched_engine();
         let factors = random_factors(&t.dims, 8, 7);
         let mut out = Matrix::zeros(t.dims[0] as usize, 8);
-        let rep = stream_mttkrp(&eng, 0, &factors, &mut out, 4, &Counters::new());
+        let rep = stream(&eng, 0, &factors, &mut out);
         // with overlap, overall < serial sum of transfer + compute
         assert!(rep.overall_s < rep.transfer_s + rep.compute_s);
         // both serialized resources lower-bound the pipeline
@@ -285,11 +336,19 @@ mod tests {
         let sched = StreamSchedule::single_device(&eng, 1, 8);
         let mut a = Matrix::zeros(t.dims[1] as usize, 8);
         let mut b = Matrix::zeros(t.dims[1] as usize, 8);
-        let ra = stream_mttkrp(&eng, 1, &factors, &mut a, 4, &Counters::new());
-        let rb =
-            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut b, 4, &Counters::new());
-        let rb2 =
-            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut b, 4, &Counters::new());
+        let ra = stream(&eng, 1, &factors, &mut a);
+        let scheduled = |out: &mut Matrix| {
+            StreamRequest::new(&eng, 1)
+                .job(&factors)
+                .schedule(&sched)
+                .threads(4)
+                .run(std::slice::from_mut(out))
+                .unwrap()
+                .into_streamed()
+                .unwrap()
+        };
+        let rb = scheduled(&mut b);
+        let rb2 = scheduled(&mut b);
         assert_eq!(ra.bytes, rb.bytes);
         assert_eq!(ra.transfer_s, rb.transfer_s, "identical modelled transfers");
         assert_eq!(rb.transfer_s, rb2.transfer_s, "schedule reuse is stable");
@@ -310,17 +369,28 @@ mod tests {
         let mut outs: Vec<Matrix> =
             seeds.iter().map(|_| Matrix::zeros(t.dims[0] as usize, rank)).collect();
         let sched = StreamSchedule::single_device(&eng, 0, rank);
-        let fused =
-            stream_mttkrp_fused(&eng, &sched, &refs, &mut outs, 4, &Counters::new());
+        let fused = StreamRequest::new(&eng, 0)
+            .fused(&refs)
+            .schedule(&sched)
+            .threads(4)
+            .run(&mut outs)
+            .unwrap()
+            .into_streamed()
+            .unwrap();
         let mut serial_overall = 0.0;
         let mut serial_bytes = 0usize;
         for (factors, out) in factor_sets.iter().zip(&outs) {
             let expect = mttkrp_oracle(&t, 0, factors);
             assert!(out.max_abs_diff(&expect) < 1e-9);
             let mut solo = Matrix::zeros(t.dims[0] as usize, rank);
-            let rep = stream_mttkrp_scheduled(
-                &eng, &sched, factors, &mut solo, 4, &Counters::new(),
-            );
+            let rep = StreamRequest::new(&eng, 0)
+                .job(factors)
+                .schedule(&sched)
+                .threads(4)
+                .run(std::slice::from_mut(&mut solo))
+                .unwrap()
+                .into_streamed()
+                .unwrap();
             serial_overall += rep.overall_s;
             serial_bytes += rep.bytes;
         }
@@ -340,16 +410,22 @@ mod tests {
         let sched = StreamSchedule::single_device(&eng, 2, 8);
         let mut a = Matrix::zeros(t.dims[2] as usize, 8);
         let mut b = Matrix::zeros(t.dims[2] as usize, 8);
-        let ra =
-            stream_mttkrp_scheduled(&eng, &sched, &factors, &mut a, 4, &Counters::new());
-        let rb = stream_mttkrp_fused(
-            &eng,
-            &sched,
-            &[&factors],
-            std::slice::from_mut(&mut b),
-            4,
-            &Counters::new(),
-        );
+        let ra = StreamRequest::new(&eng, 2)
+            .job(&factors)
+            .schedule(&sched)
+            .threads(4)
+            .run(std::slice::from_mut(&mut a))
+            .unwrap()
+            .into_streamed()
+            .unwrap();
+        let rb = StreamRequest::new(&eng, 2)
+            .fused(&[&factors])
+            .schedule(&sched)
+            .threads(4)
+            .run(std::slice::from_mut(&mut b))
+            .unwrap()
+            .into_streamed()
+            .unwrap();
         assert_eq!(ra.bytes, rb.bytes);
         assert_eq!(ra.transfer_s, rb.transfer_s);
         assert_eq!(ra.overall_s, rb.overall_s, "same modelled clock");
@@ -368,7 +444,7 @@ mod tests {
         let eng = eng_parts;
         let factors = random_factors(&t.dims, 8, 9);
         let mut out = Matrix::zeros(t.dims[0] as usize, 8);
-        let rep = stream_mttkrp(&eng, 0, &factors, &mut out, 4, &Counters::new());
+        let rep = stream(&eng, 0, &factors, &mut out);
         assert!(rep.transfer_s > rep.compute_s);
         let eff = rep.overlap_efficiency();
         assert!(eff > 0.9 && eff <= 1.0, "efficiency {eff}");

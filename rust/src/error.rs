@@ -1,0 +1,129 @@
+//! Crate-level error taxonomy.
+//!
+//! Library consumers get `Result` everywhere the CLI used to catch
+//! panics: container faults ([`StoreError`]) and admission rejections
+//! ([`AdmissionError`]) convert into [`BlcoError`] with `?`, and the
+//! construction/validation paths that historically `assert!`ed
+//! (`BlcoConfig` shape checks, [`Profile::validate`] at engine and
+//! schedule construction, malformed [`StreamRequest`]s) surface as the
+//! structured variants below. The panicking entry points survive as thin
+//! wrappers over the `try_` forms for callers that prefer to crash.
+//!
+//! [`Profile::validate`]: crate::device::profile::Profile::validate
+//! [`StreamRequest`]: crate::coordinator::request::StreamRequest
+
+use std::fmt;
+
+use crate::format::store::StoreError;
+use crate::service::admission::AdmissionError;
+
+/// Any failure the blco library reports through `Result`.
+///
+/// Not `Clone`/`PartialEq`: [`StoreError`] wraps `std::io::Error`.
+/// Match on variants (`matches!`) in tests instead.
+#[derive(Debug)]
+pub enum BlcoError {
+    /// the `.blco` container is unreadable, unwritable, or corrupt
+    Store(StoreError),
+    /// the serving layer declined the job (working set, quota, …)
+    Admission(AdmissionError),
+    /// a construction knob is out of range (`BlcoConfig`, build budgets)
+    InvalidConfig {
+        /// which knob, and what shape it must have
+        what: String,
+    },
+    /// a device [`Profile`](crate::device::profile::Profile) failed
+    /// validation — its cost model would divide by zero/NaN
+    InvalidProfile {
+        /// profile name as reported by the device table
+        profile: String,
+        /// the failing field, verbatim from `Profile::validate`
+        reason: String,
+    },
+    /// a [`StreamRequest`](crate::coordinator::request::StreamRequest)
+    /// combination that has no defined execution path
+    InvalidRequest {
+        /// what was asked for and why it cannot run
+        what: String,
+    },
+    /// an external-memory build or compaction failed partway (spill I/O,
+    /// budget too small, replay mismatch) — see [`crate::tensor::ooc`]
+    Build {
+        /// the failing stage's rendered error chain
+        what: String,
+    },
+}
+
+impl fmt::Display for BlcoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlcoError::Store(e) => write!(f, "container error: {e}"),
+            BlcoError::Admission(e) => write!(f, "admission rejected: {e}"),
+            BlcoError::InvalidConfig { what } => {
+                write!(f, "invalid configuration: {what}")
+            }
+            BlcoError::InvalidProfile { profile, reason } => {
+                write!(f, "invalid device profile {profile:?}: {reason}")
+            }
+            BlcoError::InvalidRequest { what } => {
+                write!(f, "invalid stream request: {what}")
+            }
+            BlcoError::Build { what } => {
+                write!(f, "external-memory build failed: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BlcoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BlcoError::Store(e) => Some(e),
+            BlcoError::Admission(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<StoreError> for BlcoError {
+    fn from(e: StoreError) -> Self {
+        BlcoError::Store(e)
+    }
+}
+
+impl From<AdmissionError> for BlcoError {
+    fn from(e: AdmissionError) -> Self {
+        BlcoError::Admission(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_and_display() {
+        let e: BlcoError = StoreError::Truncated {
+            what: "header".into(),
+            needed: 64,
+            available: 8,
+        }
+        .into();
+        assert!(matches!(e, BlcoError::Store(_)));
+        assert!(e.to_string().contains("container error"));
+        assert!(std::error::Error::source(&e).is_some());
+
+        let e = BlcoError::InvalidProfile {
+            profile: "a100".into(),
+            reason: "hbm_gbps must be finite and > 0, got 0".into(),
+        };
+        assert!(e.to_string().contains("a100"));
+        assert!(e.to_string().contains("hbm_gbps"));
+
+        let e = BlcoError::InvalidRequest {
+            what: "fused jobs across devices".into(),
+        };
+        assert!(e.to_string().contains("stream request"));
+        assert!(std::error::Error::source(&e).is_none());
+    }
+}

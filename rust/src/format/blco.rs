@@ -99,20 +99,36 @@ impl BlcoTensor {
         Self::from_coo_with(t, BlcoConfig::default())
     }
 
+    /// [`try_from_coo_with`](Self::try_from_coo_with) for callers that
+    /// prefer to crash on a bad config (the historical behavior).
     pub fn from_coo_with(t: &CooTensor, config: BlcoConfig) -> Self {
-        // a zero work-group would make the batching maps loop forever, and
-        // a zero block budget degenerates the adaptive blocking — reject
-        // both up front with a readable message
-        assert!(
-            config.workgroup > 0,
-            "BlcoConfig.workgroup must be > 0 (the per-launch work-group \
-             size tiles each block; 0 would never advance)"
-        );
-        assert!(
-            config.max_block_nnz > 0,
-            "BlcoConfig.max_block_nnz must be > 0 (the adaptive-blocking \
-             nnz budget; 0 would split every non-zero into its own block)"
-        );
+        Self::try_from_coo_with(t, config).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Construct from COO, rejecting degenerate configs as a structured
+    /// [`BlcoError::InvalidConfig`] instead of a panic: a zero work-group
+    /// would make the batching maps loop forever, and a zero block budget
+    /// degenerates the adaptive blocking.
+    pub fn try_from_coo_with(
+        t: &CooTensor,
+        config: BlcoConfig,
+    ) -> Result<Self, crate::error::BlcoError> {
+        if config.workgroup == 0 {
+            return Err(crate::error::BlcoError::InvalidConfig {
+                what: "BlcoConfig.workgroup must be > 0 (the per-launch \
+                       work-group size tiles each block; 0 would never \
+                       advance)"
+                    .into(),
+            });
+        }
+        if config.max_block_nnz == 0 {
+            return Err(crate::error::BlcoError::InvalidConfig {
+                what: "BlcoConfig.max_block_nnz must be > 0 (the \
+                       adaptive-blocking nnz budget; 0 would split every \
+                       non-zero into its own block)"
+                    .into(),
+            });
+        }
         let mut stages = Stages::new();
         let spec = BlcoSpec::with_budget(&t.dims, config.inblock_budget);
         let nnz = t.nnz();
@@ -195,14 +211,14 @@ impl BlcoTensor {
         let batches = Self::build_batches(&blocks, &config);
         stages.mark("batch");
 
-        BlcoTensor {
+        Ok(BlcoTensor {
             spec,
             blocks,
             batches,
             config,
             nnz,
             stages: std::sync::Arc::new(stages),
-        }
+        })
     }
 
     fn build_batches(
@@ -355,7 +371,12 @@ mod tests {
     #[test]
     fn capacity_split_respected() {
         let t = synth::uniform(&[64, 64, 64], 10_000, 3);
-        let cfg = BlcoConfig { max_block_nnz: 1_000, workgroup: 128, threads: 2, ..Default::default() };
+        let cfg = BlcoConfig {
+            max_block_nnz: 1_000,
+            workgroup: 128,
+            threads: 2,
+            ..Default::default()
+        };
         let b = BlcoTensor::from_coo_with(&t, cfg);
         assert!(b.blocks.len() >= 10);
         for blk in &b.blocks {
@@ -466,19 +487,28 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "workgroup")]
     fn zero_workgroup_is_rejected() {
-        // regression: workgroup 0 used to infinite-loop build_batches
+        // regression: workgroup 0 used to infinite-loop build_batches;
+        // now a structured error (panic only through the legacy wrapper)
         let t = synth::uniform(&[16, 16, 16], 200, 7);
         let cfg = BlcoConfig { workgroup: 0, ..Default::default() };
-        let _ = BlcoTensor::from_coo_with(&t, cfg);
+        match BlcoTensor::try_from_coo_with(&t, cfg) {
+            Err(crate::error::BlcoError::InvalidConfig { what }) => {
+                assert!(what.contains("workgroup"), "{what}");
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 
     #[test]
-    #[should_panic(expected = "max_block_nnz")]
     fn zero_block_budget_is_rejected() {
         let t = synth::uniform(&[16, 16, 16], 200, 7);
         let cfg = BlcoConfig { max_block_nnz: 0, ..Default::default() };
-        let _ = BlcoTensor::from_coo_with(&t, cfg);
+        match BlcoTensor::try_from_coo_with(&t, cfg) {
+            Err(crate::error::BlcoError::InvalidConfig { what }) => {
+                assert!(what.contains("max_block_nnz"), "{what}");
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 }

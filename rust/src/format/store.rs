@@ -10,34 +10,66 @@
 //! bounded-memory LRU [`BlockCache`], so the resident working set is the
 //! cache budget — not the tensor size.
 //!
-//! # Container layout (version 1, everything little-endian)
+//! # Container layout (version 2, everything little-endian)
 //!
 //! ```text
 //! [0..8)    magic  "BLCOSTOR"
-//! [8..12)   u32    version (currently 1)
+//! [8..12)   u32    version (currently 2; version-1 files still open)
 //! [12..20)  u64    header length H (bytes of the header blob)
 //! [20..20+H)       header blob:
 //!                    u32        order
 //!                    u64 × ord  dims
-//!                    u64        nnz
-//!                    f64        Frobenius norm of the values
+//!                    u64        nnz (of the base payload region)
+//!                    f64        Frobenius norm of the base values
 //!                    u64        max_block_nnz   (BlcoConfig)
 //!                    u32        workgroup       (BlcoConfig)
 //!                    u32        inblock_budget  (BlcoConfig)
-//!                    u64        number of blocks B
-//!                    B × { u64 key, u64 nnz, u32 payload crc32 }
+//!                    u32        default codec tag (v2 only)
+//!                    u64        number of base blocks B
+//!                    B × { u64 key, u64 nnz, u8 codec,
+//!                          u64 stored payload length, u32 stored crc32 }
 //! [20+H..24+H) u32  crc32 of the header blob
-//! [24+H..)         block payloads, in block order, back to back:
-//!                    nnz × u64  in-block indices (lidx)
-//!                    nnz × u64  value bits (f64::to_bits)
+//! [24+H..)         base block payloads, in block order, back to back,
+//!                  each `stored length` bytes in its `codec`'s encoding
+//! [...)            zero or more appended delta segments, each:
+//!                    [0..8)   magic "BLCODSEG"
+//!                    [8..16)  u64  segment blob length S
+//!                    [16..16+S)    segment blob:
+//!                               u64   segment nnz
+//!                               f64   sum of squared segment values
+//!                               u64   number of segment blocks
+//!                               n × { same 29-byte entry as the header }
+//!                    [16+S..20+S) u32 crc32 of the segment blob
+//!                    [20+S..)     segment block payloads, back to back
 //! ```
 //!
-//! Per-block payload offsets/lengths are derived (`nnz * 16` each, packed
-//! in order), so a truncated file is detected by a single size check at
-//! open. The [`BlcoSpec`] bit layout and the batch → work-group maps are
-//! pure functions of `(dims, inblock_budget)` and the per-block nnz list
-//! respectively, so both are rebuilt at open instead of being stored —
-//! the reader's batches are bit-identical to the resident tensor's.
+//! A block's *stored* payload is its [`Codec`]'s encoding of the logical
+//! payload (`nnz × u64` in-block indices then `nnz × u64` value bits):
+//! sorted linearized indices delta-encode + varint-pack extremely well,
+//! and values optionally byte-shuffle + run-length-encode. The per-block
+//! crc32 covers the **stored** bytes, so a corrupted compressed payload
+//! surfaces as [`StoreError::ChecksumMismatch`] before any decode runs.
+//! The [`BlockCache`] holds and budgets *decompressed* payloads (that is
+//! what competes for `host_mem_bytes`), while `Counters::bytes_disk`
+//! charges the *stored* bytes actually read — which is how compression
+//! lowers the modelled host-link traffic.
+//!
+//! Appends land as LSM-style delta segments at the end of the file — the
+//! base header is never rewritten. Readers fold segment blocks into the
+//! same block/batch machinery (duplicates across base and delta simply
+//! accumulate in MTTKRP, which is the semantics of appending nonzeros);
+//! [`read_amplification`](BlcoStoreReader::read_amplification) reports
+//! `1 + segments` until [`crate::tensor::ooc::compact`] merges segments
+//! back into a fresh base.
+//!
+//! Version-1 containers (raw payloads, 20-byte index entries, no codec
+//! field, no segments) are still read in full; writing always produces
+//! version 2.
+//!
+//! The fixed-layout regions (20-byte preamble, 29-byte index entries) are
+//! parsed zero-copy through `#[repr(C)]` byte-array overlays
+//! ([`RawPrefix`], [`RawIndexEntry`]) validated in place, instead of
+//! field-by-field deserialization.
 //!
 //! Every open-time failure is a structured [`StoreError`]; payload
 //! corruption discovered later (a crc mismatch on a lazily loaded block)
@@ -46,7 +78,7 @@
 //! a half-streamed MTTKRP has no useful partial answer.
 
 use std::collections::HashMap;
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -55,12 +87,23 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::device::counters::{Counters, Snapshot};
 use crate::format::blco::{build_batches_from_nnz, Batch, BlcoConfig, Block, BlcoTensor};
 use crate::linear::encode::BlcoSpec;
+use crate::tensor::coo::CooTensor;
 
 /// First 8 bytes of every `.blco` container.
 pub const STORE_MAGIC: [u8; 8] = *b"BLCOSTOR";
 
-/// Container version this build writes and reads.
-pub const STORE_VERSION: u32 = 1;
+/// First 8 bytes of every appended delta segment.
+pub const SEGMENT_MAGIC: [u8; 8] = *b"BLCODSEG";
+
+/// Container version this build writes. Version 1 is still readable.
+pub const STORE_VERSION: u32 = 2;
+
+/// Header bytes of one version-1 block-index entry (key, nnz, crc).
+const V1_ENTRY_BYTES: usize = 20;
+
+/// Header bytes of one version-2 block-index entry
+/// (key, nnz, codec, stored length, crc) — see [`RawIndexEntry`].
+const V2_ENTRY_BYTES: usize = 29;
 
 /// Default [`BlockCache`] budget when the caller does not pass one
 /// (CLI `inspect`, ad-hoc opens). Engines pass `Profile::host_mem_bytes`.
@@ -99,7 +142,7 @@ impl std::fmt::Display for StoreError {
             StoreError::UnsupportedVersion { found, supported } => write!(
                 f,
                 "unsupported container version {found} (this build reads \
-                 version {supported})"
+                 versions 1..={supported})"
             ),
             StoreError::Truncated { what, needed, available } => write!(
                 f,
@@ -155,6 +198,340 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !c
 }
 
+// --------------------------------------------------------------- codecs
+
+/// Per-block payload encoding. The writer records the codec **actually
+/// used** in each index entry, so a block whose encoding would expand
+/// (adversarially random indices, incompressible values) silently falls
+/// back to [`Codec::None`] — stored payloads never exceed the raw
+/// `nnz * 16` bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// raw little-endian payload: `nnz × u64` lidx then `nnz × u64` bits
+    #[default]
+    None,
+    /// lidx as zigzag-varint deltas (sorted streams pack to ~1–2 B each);
+    /// values raw
+    DeltaVarint,
+    /// lidx as zigzag-varint deltas; value bits byte-plane transposed,
+    /// each plane raw or run-length encoded, whichever is smaller (the
+    /// high exponent/sign planes of real-world values are near-constant)
+    Shuffled,
+}
+
+impl Codec {
+    /// Wire tag recorded in the block index.
+    pub fn tag(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::DeltaVarint => 1,
+            Codec::Shuffled => 2,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag); `None` for unknown wire values.
+    pub fn from_tag(t: u8) -> Option<Codec> {
+        match t {
+            0 => Some(Codec::None),
+            1 => Some(Codec::DeltaVarint),
+            2 => Some(Codec::Shuffled),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::DeltaVarint => "delta-varint",
+            Codec::Shuffled => "shuffled",
+        }
+    }
+
+    /// Parse a CLI-facing name (`--codec`); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "none" => Some(Codec::None),
+            "delta-varint" => Some(Codec::DeltaVarint),
+            "shuffled" => Some(Codec::Shuffled),
+            _ => None,
+        }
+    }
+}
+
+/// Map a signed delta onto the unsigned varint domain: 0, -1, 1, -2, ...
+/// become 0, 1, 2, 3, ... so small deltas of either sign stay short.
+fn zigzag(v: i64) -> u64 {
+    ((v as u64) << 1) ^ ((v >> 63) as u64)
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// LEB128: 7 value bits per byte, high bit = continuation.
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Decode one LEB128 varint at `*pos`, advancing it. `None` when the
+/// stream ends mid-varint (a u64 never needs more than 10 bytes, so the
+/// shift loop is bounded and cannot overflow).
+fn take_varint(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    for shift in (0..64).step_by(7) {
+        let b = *buf.get(*pos)?;
+        *pos += 1;
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Serialize one block's **raw** payload — `nnz × u64` in-block indices
+/// then `nnz × u64` value bits, all little-endian — into the reusable
+/// `buf`. This is the [`Codec::None`] stored form and the logical form
+/// every codec round-trips to.
+fn serialize_block_payload(buf: &mut Vec<u8>, lidx: &[u64], vals: &[f64]) {
+    debug_assert_eq!(lidx.len(), vals.len());
+    buf.clear();
+    buf.reserve(lidx.len() * 16);
+    for &l in lidx {
+        buf.extend_from_slice(&l.to_le_bytes());
+    }
+    for &v in vals {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Append the zigzag-varint delta encoding of the (sorted, but not
+/// required to be) lidx stream to `buf`.
+fn encode_lidx_deltas(buf: &mut Vec<u8>, lidx: &[u64]) {
+    let mut prev = 0u64;
+    for &l in lidx {
+        put_varint(buf, zigzag(l.wrapping_sub(prev) as i64));
+        prev = l;
+    }
+}
+
+/// Decode `nnz` zigzag-varint lidx deltas from `raw` at `*pos`.
+fn decode_lidx_deltas(
+    raw: &[u8],
+    pos: &mut usize,
+    nnz: usize,
+    what: &str,
+) -> Result<Vec<u64>, StoreError> {
+    let mut lidx = Vec::with_capacity(nnz);
+    let mut prev = 0u64;
+    for _ in 0..nnz {
+        let z = take_varint(raw, pos).ok_or_else(|| StoreError::Malformed {
+            what: format!("{what}: varint lidx stream ends early"),
+        })?;
+        prev = prev.wrapping_add(unzigzag(z) as u64);
+        lidx.push(prev);
+    }
+    Ok(lidx)
+}
+
+/// Append one byte plane of the value bits: `[flag][data]`, where flag 0
+/// is the raw `nnz` bytes and flag 1 a run-length encoding (varint run
+/// length ≥ 1, then the byte), whichever is smaller. Deterministic, so
+/// the two-pass writer serializes identical bytes both times.
+fn encode_value_plane(buf: &mut Vec<u8>, plane: &[u8]) {
+    let mut rle: Vec<u8> = Vec::new();
+    let mut i = 0usize;
+    while i < plane.len() {
+        let b = plane[i];
+        let mut run = 1usize;
+        while i + run < plane.len() && plane[i + run] == b {
+            run += 1;
+        }
+        put_varint(&mut rle, run as u64);
+        rle.push(b);
+        i += run;
+    }
+    if rle.len() < plane.len() {
+        buf.push(1);
+        buf.extend_from_slice(&rle);
+    } else {
+        buf.push(0);
+        buf.extend_from_slice(plane);
+    }
+}
+
+/// Decode one value byte plane of `nnz` bytes from `raw` at `*pos`.
+fn decode_value_plane(
+    raw: &[u8],
+    pos: &mut usize,
+    nnz: usize,
+    what: &str,
+) -> Result<Vec<u8>, StoreError> {
+    let malformed = |detail: &str| StoreError::Malformed {
+        what: format!("{what}: {detail}"),
+    };
+    let flag = *raw.get(*pos).ok_or_else(|| malformed("value plane ends early"))?;
+    *pos += 1;
+    match flag {
+        0 => {
+            if *pos + nnz > raw.len() {
+                return Err(malformed("raw value plane ends early"));
+            }
+            let plane = raw[*pos..*pos + nnz].to_vec();
+            *pos += nnz;
+            Ok(plane)
+        }
+        1 => {
+            let mut plane = Vec::with_capacity(nnz);
+            while plane.len() < nnz {
+                let run = take_varint(raw, pos)
+                    .ok_or_else(|| malformed("RLE value plane ends early"))?
+                    as usize;
+                let b = *raw
+                    .get(*pos)
+                    .ok_or_else(|| malformed("RLE value plane ends early"))?;
+                *pos += 1;
+                if run == 0 || plane.len() + run > nnz {
+                    return Err(malformed("RLE run does not tile the value plane"));
+                }
+                plane.resize(plane.len() + run, b);
+            }
+            Ok(plane)
+        }
+        _ => Err(malformed("unknown value plane flag")),
+    }
+}
+
+/// Encode one block's payload into `buf` with the requested codec,
+/// returning the codec **actually stored**: when the encoding would not
+/// beat the raw `nnz * 16` bytes, the block falls back to [`Codec::None`]
+/// (deterministically — both writer passes make the same choice).
+fn encode_block_payload(
+    buf: &mut Vec<u8>,
+    lidx: &[u64],
+    vals: &[f64],
+    requested: Codec,
+) -> Codec {
+    debug_assert_eq!(lidx.len(), vals.len());
+    if requested == Codec::None {
+        serialize_block_payload(buf, lidx, vals);
+        return Codec::None;
+    }
+    buf.clear();
+    encode_lidx_deltas(buf, lidx);
+    match requested {
+        Codec::None => unreachable!("handled above"),
+        Codec::DeltaVarint => {
+            for &v in vals {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        Codec::Shuffled => {
+            // byte-plane transpose: plane p holds byte p of every value's
+            // little-endian bit pattern; near-constant high planes RLE away
+            let mut plane = Vec::with_capacity(vals.len());
+            for p in 0..8 {
+                plane.clear();
+                for &v in vals {
+                    plane.push(v.to_bits().to_le_bytes()[p]);
+                }
+                encode_value_plane(buf, &plane);
+            }
+        }
+    }
+    if buf.len() >= lidx.len() * 16 {
+        serialize_block_payload(buf, lidx, vals);
+        Codec::None
+    } else {
+        requested
+    }
+}
+
+/// Decode a stored payload of `nnz` entries back to `(lidx, vals)`. The
+/// caller has already verified the stored crc, so any failure here means
+/// the *writer* produced garbage (or the codec tag lies) — reported as
+/// [`StoreError::Malformed`], never a panic. The whole stored slice must
+/// be consumed: trailing bytes are malformed.
+fn decode_block_payload(
+    raw: &[u8],
+    nnz: usize,
+    codec: Codec,
+    what: &str,
+) -> Result<(Vec<u64>, Vec<f64>), StoreError> {
+    match codec {
+        Codec::None => {
+            if raw.len() != nnz * 16 {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "{what}: raw payload is {} bytes, expected {}",
+                        raw.len(),
+                        nnz * 16
+                    ),
+                });
+            }
+            let mut lidx = Vec::with_capacity(nnz);
+            for w in 0..nnz {
+                lidx.push(u64::from_le_bytes(
+                    raw[w * 8..w * 8 + 8].try_into().unwrap(),
+                ));
+            }
+            let vbase = nnz * 8;
+            let mut vals = Vec::with_capacity(nnz);
+            for w in 0..nnz {
+                vals.push(f64::from_bits(u64::from_le_bytes(
+                    raw[vbase + w * 8..vbase + w * 8 + 8].try_into().unwrap(),
+                )));
+            }
+            Ok((lidx, vals))
+        }
+        Codec::DeltaVarint => {
+            let mut pos = 0usize;
+            let lidx = decode_lidx_deltas(raw, &mut pos, nnz, what)?;
+            if raw.len() - pos != nnz * 8 {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "{what}: value stream is {} bytes, expected {}",
+                        raw.len() - pos,
+                        nnz * 8
+                    ),
+                });
+            }
+            let mut vals = Vec::with_capacity(nnz);
+            for w in 0..nnz {
+                vals.push(f64::from_bits(u64::from_le_bytes(
+                    raw[pos + w * 8..pos + w * 8 + 8].try_into().unwrap(),
+                )));
+            }
+            Ok((lidx, vals))
+        }
+        Codec::Shuffled => {
+            let mut pos = 0usize;
+            let lidx = decode_lidx_deltas(raw, &mut pos, nnz, what)?;
+            let mut bits = vec![0u64; nnz];
+            for p in 0..8 {
+                let plane = decode_value_plane(raw, &mut pos, nnz, what)?;
+                for (w, &b) in plane.iter().enumerate() {
+                    bits[w] |= (b as u64) << (8 * p);
+                }
+            }
+            if pos != raw.len() {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "{what}: {} trailing bytes after the shuffled payload",
+                        raw.len() - pos
+                    ),
+                });
+            }
+            Ok((lidx, bits.into_iter().map(f64::from_bits).collect()))
+        }
+    }
+}
+
 // ------------------------------------------------- little-endian helpers
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -207,6 +584,82 @@ impl<'a> Cursor<'a> {
     }
 }
 
+// ------------------------------------------------- zero-copy fixed layout
+
+/// The 20-byte file preamble, overlaid in place (SNIPPETS-style
+/// `Ref::new_from_prefix` idiom, without the external crate): a `repr(C)`
+/// struct of byte arrays has align 1, no padding, and every bit pattern
+/// valid, so a plain pointer cast over the read buffer is sound.
+#[repr(C)]
+struct RawPrefix {
+    magic: [u8; 8],
+    version: [u8; 4],
+    header_len: [u8; 8],
+}
+
+const _: () = assert!(std::mem::size_of::<RawPrefix>() == 20);
+
+impl RawPrefix {
+    /// Overlay the preamble on a 20-byte buffer.
+    fn overlay(buf: &[u8; 20]) -> &RawPrefix {
+        // SAFETY: RawPrefix is repr(C) of byte arrays only — size 20
+        // (const-asserted), align 1, no padding, any bit pattern valid —
+        // and the borrow of `buf` pins the bytes for the returned lifetime.
+        unsafe { &*(buf.as_ptr() as *const RawPrefix) }
+    }
+
+    fn version(&self) -> u32 {
+        u32::from_le_bytes(self.version)
+    }
+
+    fn header_len(&self) -> u64 {
+        u64::from_le_bytes(self.header_len)
+    }
+}
+
+/// One 29-byte version-2 block-index entry, overlaid in place over the
+/// header (or segment) blob instead of field-by-field deserialization.
+#[repr(C)]
+struct RawIndexEntry {
+    key: [u8; 8],
+    nnz: [u8; 8],
+    codec: u8,
+    stored_len: [u8; 8],
+    crc: [u8; 4],
+}
+
+const _: () = assert!(std::mem::size_of::<RawIndexEntry>() == V2_ENTRY_BYTES);
+
+impl RawIndexEntry {
+    /// Overlay `count` entries on a `count * 29`-byte region of a blob.
+    fn overlay_slice(region: &[u8], count: usize) -> &[RawIndexEntry] {
+        debug_assert_eq!(region.len(), count * V2_ENTRY_BYTES);
+        // SAFETY: RawIndexEntry is repr(C) of u8/byte arrays only — size
+        // 29 (const-asserted), align 1, no padding, any bit pattern
+        // valid; the region's length is exactly count * 29 and the borrow
+        // of `region` pins the bytes for the returned lifetime.
+        unsafe {
+            std::slice::from_raw_parts(region.as_ptr() as *const RawIndexEntry, count)
+        }
+    }
+
+    fn key(&self) -> u64 {
+        u64::from_le_bytes(self.key)
+    }
+
+    fn nnz(&self) -> u64 {
+        u64::from_le_bytes(self.nnz)
+    }
+
+    fn stored_len(&self) -> u64 {
+        u64::from_le_bytes(self.stored_len)
+    }
+
+    fn crc(&self) -> u32 {
+        u32::from_le_bytes(self.crc)
+    }
+}
+
 // ------------------------------------------------------------ the writer
 
 /// Summary of a written container (what `blco convert` prints).
@@ -215,33 +668,47 @@ pub struct StoreSummary {
     pub path: PathBuf,
     pub file_bytes: u64,
     pub header_bytes: usize,
+    /// logical (decompressed) payload bytes: `nnz * 16`
     pub payload_bytes: usize,
+    /// payload bytes actually on disk after per-block encoding
+    pub stored_bytes: usize,
+    /// codec the writer was asked for (individual blocks may have fallen
+    /// back to [`Codec::None`]; the block index records the truth)
+    pub codec: Codec,
     pub blocks: usize,
     pub batches: usize,
     pub nnz: usize,
 }
 
-/// Per-block header-index entry: `(key, nnz, payload crc32)`. The single
-/// currency both writers ([`BlcoStore::write`] and [`BlcoStoreWriter`])
-/// serialize the block index from, so their headers are byte-identical by
-/// construction.
-pub type BlockMeta = (u64, u64, u32);
-
-/// Serialize one block's payload — `nnz × u64` in-block indices then
-/// `nnz × u64` value bits, all little-endian — into the reusable `buf`.
-fn serialize_block_payload(buf: &mut Vec<u8>, lidx: &[u64], vals: &[f64]) {
-    debug_assert_eq!(lidx.len(), vals.len());
-    buf.clear();
-    buf.reserve(lidx.len() * 16);
-    for &l in lidx {
-        buf.extend_from_slice(&l.to_le_bytes());
-    }
-    for &v in vals {
-        buf.extend_from_slice(&v.to_bits().to_le_bytes());
-    }
+/// Summary of one [`BlcoStoreWriter::append`] delta segment.
+#[derive(Clone, Debug)]
+pub struct AppendSummary {
+    pub path: PathBuf,
+    pub appended_nnz: usize,
+    /// blocks in the new segment
+    pub blocks: usize,
+    /// bytes the file grew by (segment framing + blob + payloads)
+    pub segment_bytes: u64,
+    /// delta segments now pending on the container, this one included
+    pub segments: usize,
 }
 
-/// Build the version-1 header blob from streamed metadata alone. Both
+/// Per-block header-index currency both writers ([`BlcoStore::write_with`]
+/// and [`BlcoStoreWriter`]) serialize the block index from, so their
+/// headers are byte-identical by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockIndexEntry {
+    pub key: u64,
+    pub nnz: u64,
+    /// codec actually stored (after any fallback)
+    pub codec: Codec,
+    /// stored payload length in bytes
+    pub stored_len: u64,
+    /// crc32 of the stored payload bytes
+    pub crc: u32,
+}
+
+/// Build the version-2 header blob from streamed metadata alone. Both
 /// writers call this, which is what guarantees the out-of-core path's
 /// container is bit-for-bit the in-memory one (given equal blocks).
 fn build_header_blob(
@@ -249,9 +716,10 @@ fn build_header_blob(
     nnz: u64,
     norm: f64,
     config: &BlcoConfig,
-    metas: &[BlockMeta],
+    default_codec: Codec,
+    entries: &[BlockIndexEntry],
 ) -> Vec<u8> {
-    let mut header = Vec::with_capacity(64 + metas.len() * 20);
+    let mut header = Vec::with_capacity(64 + entries.len() * V2_ENTRY_BYTES);
     put_u32(&mut header, dims.len() as u32);
     for &d in dims {
         put_u64(&mut header, d);
@@ -261,13 +729,21 @@ fn build_header_blob(
     put_u64(&mut header, config.max_block_nnz as u64);
     put_u32(&mut header, config.workgroup as u32);
     put_u32(&mut header, config.inblock_budget);
-    put_u64(&mut header, metas.len() as u64);
-    for &(key, bnnz, crc) in metas {
-        put_u64(&mut header, key);
-        put_u64(&mut header, bnnz);
-        put_u32(&mut header, crc);
+    put_u32(&mut header, default_codec.tag() as u32);
+    put_u64(&mut header, entries.len() as u64);
+    for e in entries {
+        put_index_entry(&mut header, e);
     }
     header
+}
+
+/// Serialize one 29-byte index entry (the [`RawIndexEntry`] layout).
+fn put_index_entry(buf: &mut Vec<u8>, e: &BlockIndexEntry) {
+    put_u64(buf, e.key);
+    put_u64(buf, e.nnz);
+    buf.push(e.codec.tag());
+    put_u64(buf, e.stored_len);
+    put_u32(buf, e.crc);
 }
 
 /// Writer namespace for the `.blco` container.
@@ -275,27 +751,46 @@ pub struct BlcoStore;
 
 impl BlcoStore {
     /// Serialize a constructed BLCO tensor into the container at `path`
-    /// (overwriting any existing file). The written payload is the exact
-    /// block content — `u64` indices and `f64` bit patterns — so a
-    /// read-back MTTKRP is bit-for-bit the resident one.
+    /// (overwriting any existing file) with raw ([`Codec::None`])
+    /// payloads. The written payload is the exact block content — `u64`
+    /// indices and `f64` bit patterns — so a read-back MTTKRP is
+    /// bit-for-bit the resident one.
     pub fn write(t: &BlcoTensor, path: &Path) -> Result<StoreSummary, StoreError> {
-        // one reusable serialization buffer: each block is serialized
-        // twice (pass 1 for the header checksums, pass 2 to stream the
-        // payload region out), so peak extra memory is O(one block), not
-        // O(tensor) — writing must not halve the size `convert` handles
+        Self::write_with(t, path, Codec::None)
+    }
+
+    /// [`write`](Self::write) with a per-block payload codec. Whatever
+    /// the codec, a read-back MTTKRP is bit-for-bit the resident one —
+    /// every codec round-trips the exact u64 index and f64 bit patterns.
+    pub fn write_with(
+        t: &BlcoTensor,
+        path: &Path,
+        codec: Codec,
+    ) -> Result<StoreSummary, StoreError> {
+        // one reusable serialization buffer: each block is encoded twice
+        // (pass 1 for the header index, pass 2 to stream the payload
+        // region out — the codecs are deterministic, so both passes
+        // produce identical bytes), keeping peak extra memory at O(one
+        // block), not O(tensor)
         let mut buf: Vec<u8> = Vec::new();
 
         // ---- header blob (pass 1 over the blocks)
-        let metas: Vec<BlockMeta> = t
+        let entries: Vec<BlockIndexEntry> = t
             .blocks
             .iter()
             .map(|blk| {
-                serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
-                (blk.key, blk.nnz() as u64, crc32(&buf))
+                let stored = encode_block_payload(&mut buf, &blk.lidx, &blk.vals, codec);
+                BlockIndexEntry {
+                    key: blk.key,
+                    nnz: blk.nnz() as u64,
+                    codec: stored,
+                    stored_len: buf.len() as u64,
+                    crc: crc32(&buf),
+                }
             })
             .collect();
         let header =
-            build_header_blob(t.dims(), t.nnz as u64, t.norm(), &t.config, &metas);
+            build_header_blob(t.dims(), t.nnz as u64, t.norm(), &t.config, codec, &entries);
 
         // ---- file (pass 2 streams the payloads)
         let file = File::create(path)
@@ -307,19 +802,23 @@ impl BlcoStore {
         w.write_all(&(header.len() as u64).to_le_bytes()).map_err(io_err(ctx()))?;
         w.write_all(&header).map_err(io_err(ctx()))?;
         w.write_all(&crc32(&header).to_le_bytes()).map_err(io_err(ctx()))?;
+        let mut stored_bytes = 0usize;
         let mut payload_bytes = 0usize;
         for blk in &t.blocks {
-            serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
+            encode_block_payload(&mut buf, &blk.lidx, &blk.vals, codec);
             w.write_all(&buf).map_err(io_err(ctx()))?;
-            payload_bytes += buf.len();
+            stored_bytes += buf.len();
+            payload_bytes += blk.nnz() * 16;
         }
         w.flush().map_err(io_err(ctx()))?;
 
         Ok(StoreSummary {
             path: path.to_path_buf(),
-            file_bytes: (24 + header.len() + payload_bytes) as u64,
+            file_bytes: (24 + header.len() + stored_bytes) as u64,
             header_bytes: header.len(),
             payload_bytes,
+            stored_bytes,
+            codec,
             blocks: t.blocks.len(),
             batches: t.batches.len(),
             nnz: t.nnz,
@@ -337,7 +836,7 @@ impl BlcoStore {
 /// The container's header *precedes* the payload region, so payloads are
 /// staged in a sibling temp file (`<path>.payload.tmp`, same directory ⇒
 /// same filesystem) and copied behind the finished header at
-/// [`finish`](Self::finish). Peak memory is one serialized block; the
+/// [`finish`](Self::finish). Peak memory is one encoded block; the
 /// transient disk cost is one extra copy of the payload region. Dropping
 /// the writer without `finish` removes the temp file and never touches
 /// `path`.
@@ -352,24 +851,50 @@ pub struct BlcoStoreWriter {
     payload: Option<std::io::BufWriter<File>>,
     dims: Vec<u64>,
     config: BlcoConfig,
-    metas: Vec<BlockMeta>,
+    codec: Codec,
+    entries: Vec<BlockIndexEntry>,
     nnz: u64,
     sumsq: f64,
     buf: Vec<u8>,
     payload_bytes: usize,
+    stored_bytes: usize,
 }
 
 impl BlcoStoreWriter {
-    /// Start a container at `path` for a tensor over `dims`. Asserts the
-    /// same config invariants as `BlcoTensor::from_coo_with`.
+    /// Start a container at `path` for a tensor over `dims`, storing raw
+    /// ([`Codec::None`]) payloads. Rejects the same config shapes
+    /// `BlcoTensor::try_from_coo_with` does — as a structured error, not
+    /// a panic, since a bad config here usually arrived from CLI flags.
     pub fn create(
         path: &Path,
         dims: &[u64],
         config: BlcoConfig,
     ) -> Result<Self, StoreError> {
-        assert!(config.workgroup > 0, "BlcoConfig.workgroup must be > 0");
-        assert!(config.max_block_nnz > 0, "BlcoConfig.max_block_nnz must be > 0");
-        assert!(!dims.is_empty() && dims.iter().all(|&d| d > 0), "bad dims");
+        Self::create_with_codec(path, dims, config, Codec::None)
+    }
+
+    /// [`create`](Self::create) with a per-block payload codec.
+    pub fn create_with_codec(
+        path: &Path,
+        dims: &[u64],
+        config: BlcoConfig,
+        codec: Codec,
+    ) -> Result<Self, StoreError> {
+        if config.workgroup == 0 {
+            return Err(StoreError::Malformed {
+                what: "BlcoConfig.workgroup must be > 0".into(),
+            });
+        }
+        if config.max_block_nnz == 0 {
+            return Err(StoreError::Malformed {
+                what: "BlcoConfig.max_block_nnz must be > 0".into(),
+            });
+        }
+        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+            return Err(StoreError::Malformed {
+                what: format!("bad dims {dims:?}: every mode must be > 0"),
+            });
+        }
         let tmp_path = PathBuf::from(format!("{}.payload.tmp", path.display()));
         let file = File::create(&tmp_path)
             .map_err(io_err(format!("create {}", tmp_path.display())))?;
@@ -379,11 +904,13 @@ impl BlcoStoreWriter {
             payload: Some(std::io::BufWriter::new(file)),
             dims: dims.to_vec(),
             config,
-            metas: Vec::new(),
+            codec,
+            entries: Vec::new(),
             nnz: 0,
             sumsq: 0.0,
             buf: Vec::new(),
             payload_bytes: 0,
+            stored_bytes: 0,
         })
     }
 
@@ -398,13 +925,20 @@ impl BlcoStoreWriter {
         assert_eq!(lidx.len(), vals.len(), "ragged block");
         assert!(!vals.is_empty(), "empty block");
         assert!(vals.len() <= self.config.max_block_nnz, "block over budget");
-        serialize_block_payload(&mut self.buf, lidx, vals);
-        self.metas.push((key, vals.len() as u64, crc32(&self.buf)));
+        let stored = encode_block_payload(&mut self.buf, lidx, vals, self.codec);
+        self.entries.push(BlockIndexEntry {
+            key,
+            nnz: vals.len() as u64,
+            codec: stored,
+            stored_len: self.buf.len() as u64,
+            crc: crc32(&self.buf),
+        });
         self.nnz += vals.len() as u64;
         for &v in vals {
             self.sumsq += v * v;
         }
-        self.payload_bytes += self.buf.len();
+        self.payload_bytes += vals.len() * 16;
+        self.stored_bytes += self.buf.len();
         let w = self.payload.as_mut().expect("writer already finished");
         w.write_all(&self.buf)
             .map_err(io_err(format!("write {}", self.tmp_path.display())))
@@ -412,13 +946,13 @@ impl BlcoStoreWriter {
 
     /// Blocks written so far.
     pub fn blocks(&self) -> usize {
-        self.metas.len()
+        self.entries.len()
     }
 
     /// Bytes of writer-held state (block index + serialization buffer) —
     /// feeds the out-of-core builder's peak-memory accounting.
     pub fn held_bytes(&self) -> usize {
-        self.metas.capacity() * std::mem::size_of::<BlockMeta>()
+        self.entries.capacity() * std::mem::size_of::<BlockIndexEntry>()
             + self.buf.capacity()
     }
 
@@ -437,10 +971,11 @@ impl BlcoStoreWriter {
             self.nnz,
             norm,
             &self.config,
-            &self.metas,
+            self.codec,
+            &self.entries,
         );
         let batches = build_batches_from_nnz(
-            &self.metas.iter().map(|&(_, n, _)| n as usize).collect::<Vec<_>>(),
+            &self.entries.iter().map(|e| e.nnz as usize).collect::<Vec<_>>(),
             &self.config,
         );
 
@@ -463,11 +998,11 @@ impl BlcoStoreWriter {
                 self.path.display()
             ),
         ))?;
-        if copied != self.payload_bytes as u64 {
+        if copied != self.stored_bytes as u64 {
             return Err(StoreError::Malformed {
                 what: format!(
                     "payload stage holds {copied} bytes, wrote {}",
-                    self.payload_bytes
+                    self.stored_bytes
                 ),
             });
         }
@@ -476,14 +1011,149 @@ impl BlcoStoreWriter {
 
         Ok(StoreSummary {
             path: self.path.clone(),
-            file_bytes: (24 + header.len() + self.payload_bytes) as u64,
+            file_bytes: (24 + header.len() + self.stored_bytes) as u64,
             header_bytes: header.len(),
             payload_bytes: self.payload_bytes,
-            blocks: self.metas.len(),
+            stored_bytes: self.stored_bytes,
+            codec: self.codec,
+            blocks: self.entries.len(),
             batches: batches.len(),
             nnz: self.nnz as usize,
         })
         // Drop::drop removes the temp file
+    }
+
+    /// Append new nonzeros to an existing **version-2** container as one
+    /// LSM-style delta segment at the end of the file. The base header is
+    /// never rewritten; readers fold segment blocks into the batch maps,
+    /// and duplicates across base and delta simply accumulate in MTTKRP —
+    /// the semantics of appending. `codec` defaults to the container's
+    /// default codec. The segment is built in memory (it is a memtable
+    /// flush, not a bulk load — bulk loads go through
+    /// [`crate::tensor::ooc`]); [`crate::tensor::ooc::compact`] later
+    /// merges all segments back into a fresh base.
+    pub fn append(
+        path: &Path,
+        t: &CooTensor,
+        codec: Option<Codec>,
+    ) -> Result<AppendSummary, StoreError> {
+        let reader = BlcoStoreReader::open(path)?;
+        if reader.version() != STORE_VERSION {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "append requires a version-2 container; {} is version {} \
+                     — rewrite it with `convert` first",
+                    path.display(),
+                    reader.version()
+                ),
+            });
+        }
+        t.validate().map_err(|e| StoreError::Malformed {
+            what: format!("append tensor: {e}"),
+        })?;
+        if reader.dims() != t.dims.as_slice() {
+            return Err(StoreError::Malformed {
+                what: format!(
+                    "append dims {:?} != container dims {:?}",
+                    t.dims,
+                    reader.dims()
+                ),
+            });
+        }
+        if t.nnz() == 0 {
+            return Err(StoreError::Malformed {
+                what: "append of zero non-zeros".into(),
+            });
+        }
+        let codec = codec.unwrap_or(reader.default_codec());
+        let spec = reader.spec().clone();
+        let config = *reader.config();
+        let prior_segments = reader.segments();
+        drop(reader);
+
+        // ALTO-linearize + sort, exactly the from_coo total order: ties on
+        // the line keep input position, so duplicate coordinates land in
+        // append order (what a from-scratch rebuild of base ++ appended
+        // would produce — the compact bit-parity guarantee rests on this)
+        let order = t.dims.len();
+        let mut coord = vec![0u32; order];
+        let mut pairs: Vec<(u128, u32)> = Vec::with_capacity(t.nnz());
+        for e in 0..t.nnz() {
+            for (m, c) in coord.iter_mut().enumerate() {
+                *c = t.coords[m][e];
+            }
+            pairs.push((spec.alto.encode(&coord), e as u32));
+        }
+        pairs.sort_unstable();
+
+        // split into blocks on key change or block-budget overflow, then
+        // encode each block into the segment payload buffer
+        let mut entries: Vec<BlockIndexEntry> = Vec::new();
+        let mut payloads: Vec<u8> = Vec::new();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut sumsq = 0.0f64;
+        let mut cur_key = 0u64;
+        let mut lidx: Vec<u64> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        let mut flush = |key: u64, lidx: &mut Vec<u64>, vals: &mut Vec<f64>| {
+            if lidx.is_empty() {
+                return;
+            }
+            let stored = encode_block_payload(&mut buf, lidx, vals, codec);
+            entries.push(BlockIndexEntry {
+                key,
+                nnz: vals.len() as u64,
+                codec: stored,
+                stored_len: buf.len() as u64,
+                crc: crc32(&buf),
+            });
+            for &v in vals.iter() {
+                sumsq += v * v;
+            }
+            payloads.extend_from_slice(&buf);
+            lidx.clear();
+            vals.clear();
+        };
+        for &(line, e) in &pairs {
+            let (key, l) = spec.reencode_alto(line);
+            if (key != cur_key && !lidx.is_empty()) || lidx.len() >= config.max_block_nnz
+            {
+                flush(cur_key, &mut lidx, &mut vals);
+            }
+            cur_key = key;
+            lidx.push(l);
+            vals.push(t.vals[e as usize]);
+        }
+        flush(cur_key, &mut lidx, &mut vals);
+
+        // segment blob + framing, appended in one go at EOF
+        let mut blob = Vec::with_capacity(24 + entries.len() * V2_ENTRY_BYTES);
+        put_u64(&mut blob, t.nnz() as u64);
+        put_f64(&mut blob, sumsq);
+        put_u64(&mut blob, entries.len() as u64);
+        for e in &entries {
+            put_index_entry(&mut blob, e);
+        }
+        let mut file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(io_err(format!("append to {}", path.display())))?;
+        let ctx = || format!("append segment to {}", path.display());
+        file.write_all(&SEGMENT_MAGIC).map_err(io_err(ctx()))?;
+        file.write_all(&(blob.len() as u64).to_le_bytes())
+            .map_err(io_err(ctx()))?;
+        file.write_all(&blob).map_err(io_err(ctx()))?;
+        file.write_all(&crc32(&blob).to_le_bytes()).map_err(io_err(ctx()))?;
+        file.write_all(&payloads).map_err(io_err(ctx()))?;
+        file.flush().map_err(io_err(ctx()))?;
+
+        Ok(AppendSummary {
+            path: path.to_path_buf(),
+            appended_nnz: t.nnz(),
+            blocks: entries.len(),
+            segment_bytes: (20 + blob.len() + payloads.len()) as u64,
+            segments: prior_segments + 1,
+        })
     }
 }
 
@@ -513,11 +1183,13 @@ pub struct CacheStats {
     /// that bought nothing; a high count means the budget is too small
     /// to hold the working set plus one batch of lookahead)
     pub prefetch_wasted: u64,
-    /// bytes read from disk (payloads of every miss)
+    /// **stored** bytes read from disk (the encoded payload of every
+    /// miss) — compression lowers this, not residency
     pub disk_bytes: u64,
-    /// block payload bytes currently held
+    /// decompressed block payload bytes currently held
     pub resident_bytes: usize,
-    /// high-water mark of host payload residency, *including* any single
+    /// high-water mark of host payload residency (decompressed bytes —
+    /// that is what competes for host RAM), *including* any single
     /// over-budget block handed out uncached — so the invariant
     /// `peak_resident_bytes <= budget_bytes` fails honestly when the
     /// budget cannot bound residency, rather than passing vacuously
@@ -542,12 +1214,14 @@ struct CacheInner {
     tick: u64,
 }
 
-/// Bounded-memory LRU over loaded blocks: at most `budget` payload bytes
-/// stay resident; least-recently-used blocks are evicted to make room. A
-/// single block larger than the whole budget is returned to the caller
-/// but never inserted — the cache map stays under budget, and the
-/// over-budget hand-out is charged to `peak_resident_bytes` so the
-/// violation is observable.
+/// Bounded-memory LRU over loaded blocks: at most `budget` bytes of
+/// **decompressed** payload stay resident; least-recently-used blocks are
+/// evicted to make room. Disk traffic (`disk_bytes`) is charged by the
+/// reader in *stored* bytes — the two currencies diverge exactly when a
+/// codec is doing its job. A single block larger than the whole budget is
+/// returned to the caller but never inserted — the cache map stays under
+/// budget, and the over-budget hand-out is charged to
+/// `peak_resident_bytes` so the violation is observable.
 pub struct BlockCache {
     budget: usize,
     inner: Mutex<CacheInner>,
@@ -611,11 +1285,17 @@ impl BlockCache {
         }
     }
 
-    /// Insert a freshly loaded block, evicting LRU entries until it fits.
-    /// Returns how many blocks were evicted.
+    /// Charge stored bytes read from disk (the reader calls this on every
+    /// miss with the block's *encoded* length — residency accounting in
+    /// `insert` stays in decompressed bytes).
+    fn add_disk_bytes(&self, stored: u64) {
+        self.disk_bytes.fetch_add(stored, Ordering::Relaxed);
+    }
+
+    /// Insert a freshly loaded (decompressed) block, evicting LRU entries
+    /// until it fits. Returns how many blocks were evicted.
     fn insert(&self, i: usize, block: Arc<Block>, prefetched: bool) -> usize {
         let bytes = block.bytes();
-        self.disk_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         if bytes > self.budget {
             // over-budget single block: hand it out uncached — but charge
             // it to the high-water mark, so `peak <= budget` assertions
@@ -681,30 +1361,118 @@ impl BlockCache {
 
 // ------------------------------------------------------------ the reader
 
-/// Header-resident metadata of one stored block.
+/// Header-resident metadata of one stored block (base or delta segment).
 #[derive(Clone, Copy, Debug)]
 pub struct BlockMeta {
     pub key: u64,
     pub nnz: usize,
-    /// absolute payload offset in the file
+    /// absolute stored-payload offset in the file
     pub offset: u64,
-    /// payload length (`nnz * 16`)
+    /// decompressed payload length (`nnz * 16`) — the cache/residency and
+    /// host→device wire currency, identical across tiers
     pub bytes: usize,
+    /// stored (encoded) payload length on disk — the disk-read currency
+    pub stored_len: usize,
+    pub codec: Codec,
+    /// crc32 of the stored payload bytes
     pub crc: u32,
 }
 
+/// Validate `count` zero-copy-overlaid version-2 index entries starting
+/// at file offset `offset`, pushing a [`BlockMeta`] per entry. Shared by
+/// the base header and every delta segment blob (`label` names which).
+/// Returns `(end offset, nnz sum)`.
+fn parse_v2_entries(
+    region: &[u8],
+    count: usize,
+    label: &str,
+    mut offset: u64,
+    metas: &mut Vec<BlockMeta>,
+) -> Result<(u64, u64), StoreError> {
+    let raw = RawIndexEntry::overlay_slice(region, count);
+    let mut total_nnz = 0u64;
+    for (b, e) in raw.iter().enumerate() {
+        let nnz64 = e.nnz();
+        if nnz64 == 0 {
+            return Err(StoreError::Malformed {
+                what: format!("{label}[{b}] has zero non-zeros"),
+            });
+        }
+        // decompressed size, with the wrap a crafted header could force
+        // rejected instead of allocated
+        let bytes = nnz64.checked_mul(16).ok_or_else(|| StoreError::Malformed {
+            what: format!("{label}[{b}] non-zeros count {nnz64} overflows"),
+        })?;
+        let codec = Codec::from_tag(e.codec).ok_or_else(|| StoreError::Malformed {
+            what: format!("{label}[{b}] has unknown codec tag {}", e.codec),
+        })?;
+        let stored_len = e.stored_len();
+        match codec {
+            // raw payloads have exactly one valid length
+            Codec::None if stored_len != bytes => {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "{label}[{b}] claims {nnz64} non-zeros but stores \
+                         {stored_len} bytes raw"
+                    ),
+                });
+            }
+            // every codec spends ≥ 1 stored byte per nonzero (varint lidx
+            // delta + value planes), so this bounds the decompressed
+            // allocation at 16× the stored bytes a crafted header can
+            // actually point at
+            Codec::DeltaVarint | Codec::Shuffled if nnz64 > stored_len => {
+                return Err(StoreError::Malformed {
+                    what: format!(
+                        "{label}[{b}] claims {nnz64} non-zeros in only \
+                         {stored_len} stored bytes"
+                    ),
+                });
+            }
+            _ => {}
+        }
+        metas.push(BlockMeta {
+            key: e.key(),
+            nnz: nnz64 as usize,
+            offset,
+            bytes: bytes as usize,
+            stored_len: stored_len as usize,
+            codec,
+            crc: e.crc(),
+        });
+        offset = offset.checked_add(stored_len).ok_or_else(|| {
+            StoreError::Malformed {
+                what: format!("payload offsets overflow at {label}[{b}]"),
+            }
+        })?;
+        total_nnz = total_nnz.checked_add(nnz64).ok_or_else(|| {
+            StoreError::Malformed {
+                what: format!("nnz total overflows at {label}[{b}]"),
+            }
+        })?;
+    }
+    Ok((offset, total_nnz))
+}
+
 /// mmap-free reader over a `.blco` container: all metadata (dims, spec,
-/// per-block index, rebuilt batches) lives in memory from the header
-/// alone; block payloads load on demand through the bounded
-/// [`BlockCache`].
+/// per-block index — base and delta segments, rebuilt batches) lives in
+/// memory from the header alone; block payloads load and decode on demand
+/// through the bounded [`BlockCache`].
 pub struct BlcoStoreReader {
     path: PathBuf,
     file: Mutex<File>,
+    version: u32,
+    default_codec: Codec,
     spec: BlcoSpec,
     config: BlcoConfig,
     nnz: usize,
     norm: f64,
     metas: Vec<BlockMeta>,
+    /// blocks in the base payload region; `metas[base_blocks..]` are
+    /// delta-segment blocks
+    base_blocks: usize,
+    /// pending delta segments
+    segments: usize,
     batches: Vec<Batch>,
     cache: BlockCache,
 }
@@ -715,8 +1483,9 @@ impl BlcoStoreReader {
         Self::open_with_budget(path, DEFAULT_CACHE_BYTES)
     }
 
-    /// Open, validating magic/version/header checksum/size, with an
-    /// explicit [`BlockCache`] budget in bytes (engines pass
+    /// Open, validating magic/version/checksums/sizes — both container
+    /// versions, and any appended delta segments — with an explicit
+    /// [`BlockCache`] budget in bytes (engines pass
     /// `Profile::host_mem_bytes`).
     pub fn open_with_budget(
         path: &Path,
@@ -729,7 +1498,7 @@ impl BlcoStoreReader {
             .map_err(io_err(format!("stat {}", path.display())))?
             .len();
 
-        // ---- fixed preamble
+        // ---- fixed preamble (zero-copy overlay)
         let mut pre = [0u8; 20];
         if file_len < 20 {
             return Err(StoreError::Truncated {
@@ -740,18 +1509,18 @@ impl BlcoStoreReader {
         }
         file.read_exact(&mut pre)
             .map_err(io_err(format!("read preamble of {}", path.display())))?;
-        let magic: [u8; 8] = pre[0..8].try_into().unwrap();
-        if magic != STORE_MAGIC {
-            return Err(StoreError::BadMagic { found: magic });
+        let prefix = RawPrefix::overlay(&pre);
+        if prefix.magic != STORE_MAGIC {
+            return Err(StoreError::BadMagic { found: prefix.magic });
         }
-        let version = u32::from_le_bytes(pre[8..12].try_into().unwrap());
-        if version != STORE_VERSION {
+        let version = prefix.version();
+        if version == 0 || version > STORE_VERSION {
             return Err(StoreError::UnsupportedVersion {
                 found: version,
                 supported: STORE_VERSION,
             });
         }
-        let header_len = u64::from_le_bytes(pre[12..20].try_into().unwrap());
+        let header_len = prefix.header_len();
         if header_len > file_len.saturating_sub(24) {
             return Err(StoreError::Truncated {
                 what: "header blob + checksum".into(),
@@ -805,11 +1574,23 @@ impl BlcoStoreReader {
                 what: "max_block_nnz and workgroup must be > 0".into(),
             });
         }
+        let default_codec = if version >= 2 {
+            let tag = c.u32("default codec")?;
+            u8::try_from(tag)
+                .ok()
+                .and_then(Codec::from_tag)
+                .ok_or_else(|| StoreError::Malformed {
+                    what: format!("unknown default codec tag {tag}"),
+                })?
+        } else {
+            Codec::None
+        };
         let nblocks = c.u64("block count")? as usize;
-        // each index entry takes 20 header bytes; a count the header
-        // cannot physically hold is malformed (and must not drive a
-        // pre-allocation)
-        if nblocks > header.len() / 20 {
+        // each index entry takes 20 (v1) or 29 (v2) header bytes; a count
+        // the header cannot physically hold is malformed (and must not
+        // drive a pre-allocation)
+        let entry_bytes = if version >= 2 { V2_ENTRY_BYTES } else { V1_ENTRY_BYTES };
+        if nblocks > header.len() / entry_bytes {
             return Err(StoreError::Malformed {
                 what: format!(
                     "block count {nblocks} exceeds what a {}-byte header can hold",
@@ -818,46 +1599,61 @@ impl BlcoStoreReader {
             });
         }
         let payload_base = 24 + header_len;
-        // hard ceiling for any single block: the payload region that
-        // actually exists on disk. Without it, a crafted header (the crc
-        // is attacker-computable) could declare a huge nnz whose
-        // `* 16` wraps in release builds and whose decode loop then
-        // aborts or indexes out of bounds — open must reject it instead.
-        let max_block_nnz_on_disk = file_len.saturating_sub(payload_base) / 16;
         let mut metas = Vec::with_capacity(nblocks);
-        let mut offset = payload_base;
-        let mut total_nnz = 0usize;
-        for b in 0..nblocks {
-            let key = c.u64(&format!("block[{b}].key"))?;
-            let bnnz64 = c.u64(&format!("block[{b}].nnz"))?;
-            if bnnz64 == 0 {
-                return Err(StoreError::Malformed {
-                    what: format!("block[{b}] has zero non-zeros"),
-                });
-            }
-            if bnnz64 > max_block_nnz_on_disk {
-                return Err(StoreError::Malformed {
-                    what: format!(
-                        "block[{b}] claims {bnnz64} non-zeros but the payload \
-                         region holds at most {max_block_nnz_on_disk}"
-                    ),
-                });
-            }
-            let bnnz = bnnz64 as usize;
-            let crc = c.u32(&format!("block[{b}].crc"))?;
-            let bytes = bnnz * 16; // cannot wrap: bnnz bounded by file size
-            metas.push(BlockMeta { key, nnz: bnnz, offset, bytes, crc });
-            offset = offset.checked_add(bytes as u64).ok_or_else(|| {
-                StoreError::Malformed {
-                    what: format!("payload offsets overflow at block {b}"),
+        let (offset, total_nnz) = if version >= 2 {
+            let region = c.take(nblocks * V2_ENTRY_BYTES, "block index")?;
+            parse_v2_entries(region, nblocks, "block", payload_base, &mut metas)?
+        } else {
+            // hard ceiling for any single v1 block: the payload region
+            // that actually exists on disk. Without it, a crafted header
+            // (the crc is attacker-computable) could declare a huge nnz
+            // whose `* 16` wraps in release builds and whose decode loop
+            // then aborts or indexes out of bounds — open must reject it
+            // instead. (v2 bounds each block against its stored length.)
+            let max_block_nnz_on_disk = file_len.saturating_sub(payload_base) / 16;
+            let mut offset = payload_base;
+            let mut total_nnz = 0u64;
+            for b in 0..nblocks {
+                let key = c.u64(&format!("block[{b}].key"))?;
+                let bnnz64 = c.u64(&format!("block[{b}].nnz"))?;
+                if bnnz64 == 0 {
+                    return Err(StoreError::Malformed {
+                        what: format!("block[{b}] has zero non-zeros"),
+                    });
                 }
-            })?;
-            total_nnz = total_nnz.checked_add(bnnz).ok_or_else(|| {
-                StoreError::Malformed {
-                    what: format!("nnz total overflows at block {b}"),
+                if bnnz64 > max_block_nnz_on_disk {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "block[{b}] claims {bnnz64} non-zeros but the payload \
+                             region holds at most {max_block_nnz_on_disk}"
+                        ),
+                    });
                 }
-            })?;
-        }
+                let bnnz = bnnz64 as usize;
+                let crc = c.u32(&format!("block[{b}].crc"))?;
+                let bytes = bnnz * 16; // cannot wrap: bnnz bounded by file size
+                metas.push(BlockMeta {
+                    key,
+                    nnz: bnnz,
+                    offset,
+                    bytes,
+                    stored_len: bytes,
+                    codec: Codec::None,
+                    crc,
+                });
+                offset = offset.checked_add(bytes as u64).ok_or_else(|| {
+                    StoreError::Malformed {
+                        what: format!("payload offsets overflow at block {b}"),
+                    }
+                })?;
+                total_nnz = total_nnz.checked_add(bnnz64).ok_or_else(|| {
+                    StoreError::Malformed {
+                        what: format!("nnz total overflows at block {b}"),
+                    }
+                })?;
+            }
+            (offset, total_nnz)
+        };
         if c.pos != header.len() {
             return Err(StoreError::Malformed {
                 what: format!(
@@ -866,7 +1662,7 @@ impl BlcoStoreReader {
                 ),
             });
         }
-        if total_nnz != nnz {
+        if total_nnz as usize != nnz {
             return Err(StoreError::Malformed {
                 what: format!(
                     "block nnz sum {total_nnz} != header nnz {nnz}"
@@ -880,15 +1676,141 @@ impl BlcoStoreReader {
                 available: file_len,
             });
         }
-        if offset < file_len {
+        let base_blocks = metas.len();
+
+        // ---- delta segments (v2): parse every appended segment in file
+        // order; v1 files must end exactly at the payload region
+        let mut offset = offset;
+        let mut segments = 0usize;
+        let mut seg_nnz_total = 0usize;
+        let mut seg_sumsq_total = 0.0f64;
+        if version >= 2 {
+            while offset < file_len {
+                let i = segments;
+                if file_len - offset < 20 {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "{} trailing bytes after the payload region",
+                            file_len - offset
+                        ),
+                    });
+                }
+                let mut seg_pre = [0u8; 16];
+                file.seek(SeekFrom::Start(offset)).map_err(io_err(format!(
+                    "seek to delta segment {i} of {}",
+                    path.display()
+                )))?;
+                file.read_exact(&mut seg_pre).map_err(io_err(format!(
+                    "read delta segment {i} preamble of {}",
+                    path.display()
+                )))?;
+                let magic: [u8; 8] = seg_pre[0..8].try_into().unwrap();
+                if magic != SEGMENT_MAGIC {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "delta segment {i} has bad magic {magic:02x?}"
+                        ),
+                    });
+                }
+                let blob_len = u64::from_le_bytes(seg_pre[8..16].try_into().unwrap());
+                let frame_end = offset
+                    .checked_add(20)
+                    .and_then(|v| v.checked_add(blob_len))
+                    .ok_or_else(|| StoreError::Malformed {
+                        what: format!("delta segment {i} blob length overflows"),
+                    })?;
+                if frame_end > file_len {
+                    return Err(StoreError::Truncated {
+                        what: format!("delta segment {i} header"),
+                        needed: frame_end,
+                        available: file_len,
+                    });
+                }
+                let mut blob = vec![0u8; blob_len as usize];
+                file.read_exact(&mut blob).map_err(io_err(format!(
+                    "read delta segment {i} blob of {}",
+                    path.display()
+                )))?;
+                let mut crc_buf = [0u8; 4];
+                file.read_exact(&mut crc_buf).map_err(io_err(format!(
+                    "read delta segment {i} crc of {}",
+                    path.display()
+                )))?;
+                let stored_crc = u32::from_le_bytes(crc_buf);
+                let computed = crc32(&blob);
+                if stored_crc != computed {
+                    return Err(StoreError::ChecksumMismatch {
+                        what: format!("delta segment {i} header"),
+                        expected: stored_crc,
+                        found: computed,
+                    });
+                }
+                let mut sc = Cursor::new(&blob);
+                let seg_nnz = sc.u64("segment nnz")? as usize;
+                let seg_sumsq = sc.f64("segment sumsq")?;
+                let seg_nblocks = sc.u64("segment block count")? as usize;
+                if seg_nnz == 0 {
+                    return Err(StoreError::Malformed {
+                        what: format!("delta segment {i} has zero non-zeros"),
+                    });
+                }
+                if seg_nblocks > blob.len() / V2_ENTRY_BYTES {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "delta segment {i} block count {seg_nblocks} exceeds \
+                             what a {}-byte blob can hold",
+                            blob.len()
+                        ),
+                    });
+                }
+                let region =
+                    sc.take(seg_nblocks * V2_ENTRY_BYTES, "segment block index")?;
+                let label = format!("delta segment {i} block");
+                let (end, total) =
+                    parse_v2_entries(region, seg_nblocks, &label, frame_end, &mut metas)?;
+                if sc.pos != blob.len() {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "{} trailing bytes in delta segment {i} blob",
+                            blob.len() - sc.pos
+                        ),
+                    });
+                }
+                if total as usize != seg_nnz {
+                    return Err(StoreError::Malformed {
+                        what: format!(
+                            "delta segment {i} block nnz sum {total} != segment \
+                             nnz {seg_nnz}"
+                        ),
+                    });
+                }
+                if end > file_len {
+                    return Err(StoreError::Truncated {
+                        what: format!("delta segment {i} payload region"),
+                        needed: end,
+                        available: file_len,
+                    });
+                }
+                offset = end;
+                segments += 1;
+                seg_nnz_total += seg_nnz;
+                seg_sumsq_total += seg_sumsq;
+            }
+        } else if offset < file_len {
             return Err(StoreError::Malformed {
-                what: format!("{} trailing bytes after the payload region", file_len - offset),
+                what: format!(
+                    "{} trailing bytes after the payload region",
+                    file_len - offset
+                ),
             });
         }
 
         // ---- rebuild the derived structures: the bit layout is a pure
         // function of (dims, budget), the batch maps of (block nnz list,
-        // config) — both bit-identical to the resident tensor's
+        // config) — both bit-identical to the resident tensor's. Delta
+        // blocks join the batch maps after the base blocks, in segment
+        // order; a base/delta duplicate coordinate simply accumulates in
+        // MTTKRP, which is the semantics of appending.
         let spec = BlcoSpec::with_budget(&dims, inblock_budget);
         let config = BlcoConfig {
             max_block_nnz,
@@ -898,15 +1820,27 @@ impl BlcoStoreReader {
         };
         let nnzs: Vec<usize> = metas.iter().map(|m| m.nnz).collect();
         let batches = build_batches_from_nnz(&nnzs, &config);
+        // the base norm is passed through untouched when no segments are
+        // pending — sqrt(norm²) is not bit-exact, and pristine containers
+        // must keep the exact header norm the parity tests pin
+        let norm = if segments > 0 {
+            (norm * norm + seg_sumsq_total).sqrt()
+        } else {
+            norm
+        };
 
         Ok(BlcoStoreReader {
             path: path.to_path_buf(),
             file: Mutex::new(file),
+            version,
+            default_codec,
             spec,
             config,
-            nnz,
+            nnz: nnz + seg_nnz_total,
             norm,
             metas,
+            base_blocks,
+            segments,
             batches,
             cache: BlockCache::new(cache_budget),
         })
@@ -914,6 +1848,29 @@ impl BlcoStoreReader {
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Container version on disk (1 or 2).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Default codec recorded in the header (what the container was
+    /// written with; individual blocks may have fallen back to raw).
+    pub fn default_codec(&self) -> Codec {
+        self.default_codec
+    }
+
+    /// Pending delta segments (0 on a pristine or freshly compacted
+    /// container).
+    pub fn segments(&self) -> usize {
+        self.segments
+    }
+
+    /// Blocks in the base payload region; `block_meta(i)` for
+    /// `i >= base_blocks()` are delta-segment blocks.
+    pub fn base_blocks(&self) -> usize {
+        self.base_blocks
     }
 
     pub fn spec(&self) -> &BlcoSpec {
@@ -932,12 +1889,14 @@ impl BlcoStoreReader {
         self.spec.order()
     }
 
+    /// Total nonzeros: base plus every pending delta segment.
     pub fn nnz(&self) -> usize {
         self.nnz
     }
 
-    /// Frobenius norm recorded at write time (CP-ALS needs it without a
-    /// payload scan).
+    /// Frobenius norm of the stored values (header field at write time,
+    /// folded with each segment's recorded sum of squares when deltas are
+    /// pending) — CP-ALS needs it without a payload scan.
     pub fn norm(&self) -> f64 {
         self.norm
     }
@@ -960,9 +1919,39 @@ impl BlcoStoreReader {
         self.cache.stats()
     }
 
+    /// Stored (encoded) payload bytes across base and delta blocks — the
+    /// denominator of [`compression_ratio`](Self::compression_ratio).
+    pub fn stored_payload_bytes(&self) -> u64 {
+        self.metas.iter().map(|m| m.stored_len as u64).sum()
+    }
+
+    /// Logical (decompressed) payload bytes (`nnz * 16` per block).
+    pub fn raw_payload_bytes(&self) -> u64 {
+        self.metas.iter().map(|m| m.bytes as u64).sum()
+    }
+
+    /// Logical over stored payload bytes (≥ 1.0 — codecs fall back to raw
+    /// rather than expand; exactly 1.0 for an all-raw container).
+    pub fn compression_ratio(&self) -> f64 {
+        let stored = self.stored_payload_bytes();
+        if stored == 0 {
+            return 1.0;
+        }
+        self.raw_payload_bytes() as f64 / stored as f64
+    }
+
+    /// LSM read amplification: a lookup consults the base plus every
+    /// pending delta segment, so `1 + segments` — 1.0 on a pristine or
+    /// freshly compacted container, and the number `compact` exists to
+    /// drive back down.
+    pub fn read_amplification(&self) -> f64 {
+        (1 + self.segments) as f64
+    }
+
     /// Total on-device payload + metadata bytes, same accounting as
     /// [`BlcoTensor::footprint_bytes`] so routing decisions are identical
-    /// across tiers.
+    /// across tiers (decompressed bytes — that is what moves to the
+    /// device).
     pub fn footprint_bytes(&self) -> usize {
         let payload: usize = self.metas.iter().map(|m| m.bytes).sum();
         let keys = self.metas.len() * 8;
@@ -970,11 +1959,14 @@ impl BlcoStoreReader {
         payload + keys + maps
     }
 
-    /// Read and decode block `i` straight from disk, verifying its
-    /// checksum — no cache interaction.
-    fn read_block(&self, i: usize) -> Result<Block, StoreError> {
+    /// Read, checksum-verify and decode block `i` straight from disk — no
+    /// cache interaction. The crc covers the **stored** bytes, so a
+    /// corrupted compressed payload is a [`StoreError::ChecksumMismatch`]
+    /// before any decode runs; a decode failure after a clean crc means
+    /// the writer produced garbage and is [`StoreError::Malformed`].
+    pub fn load_block(&self, i: usize) -> Result<Block, StoreError> {
         let m = self.metas[i];
-        let mut raw = vec![0u8; m.bytes];
+        let mut raw = vec![0u8; m.stored_len];
         {
             let mut f = self.file.lock().expect("store file poisoned");
             f.seek(SeekFrom::Start(m.offset)).map_err(io_err(format!(
@@ -994,23 +1986,16 @@ impl BlcoStoreReader {
                 found,
             });
         }
-        let mut lidx = Vec::with_capacity(m.nnz);
-        for w in 0..m.nnz {
-            lidx.push(u64::from_le_bytes(raw[w * 8..w * 8 + 8].try_into().unwrap()));
-        }
-        let vbase = m.nnz * 8;
-        let mut vals = Vec::with_capacity(m.nnz);
-        for w in 0..m.nnz {
-            vals.push(f64::from_bits(u64::from_le_bytes(
-                raw[vbase + w * 8..vbase + w * 8 + 8].try_into().unwrap(),
-            )));
-        }
+        let (lidx, vals) =
+            decode_block_payload(&raw, m.nnz, m.codec, &format!("block {i}"))?;
         Ok(Block { key: m.key, lidx, vals })
     }
 
     /// Load block `i`, through the cache. Cache hit/miss/eviction counts
     /// and disk-read bytes are charged to `counters` (the host tier of
-    /// the traffic model); payload integrity is verified against the
+    /// the traffic model); `bytes_disk` charges the **stored** length —
+    /// what actually crossed the disk link — while residency stays in
+    /// decompressed bytes. Payload integrity is verified against the
     /// header checksum on every disk read.
     pub fn block(&self, i: usize, counters: &Counters) -> Result<Arc<Block>, StoreError> {
         if let Some(b) = self.cache.get(i) {
@@ -1018,12 +2003,13 @@ impl BlcoStoreReader {
             return Ok(b);
         }
         let m = self.metas[i];
-        let block = Arc::new(self.read_block(i)?);
+        let block = Arc::new(self.load_block(i)?);
         let evicted = self.cache.insert(i, Arc::clone(&block), false);
+        self.cache.add_disk_bytes(m.stored_len as u64);
         counters.add(&Snapshot {
             host_misses: 1,
             host_evictions: evicted as u64,
-            bytes_disk: m.bytes as u64,
+            bytes_disk: m.stored_len as u64,
             ..Default::default()
         });
         Ok(block)
@@ -1040,12 +2026,13 @@ impl BlcoStoreReader {
             return Ok(());
         }
         let m = self.metas[i];
-        let block = Arc::new(self.read_block(i)?);
+        let block = Arc::new(self.load_block(i)?);
         let evicted = self.cache.stage_prefetched(i, block);
+        self.cache.add_disk_bytes(m.stored_len as u64);
         counters.add(&Snapshot {
             host_misses: 1,
             host_evictions: evicted as u64,
-            bytes_disk: m.bytes as u64,
+            bytes_disk: m.stored_len as u64,
             ..Default::default()
         });
         Ok(())
@@ -1066,26 +2053,27 @@ impl BlcoStoreReader {
         }
     }
 
-    /// Verify every block payload against its stored checksum without
-    /// touching the cache (CLI `inspect --verify`). Returns the payload
-    /// bytes scanned.
+    /// Verify every block payload (base and delta) against its stored
+    /// checksum without touching the cache (CLI `inspect --verify`).
+    /// Returns the stored payload bytes scanned.
     pub fn verify_payloads(&self) -> Result<usize, StoreError> {
         let mut scanned = 0usize;
         for i in 0..self.metas.len() {
-            self.read_block(i)?;
-            scanned += self.metas[i].bytes;
+            self.load_block(i)?;
+            scanned += self.metas[i].stored_len;
         }
         Ok(scanned)
     }
 
-    /// Materialize the whole container as a resident [`BlcoTensor`]
-    /// (cache-bypassing full scan) — the resident twin the CLI's
-    /// `stream --from-store --check` compares bit-for-bit against, and an
-    /// escape hatch for callers that decide a tensor fits after all.
+    /// Materialize the whole container (base plus pending deltas) as a
+    /// resident [`BlcoTensor`] (cache-bypassing full scan) — the resident
+    /// twin the CLI's `stream --from-store --check` compares bit-for-bit
+    /// against, and an escape hatch for callers that decide a tensor fits
+    /// after all.
     pub fn to_tensor(&self) -> Result<BlcoTensor, StoreError> {
         let mut blocks = Vec::with_capacity(self.metas.len());
         for i in 0..self.metas.len() {
-            blocks.push(Arc::new(self.read_block(i)?));
+            blocks.push(Arc::new(self.load_block(i)?));
         }
         Ok(BlcoTensor {
             spec: self.spec.clone(),
@@ -1102,9 +2090,11 @@ impl std::fmt::Debug for BlcoStoreReader {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("BlcoStoreReader")
             .field("path", &self.path)
+            .field("version", &self.version)
             .field("dims", &self.spec.dims)
             .field("nnz", &self.nnz)
             .field("blocks", &self.metas.len())
+            .field("segments", &self.segments)
             .field("batches", &self.batches.len())
             .finish()
     }
@@ -1195,9 +2185,11 @@ impl BatchSource {
         self.batches().len()
     }
 
-    /// Host→device wire bytes of batch `b` (payload + work-group maps) —
-    /// identical across tiers, so schedules planned against either source
-    /// are interchangeable (pinned per batch by the tier-parity tests).
+    /// Host→device wire bytes of batch `b` (decompressed payload +
+    /// work-group maps) — identical across tiers, so schedules planned
+    /// against either source are interchangeable (pinned per batch by the
+    /// tier-parity tests). Compression changes what crosses the *disk*
+    /// link, never what crosses the host→device link.
     pub fn batch_bytes(&self, b: usize) -> usize {
         match self {
             BatchSource::Resident(t) => t.batch_wire_bytes(b),
@@ -1383,29 +2375,70 @@ mod tests {
         BlcoTensor::from_coo_with(&t, cfg)
     }
 
+    /// Hand-write `t` in the version-1 layout (raw payloads, 20-byte
+    /// index entries, no codec field) — the compat corpus for the
+    /// v1→v2 read tests, since this build only writes version 2.
+    fn write_v1(t: &BlcoTensor, path: &Path) {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut header: Vec<u8> = Vec::new();
+        put_u32(&mut header, t.dims().len() as u32);
+        for &d in t.dims() {
+            put_u64(&mut header, d);
+        }
+        put_u64(&mut header, t.nnz as u64);
+        put_f64(&mut header, t.norm());
+        put_u64(&mut header, t.config.max_block_nnz as u64);
+        put_u32(&mut header, t.config.workgroup as u32);
+        put_u32(&mut header, t.config.inblock_budget);
+        put_u64(&mut header, t.blocks.len() as u64);
+        for blk in &t.blocks {
+            serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
+            put_u64(&mut header, blk.key);
+            put_u64(&mut header, blk.nnz() as u64);
+            put_u32(&mut header, crc32(&buf));
+        }
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(&STORE_MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(&header);
+        out.extend_from_slice(&crc32(&header).to_le_bytes());
+        for blk in &t.blocks {
+            serialize_block_payload(&mut buf, &blk.lidx, &blk.vals);
+            out.extend_from_slice(&buf);
+        }
+        std::fs::write(path, &out).unwrap();
+    }
+
     #[test]
     fn incremental_writer_matches_batch_writer_bitwise() {
         // feeding the in-memory tensor's blocks through BlcoStoreWriter
         // must produce the exact file BlcoStore::write does — the shared
         // header/payload serializers are what the out-of-core build's
-        // bit-parity guarantee stands on
+        // bit-parity guarantee stands on. Checked per codec: the encoders
+        // are deterministic, so both writers store identical bytes.
         let b = sample_tensor();
-        let p1 = tmpfile("batch.blco");
-        let p2 = tmpfile("incremental.blco");
-        let s1 = BlcoStore::write(&b, &p1).unwrap();
-        let mut w = BlcoStoreWriter::create(&p2, b.dims(), b.config).unwrap();
-        for blk in &b.blocks {
-            w.add_block(blk.key, &blk.lidx, &blk.vals).unwrap();
+        for codec in [Codec::None, Codec::DeltaVarint, Codec::Shuffled] {
+            let p1 = tmpfile(&format!("batch_{}.blco", codec.tag()));
+            let p2 = tmpfile(&format!("incremental_{}.blco", codec.tag()));
+            let s1 = BlcoStore::write_with(&b, &p1, codec).unwrap();
+            let mut w =
+                BlcoStoreWriter::create_with_codec(&p2, b.dims(), b.config, codec)
+                    .unwrap();
+            for blk in &b.blocks {
+                w.add_block(blk.key, &blk.lidx, &blk.vals).unwrap();
+            }
+            let s2 = w.finish().unwrap();
+            assert_eq!(s1.file_bytes, s2.file_bytes);
+            assert_eq!(s1.stored_bytes, s2.stored_bytes);
+            assert_eq!(s1.blocks, s2.blocks);
+            assert_eq!(s1.batches, s2.batches);
+            assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+            // the payload stage must be gone after finish
+            assert!(!PathBuf::from(format!("{}.payload.tmp", p2.display())).exists());
+            std::fs::remove_file(&p1).ok();
+            std::fs::remove_file(&p2).ok();
         }
-        let s2 = w.finish().unwrap();
-        assert_eq!(s1.file_bytes, s2.file_bytes);
-        assert_eq!(s1.blocks, s2.blocks);
-        assert_eq!(s1.batches, s2.batches);
-        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
-        // the payload stage must be gone after finish
-        assert!(!PathBuf::from(format!("{}.payload.tmp", p2.display())).exists());
-        std::fs::remove_file(&p1).ok();
-        std::fs::remove_file(&p2).ok();
     }
 
     #[test]
@@ -1427,10 +2460,113 @@ mod tests {
     }
 
     #[test]
+    fn writer_rejects_bad_config_as_error() {
+        // config mistakes arrive from CLI flags — they must surface as
+        // structured errors, not asserts (the BlcoError satellite)
+        let p = tmpfile("badcfg.blco");
+        let bad_wg = BlcoConfig { workgroup: 0, ..Default::default() };
+        assert!(matches!(
+            BlcoStoreWriter::create(&p, &[8, 8], bad_wg),
+            Err(StoreError::Malformed { .. })
+        ));
+        let bad_blk = BlcoConfig { max_block_nnz: 0, ..Default::default() };
+        assert!(matches!(
+            BlcoStoreWriter::create(&p, &[8, 8], bad_blk),
+            Err(StoreError::Malformed { .. })
+        ));
+        assert!(matches!(
+            BlcoStoreWriter::create(&p, &[8, 0], BlcoConfig::default()),
+            Err(StoreError::Malformed { .. })
+        ));
+        assert!(matches!(
+            BlcoStoreWriter::create(&p, &[], BlcoConfig::default()),
+            Err(StoreError::Malformed { .. })
+        ));
+        assert!(!p.exists(), "rejected create must not touch the target");
+    }
+
+    #[test]
     fn crc32_known_vectors() {
         // standard IEEE test vector
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn varint_zigzag_round_trip() {
+        for v in [0i64, 1, -1, 63, -64, 64, i64::MAX, i64::MIN, 0x7FFF_FFFF] {
+            assert_eq!(unzigzag(zigzag(v)), v, "zigzag({v})");
+        }
+        // small magnitudes of either sign stay small on the wire
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        let mut buf = Vec::new();
+        let cases = [0u64, 1, 127, 128, 16_383, 16_384, u64::MAX, 1 << 63];
+        for &v in &cases {
+            buf.clear();
+            put_varint(&mut buf, v);
+            assert!(buf.len() <= 10);
+            let mut pos = 0;
+            assert_eq!(take_varint(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len(), "varint({v}) must consume exactly");
+        }
+        // single-byte boundary
+        buf.clear();
+        put_varint(&mut buf, 127);
+        assert_eq!(buf.len(), 1);
+        buf.clear();
+        put_varint(&mut buf, 128);
+        assert_eq!(buf.len(), 2);
+        // a stream that ends mid-varint is an error, not a wrap
+        let mut pos = 0;
+        assert_eq!(take_varint(&[0x80, 0x80], &mut pos), None);
+    }
+
+    #[test]
+    fn block_payload_codecs_round_trip() {
+        // sorted lidx + repetitive value planes: both codecs engage
+        let lidx: Vec<u64> = (0..400u64).map(|i| i * 3 + (i % 7)).collect();
+        let vals: Vec<f64> = (0..400).map(|i| (i % 5) as f64 * 0.25 + 1.0).collect();
+        let mut buf = Vec::new();
+        for codec in [Codec::None, Codec::DeltaVarint, Codec::Shuffled] {
+            let stored = encode_block_payload(&mut buf, &lidx, &vals, codec);
+            assert_eq!(stored, codec, "compressible payload must not fall back");
+            if codec != Codec::None {
+                assert!(buf.len() < lidx.len() * 16, "{codec:?} must shrink");
+            }
+            let (l2, v2) =
+                decode_block_payload(&buf, lidx.len(), stored, "test block").unwrap();
+            assert_eq!(l2, lidx, "{codec:?} lidx");
+            let b1: Vec<u64> = vals.iter().map(|v| v.to_bits()).collect();
+            let b2: Vec<u64> = v2.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(b1, b2, "{codec:?} value bits");
+        }
+        // incompressible payload: full-width pseudo-random deltas cost
+        // ~10 varint bytes each, so the encoder must fall back to raw —
+        // stored payloads never exceed nnz * 16
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        let rand: Vec<u64> = (0..64)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x
+            })
+            .collect();
+        let rvals: Vec<f64> = rand
+            .iter()
+            .map(|&r| f64::from_bits(r >> 12 | 0x3FF0_0000_0000_0000))
+            .collect();
+        let stored = encode_block_payload(&mut buf, &rand, &rvals, Codec::DeltaVarint);
+        assert_eq!(stored, Codec::None, "expanding encode must fall back");
+        assert_eq!(buf.len(), rand.len() * 16);
+        let (l2, v2) = decode_block_payload(&buf, rand.len(), stored, "fallback").unwrap();
+        assert_eq!(l2, rand);
+        assert_eq!(
+            v2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            rvals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -1440,7 +2576,14 @@ mod tests {
         let summary = BlcoStore::write(&b, &p).unwrap();
         assert_eq!(summary.blocks, b.blocks.len());
         assert_eq!(summary.batches, b.batches.len());
+        assert_eq!(summary.stored_bytes, summary.payload_bytes, "codec none is raw");
         let r = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r.version(), STORE_VERSION);
+        assert_eq!(r.default_codec(), Codec::None);
+        assert_eq!(r.segments(), 0);
+        assert_eq!(r.base_blocks(), b.blocks.len());
+        assert_eq!(r.read_amplification(), 1.0);
+        assert_eq!(r.compression_ratio(), 1.0);
         assert_eq!(r.dims(), b.dims());
         assert_eq!(r.order(), b.order());
         assert_eq!(r.nnz(), b.nnz);
@@ -1455,6 +2598,8 @@ mod tests {
         for (i, blk) in b.blocks.iter().enumerate() {
             assert_eq!(r.block_meta(i).key, blk.key);
             assert_eq!(r.block_meta(i).nnz, blk.nnz());
+            assert_eq!(r.block_meta(i).codec, Codec::None);
+            assert_eq!(r.block_meta(i).stored_len, r.block_meta(i).bytes);
         }
         std::fs::remove_file(&p).ok();
     }
@@ -1478,6 +2623,184 @@ mod tests {
     }
 
     #[test]
+    fn compressed_containers_round_trip_bit_for_bit() {
+        // every codec must hand back the exact u64 lidx and f64 bit
+        // patterns — compression changes the disk bytes, never the math
+        let b = sample_tensor();
+        for codec in [Codec::DeltaVarint, Codec::Shuffled] {
+            let p = tmpfile(&format!("codec_{}.blco", codec.tag()));
+            let summary = BlcoStore::write_with(&b, &p, codec).unwrap();
+            assert!(
+                summary.stored_bytes < summary.payload_bytes,
+                "{codec:?} should compress sorted lidx streams: {} vs {}",
+                summary.stored_bytes,
+                summary.payload_bytes
+            );
+            let r = BlcoStoreReader::open(&p).unwrap();
+            assert_eq!(r.default_codec(), codec);
+            assert!(r.compression_ratio() > 1.0, "{codec:?}");
+            assert_eq!(r.stored_payload_bytes() as usize, summary.stored_bytes);
+            assert_eq!(r.raw_payload_bytes() as usize, summary.payload_bytes);
+            assert_eq!(r.nnz(), b.nnz);
+            assert_eq!(r.norm().to_bits(), b.norm().to_bits());
+            // footprint and batch accounting stay in decompressed bytes:
+            // cross-tier plans must not depend on the codec
+            assert_eq!(r.footprint_bytes(), b.footprint_bytes());
+            let c = Counters::new();
+            for (i, expect) in b.blocks.iter().enumerate() {
+                let got = r.block(i, &c).unwrap();
+                assert_eq!(got.key, expect.key);
+                assert_eq!(got.lidx, expect.lidx, "{codec:?} block {i}");
+                let gb: Vec<u64> = got.vals.iter().map(|v| v.to_bits()).collect();
+                let eb: Vec<u64> = expect.vals.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, eb, "{codec:?} block {i} values");
+            }
+            // bytes_disk charged the stored (compressed) lengths
+            let snap = c.snapshot();
+            assert_eq!(snap.bytes_disk as usize, summary.stored_bytes);
+            assert_eq!(r.cache_stats().disk_bytes as usize, summary.stored_bytes);
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn v1_container_reads_back() {
+        let b = sample_tensor();
+        let p = tmpfile("v1compat.blco");
+        write_v1(&b, &p);
+        let r = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r.version(), 1);
+        assert_eq!(r.default_codec(), Codec::None);
+        assert_eq!(r.segments(), 0);
+        assert_eq!(r.nnz(), b.nnz);
+        assert_eq!(r.norm().to_bits(), b.norm().to_bits());
+        assert_eq!(r.footprint_bytes(), b.footprint_bytes());
+        assert_eq!(r.batches().len(), b.batches.len());
+        let c = Counters::new();
+        for (i, expect) in b.blocks.iter().enumerate() {
+            let got = r.block(i, &c).unwrap();
+            assert_eq!(got.key, expect.key);
+            assert_eq!(got.lidx, expect.lidx);
+            let gb: Vec<u64> = got.vals.iter().map(|v| v.to_bits()).collect();
+            let eb: Vec<u64> = expect.vals.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, eb, "v1 block {i}");
+        }
+        // v1 has no segments: trailing bytes stay malformed
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            BlcoStoreReader::open(&p),
+            Err(StoreError::Malformed { .. })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_creates_delta_segment_readable() {
+        let base_coo = synth::uniform(&[60, 50, 40], 4_000, 3);
+        let delta_coo = synth::uniform(&[60, 50, 40], 1_500, 9);
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let base = BlcoTensor::from_coo_with(&base_coo, cfg);
+        let p = tmpfile("append.blco");
+        BlcoStore::write_with(&base, &p, Codec::DeltaVarint).unwrap();
+        let before = std::fs::metadata(&p).unwrap().len();
+
+        let s = BlcoStoreWriter::append(&p, &delta_coo, None).unwrap();
+        assert_eq!(s.appended_nnz, delta_coo.nnz());
+        assert_eq!(s.segments, 1);
+        assert!(s.blocks > 0);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), before + s.segment_bytes);
+
+        let r = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r.segments(), 1);
+        assert_eq!(r.read_amplification(), 2.0);
+        assert_eq!(r.nnz(), base.nnz + delta_coo.nnz());
+        assert_eq!(r.num_blocks(), r.base_blocks() + s.blocks);
+        // norm folds the segment's recorded sum of squares
+        let delta_sumsq: f64 = delta_coo.vals.iter().map(|v| v * v).sum();
+        let expect_norm = (base.norm() * base.norm() + delta_sumsq).sqrt();
+        assert!((r.norm() - expect_norm).abs() < 1e-9);
+        // base blocks are untouched bit-for-bit; delta blocks decode,
+        // carry ALTO-sorted keys, and hold exactly the appended values
+        let c = Counters::new();
+        for (i, expect) in base.blocks.iter().enumerate() {
+            let got = r.block(i, &c).unwrap();
+            assert_eq!(got.key, expect.key);
+            assert_eq!(got.lidx, expect.lidx);
+        }
+        let mut delta_nnz = 0usize;
+        let mut delta_sum = 0.0f64;
+        let mut prev_key = 0u64;
+        for i in r.base_blocks()..r.num_blocks() {
+            let blk = r.block(i, &c).unwrap();
+            assert!(blk.key >= prev_key, "segment keys must be non-decreasing");
+            prev_key = blk.key;
+            assert!(blk.nnz() <= r.config().max_block_nnz);
+            delta_nnz += blk.nnz();
+            delta_sum += blk.vals.iter().sum::<f64>();
+        }
+        assert_eq!(delta_nnz, delta_coo.nnz());
+        let expect_sum: f64 = delta_coo.vals.iter().sum();
+        assert!((delta_sum - expect_sum).abs() < 1e-9);
+        // appending again stacks a second segment
+        let s2 = BlcoStoreWriter::append(&p, &delta_coo, Some(Codec::Shuffled)).unwrap();
+        assert_eq!(s2.segments, 2);
+        let r2 = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r2.segments(), 2);
+        assert_eq!(r2.read_amplification(), 3.0);
+        assert_eq!(r2.nnz(), base.nnz + 2 * delta_coo.nnz());
+        // the full container (base + deltas) still verifies
+        r2.verify_payloads().unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_rejects_v1_dim_mismatch_and_empty() {
+        let b = sample_tensor();
+        let delta = synth::uniform(&[60, 50, 40], 100, 5);
+
+        // v1 containers must be rewritten before appending
+        let p1 = tmpfile("append_v1.blco");
+        write_v1(&b, &p1);
+        match BlcoStoreWriter::append(&p1, &delta, None) {
+            Err(StoreError::Malformed { what }) => {
+                assert!(what.contains("version-2"), "{what}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        std::fs::remove_file(&p1).ok();
+
+        let p2 = tmpfile("append_dims.blco");
+        BlcoStore::write(&b, &p2).unwrap();
+        let wrong = synth::uniform(&[60, 50, 41], 100, 5);
+        match BlcoStoreWriter::append(&p2, &wrong, None) {
+            Err(StoreError::Malformed { what }) => {
+                assert!(what.contains("dims"), "{what}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        let empty = CooTensor {
+            dims: vec![60, 50, 40],
+            coords: vec![Vec::new(), Vec::new(), Vec::new()],
+            vals: Vec::new(),
+        };
+        assert!(matches!(
+            BlcoStoreWriter::append(&p2, &empty, None),
+            Err(StoreError::Malformed { .. })
+        ));
+        // the rejected appends must not have grown the file
+        let r = BlcoStoreReader::open(&p2).unwrap();
+        assert_eq!(r.segments(), 0);
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
     fn cache_bounds_residency_and_counts() {
         let b = sample_tensor();
         assert!(b.blocks.len() >= 8, "need enough blocks to thrash");
@@ -1495,17 +2818,22 @@ mod tests {
             r.block(i, &c).unwrap();
         }
         let s = r.cache_stats();
-        assert!(s.peak_resident_bytes <= budget, "peak {} > budget {budget}", s.peak_resident_bytes);
+        assert!(
+            s.peak_resident_bytes <= budget,
+            "peak {} > budget {budget}",
+            s.peak_resident_bytes
+        );
         assert!(s.resident_bytes <= budget);
         assert!(s.evictions > 0, "scan over budget must evict");
         assert_eq!(s.misses as usize, b.blocks.len() + 3);
         assert_eq!(s.disk_bytes, {
+            // every miss charges the block's *stored* length
             let mut total = 0u64;
             for i in 0..b.blocks.len() {
-                total += (r.block_meta(i).bytes) as u64;
+                total += (r.block_meta(i).stored_len) as u64;
             }
             for i in 0..3 {
-                total += (r.block_meta(i).bytes) as u64;
+                total += (r.block_meta(i).stored_len) as u64;
             }
             total
         });
@@ -1518,6 +2846,31 @@ mod tests {
         assert_eq!(snap.host_hits, r.cache_stats().hits);
         assert_eq!(snap.host_misses, r.cache_stats().misses);
         assert_eq!(snap.bytes_disk, r.cache_stats().disk_bytes);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn compressed_cache_budgets_decompressed_bytes() {
+        // a compressed container must evict by what the blocks cost in
+        // RAM (decompressed), while disk_bytes reports the smaller stored
+        // traffic — the accounting split the codec exists for
+        let b = sample_tensor();
+        let p = tmpfile("cache_codec.blco");
+        let summary = BlcoStore::write_with(&b, &p, Codec::DeltaVarint).unwrap();
+        let budget = 3 * 512 * 16;
+        let r = BlcoStoreReader::open_with_budget(&p, budget).unwrap();
+        let c = Counters::new();
+        for i in 0..b.blocks.len() {
+            r.block(i, &c).unwrap();
+        }
+        let s = r.cache_stats();
+        assert!(s.peak_resident_bytes <= budget);
+        assert!(s.evictions > 0, "decompressed residency must thrash the budget");
+        assert_eq!(s.disk_bytes as usize, summary.stored_bytes);
+        assert!(
+            (s.disk_bytes as usize) < summary.payload_bytes,
+            "stored traffic must be below the raw bytes"
+        );
         std::fs::remove_file(&p).ok();
     }
 
@@ -1684,6 +3037,13 @@ mod tests {
             }
             other => panic!("expected UnsupportedVersion, got {other:?}"),
         }
+        // version 0 is equally unreadable (versions start at 1)
+        bytes[8..12].copy_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            BlcoStoreReader::open(&p),
+            Err(StoreError::UnsupportedVersion { found: 0, .. })
+        ));
         std::fs::remove_file(&p).ok();
     }
 
@@ -1744,8 +3104,37 @@ mod tests {
     }
 
     #[test]
+    fn corrupted_compressed_payload_is_checksum_mismatch() {
+        // the crc covers the *stored* bytes, so flipping a compressed bit
+        // is caught before any varint/plane decode can misbehave
+        let b = sample_tensor();
+        for codec in [Codec::DeltaVarint, Codec::Shuffled] {
+            let p = tmpfile(&format!("crc_codec_{}.blco", codec.tag()));
+            BlcoStore::write_with(&b, &p, codec).unwrap();
+            let mut bad = std::fs::read(&p).unwrap();
+            let n = bad.len();
+            bad[n - 1] ^= 0x01;
+            std::fs::write(&p, &bad).unwrap();
+            let r = BlcoStoreReader::open(&p).unwrap();
+            let last = r.num_blocks() - 1;
+            match r.block(last, &Counters::new()) {
+                Err(StoreError::ChecksumMismatch { what, .. }) => {
+                    assert!(what.contains("block"), "{what}");
+                }
+                other => panic!("{codec:?}: expected ChecksumMismatch, got {other:?}"),
+            }
+            // and verify_payloads reports the same fault
+            assert!(matches!(
+                r.verify_payloads(),
+                Err(StoreError::ChecksumMismatch { .. })
+            ));
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
     fn errors_render_readably() {
-        let e = StoreError::UnsupportedVersion { found: 7, supported: 1 };
+        let e = StoreError::UnsupportedVersion { found: 7, supported: 2 };
         assert!(e.to_string().contains("version 7"));
         let e = StoreError::Truncated {
             what: "payload".into(),

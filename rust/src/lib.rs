@@ -35,6 +35,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod cpals;
 pub mod device;
+pub mod error;
 pub mod format;
 pub mod linear;
 pub mod mttkrp;
@@ -46,7 +47,11 @@ pub mod util;
 
 pub use analysis::conflict::{CertificateSet, ConflictCertificate, SyncClass};
 pub use coordinator::engine::MttkrpEngine;
+pub use coordinator::request::{StreamOutcome, StreamRequest};
+pub use error::BlcoError;
 pub use format::blco::BlcoTensor;
-pub use format::store::{BatchSource, BlcoStore, BlcoStoreReader, BlcoStoreWriter};
+pub use format::store::{
+    AppendSummary, BatchSource, BlcoStore, BlcoStoreReader, BlcoStoreWriter, Codec,
+};
 pub use tensor::coo::CooTensor;
 pub use tensor::ooc::{BuildOptions, BuildStats};

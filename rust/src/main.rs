@@ -5,7 +5,14 @@
 //!               shape; print stats, optionally write a `.blco` container
 //!               (`--out`) and/or a `.tns` copy (`--tns-out`)
 //!   inspect   — dump a `.blco` container's header (dims, blocks, batches,
-//!               checksums); `--verify` scans every payload checksum
+//!               codecs, compression ratio, pending delta segments and
+//!               read amplification); `--verify` scans every stored
+//!               payload checksum
+//!   append    — push new non-zeros onto an existing container as an
+//!               LSM-style delta segment (no base rewrite)
+//!   compact   — fold pending delta segments (and an optional `--codec`
+//!               change) back into a single-base container, bit-for-bit
+//!               what a from-scratch rebuild writes
 //!   mttkrp    — run mode-n (or all-mode) MTTKRP on a preset/file
 //!   cpals     — run CP-ALS end to end, print the fit trace
 //!   stream    — force the out-of-memory streaming path and report overlap
@@ -31,15 +38,17 @@
 //!   blco mttkrp --tensor nell2 --rank 32 --device a100
 //!   blco cpals --tensor uber --rank 16 --iters 10
 //!   blco stream --tensor amazon --rank 32 --device a100
-//!   blco convert --dims 60x50x40 --nnz 6000 --seed 7 --out /tmp/t.blco
+//!   blco convert --dims 60x50x40 --nnz 6000 --seed 7 --codec delta-varint \
+//!        --out /tmp/t.blco
 //!   blco inspect --store /tmp/t.blco --verify
+//!   blco append --store /tmp/t.blco --dims 60x50x40 --nnz 500 --seed 9
+//!   blco compact --store /tmp/t.blco --codec shuffled
 //!   blco stream --from-store /tmp/t.blco --rank 16 --host-kib 64 --check
 //!   blco analyze --dims 150x130x170 --nnz 40000 --workgroup 64 --check
 
 use anyhow::{bail, Context, Result};
 
 use blco::bench::Table;
-use blco::coordinator::cluster::cluster_mttkrp;
 use blco::coordinator::engine::{ExecPath, MttkrpEngine};
 use blco::cpals::CpAlsOptions;
 use blco::device::model::throughput_tbps;
@@ -115,6 +124,20 @@ fn profile(args: &Args) -> Result<Profile> {
     Ok(p)
 }
 
+/// `--codec none|delta-varint|shuffled`; `None` when the flag is absent so
+/// callers can distinguish "keep the container's codec" from an explicit
+/// choice. Every codec round-trips exact bits — this only trades disk
+/// bytes for encode/decode time.
+fn parse_codec(args: &Args) -> Result<Option<blco::Codec>> {
+    args.get("codec")
+        .map(|s| {
+            blco::Codec::parse(s).with_context(|| {
+                format!("unknown --codec {s:?} (none|delta-varint|shuffled)")
+            })
+        })
+        .transpose()
+}
+
 fn cmd_datasets() -> Result<()> {
     let tbl = Table::new(&[10, 30, 12, 8, 6]);
     tbl.header(&["name", "dims", "nnz", "theta", "oom"]);
@@ -176,6 +199,7 @@ fn cmd_convert_stream(args: &Args) -> Result<()> {
             .map(|c| c.parse().with_context(|| format!("bad --chunk-nnz {c:?}")))
             .transpose()?,
         tmp_dir: None,
+        codec: parse_codec(args)?.unwrap_or_default(),
     };
     let path = std::path::Path::new(out);
     let (summary, stats) = if let Some(input) = args.get("input") {
@@ -228,14 +252,20 @@ fn cmd_convert_stream(args: &Args) -> Result<()> {
     println!("  merge          {:.3} s", stats.merge_s);
     println!("throughput       {:.2} Mnnz/s", stats.mnnz_per_s());
     println!(
-        "wrote container  {} ({:.1} MiB: {} B header + {:.1} MiB payload, \
+        "wrote container  {} ({:.1} MiB: {} B header + {:.1} MiB stored payload, \
          {} blocks / {} batches)",
         out,
         summary.file_bytes as f64 / (1 << 20) as f64,
         summary.header_bytes,
-        summary.payload_bytes as f64 / (1 << 20) as f64,
+        summary.stored_bytes as f64 / (1 << 20) as f64,
         summary.blocks,
         summary.batches,
+    );
+    println!(
+        "codec            {} ({:.1} MiB raw -> {:.2}x compression)",
+        summary.codec.name(),
+        summary.payload_bytes as f64 / (1 << 20) as f64,
+        summary.payload_bytes as f64 / summary.stored_bytes.max(1) as f64,
     );
     if stats.peak_bytes > stats.budget_bytes {
         bail!(
@@ -291,16 +321,23 @@ fn cmd_convert(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.get("out") {
         let path = std::path::Path::new(out);
-        let summary = blco::BlcoStore::write(&b, path)?;
+        let codec = parse_codec(args)?.unwrap_or_default();
+        let summary = blco::BlcoStore::write_with(&b, path, codec)?;
         println!(
-            "wrote container  {} ({:.1} MiB: {} B header + {:.1} MiB payload, \
+            "wrote container  {} ({:.1} MiB: {} B header + {:.1} MiB stored payload, \
              {} blocks / {} batches)",
             out,
             summary.file_bytes as f64 / (1 << 20) as f64,
             summary.header_bytes,
-            summary.payload_bytes as f64 / (1 << 20) as f64,
+            summary.stored_bytes as f64 / (1 << 20) as f64,
             summary.blocks,
             summary.batches,
+        );
+        println!(
+            "codec            {} ({:.1} MiB raw -> {:.2}x compression)",
+            summary.codec.name(),
+            summary.payload_bytes as f64 / (1 << 20) as f64,
+            summary.payload_bytes as f64 / summary.stored_bytes.max(1) as f64,
         );
         // prove the header round-trips before anyone depends on the file
         let r = blco::BlcoStoreReader::open(path)?;
@@ -319,13 +356,38 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .with_context(|| "inspect needs --store FILE.blco (or a positional path)")?;
     let r = blco::BlcoStoreReader::open(std::path::Path::new(path))?;
     println!("container       {path}");
-    println!("version         {}", blco::format::store::STORE_VERSION);
+    println!(
+        "version         {}{}",
+        r.version(),
+        if r.version() < blco::format::store::STORE_VERSION {
+            " (legacy, readable; convert rewrites as v2)"
+        } else {
+            ""
+        }
+    );
+    println!("codec           {} (container default)", r.default_codec().name());
     println!("dims            {:?}", r.dims());
     println!("order           {}", r.order());
     println!("nnz             {}", r.nnz());
     println!("norm            {:.6e}", r.norm());
-    println!("blocks          {}", r.num_blocks());
+    println!(
+        "blocks          {} ({} base + {} appended)",
+        r.num_blocks(),
+        r.base_blocks(),
+        r.num_blocks() - r.base_blocks()
+    );
     println!("batches         {}", r.batches().len());
+    println!(
+        "payload         {:.1} MiB raw -> {:.1} MiB stored ({:.2}x compression)",
+        r.raw_payload_bytes() as f64 / (1 << 20) as f64,
+        r.stored_payload_bytes() as f64 / (1 << 20) as f64,
+        r.compression_ratio()
+    );
+    println!(
+        "segments        {} pending delta segment(s), read amplification {:.1}",
+        r.segments(),
+        r.read_amplification()
+    );
     println!(
         "footprint       {:.1} MiB (streamed on-device bytes)",
         r.footprint_bytes() as f64 / (1 << 20) as f64
@@ -337,8 +399,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     );
     let show: usize = args.parse_or("blocks", 8);
     if show > 0 {
-        let tbl = Table::new(&[8, 18, 10, 12, 12]);
-        tbl.header(&["block", "key", "nnz", "bytes", "crc32"]);
+        let tbl = Table::new(&[8, 18, 10, 12, 14, 12, 12]);
+        tbl.header(&["block", "key", "nnz", "bytes", "codec", "stored", "crc32"]);
         for i in 0..r.num_blocks().min(show) {
             let m = r.block_meta(i);
             tbl.row(&[
@@ -346,6 +408,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 format!("{:#x}", m.key),
                 m.nnz.to_string(),
                 m.bytes.to_string(),
+                m.codec.name().to_string(),
+                m.stored_len.to_string(),
                 format!("{:#010x}", m.crc),
             ]);
         }
@@ -356,10 +420,102 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     if args.flag("verify") {
         let scanned = r.verify_payloads()?;
         println!(
-            "verify          OK ({:.1} MiB of payload checksums)",
+            "verify          OK ({:.1} MiB of stored payload checksums)",
             scanned as f64 / (1 << 20) as f64
         );
     }
+    Ok(())
+}
+
+/// `append --store FILE.blco [tensor spec]`: push new non-zeros onto an
+/// existing container as an LSM-style delta segment — the base is never
+/// rewritten. Reads immediately answer over base + deltas; `compact`
+/// folds them back into a single base when read amplification matters.
+fn cmd_append(args: &Args) -> Result<()> {
+    let path = args
+        .get("store")
+        .or_else(|| args.positionals.first().map(|s| s.as_str()))
+        .with_context(|| "append needs --store FILE.blco (or a positional path)")?;
+    let t = load_tensor(args)?;
+    let codec = parse_codec(args)?;
+    let sum =
+        blco::BlcoStoreWriter::append(std::path::Path::new(path), &t, codec)?;
+    println!("appended         {} nnz -> {}", sum.appended_nnz, path);
+    println!(
+        "segment          {} blocks, {:.1} KiB",
+        sum.blocks,
+        sum.segment_bytes as f64 / 1024.0
+    );
+    let r = blco::BlcoStoreReader::open(std::path::Path::new(path))?;
+    println!(
+        "pending          {} delta segment(s), read amplification {:.1} \
+         (`blco compact` folds them)",
+        r.segments(),
+        r.read_amplification()
+    );
+    println!("total nnz        {}", r.nnz());
+    Ok(())
+}
+
+/// `compact --store FILE.blco [--codec NAME]`: fold pending delta
+/// segments (and an optional codec change) into a fresh single-base
+/// container through the external-memory build pipeline, atomically
+/// renamed over the original — byte-identical to a from-scratch rebuild
+/// over the concatenated non-zeros.
+fn cmd_compact(args: &Args) -> Result<()> {
+    use blco::tensor::ooc;
+    use blco::util::pool::ExecBackend;
+
+    let path = args
+        .get("store")
+        .or_else(|| args.positionals.first().map(|s| s.as_str()))
+        .with_context(|| "compact needs --store FILE.blco (or a positional path)")?;
+    let path = std::path::Path::new(path);
+    let (segments_before, ratio_before) = {
+        let r = blco::BlcoStoreReader::open(path)?;
+        (r.segments(), r.compression_ratio())
+    };
+    let threads: usize = args.parse_or("threads", default_threads());
+    let budget = args
+        .get("build-mem-kib")
+        .map(|k| -> Result<usize> {
+            let kib: usize =
+                k.parse().with_context(|| format!("bad --build-mem-kib {k:?}"))?;
+            if kib == 0 {
+                bail!("--build-mem-kib must be > 0");
+            }
+            Ok(kib << 10)
+        })
+        .transpose()?;
+    let (summary, stats) = ooc::compact(
+        path,
+        parse_codec(args)?,
+        ExecBackend::from_threads(threads),
+        budget,
+    )?;
+    println!(
+        "compacted        {} ({} segment(s) folded into the base)",
+        path.display(),
+        segments_before
+    );
+    println!(
+        "replayed         {} nnz through {} chunk(s), peak {:.1} KiB of \
+         {:.1} KiB budget",
+        stats.entries,
+        stats.runs,
+        stats.peak_bytes as f64 / 1024.0,
+        stats.budget_bytes as f64 / 1024.0
+    );
+    let r = blco::BlcoStoreReader::open(path)?;
+    println!(
+        "container        {:.1} MiB stored, {} codec, {:.2}x -> {:.2}x \
+         compression, read amplification {:.1}",
+        summary.stored_bytes as f64 / (1 << 20) as f64,
+        summary.codec.name(),
+        ratio_before,
+        r.compression_ratio(),
+        r.read_amplification()
+    );
     Ok(())
 }
 
@@ -512,14 +668,13 @@ fn cmd_stream(args: &Args) -> Result<()> {
             engine.counters.reset();
             let mut out =
                 blco::mttkrp::dense::Matrix::zeros(dims[target] as usize, rank);
-            let rep = cluster_mttkrp(
-                &engine.eng,
-                target,
-                &factors,
-                &mut out,
-                threads,
-                &engine.counters,
-            );
+            let rep = blco::StreamRequest::new(&engine.eng, target)
+                .job(&factors)
+                .threads(threads)
+                .counters(&engine.counters)
+                .run(std::slice::from_mut(&mut out))?
+                .into_clustered()
+                .expect("multi-device profile shards");
             let vol = engine.counters.snapshot().volume_bytes();
             println!(
                 "mode {target}: batches {:>4}  overall(model) {:.3} s  \
@@ -553,14 +708,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
         engine.counters.reset();
         let mut out =
             blco::mttkrp::dense::Matrix::zeros(dims[target] as usize, rank);
-        let rep = blco::coordinator::streamer::stream_mttkrp(
-            &engine.eng,
-            target,
-            &factors,
-            &mut out,
-            threads,
-            &engine.counters,
-        );
+        let rep = blco::StreamRequest::new(&engine.eng, target)
+            .job(&factors)
+            .devices(1)
+            .threads(threads)
+            .counters(&engine.counters)
+            .run(std::slice::from_mut(&mut out))?
+            .into_streamed()
+            .expect("one device streams");
         let vol = engine.counters.snapshot().volume_bytes();
         println!(
             "mode {target}: batches {:>4}  wall {:>9}  overall(model) {:.3} s  \
@@ -1042,6 +1197,8 @@ fn main() -> Result<()> {
         Some("datasets") => cmd_datasets(),
         Some("convert") => cmd_convert(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("append") => cmd_append(&args),
+        Some("compact") => cmd_compact(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("cpals") => cmd_cpals(&args),
         Some("stream") => cmd_stream(&args),
@@ -1053,14 +1210,17 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: blco <datasets|convert|inspect|mttkrp|cpals|stream|serve|analyze|runtime> \
+                "usage: blco <datasets|convert|inspect|append|compact|mttkrp|cpals|stream|serve|analyze|runtime> \
                  [--tensor NAME | --input FILE | --dims AxBxC --nnz N] \
                  [--rank R] [--mode N] [--device a100|v100|intel_d1] \
                  [--devices D] [--links shared|dedicated|<n>] [--threads T]\n\
                  convert: [--out FILE.blco] [--tns-out FILE.tns] \
+                 [--codec none|delta-varint|shuffled] \
                  [--max-block-nnz B] [--workgroup W] \
                  [--stream [--build-mem-kib K] [--chunk-nnz C]]\n\
                  inspect: --store FILE.blco [--blocks N] [--verify]\n\
+                 append: --store FILE.blco [tensor spec] [--codec NAME]\n\
+                 compact: --store FILE.blco [--codec NAME] [--build-mem-kib K]\n\
                  stream/cpals/serve/analyze: [--from-store FILE.blco] [--host-kib H]\n\
                  stream: [--check]   analyze: [--max-block-nnz B] [--workgroup W] [--check]\n\
                  serve: [--tenants N] [--jobs J] \

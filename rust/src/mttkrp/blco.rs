@@ -139,10 +139,23 @@ impl BlcoEngine {
     /// Construct over any [`BatchSource`]. Panics on an invalid profile
     /// like [`BlcoEngine::new`].
     pub fn from_source(src: BatchSource, profile: Profile) -> Self {
-        if let Err(e) = profile.validate() {
-            panic!("invalid profile {:?}: {e}", profile.name);
+        Self::try_from_source(src, profile).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`from_source`](Self::from_source), reporting an invalid profile
+    /// as [`BlcoError::InvalidProfile`](crate::error::BlcoError) instead
+    /// of panicking.
+    pub fn try_from_source(
+        src: BatchSource,
+        profile: Profile,
+    ) -> Result<Self, crate::error::BlcoError> {
+        if let Err(reason) = profile.validate() {
+            return Err(crate::error::BlcoError::InvalidProfile {
+                profile: profile.name.to_string(),
+                reason,
+            });
         }
-        BlcoEngine { src, profile, resolution: Resolution::Auto, certs: None }
+        Ok(BlcoEngine { src, profile, resolution: Resolution::Auto, certs: None })
     }
 
     pub fn with_resolution(mut self, r: Resolution) -> Self {
@@ -1164,7 +1177,12 @@ mod tests {
         // workgroup smaller than block: many tiles per block
         let dims = [30u64, 30, 30];
         let t = synth::uniform(&dims, 3_000, 17);
-        let cfg = BlcoConfig { max_block_nnz: 512, workgroup: 64, threads: 2, ..Default::default() };
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
         let b = BlcoTensor::from_coo_with(&t, cfg);
         let eng = BlcoEngine::new(b, Profile::v100());
         let factors = random_factors(&dims, 4, 19);

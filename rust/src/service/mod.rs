@@ -25,8 +25,8 @@
 //! * [`scheduler`] — the **fair scheduler**: weighted round-robin across
 //!   tenants (FIFO within a tenant), least-loaded dispatch over the
 //!   modelled device fleet, and *fusion* of compatible streamed jobs —
-//!   same `(tensor, mode, rank)` requests ride one
-//!   [`stream_mttkrp_fused`](crate::coordinator::streamer::stream_mttkrp_fused)
+//!   same `(tensor, mode, rank)` requests ride one fused
+//!   [`StreamRequest`](crate::coordinator::request::StreamRequest)
 //!   pass so the tensor crosses the host link once per group. Results and
 //!   per-tenant latency/throughput/queue-depth stats come back in a
 //!   [`ServiceReport`](scheduler::ServiceReport), with every duration

@@ -1,8 +1,9 @@
 //! The fair scheduler and its serving loop: weighted round-robin across
 //! tenants (FIFO within a tenant), least-loaded dispatch over the modelled
 //! device fleet, and fusion of compatible streamed jobs — queued requests
-//! with the same `(tensor, mode, rank)` ride one
-//! [`stream_mttkrp_fused`] pass, so the tensor crosses the host link once
+//! with the same `(tensor, mode, rank)` ride one fused
+//! [`StreamRequest`](crate::coordinator::request::StreamRequest) pass, so
+//! the tensor crosses the host link once
 //! per group instead of once per job (the serving-side answer to the
 //! paper's Figure-10 finding that the interconnect dominates
 //! out-of-memory runs).
@@ -18,8 +19,8 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::coordinator::request::StreamRequest;
 use crate::coordinator::schedule::ScheduleStats;
-use crate::coordinator::streamer::stream_mttkrp_fused;
 use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
 use crate::device::counters::Counters;
 use crate::device::model::device_time;
@@ -436,9 +437,15 @@ pub fn serve(
                             let sched = engine.schedule(target, rank);
                             let refs: Vec<&[Matrix]> =
                                 factor_sets.iter().map(|f| f.as_slice()).collect();
-                            let rep = stream_mttkrp_fused(
-                                &engine.eng, &sched, &refs, &mut outs, threads, &cnt,
-                            );
+                            let rep = StreamRequest::new(&engine.eng, target)
+                                .fused(&refs)
+                                .schedule(&sched)
+                                .threads(threads)
+                                .counters(&cnt)
+                                .run(&mut outs)
+                                .expect("fused group was validated when queued")
+                                .into_streamed()
+                                .expect("single-device schedule streams");
                             (
                                 rep.overall_s,
                                 rep.bytes,

@@ -62,8 +62,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::format::blco::BlcoConfig;
-use crate::format::store::{BlcoStoreWriter, StoreSummary};
+use crate::format::blco::{Block, BlcoConfig};
+use crate::format::store::{BlcoStoreReader, BlcoStoreWriter, Codec, StoreSummary};
 use crate::linear::encode::BlcoSpec;
 use crate::tensor::coo::CooChunk;
 use crate::tensor::io::TnsChunks;
@@ -98,6 +98,9 @@ pub struct BuildOptions {
     pub chunk_nnz: Option<usize>,
     /// where sorted runs are spilled; `None` → the output's directory
     pub tmp_dir: Option<PathBuf>,
+    /// per-block payload codec for the emitted container (container v2);
+    /// [`Codec::None`] writes raw payloads, bit-identical to v1 blocks
+    pub codec: Codec,
 }
 
 impl Default for BuildOptions {
@@ -108,6 +111,7 @@ impl Default for BuildOptions {
             mem_budget_bytes: None,
             chunk_nnz: None,
             tmp_dir: None,
+            codec: Codec::None,
         }
     }
 }
@@ -408,7 +412,7 @@ fn build_from_chunk_source(
         }
     }
 
-    let mut writer = BlcoStoreWriter::create(out, dims, config)?;
+    let mut writer = BlcoStoreWriter::create_with_codec(out, dims, config, opts.codec)?;
     let mut cur_key = 0u64;
     let mut lidx: Vec<u64> = Vec::with_capacity(config.max_block_nnz);
     let mut vals: Vec<f64> = Vec::with_capacity(config.max_block_nnz);
@@ -535,6 +539,108 @@ pub fn build_uniform(
     Ok((summary, stats))
 }
 
+/// Compact a container in place: fold any pending delta segments (and a
+/// possible codec change) into a fresh single-base container, built
+/// through the same external-memory pipeline as `convert --stream` and
+/// atomically renamed over the original.
+///
+/// Entries are replayed in stored order — base blocks first, then each
+/// delta segment in append order — and re-sorted by the builder on
+/// `(alto line, replay position)`. Base entries are already
+/// `(line, original source index)`-sorted and each delta segment is
+/// `(line, append position)`-sorted, so for any given line the replay
+/// preserves base-before-delta and per-segment relative order: the total
+/// order is exactly what `from_coo` produces on the concatenated input,
+/// making the compacted file **bit-for-bit identical** to a from-scratch
+/// rebuild (same dims, config and codec), duplicates and norm included.
+///
+/// `codec: None` keeps the container's current default codec. The
+/// accounted peak covers the builder's working set; one decoded source
+/// block (`≤ max_block_nnz × 16` B) rides on top of it.
+pub fn compact(
+    path: &Path,
+    codec: Option<Codec>,
+    backend: ExecBackend,
+    mem_budget_bytes: Option<usize>,
+) -> Result<(StoreSummary, BuildStats)> {
+    let reader = BlcoStoreReader::open(path)
+        .with_context(|| format!("open {} for compaction", path.display()))?;
+    let dims = reader.dims().to_vec();
+    let opts = BuildOptions {
+        config: *reader.config(),
+        backend,
+        mem_budget_bytes,
+        chunk_nnz: None,
+        tmp_dir: None,
+        codec: codec.unwrap_or_else(|| reader.default_codec()),
+    };
+    let mut stats = BuildStats::default();
+    let chunk_nnz = resolve_chunk_nnz(dims.len(), &opts)?;
+    stats.chunk_nnz = chunk_nnz;
+    let tmp_out = PathBuf::from(format!("{}.compact.tmp", path.display()));
+
+    let order = dims.len();
+    let total_blocks = reader.num_blocks();
+    let mut block_i = 0usize;
+    let mut entry_i = 0usize;
+    let mut staged: Option<Block> = None;
+    let mut coord = vec![0u32; order];
+    let mut base = 0u64;
+    let summary = build_from_chunk_source(
+        |_stats| {
+            if block_i >= total_blocks {
+                return Ok(None);
+            }
+            let mut chunk = CooChunk::with_capacity(order, chunk_nnz, base);
+            while chunk.len() < chunk_nnz && block_i < total_blocks {
+                if staged.is_none() {
+                    // bypass the cache: compaction is a single sequential
+                    // scan, caching it would only evict hot blocks
+                    staged = Some(reader.load_block(block_i).with_context(
+                        || format!("read block {block_i} of {}", path.display()),
+                    )?);
+                    entry_i = 0;
+                }
+                let blk = staged.as_ref().unwrap();
+                while entry_i < blk.lidx.len() && chunk.len() < chunk_nnz {
+                    reader.spec().decode(blk.key, blk.lidx[entry_i], &mut coord);
+                    chunk.push(&coord, blk.vals[entry_i]);
+                    entry_i += 1;
+                }
+                if entry_i == blk.lidx.len() {
+                    staged = None;
+                    block_i += 1;
+                }
+            }
+            base += chunk.len() as u64;
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        },
+        &dims,
+        &tmp_out,
+        &opts,
+        &mut stats,
+    )
+    .map_err(|e| {
+        std::fs::remove_file(&tmp_out).ok();
+        e
+    })?;
+    if summary.nnz != reader.nnz() {
+        std::fs::remove_file(&tmp_out).ok();
+        bail!(
+            "compaction of {} replayed {} non-zeros but the container \
+             holds {}",
+            path.display(),
+            summary.nnz,
+            reader.nnz()
+        );
+    }
+    drop(reader);
+    std::fs::rename(&tmp_out, path).with_context(|| {
+        format!("rename {} over {}", tmp_out.display(), path.display())
+    })?;
+    Ok((StoreSummary { path: path.to_path_buf(), ..summary }, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -601,6 +707,113 @@ mod tests {
             .collect();
         assert!(leftovers.is_empty(), "leftover temp files: {leftovers:?}");
         std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn compressed_stream_matches_in_memory_bitwise() {
+        // the codec threads through the external-memory writer exactly as
+        // through BlcoStore::write_with: whole-file byte equality holds
+        // for every codec, not just raw payloads
+        let dims = [64u64, 48, 32];
+        let nnz = 5_000;
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let t = synth::uniform(&dims, nnz, 11);
+        for codec in [Codec::DeltaVarint, Codec::Shuffled] {
+            let p_mem = tmpfile(&format!("mem_{}.blco", codec.tag()));
+            let p_ooc = tmpfile(&format!("ooc_{}.blco", codec.tag()));
+            BlcoStore::write_with(&BlcoTensor::from_coo_with(&t, cfg), &p_mem, codec)
+                .unwrap();
+            let opts = BuildOptions {
+                config: cfg,
+                chunk_nnz: Some(700),
+                codec,
+                ..Default::default()
+            };
+            build_uniform(&dims, nnz, 11, &p_ooc, &opts).unwrap();
+            assert_eq!(
+                std::fs::read(&p_mem).unwrap(),
+                std::fs::read(&p_ooc).unwrap(),
+                "{codec:?}"
+            );
+            std::fs::remove_file(&p_mem).ok();
+            std::fs::remove_file(&p_ooc).ok();
+        }
+    }
+
+    #[test]
+    fn compact_after_append_is_bitwise_a_scratch_rebuild() {
+        let dims = [60u64, 50, 40];
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let base = synth::uniform(&dims, 4_000, 3);
+        let delta = synth::uniform(&dims, 1_500, 9);
+        for codec in [Codec::None, Codec::DeltaVarint, Codec::Shuffled] {
+            // live container: base + one appended delta segment, compacted
+            let p_live = tmpfile(&format!("live_{}.blco", codec.tag()));
+            BlcoStore::write_with(&BlcoTensor::from_coo_with(&base, cfg), &p_live, codec)
+                .unwrap();
+            BlcoStoreWriter::append(&p_live, &delta, None).unwrap();
+            let (summary, stats) =
+                compact(&p_live, None, ExecBackend::from_threads(2), None).unwrap();
+            assert_eq!(summary.nnz, base.nnz() + delta.nnz());
+            assert_eq!(stats.entries as usize, summary.nnz);
+
+            // scratch rebuild: the same non-zeros concatenated up front
+            let mut both = base.clone();
+            for e in 0..delta.nnz() {
+                both.push(&delta.coord(e), delta.vals[e]);
+            }
+            let p_scratch = tmpfile(&format!("scratch_{}.blco", codec.tag()));
+            BlcoStore::write_with(
+                &BlcoTensor::from_coo_with(&both, cfg),
+                &p_scratch,
+                codec,
+            )
+            .unwrap();
+
+            assert_eq!(
+                std::fs::read(&p_live).unwrap(),
+                std::fs::read(&p_scratch).unwrap(),
+                "{codec:?}: compacted container differs from scratch rebuild"
+            );
+            // the compacted container is pristine again
+            let r = BlcoStoreReader::open(&p_live).unwrap();
+            assert_eq!(r.segments(), 0);
+            assert_eq!(r.read_amplification(), 1.0);
+            std::fs::remove_file(&p_live).ok();
+            std::fs::remove_file(&p_scratch).ok();
+        }
+    }
+
+    #[test]
+    fn compact_recompresses_with_a_new_codec() {
+        let dims = [60u64, 50, 40];
+        let t = synth::uniform(&dims, 4_000, 3);
+        let cfg = BlcoConfig {
+            max_block_nnz: 512,
+            workgroup: 64,
+            threads: 2,
+            ..Default::default()
+        };
+        let p = tmpfile("recompress.blco");
+        BlcoStore::write(&BlcoTensor::from_coo_with(&t, cfg), &p).unwrap();
+        let raw_bytes = std::fs::metadata(&p).unwrap().len();
+        compact(&p, Some(Codec::DeltaVarint), ExecBackend::from_threads(2), None).unwrap();
+        let r = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(r.default_codec(), Codec::DeltaVarint);
+        assert_eq!(r.nnz(), t.nnz());
+        assert!(r.compression_ratio() > 1.0);
+        assert!(std::fs::metadata(&p).unwrap().len() < raw_bytes);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

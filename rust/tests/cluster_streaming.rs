@@ -1,21 +1,22 @@
-//! Integration over the multi-device cluster streamer: sharded results
-//! match the single-device path and the serial oracle on every mode for
-//! D ∈ {1, 2, 4}; the degenerate D = 1 cluster reproduces
-//! `stream_mttkrp`'s report; greedy placement is never worse than
+//! Integration over the multi-device cluster streamer, driven through the
+//! [`StreamRequest`] front door: sharded results match the single-device
+//! path and the serial oracle on every mode for D ∈ {1, 2, 4} (D = 1
+//! requests route to the single-device pipeline); the degenerate D = 1
+//! *cluster body* — still reachable through the deprecated wrapper —
+//! reproduces the stream report; greedy placement is never worse than
 //! round-robin on modelled makespan (and strictly better on skewed
 //! costs); merge traffic is charged to the counters.
 
 use blco::coordinator::cluster::{
-    cluster_mttkrp, cluster_mttkrp_with, estimate_batch_cost, modelled_makespan,
-    plan_placement, Placement,
+    estimate_batch_cost, modelled_makespan, plan_placement, ClusterReport, Placement,
 };
-use blco::coordinator::streamer::stream_mttkrp;
 use blco::device::{Counters, LinkTopology, Profile};
 use blco::format::blco::{BlcoConfig, BlcoTensor};
 use blco::mttkrp::blco::BlcoEngine;
 use blco::mttkrp::dense::Matrix;
 use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
 use blco::tensor::synth;
+use blco::{StreamOutcome, StreamRequest};
 
 fn batched_engine(devices: usize, links: LinkTopology) -> (blco::CooTensor, BlcoEngine) {
     let t = synth::fiber_clustered(&[60, 50, 40], 9_000, 2, 1.0, 41);
@@ -27,6 +28,34 @@ fn batched_engine(devices: usize, links: LinkTopology) -> (blco::CooTensor, Blco
     (t, eng)
 }
 
+/// One request with the engine's own device count: Streamed for a
+/// single-device profile, Clustered otherwise.
+fn run(
+    eng: &BlcoEngine,
+    target: usize,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    counters: &Counters,
+) -> StreamOutcome {
+    StreamRequest::new(eng, target)
+        .job(factors)
+        .threads(4)
+        .counters(counters)
+        .run(std::slice::from_mut(out))
+        .unwrap()
+}
+
+/// [`run`] on a multi-device profile, unwrapped to its cluster report.
+fn run_cluster(
+    eng: &BlcoEngine,
+    target: usize,
+    factors: &[Matrix],
+    out: &mut Matrix,
+    counters: &Counters,
+) -> ClusterReport {
+    run(eng, target, factors, out, counters).into_clustered().unwrap()
+}
+
 #[test]
 fn sharded_matches_oracle_all_modes_and_device_counts() {
     for links in [LinkTopology::Shared, LinkTopology::Dedicated] {
@@ -36,25 +65,34 @@ fn sharded_matches_oracle_all_modes_and_device_counts() {
             for target in 0..3 {
                 let expect = mttkrp_oracle(&t, target, &factors);
                 let mut out = Matrix::zeros(t.dims[target] as usize, 8);
-                let rep = cluster_mttkrp(
-                    &eng, target, &factors, &mut out, 4, &Counters::new(),
-                );
+                let outcome = run(&eng, target, &factors, &mut out, &Counters::new());
                 assert!(
                     out.max_abs_diff(&expect) < 1e-9,
                     "links {links:?} D={devices} mode {target}"
                 );
-                assert_eq!(rep.devices, devices);
-                assert_eq!(rep.batches.len(), eng.num_batches());
-                // every batch placed exactly once
-                let mut seen = vec![false; eng.num_batches()];
-                for tl in &rep.per_device {
-                    for &b in &tl.batches {
-                        assert!(!seen[b], "batch {b} on two devices");
-                        seen[b] = true;
+                match outcome {
+                    // a one-device request routes to the single-device
+                    // pipeline — no shard plan to check
+                    StreamOutcome::Streamed(rep) => {
+                        assert_eq!(devices, 1);
+                        assert_eq!(rep.batches.len(), eng.num_batches());
+                    }
+                    StreamOutcome::Clustered(rep) => {
+                        assert!(devices > 1);
+                        assert_eq!(rep.devices, devices);
+                        assert_eq!(rep.batches.len(), eng.num_batches());
+                        // every batch placed exactly once
+                        let mut seen = vec![false; eng.num_batches()];
+                        for tl in &rep.per_device {
+                            for &b in &tl.batches {
+                                assert!(!seen[b], "batch {b} on two devices");
+                                seen[b] = true;
+                            }
+                        }
+                        assert!(seen.iter().all(|&s| s), "some batch unplaced");
+                        assert!(rep.imbalance() >= 1.0 - 1e-12);
                     }
                 }
-                assert!(seen.iter().all(|&s| s), "some batch unplaced");
-                assert!(rep.imbalance() >= 1.0 - 1e-12);
             }
         }
     }
@@ -68,19 +106,24 @@ fn sharded_matches_single_device_result() {
     for target in 0..3 {
         let mut a = Matrix::zeros(t.dims[target] as usize, 16);
         let mut b = Matrix::zeros(t.dims[target] as usize, 16);
-        stream_mttkrp(&eng1, target, &factors, &mut a, 4, &Counters::new());
-        cluster_mttkrp(&eng4, target, &factors, &mut b, 4, &Counters::new());
+        run(&eng1, target, &factors, &mut a, &Counters::new());
+        run_cluster(&eng4, target, &factors, &mut b, &Counters::new());
         assert!(a.max_abs_diff(&b) < 1e-9, "mode {target}");
     }
 }
 
 #[test]
+#[allow(deprecated)] // pins the legacy D = 1 cluster body against the stream path
 fn degenerate_single_device_reproduces_stream_report() {
+    use blco::coordinator::cluster::cluster_mttkrp;
+
     let (t, eng) = batched_engine(1, LinkTopology::Shared);
     let factors = random_factors(&t.dims, 8, 9);
     let mut a = Matrix::zeros(t.dims[0] as usize, 8);
     let mut b = Matrix::zeros(t.dims[0] as usize, 8);
-    let sr = stream_mttkrp(&eng, 0, &factors, &mut a, 4, &Counters::new());
+    let sr = run(&eng, 0, &factors, &mut a, &Counters::new())
+        .into_streamed()
+        .unwrap();
     let cr = cluster_mttkrp(&eng, 0, &factors, &mut b, 4, &Counters::new());
 
     assert_eq!(cr.devices, 1);
@@ -156,9 +199,14 @@ fn placement_policy_does_not_change_the_answer() {
     let expect = mttkrp_oracle(&t, 1, &factors);
     for placement in [Placement::Greedy, Placement::RoundRobin] {
         let mut out = Matrix::zeros(t.dims[1] as usize, 8);
-        let rep = cluster_mttkrp_with(
-            &eng, 1, &factors, &mut out, 4, &Counters::new(), placement,
-        );
+        let rep = StreamRequest::new(&eng, 1)
+            .job(&factors)
+            .placement(placement)
+            .threads(4)
+            .run(std::slice::from_mut(&mut out))
+            .unwrap()
+            .into_clustered()
+            .unwrap();
         assert_eq!(rep.placement, placement);
         assert!(out.max_abs_diff(&expect) < 1e-9, "{placement:?}");
     }
@@ -172,15 +220,15 @@ fn merge_traffic_charged_and_modelled() {
     let (c1, c2) = (Counters::new(), Counters::new());
     let mut a = Matrix::zeros(t.dims[0] as usize, 8);
     let mut b = Matrix::zeros(t.dims[0] as usize, 8);
-    let r1 = cluster_mttkrp(&eng1, 0, &factors, &mut a, 4, &c1);
-    let r2 = cluster_mttkrp(&eng2, 0, &factors, &mut b, 4, &c2);
+    // one device streams with no merge; its counters are the baseline
+    run(&eng1, 0, &factors, &mut a, &c1).into_streamed().unwrap();
+    let r2 = run_cluster(&eng2, 0, &factors, &mut b, &c2);
     // one reduction round: one output-sized segment over the peer link
     let seg = t.dims[0] as usize * 8 * 8;
     assert_eq!(r2.merge_bytes, seg);
     assert!(r2.merge_s > 0.0);
     assert!((r2.overall_s - (r2.stream_s + r2.merge_s)).abs() < 1e-15);
     // the merge's reads/writes land in the counters
-    assert_eq!(r1.merge_bytes, 0);
     let extra = c2.snapshot().volume_bytes() as i64 - c1.snapshot().volume_bytes() as i64;
     assert_eq!(extra, (seg * 3) as i64, "merge reads 2 partials, writes 1");
 }
@@ -197,7 +245,7 @@ fn four_devices_on_two_link_ports() {
     for target in 0..3 {
         let expect = mttkrp_oracle(&t, target, &factors);
         let mut out = Matrix::zeros(t.dims[target] as usize, 8);
-        let rep = cluster_mttkrp(&eng, target, &factors, &mut out, 4, &Counters::new());
+        let rep = run_cluster(&eng, target, &factors, &mut out, &Counters::new());
         assert!(out.max_abs_diff(&expect) < 1e-9, "mode {target}");
         assert_eq!(rep.devices, 4);
         assert_eq!(rep.batches.len(), eng.num_batches());
@@ -209,9 +257,9 @@ fn four_devices_on_two_link_ports() {
     let mut o1 = Matrix::zeros(t.dims[0] as usize, 8);
     let mut o2 = Matrix::zeros(t.dims[0] as usize, 8);
     let mut o3 = Matrix::zeros(t.dims[0] as usize, 8);
-    let rp = cluster_mttkrp(&eng, 0, &factors, &mut o1, 4, &Counters::new());
-    let rs = cluster_mttkrp(&shared, 0, &factors, &mut o2, 4, &Counters::new());
-    let rd = cluster_mttkrp(&dedicated, 0, &factors, &mut o3, 4, &Counters::new());
+    let rp = run_cluster(&eng, 0, &factors, &mut o1, &Counters::new());
+    let rs = run_cluster(&shared, 0, &factors, &mut o2, &Counters::new());
+    let rd = run_cluster(&dedicated, 0, &factors, &mut o3, &Counters::new());
     assert!(
         rp.stream_s <= rs.stream_s * (1.0 + 1e-9),
         "2 ports {} vs shared {}",
@@ -233,8 +281,8 @@ fn dedicated_links_never_slower_than_shared() {
     let factors = random_factors(&t.dims, 8, 17);
     let mut a = Matrix::zeros(t.dims[0] as usize, 8);
     let mut b = Matrix::zeros(t.dims[0] as usize, 8);
-    let rs = cluster_mttkrp(&shared, 0, &factors, &mut a, 4, &Counters::new());
-    let rd = cluster_mttkrp(&dedicated, 0, &factors, &mut b, 4, &Counters::new());
+    let rs = run_cluster(&shared, 0, &factors, &mut a, &Counters::new());
+    let rd = run_cluster(&dedicated, 0, &factors, &mut b, &Counters::new());
     assert!(
         rd.stream_s <= rs.stream_s * (1.0 + 1e-9),
         "dedicated {} vs shared {}",

@@ -1,0 +1,327 @@
+//! Container v2 end-to-end, public API only: version-1 files still open
+//! and compute identically; the codec matrix (none / delta-varint /
+//! shuffled) streams bit-for-bit across the resident and disk tiers
+//! through [`StreamRequest`]; append + in-place compaction produces the
+//! byte-identical file a scratch rebuild would; a flipped bit in a
+//! compressed payload is a structured checksum error, never a panic.
+
+use std::path::{Path, PathBuf};
+
+use blco::device::{Counters, Profile};
+use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::format::store::{
+    crc32, BlcoStore, BlcoStoreReader, BlcoStoreWriter, Codec, StoreError,
+    STORE_MAGIC,
+};
+use blco::mttkrp::blco::BlcoEngine;
+use blco::mttkrp::dense::Matrix;
+use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
+use blco::mttkrp::Mttkrp;
+use blco::tensor::coo::CooTensor;
+use blco::tensor::{ooc, synth};
+use blco::util::pool::ExecBackend;
+use blco::StreamRequest;
+
+fn tmpfile(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("blco_v2_{}_{}", std::process::id(), name));
+    p
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn sample() -> (CooTensor, BlcoTensor) {
+    let t = synth::uniform(&[60, 50, 40], 8_000, 11);
+    let cfg = BlcoConfig {
+        max_block_nnz: 512,
+        workgroup: 64,
+        threads: 2,
+        ..Default::default()
+    };
+    let b = BlcoTensor::from_coo_with(&t, cfg);
+    assert!(b.batches.len() > 4, "need a real batch pipeline");
+    (t, b)
+}
+
+/// Hand-write `b` in the version-1 layout (raw payloads, 20-byte index
+/// entries, no codec column, no segments) — the compat corpus, since this
+/// build only writes version 2.
+fn write_v1(b: &BlcoTensor, path: &Path) {
+    let mut header: Vec<u8> = Vec::new();
+    header.extend_from_slice(&(b.dims().len() as u32).to_le_bytes());
+    for &d in b.dims() {
+        header.extend_from_slice(&d.to_le_bytes());
+    }
+    header.extend_from_slice(&(b.nnz as u64).to_le_bytes());
+    header.extend_from_slice(&b.norm().to_le_bytes());
+    header.extend_from_slice(&(b.config.max_block_nnz as u64).to_le_bytes());
+    header.extend_from_slice(&(b.config.workgroup as u32).to_le_bytes());
+    header.extend_from_slice(&b.config.inblock_budget.to_le_bytes());
+    header.extend_from_slice(&(b.blocks.len() as u64).to_le_bytes());
+    let payload_of = |blk: &blco::format::blco::Block| {
+        let mut buf = Vec::with_capacity(blk.nnz() * 16);
+        for &l in &blk.lidx {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        for &v in &blk.vals {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        buf
+    };
+    for blk in &b.blocks {
+        let buf = payload_of(blk.as_ref());
+        header.extend_from_slice(&blk.key.to_le_bytes());
+        header.extend_from_slice(&(blk.nnz() as u64).to_le_bytes());
+        header.extend_from_slice(&crc32(&buf).to_le_bytes());
+    }
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(&STORE_MAGIC);
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&crc32(&header).to_le_bytes());
+    for blk in &b.blocks {
+        out.extend_from_slice(&payload_of(blk.as_ref()));
+    }
+    std::fs::write(path, &out).unwrap();
+}
+
+fn concat(a: &CooTensor, b: &CooTensor) -> CooTensor {
+    let mut c = CooTensor::new(&a.dims);
+    for e in 0..a.nnz() {
+        c.push(&a.coord(e), a.vals[e]);
+    }
+    for e in 0..b.nnz() {
+        c.push(&b.coord(e), b.vals[e]);
+    }
+    c
+}
+
+// a budget of ~4 small decompressed blocks: full passes must evict
+const TIGHT_BUDGET: usize = 4 * 512 * 16;
+
+#[test]
+fn v1_container_reads_and_computes_like_v2() {
+    let (t, b) = sample();
+    let p1 = tmpfile("v1.blco");
+    let p2 = tmpfile("v1_as_v2.blco");
+    write_v1(&b, &p1);
+    BlcoStore::write(&b, &p2).unwrap();
+
+    let r1 = BlcoStoreReader::open(&p1).unwrap();
+    assert_eq!(r1.version(), 1);
+    assert_eq!(r1.default_codec(), Codec::None);
+    assert_eq!(r1.segments(), 0, "v1 has no delta segments");
+    assert!((r1.compression_ratio() - 1.0).abs() < 1e-12, "v1 stores raw");
+    // v1 stores raw payloads, so the scanned (stored) bytes are nnz * 16
+    assert_eq!(r1.verify_payloads().unwrap(), b.nnz * 16);
+    let r2 = BlcoStoreReader::open(&p2).unwrap();
+    assert_eq!(r2.version(), 2);
+    assert_eq!(r1.nnz(), r2.nnz());
+    assert_eq!(r1.num_blocks(), r2.num_blocks());
+
+    // identical decoded blocks → identical kernel input → identical bits
+    let e1 = BlcoEngine::from_store_reader(r1, Profile::a100());
+    let e2 = BlcoEngine::from_store_reader(r2, Profile::a100());
+    let factors = random_factors(&t.dims, 8, 5);
+    for target in 0..t.order() {
+        let mut a = Matrix::zeros(t.dims[target] as usize, 8);
+        let mut d = Matrix::zeros(t.dims[target] as usize, 8);
+        e1.mttkrp(target, &factors, &mut a, 1, &Counters::new());
+        e2.mttkrp(target, &factors, &mut d, 1, &Counters::new());
+        assert_eq!(bits(&a), bits(&d), "v1 vs v2 mode {target}");
+        let expect = mttkrp_oracle(&t, target, &factors);
+        assert!(a.max_abs_diff(&expect) < 1e-9, "mode {target}");
+    }
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+#[test]
+fn codec_matrix_streams_bit_for_bit_across_tiers() {
+    let (t, b) = sample();
+    let factors = random_factors(&t.dims, 8, 7);
+    let prof = Profile::tiny(1 << 16);
+    let resident = BlcoEngine::new(b.clone(), prof.clone());
+    for codec in [Codec::None, Codec::DeltaVarint, Codec::Shuffled] {
+        let p = tmpfile(&format!("codec_{}.blco", codec.name()));
+        let summary = BlcoStore::write_with(&b, &p, codec).unwrap();
+        let reader = BlcoStoreReader::open_with_budget(&p, TIGHT_BUDGET).unwrap();
+        assert_eq!(reader.default_codec(), codec);
+        assert!(reader.compression_ratio() >= 1.0 - 1e-12);
+        if codec == Codec::DeltaVarint {
+            assert!(
+                reader.compression_ratio() > 1.0,
+                "delta-varint must shrink sorted lidx streams"
+            );
+            assert!(summary.stored_bytes < summary.payload_bytes);
+        }
+        let disk = BlcoEngine::from_store_reader(reader, prof.clone());
+        for target in 0..t.order() {
+            // threads = 1: a fully deterministic float-op order, so the
+            // two tiers must agree to the bit
+            let mut a = Matrix::zeros(t.dims[target] as usize, 8);
+            let mut d = Matrix::zeros(t.dims[target] as usize, 8);
+            let ra = StreamRequest::new(&resident, target)
+                .job(&factors)
+                .devices(1)
+                .threads(1)
+                .run(std::slice::from_mut(&mut a))
+                .unwrap()
+                .into_streamed()
+                .unwrap();
+            let rd = StreamRequest::new(&disk, target)
+                .job(&factors)
+                .devices(1)
+                .threads(1)
+                .run(std::slice::from_mut(&mut d))
+                .unwrap()
+                .into_streamed()
+                .unwrap();
+            assert_eq!(bits(&a), bits(&d), "{codec:?} mode {target}");
+            // wire bytes are decompressed bytes on both tiers: the same
+            // plan, clock and volume regardless of the stored codec
+            assert_eq!(ra.bytes, rd.bytes, "{codec:?} mode {target}");
+            assert_eq!(ra.transfer_s, rd.transfer_s);
+
+            // threads = 4: atomic accumulation reorders across runs, so
+            // parity is numeric; the modelled traffic stays exact
+            let mut a4 = Matrix::zeros(t.dims[target] as usize, 8);
+            let mut d4 = Matrix::zeros(t.dims[target] as usize, 8);
+            let ra4 = StreamRequest::new(&resident, target)
+                .job(&factors)
+                .devices(1)
+                .threads(4)
+                .run(std::slice::from_mut(&mut a4))
+                .unwrap()
+                .into_streamed()
+                .unwrap();
+            let rd4 = StreamRequest::new(&disk, target)
+                .job(&factors)
+                .devices(1)
+                .threads(4)
+                .run(std::slice::from_mut(&mut d4))
+                .unwrap()
+                .into_streamed()
+                .unwrap();
+            assert_eq!(ra4.bytes, rd4.bytes);
+            let expect = mttkrp_oracle(&t, target, &factors);
+            assert!(a4.max_abs_diff(&expect) < 1e-9, "{codec:?} mode {target}");
+            assert!(d4.max_abs_diff(&expect) < 1e-9, "{codec:?} mode {target}");
+        }
+        let stats = disk.src.reader().unwrap().cache_stats();
+        assert!(
+            stats.peak_resident_bytes <= TIGHT_BUDGET,
+            "{codec:?}: peak {} > budget {TIGHT_BUDGET}",
+            stats.peak_resident_bytes
+        );
+        assert!(stats.misses > 0, "{codec:?}: streaming must read from disk");
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn append_then_compact_is_byte_identical_to_a_scratch_rebuild() {
+    let base = synth::uniform(&[48, 40, 32], 5_000, 3);
+    let delta = synth::uniform(&[48, 40, 32], 1_500, 9);
+    let whole = concat(&base, &delta);
+    let cfg = BlcoConfig {
+        max_block_nnz: 512,
+        workgroup: 64,
+        threads: 2,
+        ..Default::default()
+    };
+    for codec in [Codec::None, Codec::DeltaVarint] {
+        let p = tmpfile(&format!("appended_{}.blco", codec.name()));
+        let p2 = tmpfile(&format!("scratch_{}.blco", codec.name()));
+        BlcoStore::write_with(&BlcoTensor::from_coo_with(&base, cfg), &p, codec)
+            .unwrap();
+
+        let sum = BlcoStoreWriter::append(&p, &delta, None).unwrap();
+        assert_eq!(sum.appended_nnz, delta.nnz());
+        assert_eq!(sum.segments, 1);
+        {
+            let r = BlcoStoreReader::open(&p).unwrap();
+            assert_eq!(r.segments(), 1);
+            assert_eq!(r.nnz(), whole.nnz());
+            assert!(r.read_amplification() > 1.0, "a pending segment costs reads");
+        }
+
+        // in-place compaction folds the segment into a fresh base...
+        ooc::compact(&p, None, ExecBackend::from_threads(2), None).unwrap();
+        // ...and the result is the byte-for-byte file a from-scratch
+        // build over the concatenated tensor produces
+        BlcoStore::write_with(&BlcoTensor::from_coo_with(&whole, cfg), &p2, codec)
+            .unwrap();
+        assert_eq!(
+            std::fs::read(&p).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "{codec:?}: compacted container != scratch rebuild"
+        );
+
+        let ra = BlcoStoreReader::open(&p).unwrap();
+        assert_eq!(ra.segments(), 0);
+        assert!((ra.read_amplification() - 1.0).abs() < 1e-12);
+        drop(ra);
+
+        // the compacted container streams the concatenated answer, and
+        // bitwise the same answer as an engine over the scratch file
+        let prof = Profile::tiny(1 << 16);
+        let ea = BlcoEngine::from_store_reader(
+            BlcoStoreReader::open_with_budget(&p, TIGHT_BUDGET).unwrap(),
+            prof.clone(),
+        );
+        let eb = BlcoEngine::from_store_reader(
+            BlcoStoreReader::open_with_budget(&p2, TIGHT_BUDGET).unwrap(),
+            prof,
+        );
+        let factors = random_factors(&whole.dims, 8, 13);
+        let expect = mttkrp_oracle(&whole, 0, &factors);
+        let mut a = Matrix::zeros(whole.dims[0] as usize, 8);
+        let mut d = Matrix::zeros(whole.dims[0] as usize, 8);
+        for (eng, out) in [(&ea, &mut a), (&eb, &mut d)] {
+            StreamRequest::new(eng, 0)
+                .job(&factors)
+                .devices(1)
+                .threads(1)
+                .run(std::slice::from_mut(out))
+                .unwrap();
+        }
+        assert!(a.max_abs_diff(&expect) < 1e-9, "{codec:?}");
+        assert_eq!(bits(&a), bits(&d), "{codec:?}");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}
+
+#[test]
+fn corrupted_compressed_payload_is_a_checksum_error() {
+    let (_t, b) = sample();
+    for codec in [Codec::DeltaVarint, Codec::Shuffled] {
+        let p = tmpfile(&format!("corrupt_{}.blco", codec.name()));
+        BlcoStore::write_with(&b, &p, codec).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip one bit in the last stored (compressed) payload byte: the
+        // header stays pristine, so only the per-block payload checksum
+        // can catch it
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+
+        let reader = BlcoStoreReader::open(&p).unwrap();
+        let bad = reader.num_blocks() - 1;
+        match reader.load_block(bad) {
+            Err(StoreError::ChecksumMismatch { what, .. }) => {
+                assert!(what.contains("block"), "{what}");
+            }
+            other => panic!("{codec:?}: expected ChecksumMismatch, got {other:?}"),
+        }
+        assert!(
+            reader.verify_payloads().is_err(),
+            "{codec:?}: verify must reject the flipped payload bit"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -10,7 +10,6 @@ use std::sync::Arc;
 
 use blco::coordinator::engine::{ExecPath, MttkrpEngine};
 use blco::coordinator::schedule::StreamSchedule;
-use blco::coordinator::streamer::{stream_mttkrp_fused, stream_mttkrp_scheduled};
 use blco::device::{Counters, Profile};
 use blco::format::blco::{BlcoConfig, BlcoTensor};
 use blco::format::store::{BlcoStore, BlcoStoreReader, StoreError};
@@ -20,6 +19,7 @@ use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
 use blco::mttkrp::Mttkrp;
 use blco::service::TensorRegistry;
 use blco::tensor::{io, synth};
+use blco::StreamRequest;
 
 fn tmpfile(name: &str) -> PathBuf {
     let mut p = std::env::temp_dir();
@@ -172,8 +172,22 @@ fn fused_serving_path_matches_bit_for_bit_from_disk() {
         seeds.iter().map(|_| Matrix::zeros(dims[0] as usize, rank)).collect();
     let mut outs_d: Vec<Matrix> =
         seeds.iter().map(|_| Matrix::zeros(dims[0] as usize, rank)).collect();
-    let ra = stream_mttkrp_fused(&resident, &sched_r, &refs, &mut outs_r, 1, &Counters::new());
-    let rd = stream_mttkrp_fused(&disk, &sched_d, &refs, &mut outs_d, 1, &Counters::new());
+    let ra = StreamRequest::new(&resident, 0)
+        .fused(&refs)
+        .schedule(&sched_r)
+        .threads(1)
+        .run(&mut outs_r)
+        .unwrap()
+        .into_streamed()
+        .unwrap();
+    let rd = StreamRequest::new(&disk, 0)
+        .fused(&refs)
+        .schedule(&sched_d)
+        .threads(1)
+        .run(&mut outs_d)
+        .unwrap()
+        .into_streamed()
+        .unwrap();
     assert_eq!(ra.bytes, rd.bytes, "tensor crosses the wire once per tier");
     assert_eq!(ra.transfer_s, rd.transfer_s);
     for (a, d) in outs_r.iter().zip(&outs_d) {
@@ -181,7 +195,14 @@ fn fused_serving_path_matches_bit_for_bit_from_disk() {
     }
     // one more single-job scheduled pass: the wrapper parity holds on disk
     let mut solo = Matrix::zeros(dims[0] as usize, rank);
-    let rep = stream_mttkrp_scheduled(&disk, &sched_d, &refs[0], &mut solo, 1, &Counters::new());
+    let rep = StreamRequest::new(&disk, 0)
+        .job(refs[0])
+        .schedule(&sched_d)
+        .threads(1)
+        .run(std::slice::from_mut(&mut solo))
+        .unwrap()
+        .into_streamed()
+        .unwrap();
     assert_eq!(rep.bytes, ra.bytes);
     assert_eq!(bits(&solo), bits(&outs_r[0]));
     std::fs::remove_file(&path).ok();
@@ -265,12 +286,13 @@ fn negative_cases_return_structured_errors() {
         Err(StoreError::BadMagic { .. })
     ));
 
-    // wrong version
+    // wrong version (2 is the current writer version, so patch in one
+    // from the future)
     let mut bad = good.clone();
-    bad[8..12].copy_from_slice(&2u32.to_le_bytes());
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
     std::fs::write(&path, &bad).unwrap();
     match BlcoStoreReader::open(&path) {
-        Err(StoreError::UnsupportedVersion { found: 2, .. }) => {}
+        Err(StoreError::UnsupportedVersion { found: 99, .. }) => {}
         other => panic!("expected UnsupportedVersion, got {other:?}"),
     }
 
@@ -291,10 +313,11 @@ fn negative_cases_return_structured_errors() {
     let mut bad = good.clone();
     let header_len =
         u64::from_le_bytes(bad[12..20].try_into().unwrap()) as usize;
-    // header blob layout: order u32, dims 3×u64, nnz u64, norm f64,
-    // max_block_nnz u64, workgroup u32, inblock_budget u32, nblocks u64,
-    // then per-block {key u64, nnz u64, crc u32}
-    let first_block_nnz_off = 20 + 4 + 24 + 8 + 8 + 8 + 4 + 4 + 8 + 8;
+    // v2 header blob layout: order u32, dims 3×u64, nnz u64, norm f64,
+    // max_block_nnz u64, workgroup u32, inblock_budget u32, default codec
+    // u32, nblocks u64, then per-block
+    // {key u64, nnz u64, codec u8, stored_len u64, crc u32}
+    let first_block_nnz_off = 20 + 4 + 24 + 8 + 8 + 8 + 4 + 4 + 4 + 8 + 8;
     bad[first_block_nnz_off..first_block_nnz_off + 8]
         .copy_from_slice(&(1u64 << 60).to_le_bytes());
     let crc = blco::format::store::crc32(&bad[20..20 + header_len]);
