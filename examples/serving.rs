@@ -1,7 +1,9 @@
 //! Minimal serving-layer walkthrough: register two tensors behind one
 //! scaled device, watch the admission controller route (and reject)
-//! requests, then replay a tiny two-tenant burst and compare the fair,
-//! fused policy against the one-job-at-a-time baseline.
+//! requests, then replay a tiny two-tenant burst through the
+//! [`ServeRequest`] builder and compare the fair, fused policy against
+//! the one-job-at-a-time baseline — plus an EDF run with deadlines and
+//! load shedding, the production-serving knobs.
 //!
 //!     cargo run --release --example serving
 
@@ -9,7 +11,8 @@ use blco::device::Profile;
 use blco::format::blco::BlcoConfig;
 use blco::mttkrp::MAX_RANK;
 use blco::service::{
-    admit_mttkrp, serve, JobKind, JobRequest, ServeOptions, Tenant, TensorRegistry,
+    admit_mttkrp, JobKind, JobRequest, SchedPolicy, ServeRequest, ShedPolicy, Tenant,
+    TensorRegistry,
 };
 use blco::tensor::synth;
 use blco::util::pool::default_threads;
@@ -48,12 +51,14 @@ fn main() {
         Tenant { name: "acme".into(), weight: 2 },
         Tenant { name: "labs".into(), weight: 1 },
     ];
-    let job = |id: usize, tenant: &str, tensor: &str, target: usize| JobRequest {
-        id,
-        tenant: tenant.into(),
-        tensor: tensor.into(),
-        kind: JobKind::Mttkrp { target, rank: 8, seed: 0xBEEF + id as u64 },
-        arrival_s: 0.0,
+    let job = |id: usize, tenant: &str, tensor: &str, target: usize| {
+        JobRequest::new(
+            id,
+            tenant,
+            tensor,
+            JobKind::Mttkrp { target, rank: 8, seed: 0xBEEF + id as u64 },
+            0.0,
+        )
     };
     let jobs = vec![
         job(0, "acme", "cold", 0),
@@ -63,13 +68,25 @@ fn main() {
         job(4, "acme", "cold", 0),
     ];
 
-    let fused = serve(&reg, &tenants, &jobs, &ServeOptions::batched(1, threads));
+    let fused = ServeRequest::new(&reg)
+        .trace(&tenants, &jobs)
+        .threads(threads)
+        .run()
+        .expect("valid request")
+        .into_report();
     // fresh registry (same payload Arcs) for an untouched schedule cache
     let mut reg2 = TensorRegistry::new(Profile::tiny(48 * 1024));
     for name in reg.names() {
         reg2.register_shared(&name, reg.get(&name).unwrap().engine.tensor());
     }
-    let naive = serve(&reg2, &tenants, &jobs, &ServeOptions::naive(1, threads));
+    let naive = ServeRequest::new(&reg2)
+        .trace(&tenants, &jobs)
+        .policy(SchedPolicy::Fifo)
+        .batching(false)
+        .threads(threads)
+        .run()
+        .expect("valid request")
+        .into_report();
 
     println!("\nfused policy : makespan {:.3} ms, {} fused group(s), {:.1} KiB shipped",
         fused.makespan_s * 1e3, fused.fused_groups, fused.bytes_shipped as f64 / 1024.0);
@@ -84,6 +101,39 @@ fn main() {
         fused.makespan_s < naive.makespan_s,
         "one shipped pass must beat four"
     );
+
+    // production knobs: tight deadlines + EDF + shedding. The tight job
+    // jumps the queue under EDF; at overload a late streamed job degrades
+    // to a coarser rank (shed) instead of missing or being rejected.
+    let service_s = fused
+        .outcomes
+        .iter()
+        .find(|o| o.tenant == "acme")
+        .map(|o| o.duration_s)
+        .unwrap_or(1e-3);
+    let slo_jobs: Vec<JobRequest> = (0..4)
+        .map(|i| {
+            job(i, if i % 2 == 0 { "acme" } else { "labs" }, "cold", 0)
+                .with_deadline(if i == 3 { 1.5 * service_s } else { 50.0 * service_s })
+        })
+        .collect();
+    let edf = ServeRequest::new(&reg)
+        .trace(&tenants, &slo_jobs)
+        .policy(SchedPolicy::Edf)
+        .batching(false)
+        .threads(threads)
+        .shed(ShedPolicy::default())
+        .run()
+        .expect("valid request")
+        .into_report();
+    println!(
+        "\nEDF with SLOs: p99 {:.3} ms, {}/{} deadline misses, {} shed",
+        edf.latency.p99 * 1e3,
+        edf.deadline_misses,
+        edf.deadline_jobs,
+        edf.shed_jobs
+    );
+
     println!(
         "\nsame-(tensor, mode, rank) requests rode one streamed pass over the \
          single resident tensor copy — the paper's unified-format property \

@@ -115,6 +115,25 @@ impl MttkrpEngine {
         Ok(Self::from_source(BatchSource::OnDisk(reader), profile))
     }
 
+    /// [`from_store`](Self::from_store) over a **snapshot view** pinned
+    /// to the container's first `max_segments` delta segments (see
+    /// [`BlcoStoreReader::open_pinned`]): dims, nnz, norm, batches and
+    /// every result are bit-for-bit the container as it stood before the
+    /// later appends. The serving layer uses this to keep in-flight jobs
+    /// on the pre-append segment set while a writer appends behind them.
+    pub fn from_store_pinned(
+        path: &Path,
+        profile: Profile,
+        max_segments: usize,
+    ) -> Result<Self, StoreError> {
+        let reader = BlcoStoreReader::open_pinned(
+            path,
+            profile.host_mem_bytes,
+            Some(max_segments),
+        )?;
+        Ok(Self::from_source(BatchSource::OnDisk(reader), profile))
+    }
+
     /// Construct over any [`BatchSource`]. Panics on an invalid profile;
     /// see [`try_from_source`](Self::try_from_source).
     pub fn from_source(src: BatchSource, profile: Profile) -> Self {

@@ -584,6 +584,6 @@ mod tests {
         let e = StreamRequest::new(&eng, 0)
             .run(std::slice::from_mut(&mut out))
             .unwrap_err();
-        assert!(e.to_string().contains("invalid stream request"));
+        assert!(e.to_string().contains("invalid request"));
     }
 }

@@ -40,8 +40,9 @@ pub enum BlcoError {
         /// the failing field, verbatim from `Profile::validate`
         reason: String,
     },
-    /// a [`StreamRequest`](crate::coordinator::request::StreamRequest)
-    /// combination that has no defined execution path
+    /// a [`StreamRequest`](crate::coordinator::request::StreamRequest) or
+    /// [`ServeRequest`](crate::service::request::ServeRequest) combination
+    /// that has no defined execution path
     InvalidRequest {
         /// what was asked for and why it cannot run
         what: String,
@@ -66,7 +67,7 @@ impl fmt::Display for BlcoError {
                 write!(f, "invalid device profile {profile:?}: {reason}")
             }
             BlcoError::InvalidRequest { what } => {
-                write!(f, "invalid stream request: {what}")
+                write!(f, "invalid request: {what}")
             }
             BlcoError::Build { what } => {
                 write!(f, "external-memory build failed: {what}")
@@ -123,7 +124,7 @@ mod tests {
         let e = BlcoError::InvalidRequest {
             what: "fused jobs across devices".into(),
         };
-        assert!(e.to_string().contains("stream request"));
+        assert!(e.to_string().contains("invalid request"));
         assert!(std::error::Error::source(&e).is_none());
     }
 }

@@ -1491,6 +1491,27 @@ impl BlcoStoreReader {
         path: &Path,
         cache_budget: usize,
     ) -> Result<Self, StoreError> {
+        Self::open_pinned(path, cache_budget, None)
+    }
+
+    /// Open a **snapshot view** of the container pinned to its first
+    /// `max_segments` delta segments: blocks, nnz and norm beyond the pin
+    /// are excluded from every derived structure (batch maps, `nnz()`,
+    /// `norm()`, `to_tensor()`), so the view is bit-for-bit the container
+    /// as it stood before the later appends landed. Appends only ever
+    /// grow the file past the pinned frames, so a pinned reader stays
+    /// valid while writers append behind it — this is how the serving
+    /// layer keeps in-flight jobs on the pre-append segment set while new
+    /// jobs see the appended view. Segments past the pin are still fully
+    /// validated (magic, checksums, sizes): a corrupt tail fails the open
+    /// even when the snapshot would not read it. `max_segments` larger
+    /// than the pending count simply keeps every segment;
+    /// `None` is the unpinned [`Self::open_with_budget`] view.
+    pub fn open_pinned(
+        path: &Path,
+        cache_budget: usize,
+        max_segments: Option<usize>,
+    ) -> Result<Self, StoreError> {
         let mut file = File::open(path)
             .map_err(io_err(format!("open {}", path.display())))?;
         let file_len = file
@@ -1679,14 +1700,17 @@ impl BlcoStoreReader {
         let base_blocks = metas.len();
 
         // ---- delta segments (v2): parse every appended segment in file
-        // order; v1 files must end exactly at the payload region
+        // order; v1 files must end exactly at the payload region. A
+        // snapshot pin (`max_segments`) keeps the first N segments in the
+        // view and validates-but-discards the rest.
         let mut offset = offset;
+        let mut parsed_segments = 0usize;
         let mut segments = 0usize;
         let mut seg_nnz_total = 0usize;
         let mut seg_sumsq_total = 0.0f64;
         if version >= 2 {
             while offset < file_len {
-                let i = segments;
+                let i = parsed_segments;
                 if file_len - offset < 20 {
                     return Err(StoreError::Malformed {
                         what: format!(
@@ -1766,8 +1790,13 @@ impl BlcoStoreReader {
                 let region =
                     sc.take(seg_nblocks * V2_ENTRY_BYTES, "segment block index")?;
                 let label = format!("delta segment {i} block");
+                let kept = max_segments.map_or(true, |pin| i < pin);
+                // a segment past the snapshot pin is validated in full
+                // but its blocks never join the view
+                let mut discard: Vec<BlockMeta> = Vec::new();
+                let sink = if kept { &mut metas } else { &mut discard };
                 let (end, total) =
-                    parse_v2_entries(region, seg_nblocks, &label, frame_end, &mut metas)?;
+                    parse_v2_entries(region, seg_nblocks, &label, frame_end, sink)?;
                 if sc.pos != blob.len() {
                     return Err(StoreError::Malformed {
                         what: format!(
@@ -1792,9 +1821,12 @@ impl BlcoStoreReader {
                     });
                 }
                 offset = end;
-                segments += 1;
-                seg_nnz_total += seg_nnz;
-                seg_sumsq_total += seg_sumsq;
+                parsed_segments += 1;
+                if kept {
+                    segments += 1;
+                    seg_nnz_total += seg_nnz;
+                    seg_sumsq_total += seg_sumsq;
+                }
             }
         } else if offset < file_len {
             return Err(StoreError::Malformed {
@@ -1861,8 +1893,9 @@ impl BlcoStoreReader {
         self.default_codec
     }
 
-    /// Pending delta segments (0 on a pristine or freshly compacted
-    /// container).
+    /// Pending delta segments **in this view** (0 on a pristine or
+    /// freshly compacted container; a snapshot opened with
+    /// [`Self::open_pinned`] reports its kept count, not the file's).
     pub fn segments(&self) -> usize {
         self.segments
     }

@@ -56,8 +56,8 @@ use blco::device::{LinkTopology, Profile};
 use blco::format::blco::BlcoConfig;
 use blco::mttkrp::oracle::random_factors;
 use blco::service::{
-    serve, synthetic_trace, ServeOptions, ServiceReport, Tenant, TensorRegistry,
-    TraceConfig,
+    synthetic_trace, ArrivalProcess, JobKind, JobRequest, JobStatus, SchedPolicy,
+    ServeRequest, ServiceReport, ShedPolicy, Tenant, TensorRegistry, TraceConfig,
 };
 use blco::tensor::{coo::CooTensor, datasets, io, stats, synth};
 use blco::util::cli::Args;
@@ -881,9 +881,10 @@ fn check_store_parity(engine: &MttkrpEngine, rank: usize) -> Result<()> {
 
 fn print_service_report(label: &str, tenants: &[Tenant], rep: &ServiceReport) {
     println!("\n[{label}] per-tenant:");
-    let tbl = Table::new(&[10, 7, 5, 5, 5, 6, 12, 12, 6]);
+    let tbl = Table::new(&[10, 7, 5, 5, 5, 6, 5, 5, 11, 11, 11, 6]);
     tbl.header(&[
-        "tenant", "weight", "jobs", "done", "rej", "fused", "mean lat", "max lat", "maxQ",
+        "tenant", "weight", "jobs", "done", "rej", "fused", "shed", "miss", "mean lat",
+        "p99 lat", "max lat", "maxQ",
     ]);
     for t in tenants {
         if let Some(s) = rep.per_tenant.get(&t.name) {
@@ -894,7 +895,10 @@ fn print_service_report(label: &str, tenants: &[Tenant], rep: &ServiceReport) {
                 s.completed.to_string(),
                 s.rejected.to_string(),
                 s.fused.to_string(),
+                s.shed.to_string(),
+                format!("{}/{}", s.deadline_misses, s.deadline_jobs),
                 format!("{:.2} ms", s.mean_latency_s * 1e3),
+                format!("{:.2} ms", s.latency.p99 * 1e3),
                 format!("{:.2} ms", s.max_latency_s * 1e3),
                 s.max_queue_depth.to_string(),
             ]);
@@ -912,6 +916,20 @@ fn print_service_report(label: &str, tenants: &[Tenant], rep: &ServiceReport) {
         rep.cache_hit_rate() * 100.0,
         rep.bytes_shipped as f64 / (1 << 20) as f64,
         rep.wall_s * 1e3,
+    );
+    println!(
+        "[{label}] latency p50/p95/p99 {:.2}/{:.2}/{:.2} ms | queue depth p50/p99/max \
+         {:.0}/{:.0}/{:.0} | deadline misses {}/{} ({:.0}%) | {} shed",
+        rep.latency.p50 * 1e3,
+        rep.latency.p95 * 1e3,
+        rep.latency.p99 * 1e3,
+        rep.queue_depth.p50,
+        rep.queue_depth.p99,
+        rep.queue_depth.max,
+        rep.deadline_misses,
+        rep.deadline_jobs,
+        rep.deadline_miss_rate() * 100.0,
+        rep.shed_jobs,
     );
 }
 
@@ -957,26 +975,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  {name}: dims {:?}, rank-{rank} routes {routes:?}", eng.dims);
     }
 
+    let policy = match args.get_or("policy", "wrr") {
+        "wrr" => SchedPolicy::Wrr,
+        "edf" => SchedPolicy::Edf,
+        "fifo" => SchedPolicy::Fifo,
+        other => bail!("unknown --policy {other:?} (expected wrr|edf|fifo)"),
+    };
+    // open loop when an offered rate is given, legacy bursty replay
+    // otherwise; --mmpp-burst adds calm/burst phase modulation on top
+    let arrival = match args.get("rate-qps") {
+        None => ArrivalProcess::Bursty,
+        Some(r) => {
+            let rate_qps: f64 =
+                r.parse().map_err(|_| anyhow::anyhow!("bad --rate-qps {r:?}"))?;
+            match args.get("mmpp-burst") {
+                None => ArrivalProcess::Poisson { rate_qps },
+                Some(b) => ArrivalProcess::Mmpp {
+                    rate_qps,
+                    burst: b.parse().map_err(|_| anyhow::anyhow!("bad --mmpp-burst {b:?}"))?,
+                    mean_dwell_s: args.parse_or::<f64>("mmpp-dwell-ms", 1.0) * 1e-3,
+                },
+            }
+        }
+    };
+    let deadline_s = match args.get("deadline-ms") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --deadline-ms {v:?}"))? * 1e-3,
+        ),
+    };
+    let shed = if args.flag("shed") {
+        Some(ShedPolicy {
+            wait_frac: args.parse_or("shed-wait-frac", 0.5),
+            min_rank: args.parse_or("shed-min-rank", 4),
+        })
+    } else {
+        None
+    };
     let cfg = TraceConfig {
         tenants: args.parse_or("tenants", 3),
         jobs: args.parse_or("jobs", 30),
         mean_gap_s: args.parse_or::<f64>("gap-us", 50.0) * 1e-6,
         ranks: vec![16],
         cpals_every: args.parse_or("cpals-every", 12),
+        arrival,
+        deadline_s,
         seed: args.parse_or("seed", 0x5EB0),
     };
     let (tenants, jobs) = synthetic_trace(&reg, &cfg);
     println!(
-        "\nreplaying {} jobs from {} tenants over a {}-device fleet ({} threads)",
+        "\nreplaying {} jobs from {} tenants over a {}-device fleet ({} threads, \
+         {policy:?} policy)",
         jobs.len(),
         tenants.len(),
         fleet,
         threads,
     );
 
-    // full policy: WRR fairness + fused streaming
-    let rep_b = serve(&reg, &tenants, &jobs, &ServeOptions::batched(fleet, threads));
-    print_service_report("batched+fair", &tenants, &rep_b);
+    // full policy: chosen scheduler + fused streaming
+    let mut req = ServeRequest::new(&reg)
+        .trace(&tenants, &jobs)
+        .policy(policy)
+        .devices(fleet)
+        .threads(threads);
+    if let Some(s) = shed {
+        req = req.shed(s);
+    }
+    let rep_b = req.run()?.into_report();
+    print_service_report("batched", &tenants, &rep_b);
 
     // ablation baseline: one job at a time, global FIFO, on a fresh
     // registry sharing the same payload Arcs (fresh schedule caches)
@@ -993,7 +1059,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
-    let rep_n = serve(&reg_naive, &tenants, &jobs, &ServeOptions::naive(fleet, threads));
+    let rep_n = ServeRequest::new(&reg_naive)
+        .trace(&tenants, &jobs)
+        .policy(SchedPolicy::Fifo)
+        .batching(false)
+        .devices(fleet)
+        .threads(threads)
+        .run()?
+        .into_report();
     print_service_report("naive FIFO", &tenants, &rep_n);
 
     println!(
@@ -1025,7 +1098,135 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 rep_n.makespan_s
             );
         }
-        println!("check: OK (no rejections, cache hits, fusion, makespan win)");
+
+        // ---- open-loop SLO observables. Probe the modelled service time
+        // of one streamed rank-16 job, then express every rate and
+        // deadline in that unit so the checks are profile-independent.
+        let probe_jobs = vec![JobRequest::new(
+            0,
+            "probe",
+            "cold",
+            JobKind::Mttkrp { target: 0, rank: 16, seed: 0xD0 },
+            0.0,
+        )];
+        let probe = ServeRequest::new(&reg)
+            .trace(&[], &probe_jobs)
+            .threads(threads)
+            .run()?
+            .into_report();
+        let d = probe.outcomes[0].duration_s;
+        if !(d > 0.0 && d.is_finite()) {
+            bail!("probe job has no modelled duration");
+        }
+
+        // sub-knee open loop: Poisson at 60% of one device's service rate
+        // must keep the tail finite (above the knee it grows without bound)
+        let slo_cfg = TraceConfig {
+            tenants: 3,
+            jobs: 24,
+            ranks: vec![16],
+            cpals_every: 0,
+            arrival: ArrivalProcess::Poisson { rate_qps: 0.6 / d },
+            deadline_s: Some(8.0 * d),
+            seed: 0x510,
+            ..Default::default()
+        };
+        let (slo_tenants, slo_jobs) = synthetic_trace(&reg, &slo_cfg);
+        let sub_knee = ServeRequest::new(&reg)
+            .trace(&slo_tenants, &slo_jobs)
+            .devices(1)
+            .threads(threads)
+            .batching(false)
+            .run()?
+            .into_report();
+        let p99 = sub_knee.p99_latency_s();
+        if !(p99 > 0.0 && p99.is_finite()) {
+            bail!("sub-knee p99 must be finite and positive, got {p99}");
+        }
+
+        // EDF vs WRR at equal throughput: 3 loose then 3 tight deadlines,
+        // all at t=0 on one tenant and one device. FIFO-order WRR blows
+        // every tight deadline; EDF serves them first and misses none.
+        let edf_wrr_jobs: Vec<JobRequest> = (0..6)
+            .map(|i| {
+                JobRequest::new(
+                    i,
+                    "t0",
+                    "cold",
+                    JobKind::Mttkrp { target: 0, rank: 16, seed: 0xE0 + i as u64 },
+                    0.0,
+                )
+                .with_deadline(if i < 3 { 100.0 * d } else { 3.5 * d })
+            })
+            .collect();
+        let run_policy = |policy: SchedPolicy| -> Result<ServiceReport> {
+            Ok(ServeRequest::new(&reg)
+                .trace(&[], &edf_wrr_jobs)
+                .policy(policy)
+                .devices(1)
+                .threads(threads)
+                .batching(false)
+                .run()?
+                .into_report())
+        };
+        let wrr = run_policy(SchedPolicy::Wrr)?;
+        let edf = run_policy(SchedPolicy::Edf)?;
+        if edf.completed() != wrr.completed()
+            || (edf.makespan_s - wrr.makespan_s).abs() > 1e-9
+        {
+            bail!("EDF and WRR must serve the same load at equal throughput");
+        }
+        if edf.deadline_miss_rate() > wrr.deadline_miss_rate() {
+            bail!(
+                "EDF deadline-miss rate {} must not exceed WRR's {}",
+                edf.deadline_miss_rate(),
+                wrr.deadline_miss_rate()
+            );
+        }
+        if wrr.deadline_misses == 0 {
+            bail!("scenario miscalibrated: WRR should miss the tight deadlines");
+        }
+
+        // overload + shedding: a t=0 backlog with tight SLOs sheds at
+        // least one job to a coarser rank and still completes it
+        let overload_jobs: Vec<JobRequest> = (0..6)
+            .map(|i| {
+                JobRequest::new(
+                    i,
+                    "t0",
+                    "cold",
+                    JobKind::Mttkrp { target: i % 3, rank: 16, seed: 0xF0 + i as u64 },
+                    0.0,
+                )
+                .with_deadline(2.0 * d)
+            })
+            .collect();
+        let overload = ServeRequest::new(&reg)
+            .trace(&[], &overload_jobs)
+            .devices(1)
+            .threads(threads)
+            .batching(false)
+            .shed(ShedPolicy::default())
+            .run()?
+            .into_report();
+        let shed_completed = overload
+            .outcomes
+            .iter()
+            .filter(|o| o.shed && matches!(o.status, JobStatus::Completed))
+            .count();
+        if shed_completed == 0 {
+            bail!("expected at least one job shed to a coarser rank at overload");
+        }
+        if overload.rejected() != 0 {
+            bail!("shedding must degrade, not reject: {} rejections", overload.rejected());
+        }
+
+        println!(
+            "check: OK (no rejections, cache hits, fusion, makespan win, finite \
+             sub-knee p99, EDF misses {} <= WRR misses {}, {} shed-and-completed \
+             at overload)",
+            edf.deadline_misses, wrr.deadline_misses, shed_completed,
+        );
     }
     Ok(())
 }
@@ -1224,7 +1425,10 @@ fn main() -> Result<()> {
                  stream/cpals/serve/analyze: [--from-store FILE.blco] [--host-kib H]\n\
                  stream: [--check]   analyze: [--max-block-nnz B] [--workgroup W] [--check]\n\
                  serve: [--tenants N] [--jobs J] \
-                 [--gap-us G] [--mem-kib M] [--cpals-every K] [--seed S] [--check]"
+                 [--gap-us G] [--mem-kib M] [--cpals-every K] [--seed S] \
+                 [--policy wrr|edf|fifo] [--rate-qps Q [--mmpp-burst B \
+                 [--mmpp-dwell-ms MS]]] [--deadline-ms MS] \
+                 [--shed [--shed-wait-frac F] [--shed-min-rank R]] [--check]"
             );
             std::process::exit(2);
         }

@@ -116,7 +116,17 @@ pub fn admit_job(
     let entry = reg.get(&job.tensor).ok_or_else(|| AdmissionError::UnknownTensor {
         tensor: job.tensor.clone(),
     })?;
-    let engine = &entry.engine;
+    admit_job_on(&entry.engine, job)
+}
+
+/// [`admit_job`] against an already-resolved engine — the entry point the
+/// serving loop uses once a job's arrival has been mapped to its tensor
+/// epoch (snapshot-consistent serving binds jobs to pre- or post-append
+/// views of the same name, so the registry lookup alone cannot decide).
+pub fn admit_job_on(
+    engine: &MttkrpEngine,
+    job: &JobRequest,
+) -> Result<Admission, AdmissionError> {
     match job.kind {
         JobKind::Mttkrp { target, rank, .. } => admit_mttkrp(engine, target, rank),
         JobKind::CpAls { rank, .. } => {
@@ -198,13 +208,13 @@ mod tests {
     fn cpals_admits_over_all_modes() {
         use crate::service::trace::{JobKind, JobRequest};
         let reg = registry(48 * 1024);
-        let job = JobRequest {
-            id: 0,
-            tenant: "a".into(),
-            tensor: "t".into(),
-            kind: JobKind::CpAls { rank: 8, iters: 2, seed: 1 },
-            arrival_s: 0.0,
-        };
+        let job = JobRequest::new(
+            0,
+            "a",
+            "t",
+            JobKind::CpAls { rank: 8, iters: 2, seed: 1 },
+            0.0,
+        );
         let a = admit_job(&reg, &job).unwrap();
         assert_eq!(a.route, Route::Streamed, "OOM tensor: the sweep streams");
         let unknown = JobRequest { tensor: "nope".into(), ..job };

@@ -5,7 +5,7 @@
 //! concurrent jobs can share one resident `Arc<BlcoTensor>` while the
 //! engine routes each of them in-memory or streamed.
 //!
-//! The subsystem has four pieces:
+//! The subsystem's pieces:
 //!
 //! * [`registry`] — the shared **tensor registry**: one
 //!   [`MttkrpEngine`](crate::coordinator::engine::MttkrpEngine) per
@@ -19,28 +19,48 @@
 //!   [`AdmissionError`](admission::AdmissionError) (never a panic) when
 //!   even the streaming floor (factors + output + a double-buffered batch)
 //!   cannot fit;
-//! * [`trace`] — tenants, [`JobRequest`](trace::JobRequest)s and a seeded
-//!   synthetic mixed-tenant trace generator for the `serve` CLI and the
-//!   throughput bench;
-//! * [`scheduler`] — the **fair scheduler**: weighted round-robin across
-//!   tenants (FIFO within a tenant), least-loaded dispatch over the
-//!   modelled device fleet, and *fusion* of compatible streamed jobs —
-//!   same `(tensor, mode, rank)` requests ride one fused
-//!   [`StreamRequest`](crate::coordinator::request::StreamRequest)
-//!   pass so the tensor crosses the host link once per group. Results and
-//!   per-tenant latency/throughput/queue-depth stats come back in a
+//! * [`trace`] — tenants, [`JobRequest`](trace::JobRequest)s and the
+//!   seeded trace generators: the legacy bursty replay plus **open-loop**
+//!   Poisson and Markov-modulated arrival processes whose offered rate
+//!   does not care how fast the fleet drains the queue — what production
+//!   traffic does, and what the `fig_serve_throughput` knee sweep drives;
+//! * [`stats`] — one percentile semantics (interpolated rank) for every
+//!   latency and queue-depth tail the reports quote;
+//! * [`scheduler`] — the serving loop: WRR / **EDF-over-priority-tiers**
+//!   / global-FIFO policies, least-loaded dispatch over the modelled
+//!   fleet, fusion of compatible streamed jobs, deadline accounting, and
+//!   graceful **load shedding** that degrades streamed jobs to coarser
+//!   ranks under pressure. Results and per-tenant tail-latency /
+//!   throughput / queue-depth stats come back in a
 //!   [`ServiceReport`](scheduler::ServiceReport), with every duration
-//!   charged through the existing `Counters`/`Profile` cost model.
+//!   charged through the existing `Counters`/`Profile` cost model;
+//! * [`request`] — [`ServeRequest`](request::ServeRequest), the one
+//!   validated front door (mirroring the coordinator's `StreamRequest`
+//!   builder), including snapshot-consistent serving across mid-trace
+//!   container appends via
+//!   [`append_at`](request::ServeRequest::append_at). The legacy
+//!   `serve`/`ServeOptions` pair survives as `#[deprecated]` wrappers
+//!   pinned bit-for-bit by the builder's parity test.
 
 pub mod admission;
 pub mod registry;
+pub mod request;
 pub mod scheduler;
+pub mod stats;
 pub mod trace;
 
-pub use admission::{admit_job, admit_mttkrp, Admission, AdmissionError, Route};
-pub use registry::{TensorEntry, TensorRegistry};
-pub use scheduler::{
-    serve, JobOutcome, JobResult, JobStatus, ServeOptions, ServiceReport,
-    TenantStats,
+pub use admission::{
+    admit_job, admit_job_on, admit_mttkrp, Admission, AdmissionError, Route,
 };
-pub use trace::{synthetic_trace, JobKind, JobRequest, Tenant, TraceConfig};
+pub use registry::{TensorEntry, TensorRegistry};
+pub use request::{ServeOutcome, ServeRequest};
+pub use scheduler::{
+    JobOutcome, JobResult, JobStatus, SchedPolicy, ServiceReport, ShedPolicy,
+    SloPolicy, TenantStats,
+};
+#[allow(deprecated)]
+pub use scheduler::{serve, ServeOptions};
+pub use stats::{percentile, Percentiles};
+pub use trace::{
+    synthetic_trace, ArrivalProcess, JobKind, JobRequest, Tenant, TraceConfig,
+};

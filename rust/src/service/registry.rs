@@ -86,6 +86,13 @@ impl TensorRegistry {
         self.entries.get(name)
     }
 
+    /// The single-device profile every registered engine sees — what
+    /// snapshot-epoch engines must be built with so pre- and post-append
+    /// views of a tensor run under identical accounting.
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.entries.keys().cloned().collect()
@@ -97,11 +104,6 @@ impl TensorRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
-    }
-
-    /// The (single-device) profile every entry's engine runs on.
-    pub fn profile(&self) -> &Profile {
-        &self.profile
     }
 
     /// Total *host-resident* bytes across registered payloads — each

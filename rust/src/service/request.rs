@@ -1,0 +1,478 @@
+//! The one front door for serving runs.
+//!
+//! Historically the service layer exposed a free function `serve(reg,
+//! tenants, jobs, &ServeOptions)` whose options struct grew a knob per
+//! feature. [`ServeRequest`] collapses that into a builder mirroring
+//! [`StreamRequest`](crate::coordinator::request::StreamRequest) — one
+//! validated [`run`](ServeRequest::run) entry point:
+//!
+//! ```no_run
+//! # use blco::service::{ServeRequest, SchedPolicy, SloPolicy, ShedPolicy};
+//! # use blco::service::{TensorRegistry, Tenant, JobRequest};
+//! # fn demo(reg: &TensorRegistry, tenants: &[Tenant], jobs: &[JobRequest]) {
+//! let outcome = ServeRequest::new(reg)
+//!     .trace(tenants, jobs)
+//!     .policy(SchedPolicy::Edf)
+//!     .devices(2)
+//!     .threads(4)
+//!     .slo(SloPolicy { default_deadline_s: 0.05 })
+//!     .shed(ShedPolicy::default())
+//!     .run()
+//!     .expect("valid request");
+//! println!("p99 {:.3} ms", outcome.report.p99_latency_s() * 1e3);
+//! # }
+//! ```
+//!
+//! Malformed combinations (zero devices, non-positive SLO, a shed floor
+//! of rank 0, an append against an unregistered tensor, …) return
+//! [`BlcoError::InvalidRequest`] instead of panicking. The legacy
+//! `serve`/`ServeOptions` pair survives as `#[deprecated]` wrappers whose
+//! behaviour is pinned bit-for-bit against `run()` by this module's
+//! parity test.
+//!
+//! # Snapshot-consistent serving under appends
+//!
+//! [`append_at`](ServeRequest::append_at) registers a delta-segment
+//! append against an on-disk container at a virtual-time instant. The
+//! run executes the append *before* replaying the trace, but builds one
+//! pinned engine per epoch via
+//! [`BlcoStoreReader::open_pinned`](crate::format::store::BlcoStoreReader::open_pinned):
+//! jobs arriving before the append instant bind to the pre-append
+//! segment set, jobs at or after it to the appended view. Since appends
+//! only ever *grow* the container past the pinned frames, both views
+//! coexist over one file — the serving-side analogue of MVCC snapshot
+//! isolation, and the `service_layer` parity test proves each view
+//! bit-for-bit against a resident twin of the matching tensor state.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::engine::MttkrpEngine;
+use crate::error::BlcoError;
+use crate::format::store::{BlcoStoreReader, BlcoStoreWriter};
+use crate::tensor::coo::CooTensor;
+use crate::util::pool::{default_threads, ExecBackend};
+
+use super::registry::TensorRegistry;
+use super::scheduler::{
+    run_serve, EpochEngine, SchedPolicy, ServeParams, ServiceReport, ShedPolicy,
+    SloPolicy,
+};
+use super::trace::{JobRequest, Tenant};
+
+/// One scheduled delta-segment append, pending until [`ServeRequest::run`].
+struct AppendAt<'a> {
+    tensor: String,
+    path: PathBuf,
+    delta: &'a CooTensor,
+    at_s: f64,
+}
+
+/// Builder for one serving run over a [`TensorRegistry`].
+///
+/// Construct with [`new`](Self::new), attach a trace, then call
+/// [`run`](Self::run). Every knob of the deprecated
+/// [`ServeOptions`](super::scheduler::ServeOptions) is a builder method
+/// here, plus the production knobs the options struct never grew:
+///
+/// | legacy                        | equivalent request                    |
+/// |-------------------------------|---------------------------------------|
+/// | `ServeOptions::batched(d, t)` | `.devices(d).threads(t)`              |
+/// | `ServeOptions::naive(d, t)`   | `.devices(d).threads(t).batching(false).policy(SchedPolicy::Fifo)` |
+/// | `fair: false`                 | `.policy(SchedPolicy::Fifo)`          |
+/// | —                             | `.policy(SchedPolicy::Edf)`           |
+/// | —                             | `.slo(...)`, `.shed(...)`             |
+/// | —                             | `.append_at(...)`                     |
+pub struct ServeRequest<'a> {
+    reg: &'a TensorRegistry,
+    tenants: &'a [Tenant],
+    jobs: &'a [JobRequest],
+    policy: SchedPolicy,
+    devices: usize,
+    threads: usize,
+    batching: bool,
+    max_batch: usize,
+    slo: Option<SloPolicy>,
+    shed: Option<ShedPolicy>,
+    appends: Vec<AppendAt<'a>>,
+}
+
+impl<'a> ServeRequest<'a> {
+    /// A WRR, fusion-on, single-device request with no trace attached
+    /// (defaults mirror `ServeOptions::default()`).
+    pub fn new(reg: &'a TensorRegistry) -> Self {
+        ServeRequest {
+            reg,
+            tenants: &[],
+            jobs: &[],
+            policy: SchedPolicy::Wrr,
+            devices: 1,
+            threads: default_threads(),
+            batching: true,
+            max_batch: 8,
+            slo: None,
+            shed: None,
+            appends: Vec::new(),
+        }
+    }
+
+    /// The tenants and jobs to replay. Jobs naming tenants absent from
+    /// `tenants` are served at weight 1.
+    pub fn trace(mut self, tenants: &'a [Tenant], jobs: &'a [JobRequest]) -> Self {
+        self.tenants = tenants;
+        self.jobs = jobs;
+        self
+    }
+
+    /// Scheduling policy (default [`SchedPolicy::Wrr`]).
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Modelled fleet size (default 1).
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = devices;
+        self
+    }
+
+    /// Worker threads for every real kernel in the run (default
+    /// [`default_threads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Set threads from an [`ExecBackend`] — convenience for callers that
+    /// already hold the execution-core decision.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.threads = backend.threads();
+        self
+    }
+
+    /// Fuse queued same-`(tensor, mode, rank)` streamed jobs (default on).
+    pub fn batching(mut self, on: bool) -> Self {
+        self.batching = on;
+        self
+    }
+
+    /// Cap on fused group size (default 8).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Run-wide latency SLO: jobs without their own
+    /// [`deadline_s`](JobRequest::deadline_s) inherit this default.
+    pub fn slo(mut self, slo: SloPolicy) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Enable graceful load shedding (degrade streamed jobs to coarser
+    /// ranks under deadline pressure instead of missing or rejecting).
+    pub fn shed(mut self, shed: ShedPolicy) -> Self {
+        self.shed = Some(shed);
+        self
+    }
+
+    /// Append `delta` to the container at `path` (registered under
+    /// `tensor`) at virtual instant `at_s`: jobs arriving before `at_s`
+    /// are served from the pre-append snapshot, jobs at or after it from
+    /// the appended view. Multiple appends to one tensor stack in `at_s`
+    /// order.
+    pub fn append_at(
+        mut self,
+        tensor: &str,
+        path: &Path,
+        delta: &'a CooTensor,
+        at_s: f64,
+    ) -> Self {
+        self.appends.push(AppendAt {
+            tensor: tensor.to_string(),
+            path: path.to_path_buf(),
+            delta,
+            at_s,
+        });
+        self
+    }
+
+    fn validate(&self) -> Result<(), BlcoError> {
+        let invalid = |what: &str| {
+            Err(BlcoError::InvalidRequest { what: what.to_string() })
+        };
+        if self.devices == 0 {
+            return invalid("devices must be >= 1");
+        }
+        if self.threads == 0 {
+            return invalid("threads must be >= 1");
+        }
+        if self.max_batch == 0 {
+            return invalid("max_batch must be >= 1 (1 disables fusion)");
+        }
+        if let Some(slo) = self.slo {
+            if !(slo.default_deadline_s > 0.0 && slo.default_deadline_s.is_finite()) {
+                return invalid("slo default_deadline_s must be finite and > 0");
+            }
+        }
+        if let Some(shed) = self.shed {
+            if !(shed.wait_frac > 0.0 && shed.wait_frac <= 1.0) {
+                return invalid("shed wait_frac must be in (0, 1]");
+            }
+            if shed.min_rank == 0 {
+                return invalid("shed min_rank must be >= 1");
+            }
+        }
+        for a in &self.appends {
+            if !(a.at_s >= 0.0 && a.at_s.is_finite()) {
+                return invalid("append_at instant must be finite and >= 0");
+            }
+            if self.reg.get(&a.tensor).is_none() {
+                return Err(BlcoError::InvalidRequest {
+                    what: format!(
+                        "append_at names unregistered tensor {:?}",
+                        a.tensor
+                    ),
+                });
+            }
+        }
+        for j in self.jobs {
+            if let Some(d) = j.deadline_s {
+                if !(d > 0.0 && d.is_finite()) {
+                    return Err(BlcoError::InvalidRequest {
+                        what: format!(
+                            "job {} deadline_s must be finite and > 0",
+                            j.id
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, execute any scheduled appends (building one pinned
+    /// engine per snapshot epoch), and replay the trace. The heavy
+    /// lifting is the scheduler's virtual-time loop; see the module docs
+    /// for the snapshot-consistency contract.
+    pub fn run(self) -> Result<ServeOutcome, BlcoError> {
+        self.validate()?;
+
+        // ---- appends become snapshot epochs: one pinned engine per view
+        let mut appends = self.appends;
+        appends.sort_by(|a, b| {
+            a.tensor.cmp(&b.tensor).then(
+                a.at_s.partial_cmp(&b.at_s).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        let profile = self.reg.profile().clone();
+        let mut epoch_engines: Vec<(String, f64, MttkrpEngine)> = Vec::new();
+        let mut i = 0;
+        while i < appends.len() {
+            let tensor = appends[i].tensor.clone();
+            let path = appends[i].path.clone();
+            // epoch 0: the pre-append view, pinned at the current segment
+            // count so it survives the appends below untouched
+            let pre_segments = BlcoStoreReader::open(&path)?.segments();
+            epoch_engines.push((
+                tensor.clone(),
+                f64::NEG_INFINITY,
+                MttkrpEngine::from_store_pinned(&path, profile.clone(), pre_segments)?,
+            ));
+            while i < appends.len() && appends[i].tensor == tensor {
+                let a = &appends[i];
+                let summary = BlcoStoreWriter::append(&a.path, a.delta, None)?;
+                epoch_engines.push((
+                    tensor.clone(),
+                    a.at_s,
+                    MttkrpEngine::from_store_pinned(
+                        &a.path,
+                        profile.clone(),
+                        summary.segments,
+                    )?,
+                ));
+                i += 1;
+            }
+        }
+
+        let params = ServeParams {
+            policy: self.policy,
+            devices: self.devices,
+            threads: self.threads,
+            batching: self.batching,
+            max_batch: self.max_batch,
+            slo: self.slo,
+            shed: self.shed,
+            epochs: epoch_engines
+                .iter()
+                .map(|(tensor, from_s, engine)| EpochEngine {
+                    tensor: tensor.clone(),
+                    from_s: *from_s,
+                    engine,
+                })
+                .collect(),
+        };
+        let report = run_serve(self.reg, self.tenants, self.jobs, &params);
+        Ok(ServeOutcome { report })
+    }
+}
+
+/// What a [`ServeRequest`] produced.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub report: ServiceReport,
+}
+
+impl ServeOutcome {
+    pub fn report(&self) -> &ServiceReport {
+        &self.report
+    }
+
+    pub fn into_report(self) -> ServiceReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::Profile;
+    use crate::format::blco::BlcoConfig;
+    use crate::service::scheduler::JobStatus;
+    #[allow(deprecated)]
+    use crate::service::scheduler::ServeOptions;
+    use crate::service::trace::{synthetic_trace, TraceConfig};
+    use crate::tensor::synth;
+
+    fn registry(mem: usize) -> TensorRegistry {
+        let mut reg = TensorRegistry::new(Profile::tiny(mem));
+        let t = synth::uniform(&[40, 30, 20], 5_000, 3);
+        let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+        reg.register("t", &t, cfg);
+        reg
+    }
+
+    fn reports_match(a: &ServiceReport, b: &ServiceReport) {
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.route, y.route);
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.group, y.group);
+            assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "job {}", x.id);
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "job {}", x.id);
+            assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
+            assert_eq!(x.bytes, y.bytes);
+            assert_eq!(x.served_rank, y.served_rank);
+            assert!(!x.shed && !y.shed, "no shed policy in either run");
+            match (&x.status, &y.status, &x.result, &y.result) {
+                (
+                    JobStatus::Completed,
+                    JobStatus::Completed,
+                    Some(crate::service::scheduler::JobResult::Mttkrp(mx)),
+                    Some(crate::service::scheduler::JobResult::Mttkrp(my)),
+                ) => assert_eq!(mx.data, my.data, "job {} bit-for-bit", x.id),
+                (JobStatus::Completed, JobStatus::Completed, _, _) => {}
+                (JobStatus::Rejected(ex), JobStatus::Rejected(ey), _, _) => {
+                    assert_eq!(ex, ey)
+                }
+                _ => panic!("status diverged on job {}", x.id),
+            }
+        }
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.fused_groups, b.fused_groups);
+        assert_eq!(a.fused_jobs, b.fused_jobs);
+        assert_eq!(a.bytes_shipped, b.bytes_shipped);
+        assert_eq!(a.volume_bytes, b.volume_bytes);
+        for (name, sa) in &a.per_tenant {
+            let sb = &b.per_tenant[name];
+            assert_eq!(sa.completed, sb.completed);
+            assert_eq!(sa.max_queue_depth, sb.max_queue_depth);
+            assert_eq!(sa.mean_latency_s.to_bits(), sb.mean_latency_s.to_bits());
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn request_matches_the_deprecated_serve_bitwise() {
+        // tight memory so jobs stream (and fuse) — the interesting path
+        let reg = registry(48 * 1024);
+        let cfg = TraceConfig { jobs: 14, cpals_every: 7, ..Default::default() };
+        let (tenants, jobs) = synthetic_trace(&reg, &cfg);
+
+        // batched WRR policy
+        let old = super::super::scheduler::serve(
+            &reg,
+            &tenants,
+            &jobs,
+            &ServeOptions::batched(2, 3),
+        );
+        let new = ServeRequest::new(&reg)
+            .trace(&tenants, &jobs)
+            .devices(2)
+            .threads(3)
+            .run()
+            .unwrap();
+        reports_match(&old, &new.report);
+
+        // naive global-FIFO ablation
+        let old = super::super::scheduler::serve(
+            &reg,
+            &tenants,
+            &jobs,
+            &ServeOptions::naive(2, 3),
+        );
+        let new = ServeRequest::new(&reg)
+            .trace(&tenants, &jobs)
+            .devices(2)
+            .threads(3)
+            .batching(false)
+            .policy(SchedPolicy::Fifo)
+            .run()
+            .unwrap();
+        reports_match(&old, &new.into_report());
+    }
+
+    #[test]
+    fn malformed_requests_return_structured_errors() {
+        let reg = registry(1 << 20);
+        let assert_invalid = |r: Result<ServeOutcome, BlcoError>, needle: &str| {
+            match r {
+                Err(BlcoError::InvalidRequest { what }) => {
+                    assert!(what.contains(needle), "{what:?} missing {needle:?}")
+                }
+                Err(other) => panic!("expected InvalidRequest, got {other}"),
+                Ok(_) => panic!("expected InvalidRequest, got Ok"),
+            }
+        };
+        assert_invalid(ServeRequest::new(&reg).devices(0).run(), "devices");
+        assert_invalid(ServeRequest::new(&reg).threads(0).run(), "threads");
+        assert_invalid(ServeRequest::new(&reg).max_batch(0).run(), "max_batch");
+        assert_invalid(
+            ServeRequest::new(&reg).slo(SloPolicy { default_deadline_s: 0.0 }).run(),
+            "default_deadline_s",
+        );
+        assert_invalid(
+            ServeRequest::new(&reg)
+                .shed(ShedPolicy { wait_frac: 1.5, min_rank: 4 })
+                .run(),
+            "wait_frac",
+        );
+        assert_invalid(
+            ServeRequest::new(&reg)
+                .shed(ShedPolicy { wait_frac: 0.5, min_rank: 0 })
+                .run(),
+            "min_rank",
+        );
+        let delta = synth::uniform(&[40, 30, 20], 10, 9);
+        assert_invalid(
+            ServeRequest::new(&reg)
+                .append_at("nope", Path::new("/tmp/none.blco"), &delta, 1.0)
+                .run(),
+            "unregistered",
+        );
+        // errors render readably through the crate error type
+        let e = ServeRequest::new(&reg).devices(0).run().unwrap_err();
+        assert!(e.to_string().contains("invalid request"), "{e}");
+    }
+}

@@ -1,24 +1,32 @@
-//! The fair scheduler and its serving loop: weighted round-robin across
-//! tenants (FIFO within a tenant), least-loaded dispatch over the modelled
-//! device fleet, and fusion of compatible streamed jobs — queued requests
-//! with the same `(tensor, mode, rank)` ride one fused
-//! [`StreamRequest`](crate::coordinator::request::StreamRequest) pass, so
-//! the tensor crosses the host link once
-//! per group instead of once per job (the serving-side answer to the
-//! paper's Figure-10 finding that the interconnect dominates
-//! out-of-memory runs).
+//! The serving loop and its scheduling policies: weighted round-robin
+//! across tenants (FIFO within a tenant), **earliest-deadline-first** over
+//! priority tiers, and the naive global-FIFO ablation baseline —
+//! least-loaded dispatch over the modelled device fleet, fusion of
+//! compatible streamed jobs (same `(tensor, mode, rank)` requests ride one
+//! fused [`StreamRequest`](crate::coordinator::request::StreamRequest)
+//! pass, so the tensor crosses the host link once per group instead of
+//! once per job), and graceful **load shedding** that degrades a streamed
+//! job to a coarser rank when queue wait has eaten its deadline, instead
+//! of rejecting it outright.
 //!
 //! Time is a deterministic virtual clock: kernels run for real on CPU
 //! threads, but queue waits, start/finish instants and the makespan are
-//! *modelled* — in-memory jobs are charged
-//! [`device_time`] over their exactly-counted traffic, streamed groups
-//! the pipeline-simulated `overall_s` of their stream report. The
-//! one-job-at-a-time ablation ([`ServeOptions::naive`]) runs the same
-//! loop with fusion off and global-FIFO pick, which is what the
-//! `fig_serve_throughput` bench compares against.
+//! *modelled* — in-memory jobs are charged [`device_time`] over their
+//! exactly-counted traffic, streamed groups the pipeline-simulated
+//! `overall_s` of their stream report. Queue depth is tracked on **every
+//! enqueue and dequeue event** of that clock (not sampled at dispatch
+//! instants — sampling provably mis-reads spread traces; the regression
+//! test in `rust/tests/service_layer.rs` pins the difference), and every
+//! latency tail in the [`ServiceReport`] is an interpolated-rank
+//! percentile from [`super::stats`].
+//!
+//! The entry point is the [`ServeRequest`](super::request::ServeRequest)
+//! builder; [`serve`] and [`ServeOptions`] survive as `#[deprecated]`
+//! wrappers pinned bit-for-bit by the builder's parity test.
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::coordinator::engine::MttkrpEngine;
 use crate::coordinator::request::StreamRequest;
 use crate::coordinator::schedule::ScheduleStats;
 use crate::cpals::als::{cp_als, CpAlsOptions, CpAlsReport};
@@ -29,11 +37,69 @@ use crate::mttkrp::oracle::random_factors;
 use crate::mttkrp::Mttkrp;
 use crate::util::pool::{default_threads, ExecBackend};
 
-use super::admission::{admit_job, AdmissionError, Route};
+use super::admission::{admit_job_on, admit_mttkrp, AdmissionError, Route};
 use super::registry::TensorRegistry;
+use super::stats::Percentiles;
 use super::trace::{JobKind, JobRequest, Tenant};
 
-/// Scheduler policy knobs.
+/// Which scheduling policy picks the next job to dispatch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// weighted round-robin across tenants, FIFO within a tenant — the
+    /// fairness policy
+    #[default]
+    Wrr,
+    /// earliest deadline first over priority tiers: strictly by tier
+    /// (`JobRequest::priority`, 0 = most urgent), earliest absolute
+    /// deadline within a tier, best-effort jobs last (by arrival). Note
+    /// EDF is deadline-driven, not fairness-driven: tenant weights are
+    /// ignored.
+    Edf,
+    /// global FIFO by `(arrival, id)` — the naive ablation baseline
+    Fifo,
+}
+
+/// Run-wide latency SLO: a default relative deadline stamped on jobs that
+/// did not carry their own (`JobRequest::deadline_s` wins when set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    pub default_deadline_s: f64,
+}
+
+/// Graceful load shedding for **streamed MTTKRP** jobs: degrade to a
+/// coarser rank instead of missing outright or rejecting.
+///
+/// Two trigger points:
+/// * **admission** — a rank that cannot fit even the streaming floor
+///   (`WontFit`) is retried at successively halved ranks down to
+///   `min_rank`; the job is admitted *shed* at the first rank that fits
+///   instead of being rejected;
+/// * **dispatch** — a job whose queue wait has consumed more than
+///   `wait_frac` of its deadline budget by dispatch time is served at
+///   `max(min_rank, rank/2)`.
+///
+/// A shed job completes (status `Completed`, `JobOutcome::shed` set) with
+/// a coarser factorization — the tenant gets a lower-fidelity answer on
+/// time rather than a rejection or a blown SLO.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedPolicy {
+    /// shed at dispatch once `wait / deadline > wait_frac`
+    pub wait_frac: f64,
+    /// rank degradation floor
+    pub min_rank: usize,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> Self {
+        ShedPolicy { wait_frac: 0.5, min_rank: 4 }
+    }
+}
+
+/// Scheduler policy knobs of the deprecated [`serve`] entry point.
+#[deprecated(
+    note = "use service::ServeRequest — the builder carries policy, SLO and \
+            shedding knobs and returns structured errors"
+)]
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// modelled fleet size; each device runs one job (or fused group) at a
@@ -50,6 +116,7 @@ pub struct ServeOptions {
     pub threads: usize,
 }
 
+#[allow(deprecated)]
 impl Default for ServeOptions {
     fn default() -> Self {
         ServeOptions {
@@ -62,6 +129,7 @@ impl Default for ServeOptions {
     }
 }
 
+#[allow(deprecated)]
 impl ServeOptions {
     /// The full serving policy: WRR fairness + fusion.
     pub fn batched(devices: usize, threads: usize) -> Self {
@@ -119,6 +187,15 @@ pub struct JobOutcome {
     /// host-link bytes attributed to this job (a fused group's wire bytes
     /// split evenly across its members)
     pub bytes: usize,
+    /// rank the job was actually served at (differs from the requested
+    /// rank only when shed); `None` for rejected jobs
+    pub served_rank: Option<usize>,
+    /// degraded to a coarser rank by the [`ShedPolicy`]
+    pub shed: bool,
+    /// absolute deadline instant (`arrival + SLO`), when one applied
+    pub deadline_s: Option<f64>,
+    /// completed after its deadline instant
+    pub missed_deadline: bool,
     pub result: Option<JobResult>,
 }
 
@@ -131,11 +208,34 @@ pub struct TenantStats {
     pub rejected: usize,
     /// completed jobs that rode a fused group
     pub fused: usize,
+    /// completed jobs degraded to a coarser rank by the shed policy
+    pub shed: usize,
+    /// completed jobs that carried a deadline
+    pub deadline_jobs: usize,
+    /// ... and finished after it
+    pub deadline_misses: usize,
     pub bytes_shipped: usize,
     pub mean_latency_s: f64,
     pub max_latency_s: f64,
-    /// deepest this tenant's queue ever got (sampled at dispatch instants)
+    /// p50/p95/p99/p999 of this tenant's completed-job latencies
+    pub latency: Percentiles,
+    /// queue-depth distribution over this tenant's enqueue/dequeue events
+    pub queue_depth: Percentiles,
+    /// deepest this tenant's queue ever got (event-tracked: updated on
+    /// every enqueue *and* dequeue of the virtual clock)
     pub max_queue_depth: usize,
+}
+
+impl TenantStats {
+    /// Fraction of this tenant's deadline-carrying completions that
+    /// finished late (0.0 when none carried a deadline).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_jobs == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.deadline_jobs as f64
+        }
+    }
 }
 
 /// Everything a serving run reports.
@@ -150,7 +250,19 @@ pub struct ServiceReport {
     pub fused_groups: usize,
     /// jobs served inside fused groups (each group has >= 2)
     pub fused_jobs: usize,
-    /// schedule-cache activity during this run (delta over the registry)
+    /// completed jobs degraded to a coarser rank (aggregate)
+    pub shed_jobs: usize,
+    /// completed jobs that carried a deadline (aggregate)
+    pub deadline_jobs: usize,
+    /// ... and finished after it (aggregate)
+    pub deadline_misses: usize,
+    /// latency distribution over every completed job
+    pub latency: Percentiles,
+    /// aggregate queue-depth distribution (total backlog across tenants,
+    /// sampled at every enqueue/dequeue event)
+    pub queue_depth: Percentiles,
+    /// schedule-cache activity during this run (delta over the registry
+    /// plus any snapshot-epoch engines)
     pub schedule: ScheduleStats,
     /// total host-link bytes shipped
     pub bytes_shipped: usize,
@@ -192,6 +304,20 @@ impl ServiceReport {
         }
     }
 
+    /// p99 of every completed job's latency (the SLO headline number).
+    pub fn p99_latency_s(&self) -> f64 {
+        self.latency.p99
+    }
+
+    /// Aggregate deadline-miss rate over completions that carried one.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_jobs == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.deadline_jobs as f64
+        }
+    }
+
     /// Completed jobs per modelled second.
     pub fn throughput_jobs_per_s(&self) -> f64 {
         if self.makespan_s <= 0.0 {
@@ -202,18 +328,110 @@ impl ServiceReport {
     }
 }
 
+/// A tensor view that becomes active for jobs arriving at or after
+/// `from_s` — how snapshot-consistent serving maps a job's arrival to the
+/// pre- or post-append engine (built by
+/// [`ServeRequest::append_at`](super::request::ServeRequest::append_at)).
+pub(crate) struct EpochEngine<'a> {
+    pub tensor: String,
+    pub from_s: f64,
+    pub engine: &'a MttkrpEngine,
+}
+
+/// Validated inputs of one serving run — constructed only by
+/// [`ServeRequest::run`](super::request::ServeRequest::run) and the
+/// deprecated [`serve`] wrapper.
+pub(crate) struct ServeParams<'a> {
+    pub policy: SchedPolicy,
+    pub devices: usize,
+    pub threads: usize,
+    pub batching: bool,
+    pub max_batch: usize,
+    pub slo: Option<SloPolicy>,
+    pub shed: Option<ShedPolicy>,
+    pub epochs: Vec<EpochEngine<'a>>,
+}
+
+impl ServeParams<'_> {
+    /// The engine a job uses: the latest epoch active at its arrival,
+    /// falling back to the registry entry when the tensor has no epochs.
+    fn engine_for<'r>(
+        &'r self,
+        reg: &'r TensorRegistry,
+        tensor: &str,
+        arrival_s: f64,
+    ) -> Option<&'r MttkrpEngine> {
+        let mut best: Option<(f64, &MttkrpEngine)> = None;
+        for e in &self.epochs {
+            if e.tensor == tensor
+                && e.from_s <= arrival_s
+                && best.map_or(true, |(f, _)| e.from_s >= f)
+            {
+                best = Some((e.from_s, e.engine));
+            }
+        }
+        match best {
+            Some((_, eng)) => Some(eng),
+            None => reg.get(tensor).map(|e| &e.engine),
+        }
+    }
+
+    /// Registry schedule stats plus every epoch engine's — the combined
+    /// counter the report's delta is taken over.
+    fn sched_total(&self, reg: &TensorRegistry) -> ScheduleStats {
+        let mut total = reg.schedule_stats();
+        for e in &self.epochs {
+            let s = e.engine.schedule_stats();
+            total.built += s.built;
+            total.hits += s.hits;
+        }
+        total
+    }
+}
+
 /// An admitted job waiting in its tenant's queue.
-struct Queued {
+struct Queued<'e> {
     job: JobRequest,
     route: Route,
+    engine: &'e MttkrpEngine,
+    /// absolute deadline instant, when the job (or the run's SLO default)
+    /// carries one
+    deadline_abs: Option<f64>,
+    /// rank after any admission-time shed (requested rank otherwise; the
+    /// requested rank for CP-ALS, which never sheds)
+    rank_eff: usize,
+    /// degraded at admission to fit the streaming floor
+    admit_shed: bool,
+}
+
+/// The rank a job is served at if dispatched at `now`, plus whether that
+/// is a shed. Dispatch-time shedding applies to streamed MTTKRPs whose
+/// queue wait has consumed more than `wait_frac` of their deadline budget.
+fn shed_decision(q: &Queued, now: f64, shed: Option<&ShedPolicy>) -> (usize, bool) {
+    let base = (q.rank_eff, q.admit_shed);
+    let Some(pol) = shed else { return base };
+    if q.route != Route::Streamed || !matches!(q.job.kind, JobKind::Mttkrp { .. }) {
+        return base;
+    }
+    let Some(deadline) = q.deadline_abs else { return base };
+    let budget = deadline - q.job.arrival_s;
+    let waited = now - q.job.arrival_s;
+    if budget > 0.0 && waited > pol.wait_frac * budget && q.rank_eff > pol.min_rank {
+        (pol.min_rank.max(q.rank_eff / 2), true)
+    } else {
+        base
+    }
 }
 
 /// Fusion key: only streamed single MTTKRPs fuse (in-memory jobs have no
-/// transfer to share; CP-ALS owns its whole sweep).
-fn fuse_key(q: &Queued) -> Option<(&str, usize, usize)> {
+/// transfer to share; CP-ALS owns its whole sweep). Rank equality is
+/// checked separately through [`shed_decision`], and epoch identity
+/// through the engine pointer — jobs on different sides of an append see
+/// different tensors and must not share a pass.
+fn fuse_target(q: &Queued) -> Option<(&str, usize)> {
     match (q.route, q.job.kind) {
-        (Route::Streamed, JobKind::Mttkrp { target, rank, .. }) => {
-            Some((q.job.tensor.as_str(), target, rank))
+        (Route::Streamed, JobKind::Mttkrp { target, .. }) => {
+            Some((q.job.tensor.as_str(), target))
         }
         _ => None,
     }
@@ -245,19 +463,77 @@ fn wrr_pick(
     }
 }
 
-/// Replay `jobs` against the registry under the given policy. Kernels run
+/// Queue-depth accounting over the virtual clock: depth changes on every
+/// enqueue (arrival) and dequeue (dispatch or fuse-removal) event, and
+/// every change is sampled — per tenant and for the aggregate backlog.
+/// This replaces the old dispatch-instant sampling, which initialized
+/// each tenant's max to its *whole future trace* and therefore mis-read
+/// any spread trace (the regression test in `service_layer.rs` pins a
+/// case where sampling reports 4× the true depth).
+struct DepthTracker {
+    depth: Vec<usize>,
+    total: usize,
+    max_depth: Vec<usize>,
+    tenant_samples: Vec<Vec<f64>>,
+    total_samples: Vec<f64>,
+    /// admitted arrivals `(arrival_s, tenant)` in arrival order, consumed
+    /// as the clock passes them
+    arrivals: Vec<(f64, usize)>,
+    next_arrival: usize,
+}
+
+impl DepthTracker {
+    fn new(ntenants: usize, arrivals: Vec<(f64, usize)>) -> Self {
+        DepthTracker {
+            depth: vec![0; ntenants],
+            total: 0,
+            max_depth: vec![0; ntenants],
+            tenant_samples: vec![Vec::new(); ntenants],
+            total_samples: Vec::new(),
+            arrivals,
+            next_arrival: 0,
+        }
+    }
+
+    /// Process every arrival event up to (and including) `now`.
+    fn advance(&mut self, now: f64) {
+        while self.next_arrival < self.arrivals.len()
+            && self.arrivals[self.next_arrival].0 <= now
+        {
+            let t = self.arrivals[self.next_arrival].1;
+            self.depth[t] += 1;
+            self.total += 1;
+            self.max_depth[t] = self.max_depth[t].max(self.depth[t]);
+            self.tenant_samples[t].push(self.depth[t] as f64);
+            self.total_samples.push(self.total as f64);
+            self.next_arrival += 1;
+        }
+    }
+
+    /// One job left tenant `t`'s queue (dispatch or fuse-removal).
+    fn dequeue(&mut self, t: usize) {
+        debug_assert!(self.depth[t] > 0, "dequeue from an empty accounting bucket");
+        self.depth[t] -= 1;
+        self.total -= 1;
+        self.tenant_samples[t].push(self.depth[t] as f64);
+        self.total_samples.push(self.total as f64);
+    }
+}
+
+/// Replay `jobs` against the registry under the given policy — the core
+/// loop behind [`ServeRequest`](super::request::ServeRequest). Kernels run
 /// for real; waiting and service times follow the modelled clock (see the
 /// module docs). Returns the full report, results included.
-pub fn serve(
+pub(crate) fn run_serve(
     reg: &TensorRegistry,
     tenants: &[Tenant],
     jobs: &[JobRequest],
-    opts: &ServeOptions,
+    params: &ServeParams,
 ) -> ServiceReport {
     let wall0 = std::time::Instant::now();
-    let devices = opts.devices.max(1);
-    let threads = opts.backend().threads();
-    let sched_before = reg.schedule_stats();
+    let devices = params.devices.max(1);
+    let threads = params.threads.max(1);
+    let sched_before = params.sched_total(reg);
     let counters = Counters::new();
 
     // tenant table: declared tenants plus any the trace names (weight 1)
@@ -271,8 +547,30 @@ pub fn serve(
     }
     let ntenants = tnames.len();
 
+    let rejected_outcome = |job: &JobRequest, e: AdmissionError| JobOutcome {
+        id: job.id,
+        tenant: job.tenant.clone(),
+        tensor: job.tensor.clone(),
+        kind: job.kind,
+        status: JobStatus::Rejected(e),
+        route: None,
+        device: None,
+        group: None,
+        start_s: job.arrival_s,
+        finish_s: job.arrival_s,
+        latency_s: 0.0,
+        duration_s: 0.0,
+        bytes: 0,
+        served_rank: None,
+        shed: false,
+        deadline_s: None,
+        missed_deadline: false,
+        result: None,
+    };
+
     // ---- admission: rejections become outcomes immediately; admitted
-    // jobs queue FIFO (arrival order) within their tenant
+    // jobs queue FIFO (arrival order) within their tenant. Each job binds
+    // to its arrival's epoch engine here — the snapshot-consistency rule.
     let mut sorted: Vec<&JobRequest> = jobs.iter().collect();
     sorted.sort_by(|a, b| {
         a.arrival_s
@@ -282,26 +580,60 @@ pub fn serve(
     });
     let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(jobs.len());
     let mut queues: Vec<VecDeque<Queued>> = (0..ntenants).map(|_| VecDeque::new()).collect();
+    let mut arrivals: Vec<(f64, usize)> = Vec::with_capacity(jobs.len());
     for job in sorted {
         let ti = tnames.iter().position(|n| n == &job.tenant).expect("tenant table");
-        match admit_job(reg, job) {
-            Err(e) => outcomes.push(JobOutcome {
-                id: job.id,
-                tenant: job.tenant.clone(),
-                tensor: job.tensor.clone(),
-                kind: job.kind,
-                status: JobStatus::Rejected(e),
-                route: None,
-                device: None,
-                group: None,
-                start_s: job.arrival_s,
-                finish_s: job.arrival_s,
-                latency_s: 0.0,
-                duration_s: 0.0,
-                bytes: 0,
-                result: None,
-            }),
-            Ok(a) => queues[ti].push_back(Queued { job: job.clone(), route: a.route }),
+        let Some(engine) = params.engine_for(reg, &job.tensor, job.arrival_s) else {
+            outcomes.push(rejected_outcome(
+                job,
+                AdmissionError::UnknownTensor { tensor: job.tensor.clone() },
+            ));
+            continue;
+        };
+        let deadline_abs = job
+            .deadline_s
+            .or(params.slo.map(|s| s.default_deadline_s))
+            .map(|d| job.arrival_s + d);
+        let (requested_rank, is_mttkrp) = match job.kind {
+            JobKind::Mttkrp { rank, .. } => (rank, true),
+            JobKind::CpAls { rank, .. } => (rank, false),
+        };
+        let admitted = match admit_job_on(engine, job) {
+            Ok(a) => Ok((a, requested_rank, false)),
+            // admission-level shed: a WontFit MTTKRP retries at halved
+            // ranks down to the floor instead of bouncing the tenant
+            Err(AdmissionError::WontFit { target, .. })
+                if is_mttkrp && params.shed.is_some() =>
+            {
+                let pol = params.shed.expect("guard");
+                let mut r = requested_rank;
+                let mut found = None;
+                while r > pol.min_rank {
+                    r = pol.min_rank.max(r / 2);
+                    if let Ok(a) = admit_mttkrp(engine, target, r) {
+                        found = Some((a, r, true));
+                        break;
+                    }
+                }
+                found.ok_or_else(|| {
+                    admit_job_on(engine, job).expect_err("still unservable")
+                })
+            }
+            Err(e) => Err(e),
+        };
+        match admitted {
+            Err(e) => outcomes.push(rejected_outcome(job, e)),
+            Ok((a, rank_eff, admit_shed)) => {
+                arrivals.push((job.arrival_s, ti));
+                queues[ti].push_back(Queued {
+                    job: job.clone(),
+                    route: a.route,
+                    engine,
+                    deadline_abs,
+                    rank_eff,
+                    admit_shed,
+                });
+            }
         }
     }
 
@@ -309,7 +641,7 @@ pub fn serve(
     let mut device_free = vec![0.0f64; devices];
     let mut credits: Vec<usize> = weights.clone();
     let mut cursor = 0usize;
-    let mut max_depth: Vec<usize> = queues.iter().map(|q| q.len()).collect();
+    let mut depth = DepthTracker::new(ntenants, arrivals);
     let mut fused_groups = 0usize;
     let mut fused_jobs = 0usize;
     let mut next_group = 0usize;
@@ -332,56 +664,85 @@ pub fn serve(
         if next_arrival > now {
             now = next_arrival; // the fleet idles until work arrives
         }
-        let eligible: Vec<bool> = queues
-            .iter()
-            .map(|q| q.front().map(|x| x.job.arrival_s <= now).unwrap_or(false))
-            .collect();
-        // backlog sampled at this dispatch instant: only jobs that have
-        // actually arrived count (queues hold the whole future trace)
-        for (depth, q) in max_depth.iter_mut().zip(&queues) {
-            let arrived = q.iter().filter(|x| x.job.arrival_s <= now).count();
-            *depth = (*depth).max(arrived);
-        }
+        // every arrival event up to this dispatch instant is an enqueue
+        depth.advance(now);
 
-        // ---- pick the initiating tenant
-        let t = if opts.fair {
-            wrr_pick(&mut credits, &weights, &mut cursor, &eligible)
-        } else {
-            // global FIFO: the eligible front with the earliest (arrival, id)
-            let mut best: Option<usize> = None;
-            for (ti, q) in queues.iter().enumerate() {
-                if !eligible[ti] {
-                    continue;
+        // ---- pick the initiating job
+        let (t, qi) = match params.policy {
+            SchedPolicy::Wrr => {
+                let eligible: Vec<bool> = queues
+                    .iter()
+                    .map(|q| q.front().map(|x| x.job.arrival_s <= now).unwrap_or(false))
+                    .collect();
+                (wrr_pick(&mut credits, &weights, &mut cursor, &eligible), 0)
+            }
+            SchedPolicy::Fifo => {
+                // global FIFO: the eligible front with the earliest
+                // (arrival, id); queues are arrival-ordered, so the
+                // global earliest job is at some front
+                let mut best: Option<usize> = None;
+                for (ti, q) in queues.iter().enumerate() {
+                    let Some(f) = q.front() else { continue };
+                    if f.job.arrival_s > now {
+                        continue;
+                    }
+                    best = match best {
+                        None => Some(ti),
+                        Some(b) => {
+                            let g = queues[b].front().expect("tracked front");
+                            if (f.job.arrival_s, f.job.id) < (g.job.arrival_s, g.job.id) {
+                                Some(ti)
+                            } else {
+                                Some(b)
+                            }
+                        }
+                    };
                 }
-                let f = q.front().expect("eligible implies non-empty");
-                best = match best {
-                    None => Some(ti),
-                    Some(b) => {
-                        let g = queues[b].front().expect("tracked front");
-                        if (f.job.arrival_s, f.job.id) < (g.job.arrival_s, g.job.id) {
-                            Some(ti)
-                        } else {
-                            Some(b)
+                (best.expect("some tenant is eligible at `now`"), 0)
+            }
+            SchedPolicy::Edf => {
+                // earliest deadline first across *all* arrived jobs (they
+                // can sit mid-queue behind earlier arrivals): strictly by
+                // priority tier, then absolute deadline (best-effort jobs
+                // last), then (arrival, id) for determinism
+                let mut best: Option<((u8, f64, f64, usize), (usize, usize))> = None;
+                for (ti, q) in queues.iter().enumerate() {
+                    for (i, x) in q.iter().enumerate() {
+                        if x.job.arrival_s > now {
+                            break; // arrival-ordered within the queue
+                        }
+                        let key = (
+                            x.job.priority,
+                            x.deadline_abs.unwrap_or(f64::INFINITY),
+                            x.job.arrival_s,
+                            x.job.id,
+                        );
+                        if best.map_or(true, |(bk, _)| key < bk) {
+                            best = Some((key, (ti, i)));
                         }
                     }
-                };
+                }
+                best.expect("some job is eligible at `now`").1
             }
-            best.expect("some tenant is eligible at `now`")
         };
-        let head = queues[t].pop_front().expect("eligible tenant has a front");
-        let head_engine =
-            &reg.get(&head.job.tensor).expect("admitted tensor is registered").engine;
+        let head = queues[t].remove(qi).expect("picked index in range");
+        depth.dequeue(t);
+        let head_engine = head.engine;
+        let (head_rank, head_shed) = shed_decision(&head, now, params.shed.as_ref());
         let mut group = vec![head];
+        let mut group_shed = vec![head_shed];
 
-        // ---- fuse compatible arrived jobs (any tenant) onto this dispatch.
-        // The group is capped by device memory, not just max_batch: k fused
-        // jobs keep k factor/output sets resident while sharing one batch
-        // double buffer, so fusion must not overcommit the budget the
-        // admission controller guaranteed per job.
-        if opts.batching && opts.max_batch > 1 {
-            let key = fuse_key(&group[0]).map(|(s, m, r)| (s.to_string(), m, r));
-            if let Some((ks, km, kr)) = key {
-                let cap = opts.max_batch.min(head_engine.fused_jobs_capacity(km, kr));
+        // ---- fuse compatible arrived jobs (any tenant) onto this
+        // dispatch. The group is capped by device memory, not just
+        // max_batch: k fused jobs keep k factor/output sets resident
+        // while sharing one batch double buffer, so fusion must not
+        // overcommit the budget the admission controller guaranteed per
+        // job. Candidates must resolve to the *same engine* (same tensor
+        // epoch) and the same post-shed rank.
+        if params.batching && params.max_batch > 1 {
+            let key = fuse_target(&group[0]).map(|(s, m)| (s.to_string(), m));
+            if let Some((ks, km)) = key {
+                let cap = params.max_batch.min(head_engine.fused_jobs_capacity(km, head_rank));
                 'scan: for step in 0..ntenants {
                     let ti = (t + step) % ntenants;
                     let q = &mut queues[ti];
@@ -391,10 +752,16 @@ pub fn serve(
                             break 'scan;
                         }
                         let cand = &q[i];
+                        let (cand_rank, cand_shed) =
+                            shed_decision(cand, now, params.shed.as_ref());
                         let joins = cand.job.arrival_s <= now
-                            && fuse_key(cand) == Some((ks.as_str(), km, kr));
+                            && fuse_target(cand) == Some((ks.as_str(), km))
+                            && cand_rank == head_rank
+                            && std::ptr::eq(cand.engine, head_engine);
                         if joins {
                             group.push(q.remove(i).expect("index in range"));
+                            group_shed.push(cand_shed);
+                            depth.dequeue(ti);
                         } else {
                             i += 1;
                         }
@@ -416,7 +783,8 @@ pub fn serve(
         let cnt = Counters::new();
         let (duration_s, group_bytes, results): (f64, usize, Vec<JobResult>) =
             match group[0].job.kind {
-                JobKind::Mttkrp { target, rank, .. } => {
+                JobKind::Mttkrp { target, .. } => {
+                    let rank = head_rank;
                     let factor_sets: Vec<Vec<Matrix>> = group
                         .iter()
                         .map(|g| match g.job.kind {
@@ -483,7 +851,13 @@ pub fn serve(
         let finish = start + duration_s;
         device_free[d] = finish;
         let per_job_bytes = group_bytes / group.len();
-        for (q, result) in group.into_iter().zip(results) {
+        for (q, (result, shed)) in
+            group.into_iter().zip(results.into_iter().zip(group_shed))
+        {
+            let served_rank = match q.job.kind {
+                JobKind::Mttkrp { .. } => head_rank,
+                JobKind::CpAls { rank, .. } => rank,
+            };
             outcomes.push(JobOutcome {
                 id: q.job.id,
                 tenant: q.job.tenant,
@@ -498,6 +872,10 @@ pub fn serve(
                 latency_s: finish - q.job.arrival_s,
                 duration_s,
                 bytes: per_job_bytes,
+                served_rank: Some(served_rank),
+                shed,
+                deadline_s: q.deadline_abs,
+                missed_deadline: q.deadline_abs.is_some_and(|dl| finish > dl),
                 result: Some(result),
             });
         }
@@ -510,11 +888,13 @@ pub fn serve(
             name.clone(),
             TenantStats {
                 weight: weights[i],
-                max_queue_depth: max_depth[i],
+                max_queue_depth: depth.max_depth[i],
+                queue_depth: Percentiles::from_samples(&depth.tenant_samples[i]),
                 ..Default::default()
             },
         );
     }
+    let mut tenant_latencies: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
     for o in &outcomes {
         let s = per_tenant.get_mut(&o.tenant).expect("tenant table covers the trace");
         s.submitted += 1;
@@ -524,12 +904,28 @@ pub fn serve(
                 s.mean_latency_s += o.latency_s; // sum; divided below
                 s.max_latency_s = s.max_latency_s.max(o.latency_s);
                 s.bytes_shipped += o.bytes;
+                tenant_latencies.entry(&o.tenant).or_default().push(o.latency_s);
                 if o.group.is_some() {
                     s.fused += 1;
+                }
+                if o.shed {
+                    s.shed += 1;
+                }
+                if o.deadline_s.is_some() {
+                    s.deadline_jobs += 1;
+                    if o.missed_deadline {
+                        s.deadline_misses += 1;
+                    }
                 }
             }
             JobStatus::Rejected(_) => s.rejected += 1,
         }
+    }
+    let mut all_latencies: Vec<f64> = Vec::new();
+    for (name, lats) in &tenant_latencies {
+        let s = per_tenant.get_mut(*name).expect("tenant table");
+        s.latency = Percentiles::from_samples(lats);
+        all_latencies.extend_from_slice(lats);
     }
     for s in per_tenant.values_mut() {
         if s.completed > 0 {
@@ -542,7 +938,13 @@ pub fn serve(
         .map(|o| o.finish_s)
         .fold(0.0, f64::max);
     let bytes_shipped = outcomes.iter().map(|o| o.bytes).sum();
+    let (shed_jobs, deadline_jobs, deadline_misses) = per_tenant.values().fold(
+        (0, 0, 0),
+        |(s, j, m), t| (s + t.shed, j + t.deadline_jobs, m + t.deadline_misses),
+    );
 
+    let mut delta = params.sched_total(reg);
+    delta = delta.delta_since(sched_before);
     ServiceReport {
         outcomes,
         per_tenant,
@@ -550,11 +952,41 @@ pub fn serve(
         makespan_s,
         fused_groups,
         fused_jobs,
-        schedule: reg.schedule_stats().delta_since(sched_before),
+        shed_jobs,
+        deadline_jobs,
+        deadline_misses,
+        latency: Percentiles::from_samples(&all_latencies),
+        queue_depth: Percentiles::from_samples(&depth.total_samples),
+        schedule: delta,
         bytes_shipped,
         volume_bytes: counters.snapshot().volume_bytes(),
         wall_s: wall0.elapsed().as_secs_f64(),
     }
+}
+
+/// Replay `jobs` against the registry under the given policy.
+#[deprecated(
+    note = "use service::ServeRequest — the builder validates its inputs, \
+            returns structured errors, and carries the SLO/EDF/shed knobs"
+)]
+#[allow(deprecated)]
+pub fn serve(
+    reg: &TensorRegistry,
+    tenants: &[Tenant],
+    jobs: &[JobRequest],
+    opts: &ServeOptions,
+) -> ServiceReport {
+    let params = ServeParams {
+        policy: if opts.fair { SchedPolicy::Wrr } else { SchedPolicy::Fifo },
+        devices: opts.devices.max(1),
+        threads: opts.backend().threads(),
+        batching: opts.batching,
+        max_batch: opts.max_batch,
+        slo: None,
+        shed: None,
+        epochs: Vec::new(),
+    };
+    run_serve(reg, tenants, jobs, &params)
 }
 
 #[cfg(test)]
@@ -585,5 +1017,24 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(wrr_pick(&mut credits, &weights, &mut cursor, &eligible), 1);
         }
+    }
+
+    #[test]
+    fn depth_tracker_records_every_event() {
+        // two tenants; arrivals at 0, 0, 1, 5 (tenant 0,1,0,0)
+        let mut d = DepthTracker::new(2, vec![(0.0, 0), (0.0, 1), (1.0, 0), (5.0, 0)]);
+        d.advance(0.0);
+        assert_eq!((d.depth[0], d.depth[1], d.total), (1, 1, 2));
+        d.dequeue(0); // dispatch tenant 0's job
+        d.advance(2.0); // arrival at t=1 processed late, at the next dispatch
+        assert_eq!((d.depth[0], d.total), (1, 2));
+        d.dequeue(1);
+        d.dequeue(0);
+        d.advance(10.0);
+        d.dequeue(0);
+        assert_eq!(d.total, 0);
+        assert_eq!(d.max_depth, vec![1, 1], "spread trace never stacked");
+        // every enqueue and dequeue left a sample
+        assert_eq!(d.total_samples.len(), 8);
     }
 }

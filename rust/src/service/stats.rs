@@ -1,0 +1,117 @@
+//! Percentile math for the serving layer's tail-latency and queue-depth
+//! reporting. One semantics, used everywhere a report quotes a tail:
+//! **interpolated rank** (the numpy-default "linear" quantile): on `n`
+//! sorted samples the p-th percentile sits at fractional index
+//! `p/100 * (n-1)` and interpolates linearly between its neighbours.
+//!
+//! The interpolated rank is deliberate where tails meet small samples: a
+//! naive nearest-rank `ceil(p/100 * n)` makes p99 (and even p95) of 10
+//! samples silently *the max* — one outlier then owns the whole tail and
+//! the sweep in `fig_serve_throughput` cannot tell an exploding queue
+//! from a single slow job. Under interpolated rank, p99 of 10 distinct
+//! samples lands strictly between the two largest. The unit tests pin
+//! these semantics on known small samples so they cannot drift.
+
+/// The percentile of `samples` (need not be sorted), `p` in `[0, 100]`.
+/// Interpolated rank; 0.0 on an empty slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&sorted, p)
+}
+
+/// [`percentile`] over already-sorted samples (no copy, no re-sort).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let idx = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = idx - lo as f64;
+        sorted[lo] + frac * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// The tail summary every latency / queue-depth report carries:
+/// p50/p95/p99/p999 at interpolated rank, plus mean and max.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    /// Summarize `samples` (unsorted is fine). All-zero on an empty slice.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let sum: f64 = sorted.iter().sum();
+        Percentiles {
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
+            mean: sum / sorted.len() as f64,
+            max: *sorted.last().expect("non-empty"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_pin_interpolated_rank_on_small_samples() {
+        // 10 known samples: the tail must interpolate, not jump to max
+        let xs: Vec<f64> = (1..=10).map(|v| v as f64).collect();
+        let s = Percentiles::from_samples(&xs);
+        assert_eq!(s.p50, 5.5, "median of 1..=10 interpolates");
+        // p95 index = 0.95 * 9 = 8.55 -> between 9 and 10
+        assert!((s.p95 - 9.55).abs() < 1e-12, "p95 = {}", s.p95);
+        // p99 of 10 samples must NOT silently become the max: a naive
+        // nearest-rank ceil(0.99 * 10) = 10 would return 10.0 here
+        assert!((s.p99 - 9.91).abs() < 1e-12, "p99 = {}", s.p99);
+        assert!(s.p99 < s.max, "p99 of 10 samples is not the max");
+        assert!(s.p999 < s.max, "p999 of 10 samples is not the max");
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.mean, 5.5);
+    }
+
+    #[test]
+    fn percentiles_on_larger_samples_and_edges() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        // index = 0.99 * 99 = 98.01 -> between 99 and 100
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        // degenerate inputs
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        assert_eq!(percentile(&[3.0, 1.0], 50.0), 2.0, "unsorted input is sorted");
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -3.0), 1.0);
+    }
+
+    #[test]
+    fn order_independent_and_duplicate_safe() {
+        let a = Percentiles::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        let b = Percentiles::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a, b);
+        let c = Percentiles::from_samples(&[2.0; 9]);
+        assert_eq!((c.p50, c.p99, c.max), (2.0, 2.0, 2.0));
+    }
+}

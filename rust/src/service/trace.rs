@@ -1,7 +1,18 @@
-//! Tenants, job requests, and the seeded synthetic mixed-tenant trace the
-//! `serve` CLI and the throughput bench replay. Everything is
-//! deterministic in the seed so serving runs are reproducible and
-//! comparable across scheduler policies.
+//! Tenants, job requests, and the seeded trace generators the `serve` CLI
+//! and the throughput bench replay. Everything is deterministic in the
+//! seed so serving runs are reproducible and comparable across scheduler
+//! policies.
+//!
+//! Two generation regimes share one [`TraceConfig`]:
+//!
+//! * [`ArrivalProcess::Bursty`] — the legacy replay gaps (~1/3 of jobs
+//!   land together), kept bit-compatible with the pre-open-loop trace;
+//! * [`ArrivalProcess::Poisson`] / [`ArrivalProcess::Mmpp`] — **open
+//!   loop**: arrivals follow the offered rate regardless of how fast the
+//!   fleet drains them, which is what production traffic does. A sweep
+//!   over `rate_qps` is how `fig_serve_throughput` finds the knee where
+//!   p99 explodes; the Markov-modulated process adds calm/burst phases so
+//!   tails are stressed by correlated arrivals, not just the mean rate.
 
 use crate::util::prng::Rng;
 
@@ -37,6 +48,64 @@ pub struct JobRequest {
     pub kind: JobKind,
     /// modelled arrival time (seconds since trace start)
     pub arrival_s: f64,
+    /// latency SLO *relative to arrival*: the job should finish by
+    /// `arrival_s + deadline_s`. `None` = best-effort (a run-wide default
+    /// can still be applied via `SloPolicy`); finishing late is a
+    /// *deadline miss* in the report, never a drop.
+    pub deadline_s: Option<f64>,
+    /// priority tier, `0` = most urgent. The EDF policy serves strictly
+    /// by tier first, earliest deadline within a tier.
+    pub priority: u8,
+}
+
+impl JobRequest {
+    /// A best-effort tier-0 request (no deadline).
+    pub fn new(
+        id: usize,
+        tenant: &str,
+        tensor: &str,
+        kind: JobKind,
+        arrival_s: f64,
+    ) -> Self {
+        JobRequest {
+            id,
+            tenant: tenant.to_string(),
+            tensor: tensor.to_string(),
+            kind,
+            arrival_s,
+            deadline_s: None,
+            priority: 0,
+        }
+    }
+
+    /// Attach a relative latency SLO.
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Assign a priority tier (`0` = most urgent).
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// How arrival instants are generated.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// legacy closed-loop-style replay gaps: ~1/3 of jobs arrive together,
+    /// the rest `uniform(0, 2 * mean_gap_s)` apart (mean gap
+    /// `TraceConfig::mean_gap_s`)
+    Bursty,
+    /// open-loop Poisson arrivals at `rate_qps` jobs per modelled second
+    /// (exponential inter-arrival gaps)
+    Poisson { rate_qps: f64 },
+    /// Markov-modulated Poisson: a two-state process that alternates a
+    /// calm phase at `rate_qps` and a burst phase at `burst * rate_qps`,
+    /// dwelling an exponential `mean_dwell_s` in each — same mean load as
+    /// Poisson at `(1 + burst)/2 * rate_qps`, much heavier tails
+    Mmpp { rate_qps: f64, burst: f64, mean_dwell_s: f64 },
 }
 
 /// Knobs of the synthetic trace generator.
@@ -44,8 +113,8 @@ pub struct JobRequest {
 pub struct TraceConfig {
     pub tenants: usize,
     pub jobs: usize,
-    /// mean inter-arrival gap; a third of arrivals are bursts (gap 0) so
-    /// queues actually form and fusion/fairness have something to do
+    /// mean inter-arrival gap of the [`ArrivalProcess::Bursty`] replay
+    /// (ignored by the open-loop processes, which carry their own rate)
     pub mean_gap_s: f64,
     /// ranks jobs draw from — keep this short to drive schedule-cache
     /// hits and fusion on repeated `(tensor, mode, rank)` keys
@@ -53,6 +122,12 @@ pub struct TraceConfig {
     /// every `n`-th job is a small CP-ALS instead of a single MTTKRP
     /// (0 = MTTKRP only)
     pub cpals_every: usize,
+    /// arrival-instant generator; the default keeps the legacy bursty
+    /// replay bit-for-bit
+    pub arrival: ArrivalProcess,
+    /// relative latency SLO stamped on every generated job (`None` =
+    /// best-effort jobs)
+    pub deadline_s: Option<f64>,
     pub seed: u64,
 }
 
@@ -64,9 +139,17 @@ impl Default for TraceConfig {
             mean_gap_s: 2e-4,
             ranks: vec![16],
             cpals_every: 0,
+            arrival: ArrivalProcess::Bursty,
+            deadline_s: None,
             seed: 0x5EB0,
         }
     }
+}
+
+/// Exponential inter-arrival gap at `rate` events per second (inverse-CDF
+/// of `Exp(rate)`; `1 - f64()` keeps the log argument in `(0, 1]`).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
 }
 
 /// Generate tenants and an arrival-ordered mixed trace over the
@@ -79,6 +162,14 @@ pub fn synthetic_trace(
     let names = reg.names();
     assert!(!names.is_empty(), "register tensors before generating a trace");
     assert!(!cfg.ranks.is_empty(), "TraceConfig.ranks must be non-empty");
+    if let ArrivalProcess::Poisson { rate_qps } = cfg.arrival {
+        assert!(rate_qps > 0.0, "Poisson rate_qps must be positive");
+    }
+    if let ArrivalProcess::Mmpp { rate_qps, burst, mean_dwell_s } = cfg.arrival {
+        assert!(rate_qps > 0.0, "MMPP rate_qps must be positive");
+        assert!(burst >= 1.0, "MMPP burst multiplies the calm rate");
+        assert!(mean_dwell_s > 0.0, "MMPP mean_dwell_s must be positive");
+    }
     let mut rng = Rng::new(cfg.seed);
     let tenants: Vec<Tenant> = (0..cfg.tenants.max(1))
         .map(|i| Tenant {
@@ -88,11 +179,43 @@ pub fn synthetic_trace(
         .collect();
 
     let mut arrival = 0.0f64;
+    // MMPP phase state: remaining dwell in the current phase and whether
+    // we are in the burst phase (always starts calm, deterministically)
+    let mut mmpp_burst = false;
+    let mut mmpp_dwell_left = match cfg.arrival {
+        ArrivalProcess::Mmpp { mean_dwell_s, .. } => exp_gap(&mut rng, 1.0 / mean_dwell_s),
+        _ => 0.0,
+    };
     let jobs = (0..cfg.jobs)
         .map(|id| {
-            // bursty arrivals: ~1/3 of jobs land together
-            if rng.below(3) != 0 {
-                arrival += rng.f64() * 2.0 * cfg.mean_gap_s;
+            match cfg.arrival {
+                // legacy replay: ~1/3 of jobs land together (bit-for-bit
+                // the pre-open-loop generator — its trace test pins this)
+                ArrivalProcess::Bursty => {
+                    if rng.below(3) != 0 {
+                        arrival += rng.f64() * 2.0 * cfg.mean_gap_s;
+                    }
+                }
+                ArrivalProcess::Poisson { rate_qps } => {
+                    arrival += exp_gap(&mut rng, rate_qps);
+                }
+                ArrivalProcess::Mmpp { rate_qps, burst, mean_dwell_s } => {
+                    let mut gap =
+                        exp_gap(&mut rng, if mmpp_burst { rate_qps * burst } else { rate_qps });
+                    // phase switches that elapse inside the gap re-draw
+                    // the remainder at the new phase's rate (memoryless)
+                    while gap >= mmpp_dwell_left {
+                        arrival += mmpp_dwell_left;
+                        mmpp_burst = !mmpp_burst;
+                        mmpp_dwell_left = exp_gap(&mut rng, 1.0 / mean_dwell_s);
+                        gap = exp_gap(
+                            &mut rng,
+                            if mmpp_burst { rate_qps * burst } else { rate_qps },
+                        );
+                    }
+                    mmpp_dwell_left -= gap;
+                    arrival += gap;
+                }
             }
             let tenant = tenants[rng.below(tenants.len() as u64) as usize].name.clone();
             let tensor = names[rng.below(names.len() as u64) as usize].clone();
@@ -107,7 +230,15 @@ pub fn synthetic_trace(
                     seed: rng.next_u64(),
                 }
             };
-            JobRequest { id, tenant, tensor, kind, arrival_s: arrival }
+            JobRequest {
+                id,
+                tenant,
+                tensor,
+                kind,
+                arrival_s: arrival,
+                deadline_s: cfg.deadline_s,
+                priority: 0,
+            }
         })
         .collect();
     (tenants, jobs)
@@ -144,6 +275,7 @@ mod tests {
             assert!(j.arrival_s >= prev, "arrival-ordered");
             prev = j.arrival_s;
             assert!(reg.get(&j.tensor).is_some());
+            assert_eq!(j.deadline_s, None, "bursty default is best-effort");
             match j.kind {
                 JobKind::Mttkrp { target, rank, .. } => {
                     assert!(target < 3);
@@ -158,5 +290,69 @@ mod tests {
             jobs.windows(2).any(|w| w[0].arrival_s == w[1].arrival_s),
             "expected bursty arrivals"
         );
+    }
+
+    #[test]
+    fn poisson_trace_tracks_the_offered_rate() {
+        let reg = registry();
+        let rate = 2_000.0;
+        let cfg = TraceConfig {
+            jobs: 4_000,
+            arrival: ArrivalProcess::Poisson { rate_qps: rate },
+            deadline_s: Some(0.25),
+            seed: 7,
+            ..Default::default()
+        };
+        let (_, jobs) = synthetic_trace(&reg, &cfg);
+        let span = jobs.last().unwrap().arrival_s;
+        let observed = jobs.len() as f64 / span;
+        assert!(
+            (observed - rate).abs() / rate < 0.1,
+            "offered {rate} qps, observed {observed:.0} qps"
+        );
+        // open loop: strictly increasing arrivals (no zero-gap bursts),
+        // every job stamped with the configured SLO
+        assert!(jobs.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
+        assert!(jobs.iter().all(|j| j.deadline_s == Some(0.25)));
+        // deterministic in the seed
+        let (_, jobs2) = synthetic_trace(&reg, &cfg);
+        assert_eq!(jobs.len(), jobs2.len());
+        assert!(jobs
+            .iter()
+            .zip(&jobs2)
+            .all(|(a, b)| a.arrival_s.to_bits() == b.arrival_s.to_bits()));
+    }
+
+    #[test]
+    fn mmpp_trace_is_burstier_than_poisson_at_the_same_mean_rate() {
+        let reg = registry();
+        let jobs_n = 6_000;
+        let mk = |arrival| TraceConfig {
+            jobs: jobs_n,
+            arrival,
+            seed: 11,
+            ..Default::default()
+        };
+        // calm 1k qps, bursts at 9k, equal dwell: mean rate ~5k — compare
+        // against a plain Poisson at that mean
+        let (_, mmpp) = synthetic_trace(
+            &reg,
+            &mk(ArrivalProcess::Mmpp { rate_qps: 1_000.0, burst: 9.0, mean_dwell_s: 0.01 }),
+        );
+        let (_, poisson) =
+            synthetic_trace(&reg, &mk(ArrivalProcess::Poisson { rate_qps: 5_000.0 }));
+        let cv2 = |jobs: &[JobRequest]| {
+            let gaps: Vec<f64> =
+                jobs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        // Poisson gaps have CV² ≈ 1; MMPP must be markedly over-dispersed
+        let (cp, cm) = (cv2(&poisson), cv2(&mmpp));
+        assert!(cp < 1.5, "Poisson CV² ≈ 1, got {cp:.2}");
+        assert!(cm > 1.5, "MMPP CV² must exceed Poisson, got {cm:.2}");
+        assert!(mmpp.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
     }
 }

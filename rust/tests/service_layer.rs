@@ -3,18 +3,26 @@
 //! results on every route, (ii) reuse streaming schedules across repeated
 //! `(tensor, mode, rank)` jobs, (iii) beat the one-job-at-a-time baseline
 //! on modelled makespan via fused streaming, (iv) interleave tenants
-//! fairly under weighted round-robin, and (v) reject unservable requests
-//! with structured errors instead of panicking.
+//! fairly under weighted round-robin, (v) reject unservable requests
+//! with structured errors instead of panicking — and, with the
+//! production-serving stack: (vi) track queue depth on every
+//! enqueue/dequeue event instead of sampling at dispatch instants,
+//! (vii) beat WRR on deadline-miss rate under EDF at equal throughput,
+//! (viii) shed overloaded streamed jobs to coarser ranks instead of
+//! rejecting them, and (ix) serve snapshot-consistent pre/post-append
+//! views of one on-disk container, each bit-for-bit against its resident
+//! twin.
 
 use std::sync::Arc;
 
 use blco::device::Profile;
 use blco::format::blco::{BlcoConfig, BlcoTensor};
+use blco::format::store::BlcoStoreReader;
 use blco::mttkrp::oracle::{mttkrp_oracle, random_factors};
 use blco::mttkrp::MAX_RANK;
 use blco::service::{
-    serve, AdmissionError, JobKind, JobRequest, JobResult, JobStatus, Route,
-    ServeOptions, Tenant, TensorRegistry,
+    AdmissionError, JobKind, JobRequest, JobResult, JobStatus, Route, SchedPolicy,
+    ServeRequest, ServiceReport, ShedPolicy, Tenant, TensorRegistry,
 };
 use blco::tensor::coo::CooTensor;
 use blco::tensor::synth;
@@ -50,13 +58,7 @@ fn mttkrp_job(
     seed: u64,
     arrival_s: f64,
 ) -> JobRequest {
-    JobRequest {
-        id,
-        tenant: tenant.into(),
-        tensor: tensor.into(),
-        kind: JobKind::Mttkrp { target, rank, seed },
-        arrival_s,
-    }
+    JobRequest::new(id, tenant, tensor, JobKind::Mttkrp { target, rank, seed }, arrival_s)
 }
 
 fn tenants(weights: &[usize]) -> Vec<Tenant> {
@@ -65,6 +67,42 @@ fn tenants(weights: &[usize]) -> Vec<Tenant> {
         .enumerate()
         .map(|(i, &w)| Tenant { name: format!("t{i}"), weight: w })
         .collect()
+}
+
+/// The full policy: WRR fairness + fused streaming.
+fn serve_batched(
+    reg: &TensorRegistry,
+    ten: &[Tenant],
+    jobs: &[JobRequest],
+    devices: usize,
+    threads: usize,
+) -> ServiceReport {
+    ServeRequest::new(reg)
+        .trace(ten, jobs)
+        .devices(devices)
+        .threads(threads)
+        .run()
+        .expect("valid request")
+        .into_report()
+}
+
+/// The one-job-at-a-time ablation baseline: no fusion, global FIFO.
+fn serve_naive(
+    reg: &TensorRegistry,
+    ten: &[Tenant],
+    jobs: &[JobRequest],
+    devices: usize,
+    threads: usize,
+) -> ServiceReport {
+    ServeRequest::new(reg)
+        .trace(ten, jobs)
+        .policy(SchedPolicy::Fifo)
+        .batching(false)
+        .devices(devices)
+        .threads(threads)
+        .run()
+        .expect("valid request")
+        .into_report()
 }
 
 #[test]
@@ -83,7 +121,7 @@ fn mixed_trace_is_oracle_correct_with_cache_hits_and_fusion() {
         mttkrp_job(6, "t0", "hot", 0, 8, 106, 0.0),
         mttkrp_job(7, "t1", "cold", 2, 8, 107, 0.0),
     ];
-    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    let rep = serve_batched(&reg, &ten, &jobs, 1, 4);
     assert_eq!(rep.completed(), 8);
     assert_eq!(rep.rejected(), 0);
 
@@ -105,6 +143,8 @@ fn mixed_trace_is_oracle_correct_with_cache_hits_and_fusion() {
         }
         assert!(o.finish_s >= o.start_s);
         assert!(o.latency_s >= 0.0);
+        assert_eq!(o.served_rank, Some(rank), "no shed policy: requested rank");
+        assert!(!o.shed);
     }
 
     // the t=0 burst of same-key streamed jobs fuses — but never past the
@@ -136,13 +176,18 @@ fn mixed_trace_is_oracle_correct_with_cache_hits_and_fusion() {
     // the second one must hit the cache
     assert_eq!(rep.schedule.built, 2, "one plan per distinct (tensor, mode, rank)");
     assert!(rep.schedule.hits >= 1, "repeated key reuses the memoized plan");
-    // queue depth reflects the arrived backlog at dispatch instants: the
-    // whole burst (4 jobs per tenant) was waiting when service began
+    // queue depth under event accounting: the whole t=0 burst (4 jobs per
+    // tenant) is enqueued before the first dispatch
     for s in rep.per_tenant.values() {
         assert_eq!(s.max_queue_depth, 4, "t=0 burst backlog");
     }
+    assert!((rep.queue_depth.max - 8.0).abs() < 1e-12, "aggregate backlog peaks at 8");
     assert!(rep.makespan_s > 0.0);
     assert!(rep.bytes_shipped > 0);
+    // aggregate latency tails are populated and ordered
+    assert!(rep.latency.p50 > 0.0);
+    assert!(rep.latency.p50 <= rep.latency.p99 + 1e-18);
+    assert!(rep.latency.p99 <= rep.latency.max + 1e-18);
 }
 
 #[test]
@@ -153,12 +198,46 @@ fn repeated_keys_hit_the_schedule_cache() {
     let jobs: Vec<JobRequest> = (0..5)
         .map(|i| mttkrp_job(i, "t0", "cold", 1, 8, 200 + i as u64, i as f64 * 10.0))
         .collect();
-    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    let rep = serve_batched(&reg, &ten, &jobs, 1, 4);
     assert_eq!(rep.completed(), 5);
     assert_eq!(rep.fused_groups, 0, "spaced jobs must not fuse");
     assert_eq!(rep.schedule.built, 1);
     assert_eq!(rep.schedule.hits, 4, "every repeat reuses the plan");
     assert!(rep.cache_hit_rate() > 0.0);
+}
+
+#[test]
+fn queue_depth_tracks_events_not_dispatch_samples() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1]);
+    // four spread-out in-memory jobs: each finishes (modelled) long before
+    // the next arrives, so the queue never holds more than one job. The
+    // old accounting seeded each tenant's max with its *whole future
+    // trace* (4 here, counting jobs that had not arrived) and then only
+    // sampled at dispatch instants — this trace pins the difference.
+    let jobs: Vec<JobRequest> = (0..4)
+        .map(|i| mttkrp_job(i, "t0", "hot", 0, 8, 600 + i as u64, i as f64 * 10.0))
+        .collect();
+    let rep = serve_batched(&reg, &ten, &jobs, 1, 2);
+    assert_eq!(rep.completed(), 4);
+    let s = rep.per_tenant.get("t0").unwrap();
+    assert_eq!(
+        s.max_queue_depth, 1,
+        "event accounting: a spread trace never stacks (the old \
+         dispatch-instant sampling reported {})",
+        jobs.len()
+    );
+    // every enqueue and dequeue leaves a sample: [1,0,1,0,1,0,1,0]
+    assert!((rep.queue_depth.max - 1.0).abs() < 1e-12);
+    assert!((rep.queue_depth.p50 - 0.5).abs() < 1e-12, "half the events see an empty queue");
+    assert!((s.queue_depth.max - 1.0).abs() < 1e-12);
+
+    // contrast: the same four jobs as a t=0 burst DO stack to depth 4
+    let burst: Vec<JobRequest> = (0..4)
+        .map(|i| mttkrp_job(i, "t0", "hot", 0, 8, 600 + i as u64, 0.0))
+        .collect();
+    let rep = serve_batched(&reg, &ten, &burst, 1, 2);
+    assert_eq!(rep.per_tenant.get("t0").unwrap().max_queue_depth, 4);
 }
 
 #[test]
@@ -172,12 +251,12 @@ fn batched_beats_one_job_at_a_time_on_makespan() {
             mttkrp_job(i, if i % 2 == 0 { "t0" } else { "t1" }, "cold", 0, 8, 300 + i as u64, 0.0)
         })
         .collect();
-    let batched = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
+    let batched = serve_batched(&reg, &ten, &jobs, 1, 4);
 
     // fresh registry sharing the same payload Arc for the cold baseline
     let mut reg2 = TensorRegistry::new(Profile::tiny(48 * 1024));
     reg2.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
-    let naive = serve(&reg2, &ten, &jobs, &ServeOptions::naive(1, 4));
+    let naive = serve_naive(&reg2, &ten, &jobs, 1, 4);
 
     assert_eq!(batched.completed(), 6);
     assert_eq!(naive.completed(), 6);
@@ -196,7 +275,7 @@ fn batched_beats_one_job_at_a_time_on_makespan() {
     // fleet parallelism compounds: two devices can't be slower
     let mut reg4 = TensorRegistry::new(Profile::tiny(48 * 1024));
     reg4.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
-    let two_dev = serve(&reg4, &ten, &jobs, &ServeOptions::naive(2, 4));
+    let two_dev = serve_naive(&reg4, &ten, &jobs, 2, 4);
     assert!(two_dev.makespan_s <= naive.makespan_s + 1e-12);
 }
 
@@ -213,11 +292,11 @@ fn weighted_round_robin_interleaves_and_protects_latecomers() {
     for i in 0..8 {
         jobs.push(mttkrp_job(8 + i, "t1", "hot", i % 3, 8, 500 + i as u64, 0.0));
     }
-    let fair = serve(&reg, &ten, &jobs, &ServeOptions::batched(1, 4));
-    let fifo = serve(&reg, &ten, &jobs, &ServeOptions::naive(1, 4));
+    let fair = serve_batched(&reg, &ten, &jobs, 1, 4);
+    let fifo = serve_naive(&reg, &ten, &jobs, 1, 4);
 
     // dispatch order: sort completed outcomes by start instant
-    let order = |rep: &blco::service::ServiceReport| -> Vec<String> {
+    let order = |rep: &ServiceReport| -> Vec<String> {
         let mut done: Vec<(f64, usize, String)> = rep
             .outcomes
             .iter()
@@ -243,10 +322,255 @@ fn weighted_round_robin_interleaves_and_protects_latecomers() {
 
     // weighted: a weight-2 tenant gets ~2/3 of early dispatches
     let weighted = tenants(&[2, 1]);
-    let wrep = serve(&reg, &weighted, &jobs, &ServeOptions::batched(1, 4));
+    let wrep = serve_batched(&reg, &weighted, &jobs, 1, 4);
     let worder = order(&wrep);
     let t0_early = worder[..9].iter().filter(|t| *t == "t0").count();
     assert!(t0_early >= 5, "weight-2 tenant got {t0_early}/9: {worder:?}");
+}
+
+#[test]
+fn edf_beats_wrr_on_deadline_miss_rate_at_equal_throughput() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1]);
+    // probe the modelled service time of one streamed (cold, 0, 8) job so
+    // the scenario's deadlines are profile-independent
+    let probe_jobs = vec![mttkrp_job(0, "t0", "cold", 0, 8, 700, 0.0)];
+    let probe = serve_batched(&reg, &ten, &probe_jobs, 1, 2);
+    let d = probe.outcomes[0].duration_s;
+    assert!(d > 0.0 && d.is_finite());
+
+    // the pinned scenario (ROADMAP item 4): six identical jobs at t=0 on
+    // one tenant and one device — ids 0-2 loose (100·d), ids 3-5 tight
+    // (3.5·d). WRR within one tenant is FIFO, so the tight jobs wait for
+    // the loose ones and finish at 4d/5d/6d — all three miss. EDF serves
+    // the tight tier first (finish d/2d/3d ≤ 3.5d) and misses none. Both
+    // policies complete the same jobs in the same total time: the win is
+    // pure ordering, not throughput.
+    let jobs: Vec<JobRequest> = (0..6)
+        .map(|i| {
+            mttkrp_job(i, "t0", "cold", 0, 8, 710 + i as u64, 0.0)
+                .with_deadline(if i < 3 { 100.0 * d } else { 3.5 * d })
+        })
+        .collect();
+    let run = |policy: SchedPolicy| {
+        ServeRequest::new(&reg)
+            .trace(&ten, &jobs)
+            .policy(policy)
+            .devices(1)
+            .threads(2)
+            .batching(false)
+            .run()
+            .expect("valid request")
+            .into_report()
+    };
+    let wrr = run(SchedPolicy::Wrr);
+    let edf = run(SchedPolicy::Edf);
+
+    assert_eq!(wrr.completed(), 6);
+    assert_eq!(edf.completed(), 6);
+    assert_eq!(
+        wrr.makespan_s.to_bits(),
+        edf.makespan_s.to_bits(),
+        "identical service demand: equal throughput"
+    );
+    assert_eq!(wrr.deadline_jobs, 6);
+    assert_eq!(wrr.deadline_misses, 3, "FIFO order blows every tight deadline");
+    assert_eq!(edf.deadline_misses, 0, "EDF serves the tight tier first");
+    assert!(edf.deadline_miss_rate() < wrr.deadline_miss_rate());
+
+    // outcome-level deadline accounting is consistent with the aggregate
+    let misses = |rep: &ServiceReport| {
+        rep.outcomes.iter().filter(|o| o.missed_deadline).count()
+    };
+    assert_eq!(misses(&wrr), 3);
+    assert_eq!(misses(&edf), 0);
+
+    // priority tiers dominate deadlines: demoting the tight jobs to a
+    // lower-priority tier under EDF restores the FIFO-like miss pattern
+    let demoted: Vec<JobRequest> = jobs
+        .iter()
+        .cloned()
+        .map(|j| if j.id >= 3 { j.with_priority(1) } else { j })
+        .collect();
+    let edf_demoted = ServeRequest::new(&reg)
+        .trace(&ten, &demoted)
+        .policy(SchedPolicy::Edf)
+        .devices(1)
+        .threads(2)
+        .batching(false)
+        .run()
+        .expect("valid request")
+        .into_report();
+    assert_eq!(edf_demoted.deadline_misses, 3, "tier outranks deadline");
+}
+
+#[test]
+fn overloaded_streamed_jobs_shed_to_coarser_ranks_and_complete() {
+    let (reg, _, _) = registry();
+    let ten = tenants(&[1]);
+    let probe_jobs = vec![mttkrp_job(0, "t0", "cold", 0, 8, 800, 0.0)];
+    let d = serve_batched(&reg, &ten, &probe_jobs, 1, 2).outcomes[0].duration_s;
+
+    // a t=0 backlog with a 2·d deadline: by the time the later jobs reach
+    // the head of the queue they have burned over half their budget, so
+    // dispatch-level shedding halves their rank instead of missing wide
+    let jobs: Vec<JobRequest> = (0..5)
+        .map(|i| {
+            mttkrp_job(i, "t0", "cold", 0, 8, 810 + i as u64, 0.0)
+                .with_deadline(2.0 * d)
+        })
+        .collect();
+    let rep = ServeRequest::new(&reg)
+        .trace(&ten, &jobs)
+        .devices(1)
+        .threads(2)
+        .batching(false)
+        .shed(ShedPolicy { wait_frac: 0.5, min_rank: 2 })
+        .run()
+        .expect("valid request")
+        .into_report();
+    assert_eq!(rep.completed(), 5, "shedding degrades, it does not reject");
+    assert_eq!(rep.rejected(), 0);
+    assert!(rep.shed_jobs >= 1, "the backlog tail must shed");
+    for o in &rep.outcomes {
+        assert!(matches!(o.status, JobStatus::Completed));
+        if o.shed {
+            assert_eq!(o.served_rank, Some(4), "rank 8 halves to 4");
+        } else {
+            assert_eq!(o.served_rank, Some(8));
+        }
+    }
+    // shed jobs still return usable (coarser) results
+    let shed_out = rep.outcomes.iter().find(|o| o.shed).unwrap();
+    match shed_out.result.as_ref().unwrap() {
+        JobResult::Mttkrp(m) => assert_eq!(m.cols, 4),
+        JobResult::CpAls(_) => unreachable!(),
+    }
+
+    // admission-level shedding: a budget between the rank-8 and rank-2
+    // streaming floors turns WontFit into a degraded admission
+    let cold_eng = &reg.get("cold").unwrap().engine;
+    let f8 = cold_eng.streaming_floor_bytes(0, 8);
+    let f2 = cold_eng.streaming_floor_bytes(0, 2);
+    assert!(f2 < f8);
+    let mut starved = TensorRegistry::new(Profile::tiny((f8 + f2) / 2));
+    starved.register_shared("cold", cold_eng.tensor());
+    let job = vec![mttkrp_job(0, "t0", "cold", 0, 8, 820, 0.0)];
+    // without shedding: structured rejection
+    let rep = serve_batched(&starved, &ten, &job, 1, 2);
+    assert_eq!(rep.rejected(), 1);
+    // with shedding: admitted at a halved rank and completed
+    let rep = ServeRequest::new(&starved)
+        .trace(&ten, &job)
+        .devices(1)
+        .threads(2)
+        .shed(ShedPolicy { wait_frac: 0.5, min_rank: 2 })
+        .run()
+        .expect("valid request")
+        .into_report();
+    assert_eq!(rep.completed(), 1);
+    let o = &rep.outcomes[0];
+    assert!(o.shed, "WontFit degraded instead of rejected");
+    assert!(o.served_rank.unwrap() < 8);
+}
+
+#[test]
+fn snapshot_serving_pins_pre_append_views_bit_for_bit() {
+    // one on-disk container serving while a delta segment is appended
+    // mid-trace: jobs arriving before the append instant see the
+    // pre-append snapshot, later jobs the appended view — each
+    // bit-for-bit against the resident twin of the matching reader view
+    let base = synth::uniform(&[60, 50, 40], 8_000, 2);
+    let delta = synth::uniform(&[60, 50, 40], 2_000, 77);
+    let combined = CooTensor {
+        dims: base.dims.clone(),
+        coords: base
+            .coords
+            .iter()
+            .zip(&delta.coords)
+            .map(|(b, d)| b.iter().chain(d).copied().collect())
+            .collect(),
+        vals: base.vals.iter().chain(&delta.vals).copied().collect(),
+    };
+    let cfg = BlcoConfig { max_block_nnz: 512, ..Default::default() };
+    let path = {
+        let mut p = std::env::temp_dir();
+        p.push(format!("blco_serve_snapshot_{}.blco", std::process::id()));
+        p
+    };
+    blco::BlcoStore::write(&BlcoTensor::from_coo_with(&base, cfg), &path).unwrap();
+
+    let mut reg = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg.register_store("t", &path).unwrap();
+    assert!(reg.get("t").unwrap().engine.is_oom_for(0, 8), "fixture must stream");
+
+    // id 0 arrives before the append instant (1.0), id 1 after: the run
+    // appends up front but binds each job to its arrival's epoch
+    let ten = tenants(&[1]);
+    let jobs = vec![
+        mttkrp_job(0, "t0", "t", 0, 8, 55, 0.0),
+        mttkrp_job(1, "t0", "t", 0, 8, 55, 5.0),
+    ];
+    let rep = ServeRequest::new(&reg)
+        .trace(&ten, &jobs)
+        .devices(1)
+        .threads(1)
+        .batching(false)
+        .append_at("t", &path, &delta, 1.0)
+        .run()
+        .expect("valid request")
+        .into_report();
+    assert_eq!(rep.completed(), 2);
+    let bits = |rep: &ServiceReport, id: usize| -> Vec<u64> {
+        let o = rep.outcomes.iter().find(|o| o.id == id).unwrap();
+        match o.result.as_ref().unwrap() {
+            JobResult::Mttkrp(m) => m.data.iter().map(|v| v.to_bits()).collect(),
+            JobResult::CpAls(_) => unreachable!(),
+        }
+    };
+    let pre_bits = bits(&rep, 0);
+    let post_bits = bits(&rep, 1);
+    assert_ne!(pre_bits, post_bits, "the appended nnz must change the answer");
+
+    // resident twins of both reader views, served identically
+    let budget = reg.profile().host_mem_bytes;
+    let pinned_twin =
+        BlcoStoreReader::open_pinned(&path, budget, Some(0)).unwrap().to_tensor().unwrap();
+    let full_twin = BlcoStoreReader::open(&path).unwrap().to_tensor().unwrap();
+    assert_eq!(pinned_twin.nnz, base.nnz());
+    assert_eq!(full_twin.nnz, combined.nnz());
+    let mut reg2 = TensorRegistry::new(Profile::tiny(48 * 1024));
+    reg2.register_shared("pre", Arc::new(pinned_twin));
+    reg2.register_shared("post", Arc::new(full_twin));
+    let twin_jobs = vec![
+        mttkrp_job(0, "t0", "pre", 0, 8, 55, 0.0),
+        mttkrp_job(1, "t0", "post", 0, 8, 55, 0.0),
+    ];
+    let twin_rep = ServeRequest::new(&reg2)
+        .trace(&ten, &twin_jobs)
+        .devices(1)
+        .threads(1)
+        .batching(false)
+        .run()
+        .expect("valid request")
+        .into_report();
+    assert_eq!(twin_rep.completed(), 2);
+    assert_eq!(bits(&twin_rep, 0), pre_bits, "pre-append view == resident twin");
+    assert_eq!(bits(&twin_rep, 1), post_bits, "appended view == resident twin");
+
+    // and both views are numerically the right tensor
+    let expect_pre = mttkrp_oracle(&base, 0, &random_factors(&base.dims, 8, 55));
+    let expect_post = mttkrp_oracle(&combined, 0, &random_factors(&combined.dims, 8, 55));
+    let m = |b: &[u64]| b.iter().map(|&v| f64::from_bits(v)).collect::<Vec<f64>>();
+    let diff = |got: &[f64], want: &blco::mttkrp::dense::Matrix| {
+        got.iter()
+            .zip(&want.data)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0f64, f64::max)
+    };
+    assert!(diff(&m(&pre_bits), &expect_pre) < 1e-9);
+    assert!(diff(&m(&post_bits), &expect_post) < 1e-9);
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
@@ -265,7 +589,7 @@ fn admission_rejections_are_structured_outcomes() {
         // rank 0
         mttkrp_job(4, "t0", "hot", 0, 0, 5, 0.0),
     ];
-    let rep = serve(&reg, &ten, &jobs, &ServeOptions::batched(2, 2));
+    let rep = serve_batched(&reg, &ten, &jobs, 2, 2);
     assert_eq!(rep.completed(), 1);
     assert_eq!(rep.rejected(), 4);
     for o in &rep.outcomes {
@@ -291,7 +615,7 @@ fn admission_rejections_are_structured_outcomes() {
     let mut starved = TensorRegistry::new(Profile::tiny(4 * 1024));
     starved.register_shared("cold", reg.get("cold").unwrap().engine.tensor());
     let job = vec![mttkrp_job(0, "t0", "cold", 0, 8, 6, 0.0)];
-    let rep = serve(&starved, &ten, &job, &ServeOptions::batched(1, 2));
+    let rep = serve_batched(&starved, &ten, &job, 1, 2);
     assert_eq!(rep.rejected(), 1);
     match &rep.outcomes[0].status {
         JobStatus::Rejected(AdmissionError::WontFit { floor_bytes, budget_bytes, .. }) => {
@@ -314,14 +638,14 @@ fn one_payload_serves_every_registry_and_cpals_jobs_route_through_it() {
     // a CP-ALS job through the service: admitted (streamed), completed,
     // report carried back with mode traces and plan reuse
     let ten = tenants(&[1]);
-    let jobs = vec![JobRequest {
-        id: 0,
-        tenant: "t0".into(),
-        tensor: "cold".into(),
-        kind: JobKind::CpAls { rank: 4, iters: 3, seed: 9 },
-        arrival_s: 0.0,
-    }];
-    let rep = serve(&reg2, &ten, &jobs, &ServeOptions::batched(1, 4));
+    let jobs = vec![JobRequest::new(
+        0,
+        "t0",
+        "cold",
+        JobKind::CpAls { rank: 4, iters: 3, seed: 9 },
+        0.0,
+    )];
+    let rep = serve_batched(&reg2, &ten, &jobs, 1, 4);
     assert_eq!(rep.completed(), 1);
     let o = &rep.outcomes[0];
     assert_eq!(o.route, Some(Route::Streamed));
@@ -367,7 +691,7 @@ fn disk_backed_tensor_serves_jobs_identical_to_resident() {
             jobs.push(mttkrp_job(i * 3 + k, &format!("t{}", i % 2), tensor, 0, 8, 77, 0.0));
         }
     }
-    let rep = serve(&reg2, &ten, &jobs, &ServeOptions::batched(1, 1));
+    let rep = serve_batched(&reg2, &ten, &jobs, 1, 1);
     assert_eq!(rep.completed(), jobs.len());
     assert_eq!(rep.rejected(), 0);
 
